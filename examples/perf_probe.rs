@@ -1,0 +1,28 @@
+//! Perf probe: decomposes the native AKDA fit into gram / Cholesky /
+//! solve wall-clock + GF/s — the measurement tool behind EXPERIMENTS.md
+//! §Perf. Run: cargo run --release --example perf_probe
+use std::time::Instant;
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::{gram, Kernel};
+use akda::linalg::{chol, Mat};
+use akda::da::core;
+
+fn t<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps { std::hint::black_box(f()); }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let n = 1024;
+    let (x, labels) = gaussian_classes(&GaussianSpec{n_classes:2, n_per_class:vec![n/4, n-n/4], dim:64, class_sep:2.0, noise:0.8, modes_per_class:2, seed:9});
+    let theta = core::theta_binary(&labels);
+    let tg = t(3, || gram(&x, Kernel::Rbf{rho:0.1}));
+    let mut k = gram(&x, Kernel::Rbf{rho:0.1}); k.add_ridge(1e-3);
+    let tc = t(3, || chol::cholesky(&k, 64).unwrap());
+    let l = chol::cholesky(&k, 64).unwrap();
+    let ts = t(3, || { let y = chol::solve_lower(&l, &theta); chol::solve_upper_from_lower(&l, &y) });
+    println!("N={n}: gram={:.4}s chol={:.4}s solves={:.4}s total={:.4}s", tg, tc, ts, tg+tc+ts);
+    println!("chol GF/s: {:.2}", (n as f64).powi(3)/3.0/tc/1e9);
+    println!("gram GF/s: {:.2}", 2.0*(n as f64)*(n as f64)*64.0/tg/1e9);
+}

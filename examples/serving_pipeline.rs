@@ -1,0 +1,107 @@
+//! Serving pipeline: train a multi-class detector bank with the
+//! PJRT-accelerated AKDA, then serve concurrent scoring requests through
+//! the micro-batching scoring service — reporting latency percentiles and
+//! throughput (the coordinator's request path, Python-free).
+//!
+//! Run: cargo run --release --example serving_pipeline [dataset]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use akda::coordinator::{DetectorBank, ScoringService};
+use akda::da::DrMethod;
+use akda::data::{by_name, Condition};
+use akda::kernels::Kernel;
+use akda::runtime::{AkdaPjrt, PjrtEngine};
+use akda::svm::{LinearSvm, LinearSvmConfig};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "mscorid".into());
+    let artifacts = std::env::var("AKDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let spec = by_name(&name).expect("dataset in registry");
+    let split = spec.split(Condition::Ex100);
+    println!(
+        "{name}: C={} train={} test={}",
+        split.n_classes,
+        split.y_train.len(),
+        split.y_test.len()
+    );
+
+    // train through the accelerated path
+    let engine = Arc::new(PjrtEngine::from_dir(std::path::Path::new(&artifacts))?);
+    let t0 = Instant::now();
+    let projection = AkdaPjrt { kernel: Kernel::Rbf { rho: 0.05 }, engine }
+        .fit(&split.x_train, &split.y_train, split.n_classes)?;
+    let z = projection.project(&split.x_train);
+    let svms = (0..split.n_classes)
+        .map(|cls| {
+            let y: Vec<f64> = split
+                .y_train
+                .iter()
+                .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                .collect();
+            (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
+        })
+        .collect();
+    println!("bank trained in {:.2}s (fit + project + {} LSVMs)",
+             t0.elapsed().as_secs_f64(), split.n_classes);
+
+    let bank = Arc::new(DetectorBank { projection, svms });
+    let svc = ScoringService::start(
+        bank,
+        split.x_train.cols(),
+        128,
+        Duration::from_millis(4),
+    );
+    let client = svc.client();
+
+    // fire the whole test set as concurrent requests; collect latencies
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(split.x_test.rows());
+    let mut correct = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..split.x_test.rows() {
+            let client = client.clone();
+            let row = split.x_test.row(i).to_vec();
+            handles.push(s.spawn(move || {
+                let r0 = Instant::now();
+                let scores = client.score(row).unwrap();
+                (r0.elapsed().as_secs_f64(), scores)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let (lat, scores) = h.join().unwrap();
+            latencies.push(lat);
+            let pred = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == split.y_test[i] {
+                correct += 1;
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize] * 1e3;
+    let stats = svc.stats();
+    println!(
+        "served {} requests in {:.2}s — {:.0} req/s, accuracy {:.1}%",
+        latencies.len(),
+        wall,
+        latencies.len() as f64 / wall,
+        100.0 * correct as f64 / latencies.len() as f64
+    );
+    println!(
+        "latency p50={:.1}ms p90={:.1}ms p99={:.1}ms; {} batches, max batch {}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        stats.batches,
+        stats.max_batch
+    );
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Sec. 6.2 toy example (Figs. 2–3): binary AKDA on an rgbd-like
+//! target-vs-rest problem; dumps scatter + projection CSVs and prints the
+//! timing decomposition.
+//!
+//! Run: cargo run --release --example toy_example [out_dir]
+
+mod toy_impl;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "toy_output".into());
+    let artifacts = std::env::var("AKDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    toy_impl::run(std::path::Path::new(&out), std::path::Path::new(&artifacts))
+}

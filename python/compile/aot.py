@@ -1,0 +1,144 @@
+# AOT emitter: lower the L2 graphs to HLO *text* artifacts + manifest.json.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()): jax >= 0.5
+# emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+# (the runtime the Rust `xla` crate links) rejects; the text parser reassigns
+# ids and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# One artifact per (graph, N, L, kernel) shape bucket; the Rust runtime picks
+# the smallest bucket >= the live problem and zero-pads (exact, not
+# approximate — see DESIGN.md Sec. 5).
+#
+# Usage: cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets (DESIGN.md Sec. 5). D_MAX bounds the discriminant subspace
+# width: C-1 for AKDA, H-1 for AKSDA; unused columns are zero-padded.
+FIT_N = [256, 512, 1024, 2048]
+FEAT_L = [64, 256]
+D_MAX = 32
+TEST_N = 1024
+KERNELS = ["linear", "rbf"]
+
+QUICK_FIT_N = [256]
+QUICK_FEAT_L = [64]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_fit(n, l, kernel):
+    fn = lambda x, theta, rho, mask: model.akda_fit(
+        x, theta, rho, mask, rbf=(kernel == "rbf"))
+    return jax.jit(fn).lower(_spec(n, l), _spec(n, D_MAX), _spec(1, 1), _spec(n, 1))
+
+
+def lower_project(n_tr, n_te, l, kernel):
+    fn = lambda xtr, xte, psi, rho, mask: model.akda_project(
+        xtr, xte, psi, rho, mask, rbf=(kernel == "rbf"))
+    return jax.jit(fn).lower(
+        _spec(n_tr, l), _spec(n_te, l), _spec(n_tr, D_MAX), _spec(1, 1),
+        _spec(n_tr, 1))
+
+
+def lower_gram(n, l, kernel):
+    fn = lambda x, rho, mask: model.gram_only(
+        x, rho, mask, rbf=(kernel == "rbf"))
+    return jax.jit(fn).lower(_spec(n, l), _spec(1, 1), _spec(n, 1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest bucket (CI smoke)")
+    ap.add_argument("--max-n", type=int, default=0,
+                    help="drop fit buckets larger than this (0 = keep all)")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    fit_ns = QUICK_FIT_N if args.quick else FIT_N
+    feat_ls = QUICK_FEAT_L if args.quick else FEAT_L
+    if args.max_n:
+        fit_ns = [n for n in fit_ns if n <= args.max_n]
+
+    manifest = {"d_max": D_MAX, "entries": []}
+
+    def emit(name, lowered, inputs, outputs):
+        text = to_hlo_text(lowered)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["entries"].append({
+            "name": name,
+            "file": path.name,
+            "inputs": inputs,
+            "outputs": outputs,
+        })
+        print(f"  {name}: {len(text)} chars")
+
+    for kernel in KERNELS:
+        for l in feat_ls:
+            for n in fit_ns:
+                print(f"lowering fit n={n} l={l} kernel={kernel}")
+                emit(
+                    f"fit_{kernel}_n{n}_l{l}",
+                    lower_fit(n, l, kernel),
+                    inputs=[
+                        {"name": "x", "shape": [n, l]},
+                        {"name": "theta", "shape": [n, D_MAX]},
+                        {"name": "rho", "shape": [1, 1]},
+                        {"name": "mask", "shape": [n, 1]},
+                    ],
+                    outputs=[{"name": "psi", "shape": [n, D_MAX]}],
+                )
+                print(f"lowering gram n={n} l={l} kernel={kernel}")
+                emit(
+                    f"gram_{kernel}_n{n}_l{l}",
+                    lower_gram(n, l, kernel),
+                    inputs=[
+                        {"name": "x", "shape": [n, l]},
+                        {"name": "rho", "shape": [1, 1]},
+                        {"name": "mask", "shape": [n, 1]},
+                    ],
+                    outputs=[{"name": "k", "shape": [n, n]}],
+                )
+                n_te = QUICK_FIT_N[0] if args.quick else TEST_N
+                print(f"lowering project n_tr={n} n_te={n_te} l={l} kernel={kernel}")
+                emit(
+                    f"project_{kernel}_ntr{n}_nte{n_te}_l{l}",
+                    lower_project(n, n_te, l, kernel),
+                    inputs=[
+                        {"name": "x_train", "shape": [n, l]},
+                        {"name": "x_test", "shape": [n_te, l]},
+                        {"name": "psi", "shape": [n, D_MAX]},
+                        {"name": "rho", "shape": [1, 1]},
+                        {"name": "mask_train", "shape": [n, 1]},
+                    ],
+                    outputs=[{"name": "z", "shape": [n_te, D_MAX]}],
+                )
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['entries'])} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

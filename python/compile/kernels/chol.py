@@ -1,0 +1,141 @@
+# L1: blocked Cholesky factorization + blocked triangular solves in pure
+# jax.numpy / lax control flow.
+#
+# This is the paper's second hot spot (N^3/3 flops, Sec. 4.5). We can NOT
+# use jnp.linalg.cholesky / jax.scipy solve_triangular here: on CPU those
+# lower to jaxlib LAPACK custom-calls (lapack_spotrf / lapack_strsm) that
+# the standalone xla_extension PJRT runtime used by the Rust coordinator
+# does not register. Everything below lowers to plain HLO (while loops,
+# dynamic slices, dots), so the artifact runs on any PJRT backend.
+#
+# Structure mirrors the tiled GPU algorithm the paper cites [13,14],
+# re-thought for TPU (DESIGN.md "Hardware adaptation"): the trailing SYRK
+# update -- where ~all the flops live -- is a big matmul (MXU); only the
+# small diagonal panel runs the scalar recurrence.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DEFAULT_BLOCK = 128
+
+
+def chol_unblocked(a, eps: float = 0.0):
+    """Cholesky of a small SPD block via the outer-product recurrence.
+
+    Column j of L is computed from the running trailing matrix, then the
+    rank-one outer product is subtracted. fori_loop keeps the HLO compact.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, state):
+        a_cur, l_acc = state
+        d = jnp.sqrt(jnp.maximum(a_cur[j, j], eps) + eps)
+        lcol = jnp.where(idx >= j, a_cur[:, j] / d, 0.0)
+        l_acc = l_acc.at[:, j].set(lcol)
+        a_cur = a_cur - jnp.outer(lcol, lcol)
+        return a_cur, l_acc
+
+    _, l_out = lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l_out
+
+
+def solve_lower_unblocked(l, c):
+    """Forward substitution: solve L @ Y = C for small lower-triangular L.
+
+    L: (B, B), C: (B, M). Rows of Y fill top-down; row i only consumes
+    already-filled rows (the still-zero rows contribute nothing).
+    """
+    b = l.shape[0]
+
+    def body(i, y):
+        yi = (c[i, :] - l[i, :] @ y) / l[i, i]
+        return y.at[i, :].set(yi)
+
+    return lax.fori_loop(0, b, body, jnp.zeros_like(c))
+
+
+def solve_upper_unblocked(u, c):
+    """Backward substitution: solve U @ Y = C for small upper-triangular U."""
+    b = u.shape[0]
+
+    def body(k, y):
+        i = b - 1 - k
+        yi = (c[i, :] - u[i, :] @ y) / u[i, i]
+        return y.at[i, :].set(yi)
+
+    return lax.fori_loop(0, b, body, jnp.zeros_like(c))
+
+
+def _pick_block(n: int, block: int) -> int:
+    t = min(block, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def chol_blocked(a, *, block: int = DEFAULT_BLOCK, eps: float = 0.0):
+    """Blocked right-looking Cholesky: A = L @ L.T, L lower triangular.
+
+    The block loop is a static python loop (shapes per panel are static),
+    so slicing is plain static slicing; only the small panel recurrences
+    use dynamic control flow.
+    """
+    n = a.shape[0]
+    b = _pick_block(n, block)
+    nb = n // b
+    l_out = jnp.zeros_like(a)
+    for k in range(nb):
+        s = k * b
+        e = s + b
+        l_kk = chol_unblocked(a[s:e, s:e], eps=eps)
+        l_out = l_out.at[s:e, s:e].set(l_kk)
+        if e < n:
+            # Panel: solve L_panel @ L_kk.T = A[e:, s:e]
+            #   <=>  L_kk @ L_panel.T = A[e:, s:e].T  (forward substitution)
+            panel_t = solve_lower_unblocked(l_kk, a[e:, s:e].T)
+            panel = panel_t.T                                   # (n-e, b)
+            l_out = l_out.at[e:, s:e].set(panel)
+            # Trailing SYRK update (the MXU-heavy part).
+            a = a.at[e:, e:].add(-(panel @ panel.T))
+    return l_out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def solve_lower_blocked(l, c, *, block: int = DEFAULT_BLOCK):
+    """Blocked forward substitution: solve L @ Y = C, L (N,N) lower, C (N,D)."""
+    n = l.shape[0]
+    b = _pick_block(n, block)
+    nb = n // b
+    y = jnp.zeros_like(c)
+    for k in range(nb):
+        s = k * b
+        e = s + b
+        rhs = c[s:e, :] - l[s:e, :s] @ y[:s, :] if s > 0 else c[s:e, :]
+        y = y.at[s:e, :].set(solve_lower_unblocked(l[s:e, s:e], rhs))
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def solve_upper_blocked(u, c, *, block: int = DEFAULT_BLOCK):
+    """Blocked backward substitution: solve U @ Y = C, U (N,N) upper, C (N,D)."""
+    n = u.shape[0]
+    b = _pick_block(n, block)
+    nb = n // b
+    y = jnp.zeros_like(c)
+    for k in reversed(range(nb)):
+        s = k * b
+        e = s + b
+        rhs = c[s:e, :] - u[s:e, e:] @ y[e:, :] if e < n else c[s:e, :]
+        y = y.at[s:e, :].set(solve_upper_unblocked(u[s:e, s:e], rhs))
+    return y
+
+
+def spd_solve(k_mat, rhs, *, block: int = DEFAULT_BLOCK, eps: float = 0.0):
+    """Solve K @ X = RHS for SPD K via blocked Cholesky + two solves."""
+    l = chol_blocked(k_mat, block=block, eps=eps)
+    y = solve_lower_blocked(l, rhs, block=block)
+    return solve_upper_blocked(l.T, y, block=block)

@@ -1,0 +1,135 @@
+# L1 Pallas kernels: tiled Gram / cross-kernel matrices.
+#
+# These are the paper's first hot spot (cost 2*N^2*F, Sec. 4.5). Each kernel
+# is a Pallas grid over (i, j) output tiles; operand tiles (TM, L) / (TN, L)
+# stream into VMEM and the inner contraction targets the MXU. Padding is
+# handled *exactly*: rows/cols beyond the mask are forced to the identity,
+# so K_padded = blockdiag(K, I) stays SPD and its Cholesky factor is
+# blockdiag(chol(K), I).
+#
+# interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls; interpret mode lowers to plain HLO (while loops + dots).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _gram_tile_kernel(x_i_ref, x_j_ref, m_i_ref, m_j_ref, rho_ref, o_ref,
+                      *, rbf: bool, tm: int, tn: int):
+    """One (tm, tn) tile of the masked Gram matrix.
+
+    K[i, j] = mask_i * mask_j * k(x_i, x_j) + (1 - mask_i * mask_j) * delta_ij
+    """
+    xi = x_i_ref[...]                      # (tm, L)
+    xj = x_j_ref[...]                      # (tn, L)
+    g = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)  # MXU contraction
+    if rbf:
+        rho = rho_ref[0, 0]
+        ni = jnp.sum(xi * xi, axis=1, keepdims=True)           # (tm, 1)
+        nj = jnp.sum(xj * xj, axis=1, keepdims=True)           # (tn, 1)
+        d2 = jnp.maximum(ni + nj.T - 2.0 * g, 0.0)
+        k = jnp.exp(-rho * d2)
+    else:
+        k = g
+    mi = m_i_ref[...]                      # (tm, 1)
+    mj = m_j_ref[...]                      # (tn, 1)
+    m = mi * mj.T                          # (tm, tn)
+    rows = pl.program_id(0) * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = pl.program_id(1) * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    eye = (rows == cols).astype(jnp.float32)
+    o_ref[...] = m * k + (1.0 - m) * eye
+
+
+def _cross_tile_kernel(xe_ref, xt_ref, m_t_ref, rho_ref, o_ref, *, rbf: bool):
+    """One tile of the test-vs-train cross kernel K[e, t] = k(x_e, x_t).
+
+    Padded *train* columns are masked to zero (they multiply zero rows of
+    Psi anyway; masking keeps the artifact's output exactly equal to the
+    unpadded computation). Padded test rows produce garbage rows that the
+    caller slices away.
+    """
+    xe = xe_ref[...]
+    xt = xt_ref[...]
+    g = jnp.dot(xe, xt.T, preferred_element_type=jnp.float32)
+    if rbf:
+        rho = rho_ref[0, 0]
+        ne = jnp.sum(xe * xe, axis=1, keepdims=True)
+        nt = jnp.sum(xt * xt, axis=1, keepdims=True)
+        d2 = jnp.maximum(ne + nt.T - 2.0 * g, 0.0)
+        k = jnp.exp(-rho * d2)
+    else:
+        k = g
+    o_ref[...] = k * m_t_ref[...].T
+
+
+def _pick_tile(n: int, tile: int) -> int:
+    """Largest divisor of n that is <= tile (shapes are bucket-padded, so n
+    is a multiple of a power of two; this always lands on a sane tile)."""
+    t = min(tile, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("rbf", "tile"))
+def gram_matrix(x, mask, rho, *, rbf: bool, tile: int = DEFAULT_TILE):
+    """Masked Gram matrix via the Pallas tile kernel.
+
+    Args:
+      x:    (N, L) f32 observations (rows), zero-padded beyond the mask.
+      mask: (N, 1) f32 {0, 1} row validity.
+      rho:  (1, 1) f32 RBF bandwidth (ignored for linear).
+      rbf:  kernel type.
+    Returns: (N, N) f32, K = blockdiag(K_valid, I_pad).
+    """
+    n, l = x.shape
+    tm = _pick_tile(n, tile)
+    grid = (n // tm, n // tm)
+    kern = functools.partial(_gram_tile_kernel, rbf=rbf, tm=tm, tn=tm)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x, mask, mask, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("rbf", "tile"))
+def cross_kernel(x_test, x_train, mask_train, rho, *, rbf: bool,
+                 tile: int = DEFAULT_TILE):
+    """Cross kernel matrix k(x_test_e, x_train_t), train-masked.
+
+    Shapes: x_test (Ne, L), x_train (Nt, L), mask_train (Nt, 1).
+    Returns (Ne, Nt) f32.
+    """
+    ne, l = x_test.shape
+    nt, _ = x_train.shape
+    tme = _pick_tile(ne, tile)
+    tmt = _pick_tile(nt, tile)
+    grid = (ne // tme, nt // tmt)
+    kern = functools.partial(_cross_tile_kernel, rbf=rbf)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tme, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((tmt, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((tmt, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tme, tmt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ne, nt), jnp.float32),
+        interpret=True,
+    )(x_test, x_train, mask_train, rho)

@@ -1,0 +1,181 @@
+# Pure-jnp / numpy correctness oracles for the L1 kernels and the L2 model.
+#
+# Everything here is allowed to use jnp.linalg / scipy (these run only under
+# pytest, never in an artifact), and is written as the most literal
+# transcription of the paper's equations.
+import numpy as np
+
+
+def ref_gram_linear(x):
+    """K = X X^T (Eq. 9 with the linear kernel; x rows are observations)."""
+    return x @ x.T
+
+
+def ref_gram_rbf(x, rho):
+    """K[i,j] = exp(-rho * ||x_i - x_j||^2) (Sec. 6.3.1 base kernel)."""
+    sq = np.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return np.exp(-rho * np.maximum(d2, 0.0))
+
+
+def ref_cross_linear(x_test, x_train):
+    return x_test @ x_train.T
+
+
+def ref_cross_rbf(x_test, x_train, rho):
+    se = np.sum(x_test * x_test, axis=1)
+    st = np.sum(x_train * x_train, axis=1)
+    d2 = se[:, None] + st[None, :] - 2.0 * (x_test @ x_train.T)
+    return np.exp(-rho * np.maximum(d2, 0.0))
+
+
+def ref_masked_gram(x, mask, rho, rbf):
+    """The exact contract of kernels.gram.gram_matrix: valid block = kernel,
+    padded block = identity."""
+    k = ref_gram_rbf(x, rho) if rbf else ref_gram_linear(x)
+    m = mask.reshape(-1)
+    mm = np.outer(m, m)
+    return mm * k + (1.0 - mm) * np.eye(x.shape[0])
+
+
+def ref_chol(a):
+    return np.linalg.cholesky(a)
+
+
+def ref_spd_solve(a, b):
+    return np.linalg.solve(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Paper-level oracles (AKDA Algorithm 1 / AKSDA Algorithm 2).
+# ---------------------------------------------------------------------------
+
+def ref_core_matrix(counts):
+    """O_b = I_C - n. n.^T / (n.^T n.)  (Eq. 30), n. = sqrt(class counts)."""
+    nd = np.sqrt(np.asarray(counts, dtype=np.float64))
+    return np.eye(len(counts)) - np.outer(nd, nd) / nd.dot(nd)
+
+
+def ref_theta(labels, n_classes):
+    """Theta = R_C N_C^{-1/2} Xi (Eq. 40) from the NZEP of O_b (Eq. 39)."""
+    labels = np.asarray(labels)
+    counts = np.array([(labels == i).sum() for i in range(n_classes)])
+    ob = ref_core_matrix(counts)
+    w, v = np.linalg.eigh(ob)
+    xi = v[:, w > 0.5]                      # eigenvalues are exactly {0, 1}
+    r = np.zeros((labels.size, n_classes))
+    r[np.arange(labels.size), labels] = 1.0
+    return (r / np.sqrt(counts)[None, :]) @ xi
+
+
+def ref_theta_binary(n1, n2):
+    """Analytic binary-class eigenvector theta (Eq. 50), sign-fixed to the
+    '+' branch (first-class entries positive)."""
+    n = n1 + n2
+    t = np.concatenate([
+        np.full(n1, np.sqrt(n2 / (n1 * n))),
+        np.full(n2, -np.sqrt(n1 / (n2 * n))),
+    ])
+    return t[:, None]
+
+
+def ref_akda_fit(x, labels, n_classes, rho, rbf=True, eps=1e-3):
+    """AKDA Algorithm 1, literal: K Psi = Theta via dense solve."""
+    k = ref_gram_rbf(x, rho) if rbf else ref_gram_linear(x)
+    k = k + eps * np.eye(x.shape[0])
+    theta = ref_theta(labels, n_classes)
+    psi = np.linalg.solve(k, theta)
+    return psi, theta, k
+
+
+def ref_akda_project(x_train, x_test, psi, rho, rbf=True):
+    kc = ref_cross_rbf(x_test, x_train, rho) if rbf else ref_cross_linear(x_test, x_train)
+    return kc @ psi
+
+
+def ref_scatter_kernel_matrices(x, labels, n_classes, rho, rbf=True):
+    """S_b, S_w, S_t by the direct definitions (Eqs. 7, 8, 20) — used to
+    verify the factorizations S_b = K C_b K etc. and the simultaneous
+    reduction identities (45)-(47)."""
+    n = x.shape[0]
+    k = ref_gram_rbf(x, rho) if rbf else ref_gram_linear(x)
+    one_n = np.ones(n) / n
+    sb = np.zeros((n, n))
+    sw = np.zeros((n, n))
+    mu = k @ one_n
+    for i in range(n_classes):
+        idx = np.where(np.asarray(labels) == i)[0]
+        ni = len(idx)
+        eta_i = k[:, idx].mean(axis=1)
+        d = eta_i - mu
+        sb += ni * np.outer(d, d)
+        for nn in idx:
+            dv = k[:, nn] - eta_i
+            sw += np.outer(dv, dv)
+    st = np.zeros((n, n))
+    for nn in range(n):
+        dv = k[:, nn] - mu
+        st += np.outer(dv, dv)
+    return sb, sw, st
+
+
+def ref_central_factors(labels, n_classes):
+    """C_b, C_w, C_t (Eq. 29)."""
+    labels = np.asarray(labels)
+    n = labels.size
+    counts = np.array([(labels == i).sum() for i in range(n_classes)], dtype=np.float64)
+    r = np.zeros((n, n_classes))
+    r[np.arange(n), labels] = 1.0
+    ob = ref_core_matrix(counts)
+    ninv_h = np.diag(1.0 / np.sqrt(counts))
+    cb = r @ ninv_h @ ob @ ninv_h @ r.T
+    cw = np.eye(n) - r @ np.diag(1.0 / counts) @ r.T
+    ct = np.eye(n) - np.ones((n, n)) / n
+    return cb, cw, ct
+
+
+# --- AKSDA oracles ----------------------------------------------------------
+
+def ref_core_matrix_subclass(class_of, counts):
+    """O_bs element-wise (Sec. 5.1): diag N-N_i, 0 within class, else
+    -sqrt(N_ij N_kl), all over N."""
+    counts = np.asarray(counts, dtype=np.float64)
+    class_of = np.asarray(class_of)
+    h = len(counts)
+    n = counts.sum()
+    class_tot = np.array([counts[class_of == c].sum()
+                          for c in range(class_of.max() + 1)])
+    ob = np.zeros((h, h))
+    for a in range(h):
+        for b in range(h):
+            if a == b:
+                ob[a, b] = n - class_tot[class_of[a]]
+            elif class_of[a] == class_of[b]:
+                ob[a, b] = 0.0
+            else:
+                ob[a, b] = -np.sqrt(counts[a] * counts[b])
+    return ob / n
+
+
+def ref_v_matrix(sub_labels, class_of, n_sub):
+    """V = R_H N_H^{-1/2} U (Eq. 66) from the NZEP of O_bs (Eq. 65)."""
+    sub_labels = np.asarray(sub_labels)
+    counts = np.array([(sub_labels == j).sum() for j in range(n_sub)])
+    obs = ref_core_matrix_subclass(class_of, counts)
+    w, u = np.linalg.eigh(obs)
+    order = np.argsort(w)[::-1]
+    w, u = w[order], u[:, order]
+    keep = w > 1e-10
+    u, w = u[:, keep], w[keep]
+    r = np.zeros((sub_labels.size, n_sub))
+    r[np.arange(sub_labels.size), sub_labels] = 1.0
+    v = (r / np.sqrt(counts)[None, :]) @ u
+    return v, w
+
+
+def ref_aksda_fit(x, sub_labels, class_of, n_sub, rho, rbf=True, eps=1e-3):
+    k = ref_gram_rbf(x, rho) if rbf else ref_gram_linear(x)
+    k = k + eps * np.eye(x.shape[0])
+    v, w = ref_v_matrix(sub_labels, class_of, n_sub)
+    psi = np.linalg.solve(k, v)
+    return psi, v, w

@@ -1,0 +1,64 @@
+# L2: the AKDA/AKSDA compute graphs (build-time JAX; never imported at
+# runtime).
+#
+# Two graphs are lowered per shape bucket (python/compile/aot.py):
+#
+#   fit(x, theta, rho, mask)        -> psi        (AKDA Alg. 1 steps 3-4)
+#   project(x_train, x_test, psi, rho, mask) -> z (Eq. 11: z = Psi^T k)
+#
+# The tiny O_b / O_bs eigenproblem (Alg. 1 step 1-2 / Alg. 2 step 1-2) runs
+# natively in the Rust coordinator (C x C / H x H, cost O(C^3) per Sec. 4.5)
+# and arrives here as `theta` (AKDA's Theta, Eq. 40, or AKSDA's V, Eq. 66 —
+# the graphs are identical from that point on, which is exactly the paper's
+# framing: both reduce to K Psi = Theta).
+#
+# Padding contract (DESIGN.md Sec. 5): rows of x beyond the mask are zero,
+# gram forces the padded block to identity, padded theta rows are zero, so
+# padded psi rows are exactly zero and unused trailing theta columns yield
+# exactly-zero psi columns.
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import chol, gram
+
+
+@functools.partial(jax.jit, static_argnames=("rbf", "tile", "block"))
+def akda_fit(x, theta, rho, mask, *, rbf: bool,
+             tile: int = gram.DEFAULT_TILE,
+             block: int = chol.DEFAULT_BLOCK,
+             eps: float = 1e-3):
+    """Solve K Psi = Theta (Eq. 44 / Eq. 70).
+
+    Args:
+      x:     (N, L) f32, zero-padded observations (row-major observations).
+      theta: (N, D) f32, eigenvector matrix of C_b (or V of C_bs); padded
+             rows / unused columns are zero.
+      rho:   (1, 1) f32 RBF bandwidth.
+      mask:  (N, 1) f32 {0,1} validity.
+    Returns:
+      psi: (N, D) f32 expansion coefficients.
+    """
+    n = x.shape[0]
+    k = gram.gram_matrix(x, mask, rho, rbf=rbf, tile=tile)
+    # Ridge regularization for ill-conditioned K (Sec. 4.3). Padded diagonal
+    # entries become 1 + eps — harmless, their theta rows are zero.
+    k = k + eps * jnp.eye(n, dtype=jnp.float32)
+    return chol.spd_solve(k, theta, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("rbf", "tile"))
+def akda_project(x_train, x_test, psi, rho, mask_train, *,
+                 rbf: bool, tile: int = gram.DEFAULT_TILE):
+    """Project test observations: Z = K_cross @ Psi (Eq. 11, batched)."""
+    kc = gram.cross_kernel(x_test, x_train, mask_train, rho, rbf=rbf, tile=tile)
+    return kc @ psi
+
+
+@functools.partial(jax.jit, static_argnames=("rbf", "tile"))
+def gram_only(x, rho, mask, *, rbf: bool, tile: int = gram.DEFAULT_TILE):
+    """Standalone masked Gram artifact — used by the Rust native engines
+    (KDA/SRKDA/... baselines can offload the 2N^2F gram hot spot to PJRT
+    while doing their own dense algebra)."""
+    return gram.gram_matrix(x, mask, rho, rbf=rbf, tile=tile)

@@ -1,0 +1,47 @@
+# AOT emitter sanity: lowered HLO text parses, manifest is consistent, and
+# the quick bucket round-trips through jax's own HLO-text path.
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_to_hlo_text_contains_entry():
+    low = aot.lower_fit(256, 64, "rbf")
+    text = aot.to_hlo_text(low)
+    assert "ENTRY" in text and "f32[256,64]" in text
+    assert "f32[256,32]" in text            # theta / psi
+    assert "custom-call" not in text.lower(), \
+        "artifact must not contain LAPACK custom-calls (unrunnable on PJRT)"
+
+
+def test_project_hlo_shapes():
+    low = aot.lower_project(256, 1024, 64, "linear")
+    text = aot.to_hlo_text(low)
+    assert "f32[1024,64]" in text and "f32[256,64]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_gram_hlo_no_custom_calls():
+    low = aot.lower_gram(256, 64, "rbf")
+    assert "custom-call" not in aot.to_hlo_text(low).lower()
+
+
+@pytest.mark.slow
+def test_quick_emit(tmp_path):
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--quick"],
+        check=True, cwd=pathlib.Path(__file__).resolve().parents[1])
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["d_max"] == aot.D_MAX
+    names = {e["name"] for e in manifest["entries"]}
+    assert "fit_rbf_n256_l64" in names
+    assert "project_linear_ntr256_nte256_l64" in names
+    for e in manifest["entries"]:
+        assert (tmp_path / e["file"]).exists()
+        assert all("shape" in i for i in e["inputs"])

@@ -1,0 +1,102 @@
+# L1 correctness: blocked Cholesky + triangular solves vs numpy oracles.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chol, ref
+
+
+def _spd(n, seed, cond=None):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    m = a @ a.T / n + np.eye(n, dtype=np.float32)
+    if cond is not None:
+        # stretch the spectrum to a target condition number
+        w, v = np.linalg.eigh(m.astype(np.float64))
+        w = np.geomspace(1.0 / cond, 1.0, n)
+        m = (v * w) @ v.T
+    return m.astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 128])
+def test_chol_unblocked_matches_numpy(n):
+    a = _spd(n, seed=n)
+    l = np.asarray(chol.chol_unblocked(jnp.asarray(a)))
+    np.testing.assert_allclose(l, ref.ref_chol(a.astype(np.float64)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,block", [(64, 16), (128, 32), (256, 64), (256, 128),
+                                     (192, 64), (256, 256)])
+def test_chol_blocked_reconstructs(n, block):
+    a = _spd(n, seed=n + block)
+    l = np.asarray(chol.chol_blocked(jnp.asarray(a), block=block))
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-4, atol=1e-4)
+    assert np.abs(np.triu(l, 1)).max() == 0.0
+
+
+def test_chol_blocked_equals_unblocked():
+    a = _spd(128, seed=9)
+    lb = np.asarray(chol.chol_blocked(jnp.asarray(a), block=32))
+    lu = np.asarray(chol.chol_unblocked(jnp.asarray(a)))
+    np.testing.assert_allclose(lb, lu, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,d,block", [(64, 4, 16), (128, 32, 32), (96, 8, 32)])
+def test_triangular_solves(n, d, block):
+    rng = np.random.default_rng(n + d)
+    a = _spd(n, seed=2 * n)
+    l = np.linalg.cholesky(a.astype(np.float64)).astype(np.float32)
+    c = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.asarray(chol.solve_lower_blocked(jnp.asarray(l), jnp.asarray(c),
+                                            block=block))
+    np.testing.assert_allclose(l @ y, c, rtol=1e-3, atol=1e-3)
+    z = np.asarray(chol.solve_upper_blocked(jnp.asarray(l.T), jnp.asarray(c),
+                                            block=block))
+    np.testing.assert_allclose(l.T @ z, c, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,d", [(64, 3), (256, 31)])
+def test_spd_solve_matches_numpy(n, d):
+    rng = np.random.default_rng(n)
+    a = _spd(n, seed=n + 5)
+    b = rng.standard_normal((n, d)).astype(np.float32)
+    x = np.asarray(chol.spd_solve(jnp.asarray(a), jnp.asarray(b)))
+    want = ref.ref_spd_solve(a.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=2e-3, atol=2e-3)
+
+
+def test_spd_solve_ill_conditioned_stays_finite():
+    a = _spd(128, seed=1, cond=1e6)
+    b = np.ones((128, 2), np.float32)
+    x = np.asarray(chol.spd_solve(jnp.asarray(a), jnp.asarray(b), eps=1e-3))
+    assert np.isfinite(x).all()
+
+
+def test_chol_blockdiag_identity_pad():
+    """The padding contract: chol(blockdiag(A, I)) = blockdiag(chol(A), I)."""
+    a = _spd(96, seed=4)
+    n = 128
+    ap = np.eye(n, dtype=np.float32)
+    ap[:96, :96] = a
+    l = np.asarray(chol.chol_blocked(jnp.asarray(ap), block=32))
+    la = np.asarray(chol.chol_blocked(jnp.asarray(a), block=32))
+    np.testing.assert_allclose(l[:96, :96], la, atol=1e-6)
+    np.testing.assert_array_equal(l[96:, 96:], np.eye(32))
+    np.testing.assert_array_equal(l[96:, :96], 0.0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([8, 32, 48, 64]),
+    d=st.integers(1, 8),
+    block=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_spd_solve_hypothesis(n, d, block, seed):
+    rng = np.random.default_rng(seed)
+    a = _spd(n, seed=seed)
+    b = rng.standard_normal((n, d)).astype(np.float32)
+    x = np.asarray(chol.spd_solve(jnp.asarray(a), jnp.asarray(b), block=block))
+    np.testing.assert_allclose(a @ x, b, rtol=5e-3, atol=5e-3)

@@ -1,0 +1,110 @@
+# L1 correctness: Pallas gram / cross kernels vs the pure-numpy oracle,
+# swept over shapes, dtilings and bandwidths with hypothesis.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, ref
+
+
+def _mk(n, l, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, l)) * scale).astype(np.float32)
+
+
+def run_gram(x, mask, rho, rbf, tile=gram.DEFAULT_TILE):
+    return np.asarray(gram.gram_matrix(
+        jnp.asarray(x), jnp.asarray(mask.reshape(-1, 1).astype(np.float32)),
+        jnp.asarray(np.array([[rho]], np.float32)), rbf=rbf, tile=tile))
+
+
+@pytest.mark.parametrize("rbf", [False, True])
+@pytest.mark.parametrize("n,l", [(32, 8), (128, 64), (256, 64), (256, 256)])
+def test_gram_matches_ref_unmasked(n, l, rbf):
+    x = _mk(n, l, seed=n + l)
+    mask = np.ones(n, np.float32)
+    got = run_gram(x, mask, 0.03, rbf)
+    want = ref.ref_masked_gram(x, mask, 0.03, rbf)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("rbf", [False, True])
+def test_gram_padding_is_identity_block(rbf):
+    n, l, n_real = 256, 32, 177
+    x = _mk(n, l, seed=7)
+    x[n_real:] = 0.0
+    mask = np.zeros(n, np.float32)
+    mask[:n_real] = 1.0
+    got = run_gram(x, mask, 0.1, rbf)
+    # padded block is exactly the identity
+    np.testing.assert_array_equal(got[n_real:, n_real:], np.eye(n - n_real))
+    np.testing.assert_array_equal(got[:n_real, n_real:], 0.0)
+    np.testing.assert_array_equal(got[n_real:, :n_real], 0.0)
+    want = ref.ref_masked_gram(x[:n_real], mask[:n_real], 0.1, rbf)
+    np.testing.assert_allclose(got[:n_real, :n_real], want, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_rbf_unit_diagonal_and_symmetry():
+    x = _mk(128, 16, seed=3, scale=2.0)
+    got = run_gram(x, np.ones(128, np.float32), 0.7, rbf=True)
+    # f32 cancellation in ||xi||^2+||xj||^2-2xi.xj bounds diagonal accuracy
+    np.testing.assert_allclose(np.diag(got), 1.0, atol=5e-5)
+    np.testing.assert_allclose(got, got.T, atol=1e-6)
+    assert got.min() >= 0.0 and got.max() <= 1.0 + 5e-5
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.sampled_from([16, 64, 96, 128]),
+    l=st.sampled_from([4, 16, 33, 64]),
+    rho=st.floats(1e-3, 5.0),
+    rbf=st.booleans(),
+    frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_hypothesis_sweep(n, l, rho, rbf, frac, seed):
+    x = _mk(n, l, seed=seed)
+    n_real = max(2, int(n * frac))
+    x[n_real:] = 0.0
+    mask = np.zeros(n, np.float32)
+    mask[:n_real] = 1.0
+    got = run_gram(x, mask, rho, rbf, tile=64)
+    want = ref.ref_masked_gram(x, mask, rho, rbf)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("rbf", [False, True])
+@pytest.mark.parametrize("ne,nt,l", [(64, 128, 16), (128, 256, 64), (96, 64, 32)])
+def test_cross_kernel_matches_ref(ne, nt, l, rbf):
+    xe = _mk(ne, l, seed=ne)
+    xt = _mk(nt, l, seed=nt + 1)
+    mask = np.ones((nt, 1), np.float32)
+    got = np.asarray(gram.cross_kernel(
+        jnp.asarray(xe), jnp.asarray(xt), jnp.asarray(mask),
+        jnp.asarray(np.array([[0.2]], np.float32)), rbf=rbf, tile=64))
+    want = (ref.ref_cross_rbf(xe, xt, 0.2) if rbf
+            else ref.ref_cross_linear(xe, xt))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cross_kernel_train_mask_zeroes_columns():
+    xe = _mk(32, 8, seed=11)
+    xt = _mk(64, 8, seed=12)
+    mask = np.ones((64, 1), np.float32)
+    mask[40:] = 0.0
+    got = np.asarray(gram.cross_kernel(
+        jnp.asarray(xe), jnp.asarray(xt), jnp.asarray(mask),
+        jnp.asarray(np.array([[0.2]], np.float32)), rbf=True, tile=32))
+    np.testing.assert_array_equal(got[:, 40:], 0.0)
+
+
+@pytest.mark.parametrize("tile", [16, 32, 128])
+def test_gram_tile_size_invariance(tile):
+    x = _mk(128, 32, seed=5)
+    mask = np.ones(128, np.float32)
+    base = run_gram(x, mask, 0.4, True, tile=gram.DEFAULT_TILE)
+    got = run_gram(x, mask, 0.4, True, tile=tile)
+    # tile shape changes the f32 dot accumulation order; bitwise equality
+    # is not expected, only tight agreement
+    np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,195 @@
+# L2 correctness: the fit / project graphs vs the literal AKDA/AKSDA
+# oracles, the padding-exactness contract, and the paper's simultaneous-
+# reduction identities (Eqs. 45-47, 71-73) evaluated on the graph outputs.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(n_real, l, c, seed, scale=0.6):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n_real, l)) * scale).astype(np.float32)
+    # shift class means so classes are distinguishable
+    labels = np.sort(rng.integers(0, c, n_real))
+    # ensure every class occupied
+    labels[:c] = np.arange(c)
+    labels = np.sort(labels)
+    for i in range(c):
+        x[labels == i] += rng.standard_normal(l).astype(np.float32) * 0.8
+    return x, labels
+
+
+def _pad(x, theta, n_pad, d_max=32):
+    n, l = x.shape
+    xp = np.zeros((n_pad, l), np.float32)
+    xp[:n] = x
+    th = np.zeros((n_pad, d_max), np.float32)
+    th[:n, :theta.shape[1]] = theta
+    mask = np.zeros((n_pad, 1), np.float32)
+    mask[:n] = 1.0
+    return xp, th, mask
+
+
+def run_fit(xp, th, rho, mask, rbf=True, eps=1e-3):
+    return np.asarray(model.akda_fit(
+        jnp.asarray(xp), jnp.asarray(th),
+        jnp.asarray(np.array([[rho]], np.float32)), jnp.asarray(mask),
+        rbf=rbf, eps=eps))
+
+
+# With the linear kernel K = X X^T is rank <= L, so a tiny ridge makes the
+# solve ill-conditioned and f32-vs-f64 comparison meaningless; use a ridge
+# large enough that kappa(K + eps I) is moderate.
+def _eps_for(rbf):
+    return 1e-3 if rbf else 1e-1
+
+
+@pytest.mark.parametrize("rbf", [True, False])
+@pytest.mark.parametrize("n_real,c", [(100, 2), (150, 3), (200, 5)])
+def test_fit_matches_oracle(n_real, c, rbf):
+    x, labels = _problem(n_real, 32, c, seed=n_real + c)
+    rho, eps = 0.05, _eps_for(rbf)
+    psi_ref, theta, _ = ref.ref_akda_fit(x, labels, c, rho, rbf=rbf, eps=eps)
+    xp, th, mask = _pad(x, theta, 256)
+    psi = run_fit(xp, th, rho, mask, rbf=rbf, eps=eps)
+    np.testing.assert_allclose(psi[:n_real, :c - 1], psi_ref,
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_fit_padding_exactly_zero():
+    x, labels = _problem(180, 16, 3, seed=0)
+    _, theta, _ = ref.ref_akda_fit(x, labels, 3, 0.1)
+    xp, th, mask = _pad(x, theta, 256)
+    psi = run_fit(xp, th, 0.1, mask)
+    assert np.abs(psi[180:]).max() == 0.0       # padded rows exactly zero
+    assert np.abs(psi[:, 2:]).max() == 0.0      # unused columns exactly zero
+
+
+def test_fit_bucket_invariance():
+    """Same problem through two different buckets gives the same psi."""
+    x, labels = _problem(120, 16, 3, seed=2)
+    _, theta, _ = ref.ref_akda_fit(x, labels, 3, 0.2)
+    xp1, th1, m1 = _pad(x, theta, 128)
+    xp2, th2, m2 = _pad(x, theta, 256)
+    p1 = run_fit(xp1, th1, 0.2, m1)
+    p2 = run_fit(xp2, th2, 0.2, m2)
+    np.testing.assert_allclose(p1[:120, :2], p2[:120, :2], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("rbf", [True, False])
+def test_project_matches_oracle(rbf):
+    x, labels = _problem(96, 16, 3, seed=5)
+    rng = np.random.default_rng(6)
+    xte = rng.standard_normal((64, 16)).astype(np.float32)
+    eps = _eps_for(rbf)
+    psi_ref, theta, _ = ref.ref_akda_fit(x, labels, 3, 0.1, rbf=rbf, eps=eps)
+    xp, th, mask = _pad(x, theta, 128)
+    psi = run_fit(xp, th, 0.1, mask, rbf=rbf, eps=eps)
+    z = np.asarray(model.akda_project(
+        jnp.asarray(xp), jnp.asarray(xte), jnp.asarray(psi),
+        jnp.asarray(np.array([[0.1]], np.float32)),
+        jnp.asarray(mask), rbf=rbf))
+    z_ref = ref.ref_akda_project(x, xte, psi_ref, 0.1, rbf=rbf)
+    np.testing.assert_allclose(z[:, :2], z_ref, rtol=2e-3, atol=2e-4)
+
+
+def test_simultaneous_reduction_identities():
+    """Gamma^T Sigma_b Gamma = I, Gamma^T Sigma_w Gamma = 0,
+    Gamma^T Sigma_t Gamma = I  (Eqs. 45-47) — evaluated through the kernel
+    matrices: Psi^T S_b Psi etc., with S_* from the literal definitions."""
+    x, labels = _problem(90, 8, 3, seed=8)
+    rho, c = 0.3, 3
+    psi, theta, _ = ref.ref_akda_fit(x, labels, c, rho, eps=0.0)
+    sb, sw, st = ref.ref_scatter_kernel_matrices(x, labels, c, rho)
+    d = c - 1
+    np.testing.assert_allclose(psi.T @ sb @ psi, np.eye(d), atol=5e-3)
+    np.testing.assert_allclose(psi.T @ sw @ psi, np.zeros((d, d)), atol=5e-3)
+    np.testing.assert_allclose(psi.T @ st @ psi, np.eye(d), atol=5e-3)
+
+
+def test_central_factor_identities():
+    """S_b = K C_b K, S_w = K C_w K, S_t = K C_t K (Sec. 4.1), plus
+    C_t = C_b + C_w, C_b C_w = 0, idempotency and ranks (Sec. 4.2)."""
+    x, labels = _problem(60, 8, 4, seed=9)
+    k = ref.ref_gram_rbf(x, 0.2)
+    cb, cw, ct = ref.ref_central_factors(labels, 4)
+    sb, sw, st = ref.ref_scatter_kernel_matrices(x, labels, 4, 0.2)
+    np.testing.assert_allclose(k @ cb @ k, sb, atol=1e-6 * np.abs(sb).max())
+    np.testing.assert_allclose(k @ cw @ k, sw, atol=1e-6 * np.abs(sw).max())
+    np.testing.assert_allclose(k @ ct @ k, st, atol=1e-6 * np.abs(st).max())
+    np.testing.assert_allclose(cb + cw, ct, atol=1e-12)
+    np.testing.assert_allclose(cb @ cw, 0.0, atol=1e-12)
+    for m in (cb, cw, ct):
+        np.testing.assert_allclose(m @ m, m, atol=1e-10)   # idempotent
+    assert np.linalg.matrix_rank(cb) == 3                  # C-1
+    assert np.linalg.matrix_rank(cw) == 60 - 4             # N-C
+    assert np.linalg.matrix_rank(ct) == 60 - 1             # N-1
+
+
+def test_binary_theta_analytic_matches_evd():
+    """Eq. 50 equals the EVD route (up to sign)."""
+    labels = np.array([0] * 30 + [1] * 70)
+    t_evd = ref.ref_theta(labels, 2)[:, 0]
+    t_ana = ref.ref_theta_binary(30, 70)[:, 0]
+    s = np.sign(t_evd[0] * t_ana[0])
+    np.testing.assert_allclose(t_evd, s * t_ana, atol=1e-12)
+    assert abs(np.linalg.norm(t_ana) - 1.0) < 1e-12
+
+
+def test_theta_columns_orthonormal():
+    labels = np.sort(np.random.default_rng(3).integers(0, 5, 200))
+    labels[:5] = np.arange(5)
+    theta = ref.ref_theta(np.sort(labels), 5)
+    np.testing.assert_allclose(theta.T @ theta, np.eye(4), atol=1e-12)
+
+
+def test_aksda_core_matrix_properties():
+    """O_bs is SPSD with rank H-1 and null vector n-dot (Sec. 5.2)."""
+    class_of = np.array([0, 0, 1, 1, 2])       # 3 classes, 5 subclasses
+    counts = np.array([10, 12, 20, 8, 15])
+    obs = ref.ref_core_matrix_subclass(class_of, counts)
+    w = np.linalg.eigvalsh(obs)
+    assert w.min() > -1e-10
+    assert (w > 1e-10).sum() == 4              # H - 1
+    ndot = np.sqrt(counts)
+    np.testing.assert_allclose(obs @ ndot, 0.0, atol=1e-10)
+
+
+def test_aksda_reduction_identities():
+    """V^T C_bs V = Omega, V^T C_ws V = 0, V^T C_t V = I (Eqs. 67-69)."""
+    rng = np.random.default_rng(11)
+    sub_labels = np.sort(rng.integers(0, 5, 120))
+    sub_labels[:5] = np.arange(5)
+    sub_labels = np.sort(sub_labels)
+    class_of = np.array([0, 0, 1, 1, 2])
+    n = sub_labels.size
+    counts = np.array([(sub_labels == j).sum() for j in range(5)])
+    v, w = ref.ref_v_matrix(sub_labels, class_of, 5)
+    r = np.zeros((n, 5))
+    r[np.arange(n), sub_labels] = 1.0
+    obs = ref.ref_core_matrix_subclass(class_of, counts)
+    nh = np.diag(1.0 / np.sqrt(counts))
+    cbs = r @ nh @ obs @ nh @ r.T
+    cws = np.eye(n) - r @ np.diag(1.0 / counts) @ r.T
+    ct = np.eye(n) - np.ones((n, n)) / n
+    np.testing.assert_allclose(v.T @ cbs @ v, np.diag(w), atol=1e-10)
+    np.testing.assert_allclose(v.T @ cws @ v, 0.0, atol=1e-10)
+    np.testing.assert_allclose(v.T @ ct @ v, np.eye(4), atol=1e-10)
+
+
+def test_aksda_fit_through_graph():
+    """AKSDA uses the same fit graph with theta := V."""
+    rng = np.random.default_rng(13)
+    n_real, l = 120, 16
+    x = rng.standard_normal((n_real, l)).astype(np.float32)
+    sub_labels = np.sort(rng.integers(0, 4, n_real))
+    sub_labels[:4] = np.arange(4)
+    sub_labels = np.sort(sub_labels)
+    class_of = np.array([0, 0, 1, 1])
+    psi_ref, v, _ = ref.ref_aksda_fit(x, sub_labels, class_of, 4, 0.15)
+    xp, th, mask = _pad(x, v, 128)
+    psi = run_fit(xp, th, 0.15, mask)
+    np.testing.assert_allclose(psi[:n_real, :3], psi_ref, rtol=2e-3, atol=2e-4)

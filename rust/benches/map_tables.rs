@@ -1,0 +1,49 @@
+//! MAP tables bench (Tables 2, 3, 4): every method column on every
+//! registry dataset, fixed hyper-parameters (run the CLI with `--cv` for
+//! the full CV protocol — this bench keeps the grid fixed so the run is
+//! comparable and quick).
+//!
+//! Env: AKDA_SUITE=med|cross10|cross100 (default cross10)
+//!      AKDA_FAST=1 → subset of datasets and methods (CI smoke)
+//! Run: cargo bench --bench map_tables
+
+use akda::coordinator::{evaluate_ovr, Hyper, MethodId, WorkPool};
+use akda::data::{cross_dataset_collection, med_datasets, Condition};
+use akda::eval::tables::{map_table, results_csv, DatasetRow};
+
+fn main() {
+    let suite = std::env::var("AKDA_SUITE").unwrap_or_else(|_| "cross10".into());
+    let fast = std::env::var("AKDA_FAST").is_ok();
+    let (mut datasets, cond, tag) = match suite.as_str() {
+        "med" => (med_datasets(), Condition::Ex100, "Table 2 (MED)"),
+        "cross100" => (cross_dataset_collection(), Condition::Ex100, "Table 4 (100Ex)"),
+        _ => (cross_dataset_collection(), Condition::Ex10, "Table 3 (10Ex)"),
+    };
+    let mut methods = MethodId::table_columns();
+    if fast {
+        datasets.truncate(3);
+        methods = vec![MethodId::Lda, MethodId::Kda, MethodId::Srkda, MethodId::Akda,
+                       MethodId::Aksda];
+    }
+    let pool = WorkPool::new(akda::util::threads::available());
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+
+    let mut rows = Vec::new();
+    for spec in &datasets {
+        eprintln!("== {} [{}]", spec.name, cond.name());
+        let split = spec.split(cond);
+        let results = methods
+            .iter()
+            .map(|&id| {
+                let r = evaluate_ovr(&split, id, hp, 1e-3, None, Some(&pool)).expect("eval");
+                eprintln!("   {:<8} MAP={:.2}%", r.method, 100.0 * r.map);
+                r
+            })
+            .collect();
+        rows.push(DatasetRow { dataset: spec.name.to_string(), results });
+    }
+    println!("{}", map_table(&format!("MAP rates — {tag}"), &rows));
+    let out = format!("bench_results_map_{suite}.csv");
+    std::fs::write(&out, results_csv(&rows)).expect("write csv");
+    eprintln!("wrote {out}");
+}

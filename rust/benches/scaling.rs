@@ -1,0 +1,89 @@
+//! Complexity-scaling bench (Sec. 4.5): training time of AKDA vs KDA vs
+//! SRKDA vs the PJRT-accelerated AKDA as N grows, binary problem.
+//!
+//! The paper's claims this regenerates:
+//!   * AKDA ≈ 40× fewer flops than KDA (13.3 N³ vs N³/3 + low-order) —
+//!     the measured ratio should grow with N toward the flop ratio;
+//!   * AKDA vs SRKDA differ only in low-order terms (O(C³) vs O(N²)), so
+//!     AKDA ≥ SRKDA with the gap visible at larger N.
+//!
+//! Run: cargo bench --bench scaling
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use akda::coordinator::MethodId;
+use akda::coordinator::{evaluate_ovr, Hyper};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::data::Split;
+use akda::runtime::PjrtEngine;
+
+fn problem(n: usize, dim: usize, seed: u64) -> Split {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![n / 8, n - n / 8], // imbalanced, like OvR
+        dim,
+        class_sep: 2.0,
+        noise: 0.8,
+        modes_per_class: 2,
+        seed,
+    });
+    let (x_test, y_test) = gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![32, 224],
+        dim,
+        class_sep: 2.0,
+        noise: 0.8,
+        modes_per_class: 2,
+        seed: seed + 1,
+    });
+    Split { x_train: x, y_train: labels, x_test, y_test, n_classes: 2 }
+}
+
+fn time_method(
+    split: &Split,
+    id: MethodId,
+    engine: Option<&Arc<PjrtEngine>>,
+) -> (f64, f64) {
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+    // warm-up for the PJRT path (executable compile is one-time)
+    if matches!(id, MethodId::AkdaPjrt) {
+        let _ = evaluate_ovr(split, id, hp, 1e-3, engine, None);
+    }
+    let t0 = Instant::now();
+    let res = evaluate_ovr(split, id, hp, 1e-3, engine, None).expect("eval");
+    let _wall = t0.elapsed().as_secs_f64();
+    (res.train_s, res.map)
+}
+
+fn main() {
+    let artifacts = std::env::var("AKDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = PjrtEngine::from_dir(std::path::Path::new(&artifacts)).ok().map(Arc::new);
+    let dim = 64;
+    println!("# scaling bench (binary OvR, L={dim}) — Sec. 4.5 complexity claims");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "N", "kda_s", "srkda_s", "akda_s", "akda_pjrt_s", "kda/akda", "srkda/akda"
+    );
+    for &n in &[128usize, 256, 512, 1024] {
+        let split = problem(n, dim, n as u64);
+        let (kda_t, _) = time_method(&split, MethodId::Kda, None);
+        let (sr_t, _) = time_method(&split, MethodId::Srkda, None);
+        let (ak_t, _) = time_method(&split, MethodId::Akda, None);
+        let pj_t = engine
+            .as_ref()
+            .map(|e| time_method(&split, MethodId::AkdaPjrt, Some(e)).0);
+        println!(
+            "{:>6} {:>12.4} {:>12.4} {:>12.4} {:>12} {:>10.1} {:>10.2}",
+            n,
+            kda_t,
+            sr_t,
+            ak_t,
+            pj_t.map(|t| format!("{t:.4}")).unwrap_or_else(|| "-".into()),
+            kda_t / ak_t,
+            sr_t / ak_t
+        );
+    }
+    println!("# expectation: kda/akda grows with N (→ ~40x asymptotically);");
+    println!("# srkda/akda ≥ 1 and grows slowly (O(N²) centering vs O(C³)).");
+}

@@ -1,0 +1,58 @@
+//! Speedup tables bench (Tables 5, 6, 7): training/testing time of every
+//! method relative to KDA, per dataset — the paper's headline exhibit.
+//!
+//! Env: AKDA_SUITE=med|cross10|cross100 (default med — Table 5; the full
+//!      cross100 sweep regenerates Table 7 but costs ~30+ min of KDA time)
+//!      AKDA_FAST=1 → subset (CI smoke)
+//! Run: cargo bench --bench speedup_tables
+
+use akda::coordinator::{evaluate_ovr, Hyper, MethodId, WorkPool};
+use akda::data::{cross_dataset_collection, med_datasets, Condition};
+use akda::eval::tables::{results_csv, speedup_table, DatasetRow};
+
+fn main() {
+    let suite = std::env::var("AKDA_SUITE").unwrap_or_else(|_| "med".into());
+    let fast = std::env::var("AKDA_FAST").is_ok();
+    let (mut datasets, cond, tag) = match suite.as_str() {
+        "med" => (med_datasets(), Condition::Ex100, "Table 5 (MED)"),
+        "cross10" => (cross_dataset_collection(), Condition::Ex10, "Table 6 (10Ex)"),
+        _ => (cross_dataset_collection(), Condition::Ex100, "Table 7 (100Ex)"),
+    };
+    // on small machines KDA at N≳1000 costs minutes/class — cap the
+    // per-dataset training-set size unless AKDA_FULL=1 asks for everything
+    if std::env::var("AKDA_FULL").is_err() {
+        datasets.retain(|d| d.n_classes * cond.per_class() <= 800);
+    }
+    let mut methods = MethodId::table_columns();
+    if fast {
+        datasets.truncate(3);
+        methods = vec![MethodId::Kda, MethodId::Srkda, MethodId::Akda, MethodId::Ksda,
+                       MethodId::Aksda];
+    }
+    // per-class jobs run on the pool; ϑ_m sums per-job stopwatch times, so
+    // the ratios stay comparable (all methods see the same oversubscription)
+    let pool = WorkPool::new((akda::util::threads::available() / 2).max(1));
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+
+    let mut rows = Vec::new();
+    for spec in &datasets {
+        eprintln!("== {} [{}]", spec.name, cond.name());
+        let split = spec.split(cond);
+        let results = methods
+            .iter()
+            .map(|&id| {
+                let r = evaluate_ovr(&split, id, hp, 1e-3, None, Some(&pool)).expect("eval");
+                eprintln!(
+                    "   {:<8} train={:.3}s test={:.3}s",
+                    r.method, r.train_s, r.test_s
+                );
+                r
+            })
+            .collect();
+        rows.push(DatasetRow { dataset: spec.name.to_string(), results });
+    }
+    println!("{}", speedup_table(&format!("train/test speedup over KDA — {tag}"), &rows));
+    let out = format!("bench_results_speedup_{suite}.csv");
+    std::fs::write(&out, results_csv(&rows)).expect("write csv");
+    eprintln!("wrote {out}");
+}

@@ -1,0 +1,266 @@
+//! k-means clustering (k-means++ init, Lloyd iterations) — the subclass
+//! partitioning procedure AKSDA/GSDA use (Sec. 5.4, the O(N) term), plus a
+//! nearest-neighbor chain partitioning used by the KSDA baseline [3].
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Result of clustering the rows of a matrix.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub assignments: Vec<usize>,
+    pub centroids: Mat,
+    pub inertia: f64,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ seeding followed by Lloyd iterations.
+pub fn kmeans(x: &Mat, k: usize, max_iter: usize, seed: u64) -> Clustering {
+    let (n, d) = x.shape();
+    assert!(k >= 1 && n >= 1);
+    let k = k.min(n);
+    let mut rng = Rng::new(seed);
+
+    // k-means++ init
+    let mut centroids = Mat::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut idx = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    idx = i;
+                    break;
+                }
+                target -= w;
+            }
+            idx
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(sq_dist(x.row(i), centroids.row(c)));
+        }
+    }
+
+    let mut assignments = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    for _ in 0..max_iter {
+        // assignment step (threaded)
+        let new_assign: Vec<usize> = crate::util::threads::parallel_map(n, |i| {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for c in 0..k {
+                let dd = sq_dist(x.row(i), centroids.row(c));
+                if dd < bd {
+                    bd = dd;
+                    best = c;
+                }
+            }
+            best
+        });
+        // update step
+        let mut sums = Mat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = new_assign[i];
+            counts[c] += 1;
+            let row = x.row(i);
+            for (s, v) in sums.row_mut(c).iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed an empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sq_dist(x.row(a), centroids.row(new_assign[a]))
+                            .partial_cmp(&sq_dist(x.row(b), centroids.row(new_assign[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                sums.row_mut(c).copy_from_slice(x.row(far));
+                counts[c] = 1;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            for v in sums.row_mut(c) {
+                *v *= inv;
+            }
+        }
+        centroids = sums;
+        let new_inertia: f64 = (0..n)
+            .map(|i| sq_dist(x.row(i), centroids.row(new_assign[i])))
+            .sum();
+        let converged = new_assign == assignments || (inertia - new_inertia).abs() < 1e-12;
+        assignments = new_assign;
+        inertia = new_inertia;
+        if converged {
+            break;
+        }
+    }
+    Clustering { assignments, centroids, inertia }
+}
+
+/// Nearest-neighbor chain partitioning (the KSDA baseline's subclass
+/// division [3]): order observations by a greedy NN chain, then cut the
+/// chain into `k` contiguous segments of equal size.
+pub fn nn_partition(x: &Mat, k: usize) -> Vec<usize> {
+    let n = x.rows();
+    let k = k.min(n).max(1);
+    // greedy chain from observation 0
+    let mut order = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    let mut cur = 0usize;
+    used[0] = true;
+    order.push(0);
+    for _ in 1..n {
+        let mut best = usize::MAX;
+        let mut bd = f64::INFINITY;
+        for j in 0..n {
+            if !used[j] {
+                let d = sq_dist(x.row(cur), x.row(j));
+                if d < bd {
+                    bd = d;
+                    best = j;
+                }
+            }
+        }
+        used[best] = true;
+        order.push(best);
+        cur = best;
+    }
+    let mut out = vec![0usize; n];
+    for (pos, &i) in order.iter().enumerate() {
+        out[i] = (pos * k / n).min(k - 1);
+    }
+    out
+}
+
+/// Partition every class into `h_per_class` subclasses with k-means,
+/// producing the flat subclass labelling AKSDA consumes.
+pub fn partition_classes(
+    x: &Mat,
+    labels: &[usize],
+    n_classes: usize,
+    h_per_class: usize,
+    seed: u64,
+) -> crate::da::core::SubclassPartition {
+    let mut sub_labels = vec![0usize; labels.len()];
+    let mut class_of = Vec::new();
+    let mut next = 0usize;
+    for cls in 0..n_classes {
+        let idx: Vec<usize> = (0..labels.len()).filter(|&i| labels[i] == cls).collect();
+        let h = h_per_class.min(idx.len()).max(1);
+        let sub_x = x.select_rows(&idx);
+        let cl = kmeans(&sub_x, h, 50, seed ^ (cls as u64).wrapping_mul(0x9E37));
+        // drop empty subclasses by remapping to dense ids
+        let mut remap = vec![usize::MAX; h];
+        let mut used = 0usize;
+        for &a in &cl.assignments {
+            if remap[a] == usize::MAX {
+                remap[a] = used;
+                used += 1;
+            }
+        }
+        for (pos, &i) in idx.iter().enumerate() {
+            sub_labels[i] = next + remap[cl.assignments[pos]];
+        }
+        for _ in 0..used {
+            class_of.push(cls);
+        }
+        next += used;
+    }
+    crate::da::core::SubclassPartition { sub_labels, class_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blobs(n_per: usize, centers: &[[f64; 2]], seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let n = n_per * centers.len();
+        let mut x = Mat::zeros(n, 2);
+        for (c, ctr) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let r = c * n_per + i;
+                x[(r, 0)] = ctr[0] + 0.1 * rng.normal();
+                x[(r, 1)] = ctr[1] + 0.1 * rng.normal();
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let x = blobs(30, &[[0.0, 0.0], [5.0, 5.0], [-5.0, 5.0]], 1);
+        let cl = kmeans(&x, 3, 100, 7);
+        for b in 0..3 {
+            let first = cl.assignments[b * 30];
+            for i in 0..30 {
+                assert_eq!(cl.assignments[b * 30 + i], first, "blob {b}");
+            }
+        }
+        assert!(cl.inertia < 30.0 * 3.0 * 0.1);
+    }
+
+    #[test]
+    fn kmeans_k1_centroid_is_mean() {
+        let x = blobs(20, &[[1.0, 2.0]], 3);
+        let cl = kmeans(&x, 1, 10, 1);
+        let mean0: f64 = (0..20).map(|i| x[(i, 0)]).sum::<f64>() / 20.0;
+        assert!((cl.centroids[(0, 0)] - mean0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kmeans_k_ge_n_is_exact() {
+        let x = blobs(2, &[[0.0, 0.0], [9.0, 9.0]], 5);
+        let cl = kmeans(&x, 10, 10, 2);
+        assert!(cl.inertia < 0.5);
+    }
+
+    #[test]
+    fn kmeans_deterministic_for_seed() {
+        let x = blobs(25, &[[0.0, 0.0], [4.0, 4.0]], 8);
+        let a = kmeans(&x, 2, 50, 42);
+        let b = kmeans(&x, 2, 50, 42);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn nn_partition_counts_balanced() {
+        let x = blobs(20, &[[0.0, 0.0], [5.0, 0.0]], 9);
+        let p = nn_partition(&x, 4);
+        let mut counts = vec![0; 4];
+        for &a in &p {
+            counts[a] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 40);
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn partition_classes_respects_class_boundaries() {
+        let x = blobs(30, &[[0.0, 0.0], [0.0, 3.0], [8.0, 0.0], [8.0, 3.0]], 11);
+        // two classes, each made of two true blobs
+        let labels: Vec<usize> = vec![0; 60].into_iter().chain(vec![1; 60]).collect();
+        let part = partition_classes(&x, &labels, 2, 2, 1);
+        assert_eq!(part.n_subclasses(), 4);
+        // subclasses never straddle classes
+        for (i, &s) in part.sub_labels.iter().enumerate() {
+            assert_eq!(part.class_of[s], labels[i]);
+        }
+        // each class's two blobs land in different subclasses
+        assert_ne!(part.sub_labels[0..30].to_vec(), part.sub_labels[30..60].to_vec());
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 coordinator: the paper's training/evaluation protocol at scale.
+//!
+//! * `jobs` — worker pool scheduling the per-class one-vs-rest jobs.
+//! * `protocol` — Sec. 6.3's evaluation loop (binary OvR, DR + LSVM, MAP,
+//!   timing) and the 3-fold CV grid search.
+//! * `service` — post-training scoring service with dynamic micro-batching.
+//! * `config` — reproducible run configuration.
+
+pub mod config;
+pub mod jobs;
+pub mod protocol;
+pub mod service;
+
+pub use config::EvalConfig;
+pub use jobs::WorkPool;
+pub use protocol::{evaluate_ovr, select_hyper, Hyper, MethodId};
+pub use service::{DetectorBank, ScoringService};

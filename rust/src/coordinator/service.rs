@@ -1,0 +1,257 @@
+//! Scoring service: the request-path component of the coordinator.
+//!
+//! After training, a `ScoringService` owns the fitted per-class detectors
+//! (DR projection + LSVM) and serves score requests over a channel with
+//! dynamic micro-batching: requests arriving within a batching window are
+//! projected through the kernel expansion *together* (one cross-kernel
+//! block instead of many single-row ones — the same motivation as vLLM's
+//! continuous batching, applied to kernel projections).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::da::Projection;
+use crate::linalg::Mat;
+use crate::svm::LinearSvm;
+
+/// A trained one-vs-rest detector bank: shared projection + per-class SVMs.
+pub struct DetectorBank {
+    pub projection: Box<dyn Projection>,
+    pub svms: Vec<(String, LinearSvm)>,
+}
+
+impl DetectorBank {
+    /// Score a batch of observations: rows × detectors.
+    pub fn score(&self, x: &Mat) -> Mat {
+        let z = self.projection.project(x);
+        let mut out = Mat::zeros(x.rows(), self.svms.len());
+        for (c, (_, svm)) in self.svms.iter().enumerate() {
+            let scores = svm.decision_batch(&z);
+            for (r, s) in scores.into_iter().enumerate() {
+                out[(r, c)] = s;
+            }
+        }
+        out
+    }
+
+    pub fn class_names(&self) -> Vec<String> {
+        self.svms.iter().map(|(n, _)| n.clone()).collect()
+    }
+}
+
+/// One request: features in, per-class confidence scores out.
+pub struct ScoreRequest {
+    pub features: Vec<f64>,
+    pub reply: Sender<Result<Vec<f64>>>,
+}
+
+/// Service statistics (exposed for the serving example / monitoring).
+#[derive(Debug, Default, Clone)]
+pub struct ServiceStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub max_batch: usize,
+}
+
+/// Handle for submitting scoring requests.
+#[derive(Clone)]
+pub struct ScoringClient {
+    tx: Sender<ScoreRequest>,
+    dim: usize,
+}
+
+impl ScoringClient {
+    pub fn score(&self, features: Vec<f64>) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            features.len() == self.dim,
+            "expected {} features, got {}",
+            self.dim,
+            features.len()
+        );
+        let (reply, rx) = channel();
+        self.tx
+            .send(ScoreRequest { features, reply })
+            .map_err(|_| anyhow::anyhow!("scoring service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service dropped reply"))?
+    }
+}
+
+/// The batching loop. Owns the detector bank on its own thread.
+pub struct ScoringService {
+    client: ScoringClient,
+    stats_rx: Receiver<ServiceStats>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScoringService {
+    /// `max_batch`: flush threshold; `window`: max time the first request
+    /// in a batch waits for company.
+    pub fn start(
+        bank: Arc<DetectorBank>,
+        input_dim: usize,
+        max_batch: usize,
+        window: Duration,
+    ) -> ScoringService {
+        let (tx, rx) = channel::<ScoreRequest>();
+        let (stats_tx, stats_rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name("akda-scoring".into())
+            .spawn(move || {
+                let mut stats = ServiceStats::default();
+                loop {
+                    // block for the first request of a batch
+                    let first = match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    };
+                    let mut batch = vec![first];
+                    let deadline = std::time::Instant::now() + window;
+                    while batch.len() < max_batch {
+                        let left = deadline.saturating_duration_since(std::time::Instant::now());
+                        match rx.recv_timeout(left) {
+                            Ok(r) => batch.push(r),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // assemble the batch matrix
+                    let x = Mat::from_fn(batch.len(), input_dim, |r, c| {
+                        batch[r].features[c]
+                    });
+                    let scores = bank.score(&x);
+                    stats.requests += batch.len();
+                    stats.batches += 1;
+                    stats.max_batch = stats.max_batch.max(batch.len());
+                    let _ = stats_tx.send(stats.clone());
+                    for (r, req) in batch.into_iter().enumerate() {
+                        let row = scores.row(r).to_vec();
+                        let _ = req.reply.send(Ok(row));
+                    }
+                }
+            })
+            .expect("spawn scoring service");
+        ScoringService {
+            client: ScoringClient { tx, dim: input_dim },
+            stats_rx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn client(&self) -> ScoringClient {
+        self.client.clone()
+    }
+
+    /// Latest stats snapshot (drains the channel).
+    pub fn stats(&self) -> ServiceStats {
+        let mut last = ServiceStats::default();
+        while let Ok(s) = self.stats_rx.try_recv() {
+            last = s;
+        }
+        last
+    }
+}
+
+impl Drop for ScoringService {
+    fn drop(&mut self) {
+        // closing the client channel stops the loop
+        let (tx, _) = channel();
+        self.client = ScoringClient { tx, dim: self.client.dim };
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::da::akda::Akda;
+    use crate::da::DrMethod;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+    use crate::kernels::Kernel;
+    use crate::svm::LinearSvmConfig;
+
+    fn bank() -> (Arc<DetectorBank>, Mat, Vec<usize>) {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 3,
+            n_per_class: vec![20; 3],
+            dim: 6,
+            class_sep: 2.5,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 5,
+        });
+        let projection = Akda::new(Kernel::Rbf { rho: 0.3 }).fit(&x, &labels, 3).unwrap();
+        let z = projection.project(&x);
+        let svms = (0..3)
+            .map(|cls| {
+                let y: Vec<f64> = labels
+                    .iter()
+                    .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                    .collect();
+                (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
+            })
+            .collect();
+        (Arc::new(DetectorBank { projection, svms }), x, labels)
+    }
+
+    #[test]
+    fn bank_scores_classify_training_data() {
+        let (bank, x, labels) = bank();
+        let scores = bank.score(&x);
+        let mut correct = 0;
+        for i in 0..60 {
+            let mut best = 0;
+            for c in 1..3 {
+                if scores[(i, c)] > scores[(i, best)] {
+                    best = c;
+                }
+            }
+            if best == labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 55, "correct={correct}/60");
+    }
+
+    #[test]
+    fn service_answers_requests() {
+        let (bank, x, _) = bank();
+        let svc = ScoringService::start(bank, 6, 8, Duration::from_millis(5));
+        let client = svc.client();
+        let scores = client.score(x.row(0).to_vec()).unwrap();
+        assert_eq!(scores.len(), 3);
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn service_batches_concurrent_requests() {
+        let (bank, x, _) = bank();
+        let svc = ScoringService::start(bank, 6, 32, Duration::from_millis(30));
+        let client = svc.client();
+        std::thread::scope(|s| {
+            for i in 0..16 {
+                let client = client.clone();
+                let row = x.row(i).to_vec();
+                s.spawn(move || {
+                    let scores = client.score(row).unwrap();
+                    assert_eq!(scores.len(), 3);
+                });
+            }
+        });
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 16);
+        assert!(stats.batches < 16, "batching happened: {stats:?}");
+        assert!(stats.max_batch >= 2);
+    }
+
+    #[test]
+    fn service_rejects_wrong_dim() {
+        let (bank, _, _) = bank();
+        let svc = ScoringService::start(bank, 6, 4, Duration::from_millis(1));
+        assert!(svc.client().score(vec![0.0; 5]).is_err());
+    }
+}

@@ -1,0 +1,365 @@
+//! The paper's factorization framework (Secs. 4.1–4.3, 5.1–5.3): core
+//! matrices, their tiny eigenproblems, and the target matrices Θ / V that
+//! the big Cholesky solve consumes.
+//!
+//! Everything here is O(C³) / O(H³) — the whole point of AKDA is that the
+//! only eigenproblem left is this small one (Alg. 1 step 1, Alg. 2 step 1).
+
+use crate::linalg::{jacobi_eig, Mat};
+
+/// Per-class observation counts N_i from a label vector.
+pub fn class_counts(labels: &[usize], n_classes: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_classes];
+    for &l in labels {
+        assert!(l < n_classes, "label {l} out of range");
+        counts[l] += 1;
+    }
+    counts
+}
+
+/// Core matrix O_b = I_C − ṅ ṅᵀ / (ṅᵀ ṅ) (Eq. 30), ṅ = sqrt(counts).
+pub fn core_matrix(counts: &[usize]) -> Mat {
+    let c = counts.len();
+    let nd: Vec<f64> = counts.iter().map(|&x| (x as f64).sqrt()).collect();
+    let nn: f64 = counts.iter().map(|&x| x as f64).sum();
+    Mat::from_fn(c, c, |i, j| {
+        (if i == j { 1.0 } else { 0.0 }) - nd[i] * nd[j] / nn
+    })
+}
+
+/// NZEP eigenvector matrix Ξ of O_b (Eq. 39): the C−1 eigenvectors with
+/// eigenvalue 1 (O_b is idempotent with rank C−1, Sec. 4.2).
+pub fn core_eigenvectors(counts: &[usize]) -> Mat {
+    let c = counts.len();
+    let ob = core_matrix(counts);
+    let eig = jacobi_eig(&ob); // descending; tiny matrix
+    let mut xi = Mat::zeros(c, c - 1);
+    for k in 0..c - 1 {
+        debug_assert!(
+            (eig.values[k] - 1.0).abs() < 1e-8,
+            "O_b eigenvalue {} should be 1, got {}",
+            k,
+            eig.values[k]
+        );
+        for r in 0..c {
+            xi[(r, k)] = eig.vectors[(r, k)];
+        }
+    }
+    xi
+}
+
+/// Θ = R_C N_C^{−1/2} Ξ (Eq. 40): the NZEP of C_b, computed WITHOUT forming
+/// the N×N matrix — row n of Θ is row Ξ[label(n),:] / sqrt(N_label(n))
+/// (the paper notes this is O(C): scale row i of Ξ and replicate N_i times).
+pub fn theta(labels: &[usize], n_classes: usize) -> Mat {
+    let counts = class_counts(labels, n_classes);
+    assert!(
+        counts.iter().all(|&c| c > 0),
+        "every class needs at least one observation"
+    );
+    let xi = core_eigenvectors(&counts);
+    let inv_sqrt: Vec<f64> = counts.iter().map(|&c| 1.0 / (c as f64).sqrt()).collect();
+    Mat::from_fn(labels.len(), n_classes - 1, |n, d| {
+        xi[(labels[n], d)] * inv_sqrt[labels[n]]
+    })
+}
+
+/// Analytic binary-class θ (Eqs. 49–50), '+' sign branch: class-0 entries
+/// positive. Labels must be 0/1 with n1 = |class 0|, n2 = |class 1|.
+pub fn theta_binary(labels: &[usize]) -> Mat {
+    let n1 = labels.iter().filter(|&&l| l == 0).count();
+    let n2 = labels.len() - n1;
+    assert!(n1 > 0 && n2 > 0, "both classes must be non-empty");
+    let n = (n1 + n2) as f64;
+    let pos = (n2 as f64 / (n1 as f64 * n)).sqrt();
+    let neg = -(n1 as f64 / (n2 as f64 * n)).sqrt();
+    Mat::from_fn(labels.len(), 1, |r, _| if labels[r] == 0 { pos } else { neg })
+}
+
+// ---------------------------------------------------------------------------
+// Subclass machinery (AKSDA, Sec. 5).
+// ---------------------------------------------------------------------------
+
+/// Subclass structure: a flat subclass id per observation plus the map
+/// from subclass id to its parent class.
+#[derive(Debug, Clone)]
+pub struct SubclassPartition {
+    /// subclass id of each observation (0..h)
+    pub sub_labels: Vec<usize>,
+    /// parent class of each subclass (len h)
+    pub class_of: Vec<usize>,
+}
+
+impl SubclassPartition {
+    pub fn n_subclasses(&self) -> usize {
+        self.class_of.len()
+    }
+
+    /// The trivial partition: one subclass per class (AKSDA reduces to AKDA).
+    pub fn trivial(labels: &[usize], n_classes: usize) -> Self {
+        SubclassPartition {
+            sub_labels: labels.to_vec(),
+            class_of: (0..n_classes).collect(),
+        }
+    }
+
+    pub fn counts(&self) -> Vec<usize> {
+        class_counts(&self.sub_labels, self.n_subclasses())
+    }
+}
+
+/// Subclass core matrix O_bs (element-wise form, Sec. 5.1):
+///   [O_bs]_aa = (N − N_class(a)) / N
+///   [O_bs]_ab = 0 within the same class
+///   [O_bs]_ab = −sqrt(N_a N_b) / N across classes.
+pub fn core_matrix_subclass(part: &SubclassPartition) -> Mat {
+    let counts = part.counts();
+    let h = counts.len();
+    let n: f64 = counts.iter().map(|&x| x as f64).sum();
+    let n_class: Vec<f64> = {
+        let n_classes = part.class_of.iter().max().map(|&c| c + 1).unwrap_or(0);
+        let mut tot = vec![0.0; n_classes];
+        for (s, &cls) in part.class_of.iter().enumerate() {
+            tot[cls] += counts[s] as f64;
+        }
+        tot
+    };
+    Mat::from_fn(h, h, |a, b| {
+        if a == b {
+            (n - n_class[part.class_of[a]]) / n
+        } else if part.class_of[a] == part.class_of[b] {
+            0.0
+        } else {
+            -((counts[a] as f64) * (counts[b] as f64)).sqrt() / n
+        }
+    })
+}
+
+/// NZEP (U, Ω) of O_bs (Eq. 65) and the target matrix V = R_H N_H^{−1/2} U
+/// (Eq. 66). Returns (V, ω) with ω the positive eigenvalues, descending.
+pub fn v_matrix(part: &SubclassPartition) -> (Mat, Vec<f64>) {
+    let counts = part.counts();
+    assert!(counts.iter().all(|&c| c > 0), "empty subclass");
+    let h = counts.len();
+    let obs = core_matrix_subclass(part);
+    let eig = jacobi_eig(&obs);
+    let d = eig.values.iter().take_while(|&&v| v > 1e-10).count();
+    assert!(d <= h.saturating_sub(1) + 1);
+    let inv_sqrt: Vec<f64> = counts.iter().map(|&c| 1.0 / (c as f64).sqrt()).collect();
+    let v = Mat::from_fn(part.sub_labels.len(), d, |n, k| {
+        let s = part.sub_labels[n];
+        eig.vectors[(s, k)] * inv_sqrt[s]
+    });
+    (v, eig.values[..d].to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// Central factor matrices (Eq. 29) — O(N²) memory; used by the baselines
+// (which must form scatter matrices, that's their cost) and by tests that
+// verify the paper's identities. The AKDA fast path never calls these.
+// ---------------------------------------------------------------------------
+
+/// C_b = R_C N_C^{−1/2} O_b N_C^{−1/2} R_Cᵀ.
+pub fn central_factor_b(labels: &[usize], n_classes: usize) -> Mat {
+    let counts = class_counts(labels, n_classes);
+    let ob = core_matrix(&counts);
+    let n = labels.len();
+    let inv_sqrt: Vec<f64> = counts.iter().map(|&c| 1.0 / (c as f64).sqrt()).collect();
+    Mat::from_fn(n, n, |i, j| {
+        ob[(labels[i], labels[j])] * inv_sqrt[labels[i]] * inv_sqrt[labels[j]]
+    })
+}
+
+/// C_w = I_N − R_C N_C^{−1} R_Cᵀ.
+pub fn central_factor_w(labels: &[usize], n_classes: usize) -> Mat {
+    let counts = class_counts(labels, n_classes);
+    let n = labels.len();
+    Mat::from_fn(n, n, |i, j| {
+        let same = if labels[i] == labels[j] {
+            1.0 / counts[labels[i]] as f64
+        } else {
+            0.0
+        };
+        (if i == j { 1.0 } else { 0.0 }) - same
+    })
+}
+
+/// C_t = I_N − J_N / N.
+pub fn central_factor_t(n: usize) -> Mat {
+    let inv = 1.0 / n as f64;
+    Mat::from_fn(n, n, |i, j| (if i == j { 1.0 } else { 0.0 }) - inv)
+}
+
+/// C_bs (Eq. 57) for the subclass case.
+pub fn central_factor_bs(part: &SubclassPartition) -> Mat {
+    let counts = part.counts();
+    let obs = core_matrix_subclass(part);
+    let n = part.sub_labels.len();
+    let inv_sqrt: Vec<f64> = counts.iter().map(|&c| 1.0 / (c as f64).sqrt()).collect();
+    Mat::from_fn(n, n, |i, j| {
+        let (a, b) = (part.sub_labels[i], part.sub_labels[j]);
+        obs[(a, b)] * inv_sqrt[a] * inv_sqrt[b]
+    })
+}
+
+/// C_ws = I_N − R_H N_H^{−1} R_Hᵀ (Eq. 57).
+pub fn central_factor_ws(part: &SubclassPartition) -> Mat {
+    let counts = part.counts();
+    let n = part.sub_labels.len();
+    Mat::from_fn(n, n, |i, j| {
+        let same = if part.sub_labels[i] == part.sub_labels[j] {
+            1.0 / counts[part.sub_labels[i]] as f64
+        } else {
+            0.0
+        };
+        (if i == j { 1.0 } else { 0.0 }) - same
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels_3() -> Vec<usize> {
+        let mut l = vec![0; 7];
+        l.extend(vec![1; 12]);
+        l.extend(vec![2; 5]);
+        l
+    }
+
+    #[test]
+    fn core_matrix_is_idempotent_projector() {
+        let ob = core_matrix(&[7, 12, 5]);
+        assert!(ob.matmul(&ob).sub(&ob).max_abs() < 1e-12, "idempotent");
+        // null vector is ṅ (Eq. 32)
+        let nd: Vec<f64> = [7.0_f64, 12.0, 5.0].iter().map(|x| x.sqrt()).collect();
+        let out = ob.matvec(&nd);
+        assert!(out.iter().all(|x| x.abs() < 1e-12));
+    }
+
+    #[test]
+    fn theta_is_orthonormal_and_in_cb_range() {
+        let labels = labels_3();
+        let th = theta(&labels, 3);
+        assert_eq!(th.shape(), (24, 2));
+        // Θᵀ Θ = I (Sec. 4.3)
+        assert!(th.matmul_tn(&th).sub(&Mat::eye(2)).max_abs() < 1e-10);
+        // Θᵀ C_b Θ = I (Eq. 41)
+        let cb = central_factor_b(&labels, 3);
+        let red = th.matmul_tn(&cb.matmul(&th));
+        assert!(red.sub(&Mat::eye(2)).max_abs() < 1e-10);
+        // Θᵀ C_w Θ = 0 (Eq. 42)
+        let cw = central_factor_w(&labels, 3);
+        let red = th.matmul_tn(&cw.matmul(&th));
+        assert!(red.max_abs() < 1e-10);
+        // Θᵀ C_t Θ = I (Eq. 43)
+        let ct = central_factor_t(24);
+        let red = th.matmul_tn(&ct.matmul(&th));
+        assert!(red.sub(&Mat::eye(2)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn central_factors_satisfy_paper_identities() {
+        let labels = labels_3();
+        let cb = central_factor_b(&labels, 3);
+        let cw = central_factor_w(&labels, 3);
+        let ct = central_factor_t(24);
+        // C_t = C_b + C_w ; C_b C_w = 0 (Sec. 4.2)
+        assert!(cb.add(&cw).sub(&ct).max_abs() < 1e-12);
+        assert!(cb.matmul(&cw).max_abs() < 1e-12);
+        // idempotency
+        for m in [&cb, &cw, &ct] {
+            assert!(m.matmul(m).sub(m).max_abs() < 1e-10);
+        }
+        // ranks (Eqs. 33-35) via eigenvalue counting
+        let rank = |m: &Mat| {
+            crate::linalg::sym_eig(m)
+                .unwrap()
+                .values
+                .iter()
+                .filter(|v| v.abs() > 1e-8)
+                .count()
+        };
+        assert_eq!(rank(&cb), 2); // C-1
+        assert_eq!(rank(&cw), 24 - 3); // N-C
+        assert_eq!(rank(&ct), 23); // N-1
+    }
+
+    #[test]
+    fn theta_binary_matches_evd_route() {
+        let labels: Vec<usize> = vec![0; 30].into_iter().chain(vec![1; 70]).collect();
+        let ana = theta_binary(&labels);
+        let evd = theta(&labels, 2);
+        // same up to sign
+        let sign = (ana[(0, 0)] * evd[(0, 0)]).signum();
+        assert!(ana.sub(&evd.scale(sign)).max_abs() < 1e-10);
+        // unit norm (Sec. 4.4)
+        let n: f64 = ana.data().iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_binary_paper_toy_values() {
+        // Sec. 6.2: N1=100, N2=5000 gives theta entries ±0.09901 / ∓0.00198
+        let labels: Vec<usize> = vec![0; 100].into_iter().chain(vec![1; 5000]).collect();
+        let th = theta_binary(&labels);
+        assert!((th[(0, 0)].abs() - 0.09901).abs() < 1e-5);
+        assert!((th[(5099, 0)].abs() - 0.00198).abs() < 1e-5);
+    }
+
+    #[test]
+    fn subclass_core_matrix_matches_closed_form() {
+        // O_bs = I_H − (1/N) Ṅ_H − Ṅ_H ⊛ E (Eq. 60)... verified via its
+        // defining properties: SPSD, rank H−1, null vector ṅ_H (Eq. 61-62)
+        let part = SubclassPartition {
+            sub_labels: [vec![0; 5], vec![1; 9], vec![2; 4], vec![3; 6], vec![4; 7]].concat(),
+            class_of: vec![0, 0, 1, 1, 2],
+        };
+        let obs = core_matrix_subclass(&part);
+        let e = jacobi_eig(&obs);
+        assert!(e.values.iter().all(|&v| v > -1e-10), "SPSD");
+        assert_eq!(e.values.iter().filter(|&&v| v > 1e-10).count(), 4);
+        let nd: Vec<f64> = part.counts().iter().map(|&c| (c as f64).sqrt()).collect();
+        assert!(obs.matvec(&nd).iter().all(|x| x.abs() < 1e-12));
+    }
+
+    #[test]
+    fn v_matrix_simultaneous_reduction() {
+        // V^T C_bs V = Ω, V^T C_ws V = 0, V^T C_t V = I (Eqs. 67-69)
+        let part = SubclassPartition {
+            sub_labels: [vec![0; 8], vec![1; 6], vec![2; 10], vec![3; 7]].concat(),
+            class_of: vec![0, 0, 1, 1],
+        };
+        let n = part.sub_labels.len();
+        let (v, omega) = v_matrix(&part);
+        assert_eq!(v.cols(), 3);
+        let cbs = central_factor_bs(&part);
+        let cws = central_factor_ws(&part);
+        let ct = central_factor_t(n);
+        let red_b = v.matmul_tn(&cbs.matmul(&v));
+        assert!(red_b.sub(&Mat::diag(&omega)).max_abs() < 1e-10);
+        let red_w = v.matmul_tn(&cws.matmul(&v));
+        assert!(red_w.max_abs() < 1e-10);
+        let red_t = v.matmul_tn(&ct.matmul(&v));
+        assert!(red_t.sub(&Mat::eye(3)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn trivial_partition_reduces_to_class_case() {
+        let labels = labels_3();
+        let part = SubclassPartition::trivial(&labels, 3);
+        let (v, omega) = v_matrix(&part);
+        let th = theta(&labels, 3);
+        // both span the same 2-D space: projector difference is zero
+        let pv = v.matmul_nt(&v);
+        let pt = th.matmul_nt(&th);
+        assert!(pv.sub(&pt).max_abs() < 1e-8);
+        assert_eq!(omega.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "both classes must be non-empty")]
+    fn theta_binary_rejects_single_class() {
+        theta_binary(&[0, 0, 0]);
+    }
+}

@@ -1,0 +1,141 @@
+//! GDA baseline [26] (Sec. 3.1): simultaneous reduction of the centered
+//! kernel matrices S̄_b = K̄ C̄ K̄ and S̄_t = K̄ K̄ via the EVD of K̄.
+//!
+//! Requires data centering at train AND test time (Eqs. 21–22) — exactly
+//! the overhead the paper charges against it in the testing-time columns.
+
+use anyhow::Result;
+
+use super::{DrMethod, KernelProjection, Projection};
+use crate::da::core::class_counts;
+use crate::kernels::{center_gram, gram, Kernel};
+use crate::linalg::{sym_eig_desc, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Gda {
+    pub kernel: Kernel,
+    pub eps: f64,
+}
+
+impl Gda {
+    pub fn new(kernel: Kernel) -> Self {
+        Gda { kernel, eps: 1e-3 }
+    }
+}
+
+impl DrMethod for Gda {
+    fn name(&self) -> &'static str {
+        "gda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let n = x.rows();
+        let k = gram(x, self.kernel);
+        let kbar = center_gram(&k);
+        // EVD of K̄ (always singular after centering → regularized rank cut)
+        let eig = sym_eig_desc(&kbar).map_err(|e| anyhow::anyhow!("GDA EVD: {e}"))?;
+        let tol = self.eps * eig.values.first().copied().unwrap_or(1.0).max(1e-12);
+        let r = eig.values.iter().take_while(|&&v| v > tol).count().max(1);
+        let mut p = Mat::zeros(n, r);
+        for c in 0..r {
+            for row in 0..n {
+                p[(row, c)] = eig.vectors[(row, c)];
+            }
+        }
+        // block-diagonal class weight matrix C̄ (Sec. 3.1)
+        let counts = class_counts(labels, n_classes);
+        let cbar = Mat::from_fn(n, n, |i, j| {
+            if labels[i] == labels[j] {
+                1.0 / counts[labels[i]] as f64
+            } else {
+                0.0
+            }
+        });
+        // range-space GEP: M = Pᵀ C̄ P, top C−1 eigenvectors
+        let m = p.matmul_tn(&cbar.matmul(&p));
+        let m = m.add(&m.transpose()).scale(0.5);
+        let inner = sym_eig_desc(&m).map_err(|e| anyhow::anyhow!("GDA inner EVD: {e}"))?;
+        let d = (n_classes - 1).min(r);
+        let mut w = Mat::zeros(r, d);
+        for c in 0..d {
+            for row in 0..r {
+                w[(row, c)] = inner.vectors[(row, c)];
+            }
+        }
+        // Ψ = P Λ⁻¹ W
+        let mut plinv = Mat::zeros(n, r);
+        for c in 0..r {
+            let inv = 1.0 / eig.values[c];
+            for row in 0..n {
+                plinv[(row, c)] = p[(row, c)] * inv;
+            }
+        }
+        let psi = plinv.matmul(&w);
+        Ok(Box::new(KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: Some(k),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{concentric_shells, gaussian_classes, GaussianSpec};
+
+    #[test]
+    fn gda_separates_gaussian_classes() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 2,
+            n_per_class: vec![30, 30],
+            dim: 5,
+            class_sep: 2.5,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 2,
+        });
+        let proj = Gda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 2).unwrap();
+        let z = proj.project(&x);
+        let m0 = (0..30).map(|i| z[(i, 0)]).sum::<f64>() / 30.0;
+        let m1 = (30..60).map(|i| z[(i, 0)]).sum::<f64>() / 30.0;
+        assert!((m0 - m1).abs() > 1e-4);
+    }
+
+    #[test]
+    fn gda_solves_nonlinear_shells() {
+        let (x, labels) = concentric_shells(40, 4, 3);
+        let proj = Gda::new(Kernel::Rbf { rho: 0.5 }).fit(&x, &labels, 2).unwrap();
+        let z = proj.project(&x);
+        // 1-D projection should separate the shells reasonably: count
+        // threshold errors at the midpoint of class means
+        let m0 = (0..40).map(|i| z[(i, 0)]).sum::<f64>() / 40.0;
+        let m1 = (40..80).map(|i| z[(i, 0)]).sum::<f64>() / 40.0;
+        let thr = 0.5 * (m0 + m1);
+        let sign = (m0 - m1).signum();
+        let errors = (0..80)
+            .filter(|&i| {
+                let pred0 = sign * (z[(i, 0)] - thr) > 0.0;
+                (labels[i] == 0) != pred0
+            })
+            .count();
+        assert!(errors < 8, "shell separation errors: {errors}/80");
+    }
+
+    #[test]
+    fn gda_multiclass_dim() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 4,
+            n_per_class: vec![15; 4],
+            dim: 6,
+            class_sep: 2.0,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed: 8,
+        });
+        let proj = Gda::new(Kernel::Rbf { rho: 0.3 }).fit(&x, &labels, 4).unwrap();
+        assert_eq!(proj.dim(), 3);
+    }
+}

@@ -1,0 +1,139 @@
+//! Conventional KDA baseline [24], [25] — the comparator every speedup in
+//! Tables 5–7 is measured against.
+//!
+//! Deliberately implemented the *expensive* way the paper costs it
+//! (Sec. 4.5, (13+1/3)N³ + 2N²F flops): form S_b and S_w as N×N scatter
+//! kernel matrices (2N³), Cholesky-factor S_w + εI (N³/3), form
+//! L⁻¹ S_b L⁻ᵀ (2N³), and run the full symmetric QR eigensolver (9N³).
+
+use anyhow::Result;
+
+use super::core;
+use super::{DrMethod, KernelProjection, Projection};
+use crate::kernels::{gram, Kernel};
+use crate::linalg::{chol, sym_eig_desc, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Kda {
+    pub kernel: Kernel,
+    pub eps: f64,
+}
+
+impl Kda {
+    pub fn new(kernel: Kernel) -> Self {
+        Kda { kernel, eps: 1e-3 }
+    }
+
+    /// The simultaneous-reduction pipeline shared with KSDA: given the
+    /// between-factor C_b* and within-factor C_w*, solve the GEP
+    /// (K C_b K) Ψ = λ (K C_w K + εI) Ψ and keep the top `d` eigenvectors.
+    pub(crate) fn solve_gep(
+        k: &Mat,
+        cb: &Mat,
+        cw: &Mat,
+        eps: f64,
+        d: usize,
+    ) -> Result<Mat> {
+        // S_b = K C_b K, S_w = K C_w K  (the 2N³ the paper charges)
+        let sb = k.matmul(&cb.matmul(k));
+        let mut sw = k.matmul(&cw.matmul(k));
+        sw.add_ridge(eps * (1.0 + sw.max_abs()));
+        // Cholesky of S_w (N³/3)
+        let l = chol::cholesky(&sw, chol::DEFAULT_BLOCK)
+            .map_err(|e| anyhow::anyhow!("KDA S_w Cholesky: {e}"))?;
+        // M = L⁻¹ S_b L⁻ᵀ (2N³)
+        let y = chol::solve_lower(&l, &sb);
+        let m = chol::solve_lower(&l, &y.transpose());
+        // enforce symmetry lost to round-off before the QR eigensolver
+        let m = m.add(&m.transpose()).scale(0.5);
+        // EVD via symmetric QR (9N³)
+        let eig = sym_eig_desc(&m).map_err(|e| anyhow::anyhow!("KDA EVD: {e}"))?;
+        let mut u = Mat::zeros(m.rows(), d);
+        for c in 0..d {
+            for r in 0..m.rows() {
+                u[(r, c)] = eig.vectors[(r, c)];
+            }
+        }
+        // Ψ = L⁻ᵀ U
+        Ok(chol::solve_upper_from_lower(&l, &u))
+    }
+}
+
+impl DrMethod for Kda {
+    fn name(&self) -> &'static str {
+        "kda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let k = gram(x, self.kernel);
+        let cb = core::central_factor_b(labels, n_classes);
+        let cw = core::central_factor_w(labels, n_classes);
+        let psi = Self::solve_gep(&k, &cb, &cw, self.eps, n_classes - 1)?;
+        Ok(Box::new(KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: None,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+
+    fn toy(n_per: usize, c: usize, seed: u64) -> (Mat, Vec<usize>) {
+        gaussian_classes(&GaussianSpec {
+            n_classes: c,
+            n_per_class: vec![n_per; c],
+            dim: 6,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed,
+        })
+    }
+
+    #[test]
+    fn kda_separates_binary_classes() {
+        let (x, labels) = toy(30, 2, 1);
+        let proj = Kda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 2).unwrap();
+        assert_eq!(proj.dim(), 1);
+        let z = proj.project(&x);
+        let m0 = (0..30).map(|i| z[(i, 0)]).sum::<f64>() / 30.0;
+        let m1 = (30..60).map(|i| z[(i, 0)]).sum::<f64>() / 30.0;
+        assert!((m0 - m1).abs() > 1e-3);
+    }
+
+    #[test]
+    fn kda_and_akda_span_same_subspace_on_training_data() {
+        // AKDA ≡ KNDA maximizes between-scatter in null(S_w); with a
+        // well-conditioned kernel both methods produce projections that
+        // order the two classes identically.
+        let (x, labels) = toy(25, 2, 3);
+        let kda_z = Kda::new(Kernel::Rbf { rho: 0.5 })
+            .fit(&x, &labels, 2).unwrap().project(&x);
+        let akda_z = super::super::akda::Akda::new(Kernel::Rbf { rho: 0.5 })
+            .fit(&x, &labels, 2).unwrap().project(&x);
+        // correlation magnitude between the two 1-D embeddings ≈ 1
+        let center = |v: Vec<f64>| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.into_iter().map(|x| x - m).collect::<Vec<f64>>()
+        };
+        let a = center((0..50).map(|i| kda_z[(i, 0)]).collect());
+        let b = center((0..50).map(|i| akda_z[(i, 0)]).collect());
+        let corr = crate::linalg::dot(&a, &b)
+            / (crate::linalg::dot(&a, &a).sqrt() * crate::linalg::dot(&b, &b).sqrt());
+        assert!(corr.abs() > 0.95, "corr={corr}");
+    }
+
+    #[test]
+    fn multiclass_dims() {
+        let (x, labels) = toy(15, 4, 5);
+        let proj = Kda::new(Kernel::Rbf { rho: 0.3 }).fit(&x, &labels, 4).unwrap();
+        assert_eq!(proj.dim(), 3);
+        assert!(proj.project(&x).is_finite());
+    }
+}

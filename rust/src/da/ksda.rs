@@ -1,0 +1,177 @@
+//! KSDA [4] and GSDA [27] baselines — the conventional subclass methods.
+//!
+//! KSDA: the full GEP on (S_bs, S_ws) with NN-chain subclass partitioning
+//! [3] — paid at the conventional 40/3·N³ price (Sec. 5.4).
+//! GSDA: GDA-style centered-kernel route with k-means subclasses.
+
+use anyhow::Result;
+
+use super::core::{self};
+use super::{DrMethod, KernelProjection, Projection};
+use crate::cluster::kmeans::{nn_partition, partition_classes};
+use crate::kernels::{center_gram, gram, Kernel};
+use crate::linalg::{sym_eig_desc, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Ksda {
+    pub kernel: Kernel,
+    pub eps: f64,
+    pub h_per_class: usize,
+}
+
+impl Ksda {
+    pub fn new(kernel: Kernel, h_per_class: usize) -> Self {
+        Ksda { kernel, eps: 1e-3, h_per_class }
+    }
+
+    /// NN-chain partitioning per class (the [3] procedure).
+    fn partition(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> core::SubclassPartition {
+        let mut sub_labels = vec![0usize; labels.len()];
+        let mut class_of = Vec::new();
+        let mut next = 0;
+        for cls in 0..n_classes {
+            let idx: Vec<usize> =
+                (0..labels.len()).filter(|&i| labels[i] == cls).collect();
+            let h = self.h_per_class.min(idx.len()).max(1);
+            let part = nn_partition(&x.select_rows(&idx), h);
+            let used = part.iter().copied().max().unwrap_or(0) + 1;
+            for (pos, &i) in idx.iter().enumerate() {
+                sub_labels[i] = next + part[pos];
+            }
+            for _ in 0..used {
+                class_of.push(cls);
+            }
+            next += used;
+        }
+        core::SubclassPartition { sub_labels, class_of }
+    }
+}
+
+impl DrMethod for Ksda {
+    fn name(&self) -> &'static str {
+        "ksda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let part = self.partition(x, labels, n_classes);
+        let k = gram(x, self.kernel);
+        let cbs = core::central_factor_bs(&part);
+        let cws = core::central_factor_ws(&part);
+        let d = part.n_subclasses() - 1;
+        let psi = super::kda::Kda::solve_gep(&k, &cbs, &cws, self.eps, d)?;
+        Ok(Box::new(KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: None,
+        }))
+    }
+}
+
+/// GSDA [27]: subclass discriminant analysis on the centered kernel via
+/// the range-space EVD route (like GDA), k-means partitioning (Sec. 6.3.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Gsda {
+    pub kernel: Kernel,
+    pub eps: f64,
+    pub h_per_class: usize,
+    pub seed: u64,
+}
+
+impl Gsda {
+    pub fn new(kernel: Kernel, h_per_class: usize) -> Self {
+        Gsda { kernel, eps: 1e-3, h_per_class, seed: 23 }
+    }
+}
+
+impl DrMethod for Gsda {
+    fn name(&self) -> &'static str {
+        "gsda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let part = partition_classes(x, labels, n_classes, self.h_per_class, self.seed);
+        let k = gram(x, self.kernel);
+        let kbar = center_gram(&k);
+        // EVD of K̄ (the expensive GDA step), range-space projection
+        let eig = sym_eig_desc(&kbar).map_err(|e| anyhow::anyhow!("GSDA EVD: {e}"))?;
+        let tol = self.eps * eig.values.first().copied().unwrap_or(1.0).max(1e-12);
+        let r = eig.values.iter().take_while(|&&v| v > tol).count().max(1);
+        let n = kbar.rows();
+        let mut p = Mat::zeros(n, r);
+        for c in 0..r {
+            for row in 0..n {
+                p[(row, c)] = eig.vectors[(row, c)];
+            }
+        }
+        // small GEP in the range space: M = Pᵀ C_bs P
+        let cbs = core::central_factor_bs(&part);
+        let m = p.matmul_tn(&cbs.matmul(&p));
+        let m = m.add(&m.transpose()).scale(0.5);
+        let inner = sym_eig_desc(&m).map_err(|e| anyhow::anyhow!("GSDA inner EVD: {e}"))?;
+        let d = (part.n_subclasses() - 1).min(r);
+        let mut w = Mat::zeros(r, d);
+        for c in 0..d {
+            for row in 0..r {
+                w[(row, c)] = inner.vectors[(row, c)];
+            }
+        }
+        // Ψ = P Λ⁻¹ W
+        let mut plinv = Mat::zeros(n, r);
+        for c in 0..r {
+            let inv = 1.0 / eig.values[c];
+            for row in 0..n {
+                plinv[(row, c)] = p[(row, c)] * inv;
+            }
+        }
+        let psi = plinv.matmul(&w);
+        Ok(Box::new(KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: Some(k),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::xor_blobs;
+
+    #[test]
+    fn ksda_handles_multimodal_binary() {
+        let (x, labels) = xor_blobs(25, 3, 3.0, 0.3, 5);
+        let proj = Ksda::new(Kernel::Rbf { rho: 0.3 }, 2).fit(&x, &labels, 2).unwrap();
+        assert_eq!(proj.dim(), 3); // H-1 with 2 subclasses per class
+        assert!(proj.project(&x).is_finite());
+    }
+
+    #[test]
+    fn gsda_produces_finite_projection() {
+        let (x, labels) = xor_blobs(20, 3, 2.5, 0.4, 6);
+        let proj = Gsda::new(Kernel::Rbf { rho: 0.3 }, 2).fit(&x, &labels, 2).unwrap();
+        assert!(proj.dim() >= 1);
+        let z = proj.project(&x);
+        assert!(z.is_finite());
+    }
+
+    #[test]
+    fn ksda_h1_reduces_to_kda_dim() {
+        use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 3,
+            n_per_class: vec![12; 3],
+            dim: 4,
+            class_sep: 2.0,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 4,
+        });
+        let proj = Ksda::new(Kernel::Rbf { rho: 0.3 }, 1).fit(&x, &labels, 3).unwrap();
+        assert_eq!(proj.dim(), 2); // C-1
+    }
+}

@@ -1,0 +1,152 @@
+//! LDA baseline — linear discriminant analysis in the input space.
+//!
+//! The paper's linear comparator (Sec. 6.3): under the small-sample-size
+//! regime Σ_w is severely ill-posed and LDA degrades, which Tables 2–4
+//! show; the ridge keeps it runnable.
+
+use anyhow::Result;
+
+use super::{DrMethod, LinearProjection, Projection};
+use crate::linalg::{chol, sym_eig_desc, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Lda {
+    pub eps: f64,
+}
+
+impl Lda {
+    pub fn new() -> Self {
+        Lda { eps: 1e-3 }
+    }
+}
+
+impl Default for Lda {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DrMethod for Lda {
+    fn name(&self) -> &'static str {
+        "lda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let (n, l) = x.shape();
+        // class means + global mean
+        let counts = crate::da::core::class_counts(labels, n_classes);
+        let mut means = Mat::zeros(n_classes, l);
+        let mut mean = vec![0.0; l];
+        for i in 0..n {
+            for j in 0..l {
+                means[(labels[i], j)] += x[(i, j)];
+                mean[j] += x[(i, j)];
+            }
+        }
+        for c in 0..n_classes {
+            let inv = 1.0 / counts[c] as f64;
+            for v in means.row_mut(c) {
+                *v *= inv;
+            }
+        }
+        for v in mean.iter_mut() {
+            *v /= n as f64;
+        }
+        // Σ_b = Σ N_i (μ_i − μ)(μ_i − μ)ᵀ ; Σ_w = Σ (x − μ_c)(x − μ_c)ᵀ
+        let mut sb = Mat::zeros(l, l);
+        for c in 0..n_classes {
+            let d: Vec<f64> = (0..l).map(|j| means[(c, j)] - mean[j]).collect();
+            let w = counts[c] as f64;
+            for a in 0..l {
+                for b in 0..l {
+                    sb[(a, b)] += w * d[a] * d[b];
+                }
+            }
+        }
+        let mut sw = Mat::zeros(l, l);
+        for i in 0..n {
+            let d: Vec<f64> =
+                (0..l).map(|j| x[(i, j)] - means[(labels[i], j)]).collect();
+            for a in 0..l {
+                for b in 0..l {
+                    sw[(a, b)] += d[a] * d[b];
+                }
+            }
+        }
+        sw.add_ridge(self.eps * (1.0 + sw.max_abs()));
+        // simultaneous reduction via Cholesky + symmetric QR
+        let lchol = chol::cholesky(&sw, chol::DEFAULT_BLOCK)
+            .map_err(|e| anyhow::anyhow!("LDA Σ_w Cholesky: {e}"))?;
+        let y = chol::solve_lower(&lchol, &sb);
+        let m = chol::solve_lower(&lchol, &y.transpose());
+        let m = m.add(&m.transpose()).scale(0.5);
+        let eig = sym_eig_desc(&m).map_err(|e| anyhow::anyhow!("LDA EVD: {e}"))?;
+        let d = (n_classes - 1).min(l);
+        let mut u = Mat::zeros(l, d);
+        for c in 0..d {
+            for r in 0..l {
+                u[(r, c)] = eig.vectors[(r, c)];
+            }
+        }
+        let w = chol::solve_upper_from_lower(&lchol, &u);
+        Ok(Box::new(LinearProjection { w, mean }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+
+    #[test]
+    fn lda_separates_linear_problem() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 2,
+            n_per_class: vec![40, 40],
+            dim: 6,
+            class_sep: 3.0,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 1,
+        });
+        let proj = Lda::new().fit(&x, &labels, 2).unwrap();
+        assert_eq!(proj.dim(), 1);
+        let z = proj.project(&x);
+        let m0 = (0..40).map(|i| z[(i, 0)]).sum::<f64>() / 40.0;
+        let m1 = (40..80).map(|i| z[(i, 0)]).sum::<f64>() / 40.0;
+        let sd0 = ((0..40).map(|i| (z[(i, 0)] - m0).powi(2)).sum::<f64>() / 40.0).sqrt();
+        assert!((m0 - m1).abs() > 4.0 * sd0, "fisher separation");
+    }
+
+    #[test]
+    fn lda_sss_regime_is_finite() {
+        // n < dim: Σ_w singular — ridge must keep the solve alive
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 2,
+            n_per_class: vec![5, 5],
+            dim: 32,
+            class_sep: 2.0,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 2,
+        });
+        let proj = Lda::new().fit(&x, &labels, 2).unwrap();
+        assert!(proj.project(&x).is_finite());
+    }
+
+    #[test]
+    fn lda_multiclass_dim() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 5,
+            n_per_class: vec![20; 5],
+            dim: 8,
+            class_sep: 2.0,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed: 3,
+        });
+        let proj = Lda::new().fit(&x, &labels, 5).unwrap();
+        assert_eq!(proj.dim(), 4);
+    }
+}

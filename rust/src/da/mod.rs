@@ -1,0 +1,112 @@
+//! Discriminant-analysis methods: the paper's AKDA/AKSDA plus every
+//! baseline it is evaluated against (Sec. 6.3: PCA, LDA, KDA, GDA, SRKDA,
+//! KSDA, GSDA), behind one `DrMethod` trait so the evaluation harness and
+//! the coordinator treat them uniformly.
+
+pub mod akda;
+pub mod aksda;
+pub mod core;
+pub mod equivalence;
+pub mod gda;
+pub mod incremental;
+pub mod kda;
+pub mod ksda;
+pub mod lda;
+pub mod pca;
+pub mod srkda;
+
+use crate::linalg::Mat;
+
+/// A fitted dimensionality-reduction model: projects test observations
+/// into the discriminant subspace (z = Γᵀφ(x), Eq. 11).
+pub trait Projection: Send + Sync {
+    fn project(&self, x_test: &Mat) -> Mat;
+    /// Discriminant-subspace dimensionality D.
+    fn dim(&self) -> usize;
+}
+
+/// A dimensionality-reduction method (the "m-th method" of Sec. 6.3.1).
+pub trait DrMethod: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Fit on training rows `x` with labels in 0..n_classes.
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> anyhow::Result<Box<dyn Projection>>;
+}
+
+/// Identity "projection" — lets raw-input-space SVM baselines flow through
+/// the same DR + LSVM pipeline.
+pub struct IdentityProjection {
+    dim: usize,
+}
+
+impl IdentityProjection {
+    pub fn new(dim: usize) -> Self {
+        Self { dim }
+    }
+}
+
+impl Projection for IdentityProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        x_test.clone()
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// No-op DR (raw input space), used for the LSVM / KSVM columns.
+pub struct NoDr;
+
+impl DrMethod for NoDr {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn fit(&self, x: &Mat, _labels: &[usize], _n_classes: usize)
+        -> anyhow::Result<Box<dyn Projection>> {
+        Ok(Box::new(IdentityProjection::new(x.cols())))
+    }
+}
+
+/// Kernel-expansion projection shared by every kernel DR method:
+/// z = Ψᵀ k(·) with optional feature-space centering (Eq. 22).
+pub struct KernelProjection {
+    pub x_train: Mat,
+    pub psi: Mat,
+    pub kernel: crate::kernels::Kernel,
+    /// When set, cross-kernel blocks are centered against these training
+    /// statistics (GDA/SRKDA/GSDA pay this at test time — Sec. 6.3.2 notes
+    /// it makes their testing slower).
+    pub center_against: Option<Mat>,
+}
+
+impl Projection for KernelProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        let kc = crate::kernels::cross_gram(x_test, &self.x_train, self.kernel);
+        let kc = match &self.center_against {
+            Some(k_train) => crate::kernels::center_cross(&kc, k_train),
+            None => kc,
+        };
+        kc.matmul(&self.psi)
+    }
+    fn dim(&self) -> usize {
+        self.psi.cols()
+    }
+}
+
+/// Linear projection z = Wᵀ(x − μ) for the input-space methods (PCA/LDA).
+pub struct LinearProjection {
+    pub w: Mat,
+    pub mean: Vec<f64>,
+}
+
+impl Projection for LinearProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        let centered = Mat::from_fn(x_test.rows(), x_test.cols(), |i, j| {
+            x_test[(i, j)] - self.mean[j]
+        });
+        centered.matmul(&self.w)
+    }
+    fn dim(&self) -> usize {
+        self.w.cols()
+    }
+}

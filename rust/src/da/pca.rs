@@ -1,0 +1,107 @@
+//! PCA baseline — unsupervised linear DR comparator (Sec. 6.3).
+
+use anyhow::Result;
+
+use super::{DrMethod, LinearProjection, Projection};
+use crate::linalg::{sym_eig_desc, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Pca {
+    /// Keep the smallest number of components whose variance fraction
+    /// reaches this threshold …
+    pub energy: f64,
+    /// … capped at this many components.
+    pub max_components: usize,
+}
+
+impl Pca {
+    pub fn new() -> Self {
+        Pca { energy: 0.95, max_components: 64 }
+    }
+}
+
+impl Default for Pca {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DrMethod for Pca {
+    fn name(&self) -> &'static str {
+        "pca"
+    }
+
+    fn fit(&self, x: &Mat, _labels: &[usize], _n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let (n, l) = x.shape();
+        let mut mean = vec![0.0; l];
+        for i in 0..n {
+            for j in 0..l {
+                mean[j] += x[(i, j)];
+            }
+        }
+        for v in mean.iter_mut() {
+            *v /= n as f64;
+        }
+        let centered = Mat::from_fn(n, l, |i, j| x[(i, j)] - mean[j]);
+        let cov = centered.matmul_tn(&centered).scale(1.0 / (n.max(2) - 1) as f64);
+        let eig = sym_eig_desc(&cov).map_err(|e| anyhow::anyhow!("PCA EVD: {e}"))?;
+        let total: f64 = eig.values.iter().filter(|v| **v > 0.0).sum();
+        let mut d = 0;
+        let mut acc = 0.0;
+        while d < l.min(self.max_components) && acc < self.energy * total {
+            acc += eig.values[d].max(0.0);
+            d += 1;
+        }
+        let d = d.max(1);
+        let mut w = Mat::zeros(l, d);
+        for c in 0..d {
+            for r in 0..l {
+                w[(r, c)] = eig.vectors[(r, c)];
+            }
+        }
+        Ok(Box::new(LinearProjection { w, mean }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // data stretched along a known axis
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(200, 4, |_, j| {
+            if j == 2 { 10.0 * rng.normal() } else { 0.1 * rng.normal() }
+        });
+        let proj = Pca { energy: 0.9, max_components: 4 }.fit(&x, &[], 0).unwrap();
+        assert_eq!(proj.dim(), 1);
+        let z = proj.project(&x);
+        // projection variance ≈ variance along axis 2
+        let var: f64 = z.data().iter().map(|v| v * v).sum::<f64>() / 200.0;
+        assert!(var > 50.0, "var={var}");
+    }
+
+    #[test]
+    fn pca_energy_keeps_more_components() {
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(100, 6, |_, j| (j + 1) as f64 * rng.normal());
+        let p1 = Pca { energy: 0.5, max_components: 6 }.fit(&x, &[], 0).unwrap();
+        let p2 = Pca { energy: 0.999, max_components: 6 }.fit(&x, &[], 0).unwrap();
+        assert!(p2.dim() > p1.dim());
+    }
+
+    #[test]
+    fn pca_projection_is_centered() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(80, 3, |_, _| 5.0 + rng.normal());
+        let proj = Pca::new().fit(&x, &[], 0).unwrap();
+        let z = proj.project(&x);
+        for c in 0..z.cols() {
+            let m: f64 = (0..80).map(|i| z[(i, c)]).sum::<f64>() / 80.0;
+            assert!(m.abs() < 1e-9);
+        }
+    }
+}

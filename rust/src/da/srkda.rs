@@ -1,0 +1,142 @@
+//! SRKDA baseline [34] (Sec. 3.1) — spectral-regression KDA, the paper's
+//! "previous state of the art" in training speed.
+//!
+//! The trick: the eigenvectors Θ̄ of the block-diagonal C̄ are known in
+//! closed form (class indicators), so after Gram–Schmidt against 𝟙 the
+//! transformation solves the linear system K̄ Ψ̄ = Θ̄ — Cholesky, no EVD.
+//! Cost N³/3 + 2N²(F + C − 1) + O(N²) + O(N) (Sec. 4.5); the O(N²)
+//! centering term is what AKDA shaves off.
+
+use anyhow::Result;
+
+use super::{DrMethod, KernelProjection, Projection};
+use crate::kernels::{center_gram, gram, Kernel};
+use crate::linalg::{chol, gram_schmidt, Mat};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Srkda {
+    pub kernel: Kernel,
+    pub eps: f64,
+}
+
+impl Srkda {
+    pub fn new(kernel: Kernel) -> Self {
+        Srkda { kernel, eps: 1e-3 }
+    }
+
+    /// Closed-form responses: class indicator vectors orthogonalized
+    /// against the all-ones vector (Gram–Schmidt on C̄'s eigenvector set),
+    /// yielding C−1 target columns.
+    pub fn responses(labels: &[usize], n_classes: usize) -> Mat {
+        let n = labels.len();
+        let mut cols = Mat::zeros(n, n_classes + 1);
+        for i in 0..n {
+            cols[(i, 0)] = 1.0; // the 𝟙 vector goes first and is dropped
+            cols[(i, labels[i] + 1)] = 1.0;
+        }
+        let q = gram_schmidt(&cols, 1e-10); // n x C (𝟙 + C−1 independents)
+        q.submatrix(0, 1, n, q.cols() - 1)
+    }
+}
+
+impl DrMethod for Srkda {
+    fn name(&self) -> &'static str {
+        "srkda"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let k = gram(x, self.kernel);
+        let mut kbar = center_gram(&k);
+        kbar.add_ridge(self.eps);
+        let theta_bar = Self::responses(labels, n_classes);
+        let psi = chol::spd_solve(&kbar, &theta_bar, chol::DEFAULT_BLOCK)
+            .map_err(|e| anyhow::anyhow!("SRKDA Cholesky: {e}"))?;
+        Ok(Box::new(KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: Some(k),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+
+    #[test]
+    fn responses_orthonormal_and_orthogonal_to_ones() {
+        let labels: Vec<usize> = vec![0; 7].into_iter()
+            .chain(vec![1; 12]).chain(vec![2; 5]).collect();
+        let r = Srkda::responses(&labels, 3);
+        assert_eq!(r.shape(), (24, 2));
+        let rtr = r.matmul_tn(&r);
+        assert!(rtr.sub(&Mat::eye(2)).max_abs() < 1e-10);
+        for c in 0..2 {
+            let s: f64 = (0..24).map(|i| r[(i, c)]).sum();
+            assert!(s.abs() < 1e-10, "col {c} not centered");
+        }
+        // responses are constant within a class
+        for c in 0..2 {
+            for i in 1..7 {
+                assert!((r[(i, c)] - r[(0, c)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn srkda_separates_classes() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 3,
+            n_per_class: vec![20; 3],
+            dim: 6,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed: 3,
+        });
+        let proj = Srkda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 3).unwrap();
+        assert_eq!(proj.dim(), 2);
+        let z = proj.project(&x);
+        assert!(z.is_finite());
+        // class means in the subspace are distinct
+        let mean = |cls: usize, d: usize| {
+            let idx: Vec<usize> = (0..60).filter(|&i| labels[i] == cls).collect();
+            idx.iter().map(|&i| z[(i, d)]).sum::<f64>() / idx.len() as f64
+        };
+        let sep01 = (mean(0, 0) - mean(1, 0)).abs() + (mean(0, 1) - mean(1, 1)).abs();
+        let sep02 = (mean(0, 0) - mean(2, 0)).abs() + (mean(0, 1) - mean(2, 1)).abs();
+        assert!(sep01 > 1e-4 && sep02 > 1e-4);
+    }
+
+    #[test]
+    fn srkda_and_akda_agree_on_training_ordering_binary() {
+        // SRKDA solves the centered problem; AKDA the uncentered one. On a
+        // well-separated binary problem, both 1-D embeddings must rank the
+        // two classes apart (|corr| high).
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 2,
+            n_per_class: vec![25, 25],
+            dim: 5,
+            class_sep: 3.0,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 6,
+        });
+        let z_sr = Srkda::new(Kernel::Rbf { rho: 0.4 })
+            .fit(&x, &labels, 2).unwrap().project(&x);
+        let z_ak = super::super::akda::Akda::new(Kernel::Rbf { rho: 0.4 })
+            .fit(&x, &labels, 2).unwrap().project(&x);
+        let center = |v: Vec<f64>| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.into_iter().map(|x| x - m).collect::<Vec<f64>>()
+        };
+        let a = center((0..50).map(|i| z_sr[(i, 0)]).collect());
+        let b = center((0..50).map(|i| z_ak[(i, 0)]).collect());
+        let corr = crate::linalg::dot(&a, &b)
+            / (crate::linalg::dot(&a, &a).sqrt() * crate::linalg::dot(&b, &b).sqrt());
+        assert!(corr.abs() > 0.9, "corr={corr}");
+    }
+}

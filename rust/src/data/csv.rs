@@ -1,0 +1,114 @@
+//! Minimal CSV I/O for features + labels (bring-your-own-dataset path and
+//! the toy example's figure dumps).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+
+/// Load a labelled feature matrix: each line `label,f1,f2,...`.
+pub fn load_labeled(path: &Path) -> Result<(Mat, Vec<usize>)> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels = Vec::new();
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let label: usize = parts
+            .next()
+            .context("missing label")?
+            .trim()
+            .parse()
+            .with_context(|| format!("bad label on line {}", lineno + 1))?;
+        let feats: Vec<f64> = parts
+            .map(|p| p.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("bad feature on line {}", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            anyhow::ensure!(
+                feats.len() == first.len(),
+                "inconsistent feature count on line {}",
+                lineno + 1
+            );
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty dataset {path:?}");
+    let (n, d) = (rows.len(), rows[0].len());
+    let mut data = Vec::with_capacity(n * d);
+    for r in rows {
+        data.extend(r);
+    }
+    Ok((Mat::from_vec(n, d, data), labels))
+}
+
+/// Write a labelled feature matrix in the same format.
+pub fn save_labeled(path: &Path, x: &Mat, labels: &[usize]) -> Result<()> {
+    anyhow::ensure!(x.rows() == labels.len());
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..x.rows() {
+        write!(w, "{}", labels[i])?;
+        for v in x.row(i) {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write an unlabeled matrix, one row per line (figure data dumps).
+pub fn save_matrix(path: &Path, x: &Mat) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..x.rows() {
+        let row: Vec<String> = x.row(i).iter().map(|v| v.to_string()).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("akda_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.csv");
+        let x = Mat::from_vec(3, 2, vec![1.0, 2.5, -3.0, 0.0, 7.25, 9.0]);
+        let labels = vec![0, 1, 1];
+        save_labeled(&path, &x, &labels).unwrap();
+        let (x2, l2) = load_labeled(&path).unwrap();
+        assert_eq!(l2, labels);
+        assert!(x2.sub(&x).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("akda_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        std::fs::write(&path, "0,1.0,2.0\n1,3.0\n").unwrap();
+        assert!(load_labeled(&path).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("akda_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comments.csv");
+        std::fs::write(&path, "# header\n\n0,1.0\n1,2.0\n").unwrap();
+        let (x, l) = load_labeled(&path).unwrap();
+        assert_eq!(x.shape(), (2, 1));
+        assert_eq!(l, vec![0, 1]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: synthetic generators (the paper's datasets are
+//! unavailable — see DESIGN.md §3), the Table-1 registry, and CSV I/O for
+//! bringing your own features.
+
+pub mod csv;
+pub mod registry;
+pub mod synthetic;
+
+pub use registry::{by_name, cross_dataset_collection, med_datasets, Condition, DatasetSpec, Split};

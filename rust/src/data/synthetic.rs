@@ -1,0 +1,181 @@
+//! Synthetic dataset generators.
+//!
+//! Substitution (DESIGN.md §3): the paper evaluates on TRECVID MED video
+//! features and the cross-dataset image collection — neither is available
+//! here. The paper's *claims* depend on (N, C, F) for timing and on class
+//! nonlinearity/multimodality for accuracy ordering, so these generators
+//! control exactly those axes: Gaussian-mixture classes with configurable
+//! per-class counts, modes per class (multimodality → subclass methods
+//! win), separation and noise (overlap → kernel methods win over linear).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Specification for a Gaussian-mixture multi-class problem.
+#[derive(Debug, Clone)]
+pub struct GaussianSpec {
+    pub n_classes: usize,
+    pub n_per_class: Vec<usize>,
+    pub dim: usize,
+    /// Distance scale between class (and mode) centers.
+    pub class_sep: f64,
+    /// Within-mode standard deviation.
+    pub noise: f64,
+    /// Modes per class (>1 makes classes multimodal — the regime KSDA/
+    /// AKSDA are built for, Sec. 2).
+    pub modes_per_class: usize,
+    pub seed: u64,
+}
+
+/// Draw the dataset: returns (X rows-observations, labels), observations
+/// sorted by class (the paper's convention, Sec. 2).
+pub fn gaussian_classes(spec: &GaussianSpec) -> (Mat, Vec<usize>) {
+    assert_eq!(spec.n_per_class.len(), spec.n_classes);
+    let mut rng = Rng::new(spec.seed);
+    let n: usize = spec.n_per_class.iter().sum();
+    let mut x = Mat::zeros(n, spec.dim);
+    let mut labels = Vec::with_capacity(n);
+    // random unit directions for each class/mode center
+    let mut centers: Vec<Vec<f64>> = Vec::new();
+    for _ in 0..spec.n_classes * spec.modes_per_class {
+        let mut c: Vec<f64> = (0..spec.dim).map(|_| rng.normal()).collect();
+        let nrm = c.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        for v in c.iter_mut() {
+            *v *= spec.class_sep / nrm;
+        }
+        centers.push(c);
+    }
+    let mut row = 0;
+    for cls in 0..spec.n_classes {
+        for i in 0..spec.n_per_class[cls] {
+            let mode = i % spec.modes_per_class;
+            let center = &centers[cls * spec.modes_per_class + mode];
+            for j in 0..spec.dim {
+                x[(row, j)] = center[j] + spec.noise * rng.normal();
+            }
+            labels.push(cls);
+            row += 1;
+        }
+    }
+    (x, labels)
+}
+
+/// A nonlinear two-class problem (concentric shells): linearly
+/// inseparable in input space, separable with an RBF kernel — the regime
+/// where the paper's kernel methods beat the linear ones (Sec. 6.3.2).
+pub fn concentric_shells(n_per: usize, dim: usize, seed: u64) -> (Mat, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let n = 2 * n_per;
+    let mut x = Mat::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for cls in 0..2 {
+        let radius = if cls == 0 { 1.0 } else { 3.0 };
+        for i in 0..n_per {
+            let row = cls * n_per + i;
+            let v: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let nrm = v.iter().map(|a| a * a).sum::<f64>().sqrt().max(1e-12);
+            let r = radius + 0.25 * rng.normal();
+            for (j, a) in v.iter().enumerate() {
+                x[(row, j)] = a / nrm * r;
+            }
+            labels.push(cls);
+        }
+    }
+    (x, labels)
+}
+
+/// XOR-style multimodal binary problem: each class is two far-apart
+/// blobs arranged so class means coincide — unimodal DA fails, subclass
+/// DA succeeds. Used by the AKSDA-vs-AKDA ablations.
+pub fn xor_blobs(n_per_blob: usize, dim: usize, sep: f64, noise: f64, seed: u64)
+    -> (Mat, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let n = 4 * n_per_blob;
+    let mut x = Mat::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    // class 0 blobs at (+s,+s) and (−s,−s); class 1 at (+s,−s), (−s,+s)
+    let corners = [(1.0, 1.0, 0), (-1.0, -1.0, 0), (1.0, -1.0, 1), (-1.0, 1.0, 1)];
+    let mut row = 0;
+    // keep observations sorted by class: class 0 blobs first
+    for &(a, b, cls) in corners.iter().filter(|c| c.2 == 0).chain(
+        corners.iter().filter(|c| c.2 == 1)) {
+        for _ in 0..n_per_blob {
+            x[(row, 0)] = a * sep + noise * rng.normal();
+            x[(row, 1)] = b * sep + noise * rng.normal();
+            for j in 2..dim {
+                x[(row, j)] = noise * rng.normal();
+            }
+            labels.push(cls);
+            row += 1;
+        }
+    }
+    (x, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_shapes_and_sorted_labels() {
+        let (x, labels) = gaussian_classes(&GaussianSpec {
+            n_classes: 3,
+            n_per_class: vec![10, 20, 5],
+            dim: 6,
+            class_sep: 2.0,
+            noise: 0.5,
+            modes_per_class: 1,
+            seed: 1,
+        });
+        assert_eq!(x.shape(), (35, 6));
+        assert_eq!(labels.len(), 35);
+        let mut sorted = labels.clone();
+        sorted.sort_unstable();
+        assert_eq!(labels, sorted, "observations sorted by class");
+        assert_eq!(labels.iter().filter(|&&l| l == 1).count(), 20);
+    }
+
+    #[test]
+    fn gaussian_deterministic() {
+        let spec = GaussianSpec {
+            n_classes: 2,
+            n_per_class: vec![8, 8],
+            dim: 4,
+            class_sep: 1.0,
+            noise: 0.3,
+            modes_per_class: 2,
+            seed: 9,
+        };
+        let (a, _) = gaussian_classes(&spec);
+        let (b, _) = gaussian_classes(&spec);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shells_have_expected_radii() {
+        let (x, labels) = concentric_shells(50, 5, 2);
+        for i in 0..100 {
+            let r: f64 = x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+            if labels[i] == 0 {
+                assert!(r < 2.0, "inner shell radius {r}");
+            } else {
+                assert!(r > 2.0, "outer shell radius {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_class_means_coincide() {
+        let (x, labels) = xor_blobs(100, 4, 3.0, 0.2, 3);
+        let mean = |cls: usize, j: usize| {
+            let idx: Vec<usize> = (0..400).filter(|&i| labels[i] == cls).collect();
+            idx.iter().map(|&i| x[(i, j)]).sum::<f64>() / idx.len() as f64
+        };
+        for j in 0..2 {
+            assert!((mean(0, j) - mean(1, j)).abs() < 0.2, "dim {j}");
+        }
+        // classes sorted
+        assert!(labels[..200].iter().all(|&l| l == 0));
+        assert!(labels[200..].iter().all(|&l| l == 1));
+    }
+}

@@ -1,0 +1,114 @@
+//! Evaluation substrate: average precision / MAP (the paper's ϖ), timing
+//! speedups over KDA (ϑ̃, φ̃), and the table printer that regenerates the
+//! layout of Tables 2–7.
+
+pub mod tables;
+
+/// Average precision of a ranked list: `scores[i]` is the confidence for
+/// observation i, `positive[i]` whether it is a true positive.
+/// AP = mean over positive ranks of precision@rank (the TRECVID metric).
+pub fn average_precision(scores: &[f64], positive: &[bool]) -> f64 {
+    assert_eq!(scores.len(), positive.len());
+    let n_pos = positive.iter().filter(|&&p| p).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    // descending by score; ties broken by index for determinism
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut hits = 0usize;
+    let mut sum = 0.0;
+    for (rank, &i) in order.iter().enumerate() {
+        if positive[i] {
+            hits += 1;
+            sum += hits as f64 / (rank + 1) as f64;
+        }
+    }
+    sum / n_pos as f64
+}
+
+/// Mean average precision over per-class APs (Sec. 6.3.1, ϖ_m).
+pub fn mean_average_precision(aps: &[f64]) -> f64 {
+    if aps.is_empty() {
+        return 0.0;
+    }
+    aps.iter().sum::<f64>() / aps.len() as f64
+}
+
+/// Per-method evaluation record for one dataset/condition experiment.
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    pub method: String,
+    pub map: f64,
+    pub train_s: f64,
+    pub test_s: f64,
+}
+
+impl MethodResult {
+    /// Speedups over a reference (KDA) result: ϑ̃ = ϑ_KDA/ϑ_m, φ̃ likewise.
+    pub fn speedup_over(&self, kda: &MethodResult) -> (f64, f64) {
+        (kda.train_s / self.train_s.max(1e-12), kda.test_s / self.test_s.max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_gives_ap_1() {
+        let scores = [0.9, 0.8, 0.3, 0.2];
+        let pos = [true, true, false, false];
+        assert!((average_precision(&scores, &pos) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_ranking_ap() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let pos = [true, true, false, false];
+        // positives at ranks 3,4 → AP = (1/3 + 2/4)/2
+        let want = (1.0 / 3.0 + 0.5) / 2.0;
+        assert!((average_precision(&scores, &pos) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleaved_ranking() {
+        let scores = [0.9, 0.8, 0.7, 0.6];
+        let pos = [true, false, true, false];
+        let want = (1.0 + 2.0 / 3.0) / 2.0;
+        assert!((average_precision(&scores, &pos) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_positives_is_zero() {
+        assert_eq!(average_precision(&[0.1, 0.2], &[false, false]), 0.0);
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let scores = [0.5, 0.5, 0.5];
+        let pos = [false, true, false];
+        let a = average_precision(&scores, &pos);
+        let b = average_precision(&scores, &pos);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_averages() {
+        assert!((mean_average_precision(&[1.0, 0.5]) - 0.75).abs() < 1e-12);
+        assert_eq!(mean_average_precision(&[]), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratios() {
+        let kda = MethodResult {
+            method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 2.0 };
+        let akda = MethodResult {
+            method: "akda".into(), map: 0.6, train_s: 1.0, test_s: 2.0 };
+        let (t, p) = akda.speedup_over(&kda);
+        assert!((t - 10.0).abs() < 1e-12);
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Table printers regenerating the layout of the paper's Tables 2–7:
+//! MAP-rate tables and training/testing speedup tables, one row per
+//! dataset, one column per method, KDA as the speedup reference.
+
+use std::fmt::Write as _;
+
+use super::MethodResult;
+
+/// Results for one dataset row: method name → result.
+#[derive(Debug, Clone)]
+pub struct DatasetRow {
+    pub dataset: String,
+    pub results: Vec<MethodResult>,
+}
+
+impl DatasetRow {
+    pub fn get(&self, method: &str) -> Option<&MethodResult> {
+        self.results.iter().find(|r| r.method == method)
+    }
+}
+
+/// Paper column order (Tables 2–7).
+pub const METHOD_COLUMNS: &[&str] = &[
+    "pca", "lda", "lsvm", "kda", "gda", "srkda", "akda", "ksvm",
+    "ksda", "gsda", "aksda",
+];
+
+/// Render a MAP table (Tables 2–4 layout) with a trailing Average row.
+pub fn map_table(title: &str, rows: &[DatasetRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = write!(out, "{:<12}", "dataset");
+    for m in METHOD_COLUMNS {
+        let _ = write!(out, "{:>8}", m);
+    }
+    let _ = writeln!(out);
+    let mut sums = vec![0.0; METHOD_COLUMNS.len()];
+    let mut counts = vec![0usize; METHOD_COLUMNS.len()];
+    for row in rows {
+        let _ = write!(out, "{:<12}", row.dataset);
+        for (ci, m) in METHOD_COLUMNS.iter().enumerate() {
+            match row.get(m) {
+                Some(r) => {
+                    let _ = write!(out, "{:>7.2}%", 100.0 * r.map);
+                    sums[ci] += r.map;
+                    counts[ci] += 1;
+                }
+                None => {
+                    let _ = write!(out, "{:>8}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    if rows.len() > 1 {
+        let _ = write!(out, "{:<12}", "Average");
+        for ci in 0..METHOD_COLUMNS.len() {
+            if counts[ci] > 0 {
+                let _ = write!(out, "{:>7.2}%", 100.0 * sums[ci] / counts[ci] as f64);
+            } else {
+                let _ = write!(out, "{:>8}", "-");
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Render a train/test speedup table (Tables 5–7 layout): entries are
+/// `train_speedup/test_speedup` relative to the KDA column.
+pub fn speedup_table(title: &str, rows: &[DatasetRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = write!(out, "{:<12}", "dataset");
+    for m in METHOD_COLUMNS {
+        let _ = write!(out, "{:>12}", m);
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        let Some(kda) = row.get("kda") else { continue };
+        let kda = kda.clone();
+        let _ = write!(out, "{:<12}", row.dataset);
+        for m in METHOD_COLUMNS {
+            match row.get(m) {
+                Some(r) => {
+                    let (t, p) = r.speedup_over(&kda);
+                    let _ = write!(out, "{:>12}", format!("{}/{}", fmt_ratio(t), fmt_ratio(p)));
+                }
+                None => {
+                    let _ = write!(out, "{:>12}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+fn fmt_ratio(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}")
+    } else if r >= 10.0 {
+        format!("{r:.1}")
+    } else {
+        format!("{r:.2}")
+    }
+}
+
+/// Machine-readable CSV dump next to the pretty table (for EXPERIMENTS.md
+/// and plotting).
+pub fn results_csv(rows: &[DatasetRow]) -> String {
+    let mut out = String::from("dataset,method,map,train_s,test_s\n");
+    for row in rows {
+        for r in &row.results {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.6},{:.6}",
+                row.dataset, r.method, r.map, r.train_s, r.test_s
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> DatasetRow {
+        DatasetRow {
+            dataset: "toy".into(),
+            results: vec![
+                MethodResult { method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 1.0 },
+                MethodResult { method: "akda".into(), map: 0.6, train_s: 0.5, test_s: 1.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn map_table_contains_values_and_average() {
+        let t = map_table("Table X", &[row(), row()]);
+        assert!(t.contains("50.00%"));
+        assert!(t.contains("60.00%"));
+        assert!(t.contains("Average"));
+        assert!(t.contains("akda"));
+    }
+
+    #[test]
+    fn speedup_table_reports_ratio() {
+        let t = speedup_table("Table Y", &[row()]);
+        assert!(t.contains("20.0/1.00"), "table:\n{t}");
+        assert!(t.contains("1.00/1.00"));
+    }
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let c = results_csv(&[row()]);
+        assert!(c.lines().count() == 3);
+        assert!(c.contains("toy,akda,0.600000"));
+    }
+}

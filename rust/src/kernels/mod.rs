@@ -1,0 +1,231 @@
+//! Kernel functions and native Gram-matrix computation (Eq. 9).
+//!
+//! The accelerated path computes Gram matrices through the Pallas/PJRT
+//! artifacts; this native implementation (a) serves the baselines, which
+//! must pay the same 2N²F cost the paper charges them, and (b)
+//! cross-checks the artifact numerics in the integration tests.
+
+use crate::linalg::mat::{dot, Mat};
+use crate::util::threads;
+
+/// Mercer kernel choice (Sec. 6.3.1 uses the Gaussian RBF as base kernel;
+/// the toy example of Sec. 6.2 uses the linear kernel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    Linear,
+    /// k(x, y) = exp(-rho * ||x - y||^2)
+    Rbf { rho: f64 },
+    /// k(x, y) = (x·y + c)^d
+    Poly { degree: i32, c: f64 },
+}
+
+impl Kernel {
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        match *self {
+            Kernel::Linear => dot(x, y),
+            Kernel::Rbf { rho } => {
+                let mut d2 = 0.0;
+                for (a, b) in x.iter().zip(y) {
+                    let d = a - b;
+                    d2 += d * d;
+                }
+                (-rho * d2).exp()
+            }
+            Kernel::Poly { degree, c } => (dot(x, y) + c).powi(degree),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Linear => "linear",
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Poly { .. } => "poly",
+        }
+    }
+
+    /// RBF bandwidth if applicable (what the PJRT artifacts take as `rho`).
+    pub fn rho(&self) -> f64 {
+        match *self {
+            Kernel::Rbf { rho } => rho,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Gram matrix K[i,j] = k(x_i, x_j) of the rows of `x`, threaded over row
+/// stripes and exploiting symmetry (only the upper triangle is computed).
+pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
+    let n = x.rows();
+    let mut k = Mat::zeros(n, n);
+    // For RBF, precompute squared norms once: d2 = ni + nj - 2 x_i·x_j.
+    let sq: Vec<f64> = match kernel {
+        Kernel::Rbf { .. } => (0..n).map(|i| dot(x.row(i), x.row(i))).collect(),
+        _ => Vec::new(),
+    };
+    let nthreads = threads::suggested(n);
+    let chunk = n.div_ceil(nthreads);
+    let stripes: Vec<&mut [f64]> = k.data_mut().chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (ti, stripe) in stripes.into_iter().enumerate() {
+            let r0 = ti * chunk;
+            let sq = &sq;
+            s.spawn(move || {
+                for (dr, krow) in stripe.chunks_mut(n).enumerate() {
+                    let i = r0 + dr;
+                    let xi = x.row(i);
+                    for (j, kv) in krow.iter_mut().enumerate().skip(i) {
+                        *kv = match kernel {
+                            Kernel::Rbf { rho } => {
+                                let g = dot(xi, x.row(j));
+                                let d2 = (sq[i] + sq[j] - 2.0 * g).max(0.0);
+                                (-rho * d2).exp()
+                            }
+                            _ => kernel.eval(xi, x.row(j)),
+                        };
+                    }
+                }
+            });
+        }
+    });
+    // mirror the upper triangle
+    for i in 0..n {
+        for j in (i + 1)..n {
+            k[(j, i)] = k[(i, j)];
+        }
+    }
+    k
+}
+
+/// Cross kernel K[e,t] = k(test_e, train_t) (Eq. 11, batched over rows).
+pub fn cross_gram(x_test: &Mat, x_train: &Mat, kernel: Kernel) -> Mat {
+    let (ne, nt) = (x_test.rows(), x_train.rows());
+    let mut k = Mat::zeros(ne, nt);
+    let nthreads = threads::suggested(ne);
+    let chunk = ne.div_ceil(nthreads);
+    let stripes: Vec<&mut [f64]> = k.data_mut().chunks_mut(chunk * nt).collect();
+    std::thread::scope(|s| {
+        for (ti, stripe) in stripes.into_iter().enumerate() {
+            let r0 = ti * chunk;
+            s.spawn(move || {
+                for (dr, krow) in stripe.chunks_mut(nt).enumerate() {
+                    let xe = x_test.row(r0 + dr);
+                    for (t, kv) in krow.iter_mut().enumerate() {
+                        *kv = kernel.eval(xe, x_train.row(t));
+                    }
+                }
+            });
+        }
+    });
+    k
+}
+
+/// Centered kernel matrix K̄ (Eq. 21) — required by GDA/SRKDA/GSDA.
+pub fn center_gram(k: &Mat) -> Mat {
+    let n = k.rows();
+    let inv = 1.0 / n as f64;
+    // row means, col means (symmetric input, but keep it general), total
+    let row_mean: Vec<f64> = (0..n)
+        .map(|i| k.row(i).iter().sum::<f64>() * inv)
+        .collect();
+    let col_mean: Vec<f64> = (0..n).map(|j| (0..n).map(|i| k[(i, j)]).sum::<f64>() * inv).collect();
+    let total: f64 = row_mean.iter().sum::<f64>() * inv;
+    Mat::from_fn(n, n, |i, j| k[(i, j)] - row_mean[i] - col_mean[j] + total)
+}
+
+/// Center a cross-kernel block against the training kernel's statistics
+/// (the testing-phase normalization of Eq. 22, extended to full centering).
+pub fn center_cross(k_cross: &Mat, k_train: &Mat) -> Mat {
+    let (ne, n) = k_cross.shape();
+    let inv = 1.0 / n as f64;
+    let train_col_mean: Vec<f64> =
+        (0..n).map(|j| (0..n).map(|i| k_train[(i, j)]).sum::<f64>() * inv).collect();
+    let total: f64 = train_col_mean.iter().sum::<f64>() * inv;
+    let cross_row_mean: Vec<f64> =
+        (0..ne).map(|e| k_cross.row(e).iter().sum::<f64>() * inv).collect();
+    Mat::from_fn(ne, n, |e, j| {
+        k_cross[(e, j)] - cross_row_mean[e] - train_col_mean[j] + total
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn gram_linear_is_xxt() {
+        let x = randmat(20, 5, 1);
+        let k = gram(&x, Kernel::Linear);
+        assert!(k.sub(&x.matmul_nt(&x)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_rbf_properties() {
+        let x = randmat(30, 4, 2);
+        let k = gram(&x, Kernel::Rbf { rho: 0.5 });
+        for i in 0..30 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..30 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+                assert!(k[(i, j)] > 0.0 && k[(i, j)] <= 1.0 + 1e-12);
+            }
+        }
+        // matches scalar evaluation
+        assert!((k[(3, 7)] - Kernel::Rbf { rho: 0.5 }.eval(x.row(3), x.row(7))).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cross_gram_matches_eval() {
+        let xe = randmat(7, 3, 3);
+        let xt = randmat(11, 3, 4);
+        let k = cross_gram(&xe, &xt, Kernel::Rbf { rho: 0.2 });
+        for e in 0..7 {
+            for t in 0..11 {
+                let want = Kernel::Rbf { rho: 0.2 }.eval(xe.row(e), xt.row(t));
+                assert!((k[(e, t)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn poly_kernel_eval() {
+        let k = Kernel::Poly { degree: 2, c: 1.0 };
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - 144.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centered_gram_rows_sum_to_zero() {
+        let x = randmat(25, 6, 5);
+        let k = gram(&x, Kernel::Rbf { rho: 1.0 });
+        let kc = center_gram(&k);
+        for i in 0..25 {
+            let rs: f64 = kc.row(i).iter().sum();
+            assert!(rs.abs() < 1e-9);
+        }
+        // equals the explicit formula (Eq. 21)
+        let n = 25.0;
+        let j = Mat::from_fn(25, 25, |_, _| 1.0 / n);
+        let want = k
+            .sub(&k.matmul(&j))
+            .sub(&j.matmul(&k))
+            .add(&j.matmul(&k).matmul(&j));
+        assert!(kc.sub(&want).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn centered_cross_consistent_with_train_centering() {
+        // centering the train block through center_cross must equal
+        // center_gram on the train kernel
+        let x = randmat(18, 4, 7);
+        let k = gram(&x, Kernel::Rbf { rho: 0.3 });
+        let via_cross = center_cross(&k, &k);
+        let via_gram = center_gram(&k);
+        assert!(via_cross.sub(&via_gram).max_abs() < 1e-9);
+    }
+}

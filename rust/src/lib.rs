@@ -1,0 +1,24 @@
+//! # akda — Accelerated Kernel Discriminant Analysis
+//!
+//! Production-quality reproduction of *"Accelerated kernel discriminant
+//! analysis"* (Gkalelis & Mezaris): AKDA + AKSDA with the full baseline
+//! zoo (KDA, SRKDA, GDA, KSDA, GSDA, LDA, PCA, LSVM, KSVM), evaluated
+//! under the paper's protocol, as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * L1/L2 (build time, python): Pallas gram kernels + blocked Cholesky
+//!   lowered to fixed-shape HLO artifacts (`artifacts/*.hlo.txt`).
+//! * L3 (this crate): PJRT runtime, dataset/eval/SVM substrates, and the
+//!   coordinator that runs the paper's one-vs-rest training protocol.
+//!
+//! See `DESIGN.md` for the systems inventory and the experiment index.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod da;
+pub mod data;
+pub mod eval;
+pub mod kernels;
+pub mod linalg;
+pub mod runtime;
+pub mod svm;
+pub mod util;

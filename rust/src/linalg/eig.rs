@@ -1,0 +1,383 @@
+//! Symmetric eigensolvers.
+//!
+//! `sym_eig` = Householder tridiagonalization + implicit QL with Wilkinson
+//! shifts (the "symmetric QR algorithm" the paper costs at 9N^3 flops in
+//! Sec. 4.5). `jacobi_eig` is a cyclic Jacobi fallback used for tiny
+//! matrices (the C x C core matrix O_b) where its quadratic convergence and
+//! excellent orthogonality matter more than flops.
+
+use super::mat::Mat;
+
+/// Eigen decomposition result: `a = vectors * diag(values) * vectorsᵀ`.
+/// `vectors` columns are the eigenvectors.
+#[derive(Debug, Clone)]
+pub struct Eig {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// Returns (d, e, q): diagonal, off-diagonal (e[0] unused), and the
+/// accumulated orthogonal transform Q with A = Q T Qᵀ.
+fn tridiagonalize(a: &Mat) -> (Vec<f64>, Vec<f64>, Mat) {
+    let n = a.rows();
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+
+    for i in (1..n).rev() {
+        let l = i; // length of the row segment 0..i
+        let mut h = 0.0;
+        if l > 1 {
+            let scale: f64 = (0..l).map(|k| z[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[(i, i - 1)];
+            } else {
+                for k in 0..l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, i - 1)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, i - 1)] = f - g;
+                f = 0.0;
+                for j in 0..l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[(j, k)] -= f * e[k] + g * z[(i, k)];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, i - 1)];
+        }
+        d[i] = h;
+    }
+
+    d[0] = 0.0;
+    e[0] = 0.0;
+    // accumulate transformation
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    z[(k, j)] -= g * z[(k, i)];
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+    (d, e, z)
+}
+
+/// Implicit QL with Wilkinson shifts on a symmetric tridiagonal matrix,
+/// accumulating the rotations into `z` (columns become eigenvectors).
+fn tql_implicit(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<(), String> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(format!("tql: no convergence at index {l}"));
+            }
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sgn = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sgn);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Full symmetric eigendecomposition, eigenvalues ascending.
+pub fn sym_eig(a: &Mat) -> Result<Eig, String> {
+    assert_eq!(a.rows(), a.cols(), "sym_eig needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return Ok(Eig { values: vec![], vectors: Mat::zeros(0, 0) });
+    }
+    if n == 1 {
+        return Ok(Eig { values: vec![a[(0, 0)]], vectors: Mat::eye(1) });
+    }
+    let (mut d, mut e, mut z) = tridiagonalize(a);
+    tql_implicit(&mut d, &mut e, &mut z)?;
+    // sort ascending, permuting eigenvector columns
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, newc)] = z[(r, oldc)];
+        }
+    }
+    Ok(Eig { values, vectors })
+}
+
+/// Symmetric eigendecomposition sorted descending (the order the paper's
+/// GEP solutions use: λ1 ≥ … ≥ λD).
+pub fn sym_eig_desc(a: &Mat) -> Result<Eig, String> {
+    let mut e = sym_eig(a)?;
+    let n = e.values.len();
+    e.values.reverse();
+    let mut v = Mat::zeros(n, n);
+    for c in 0..n {
+        for r in 0..n {
+            v[(r, c)] = e.vectors[(r, n - 1 - c)];
+        }
+    }
+    e.vectors = v;
+    Ok(e)
+}
+
+/// Cyclic Jacobi eigensolver — slow but extremely robust; used for the tiny
+/// core matrices (C x C, H x H). Eigenvalues descending.
+pub fn jacobi_eig(a: &Mat) -> Eig {
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (c, &(_, oldc)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, c)] = v[(r, oldc)];
+        }
+    }
+    Eig { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randsym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.add(&a.transpose()).scale(0.5)
+    }
+
+    fn check_eig(a: &Mat, e: &Eig, tol: f64) {
+        let n = a.rows();
+        // A v = λ v per pair
+        for c in 0..n {
+            let v = e.vectors.col(c);
+            let av = a.matvec(&v);
+            for r in 0..n {
+                assert!(
+                    (av[r] - e.values[c] * v[r]).abs() < tol,
+                    "residual at ({r},{c})"
+                );
+            }
+        }
+        // orthonormal vectors
+        let vtv = e.vectors.matmul_tn(&e.vectors);
+        assert!(vtv.sub(&Mat::eye(n)).max_abs() < tol);
+    }
+
+    #[test]
+    fn sym_eig_random_matrices() {
+        for &n in &[2, 3, 5, 10, 40, 100] {
+            let a = randsym(n, n as u64 + 1);
+            let e = sym_eig(&a).unwrap();
+            check_eig(&a, &e, 1e-8);
+            // ascending order
+            for i in 1..n {
+                assert!(e.values[i] >= e.values[i - 1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sym_eig_diagonal() {
+        let a = Mat::diag(&[3.0, -1.0, 2.0]);
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sym_eig_desc_descends() {
+        let a = randsym(12, 9);
+        let e = sym_eig_desc(&a).unwrap();
+        for i in 1..12 {
+            assert!(e.values[i] <= e.values[i - 1] + 1e-12);
+        }
+        check_eig(&a, &e, 1e-8);
+    }
+
+    #[test]
+    fn jacobi_matches_ql() {
+        for &n in &[2, 4, 8, 16] {
+            let a = randsym(n, 50 + n as u64);
+            let ej = jacobi_eig(&a);
+            let mut eq = sym_eig(&a).unwrap();
+            eq.values.reverse();
+            for i in 0..n {
+                assert!((ej.values[i] - eq.values[i]).abs() < 1e-9);
+            }
+            check_eig(&a, &ej, 1e-9);
+        }
+    }
+
+    #[test]
+    fn idempotent_projector_has_01_spectrum() {
+        // the paper's core matrix O_b = I - n n^T/(n^T n) (Eq. 30)
+        let counts = [10.0_f64, 25.0, 7.0, 58.0];
+        let nd: Vec<f64> = counts.iter().map(|c| c.sqrt()).collect();
+        let nn: f64 = counts.iter().sum();
+        let n = counts.len();
+        let ob = Mat::from_fn(n, n, |i, j| {
+            (if i == j { 1.0 } else { 0.0 }) - nd[i] * nd[j] / nn
+        });
+        let e = sym_eig_desc(&ob).unwrap();
+        for i in 0..n - 1 {
+            assert!((e.values[i] - 1.0).abs() < 1e-12);
+        }
+        assert!(e.values[n - 1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_eig_sweep() {
+        for seed in 0..12_u64 {
+            let mut rng = Rng::new(3_000 + seed);
+            let n = 2 + (rng.next_u64() % 30) as usize;
+            let a = randsym(n, 77 * seed + 5);
+            let e = sym_eig(&a).unwrap();
+            check_eig(&a, &e, 1e-7);
+            // trace preserved
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum: f64 = e.values.iter().sum();
+            assert!((tr - sum).abs() < 1e-8 * (1.0 + tr.abs()));
+        }
+    }
+}

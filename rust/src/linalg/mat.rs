@@ -1,0 +1,460 @@
+//! Dense row-major matrix type used by every native (non-PJRT) code path.
+//!
+//! The coordinator environment is fully offline (no BLAS/LAPACK crates), so
+//! this module is the linear-algebra substrate the paper's baselines (KDA,
+//! SRKDA, GDA, KSDA, ...) and the native AKDA engine are built on. All
+//! heavy routines are blocked for cache locality and parallelized with
+//! `std::thread::scope`.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat::from_vec(v.len(), 1, v.to_vec())
+    }
+
+    pub fn diag(v: &[f64]) -> Self {
+        let mut m = Mat::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self[(r, c)] = v[r];
+        }
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // simple blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t[(c, r)] = self[(r, c)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Contiguous sub-matrix copy.
+    pub fn submatrix(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Mat {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        let mut out = Mat::zeros(nr, nc);
+        for r in 0..nr {
+            out.row_mut(r).copy_from_slice(&self.row(r0 + r)[c0..c0 + nc]);
+        }
+        out
+    }
+
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, m: &Mat) {
+        assert!(r0 + m.rows <= self.rows && c0 + m.cols <= self.cols);
+        for r in 0..m.rows {
+            let cols = self.cols;
+            let dst = &mut self.data[(r0 + r) * cols + c0..(r0 + r) * cols + c0 + m.cols];
+            dst.copy_from_slice(m.row(r));
+        }
+    }
+
+    /// Select a subset of rows (gather).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += s * I (ridge regularization).
+    pub fn add_ridge(&mut self, s: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// A * B with cache-blocked inner loops, threaded over row stripes.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul inner dim mismatch");
+        let mut out = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut out);
+        out
+    }
+
+    /// A * B^T — avoids materializing the transpose for gram-like products.
+    pub fn matmul_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt inner dim mismatch");
+        let (m, n, k) = (self.rows, b.rows, self.cols);
+        let mut out = Mat::zeros(m, n);
+        let nthreads = crate::util::threads::suggested(m);
+        let a_ref = &*self;
+        let chunk = m.div_ceil(nthreads);
+        let out_rows: Vec<&mut [f64]> = out.data.chunks_mut(chunk * n).collect();
+        std::thread::scope(|s| {
+            for (ti, stripe) in out_rows.into_iter().enumerate() {
+                let r0 = ti * chunk;
+                s.spawn(move || {
+                    for (dr, orow) in stripe.chunks_mut(n).enumerate() {
+                        let arow = a_ref.row(r0 + dr);
+                        for (c, o) in orow.iter_mut().enumerate() {
+                            *o = dot(arow, b.row(c));
+                        }
+                    }
+                });
+            }
+        });
+        let _ = k;
+        out
+    }
+
+    /// A^T * B without materializing A^T.
+    pub fn matmul_tn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn inner dim mismatch");
+        let (m, n) = (self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        // accumulate rank-1 updates row by row: out += a_row^T * b_row
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = b.row(r);
+            for i in 0..m {
+                let a = arow[i];
+                if a != 0.0 {
+                    let orow = out.row_mut(i);
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += a * bv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the FP pipes busy and gives
+    // deterministic results independent of thread count.
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// out = A * B, threaded over row stripes of A; inner kernel iterates the
+/// k-dimension outermost over B rows so B is streamed row-major.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(out.shape(), (m, n));
+    let nthreads = crate::util::threads::suggested(m);
+    let chunk = m.div_ceil(nthreads);
+    let stripes: Vec<&mut [f64]> = out.data.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (ti, stripe) in stripes.into_iter().enumerate() {
+            let r0 = ti * chunk;
+            s.spawn(move || {
+                for (dr, orow) in stripe.chunks_mut(n).enumerate() {
+                    let arow = a.row(r0 + dr);
+                    orow.fill(0.0);
+                    for kk in 0..k {
+                        let av = arow[kk];
+                        if av != 0.0 {
+                            let brow = b.row(kk);
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += av * bv;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for &(m, k, n) in &[(3, 4, 5), (17, 9, 23), (64, 64, 64), (1, 7, 1)] {
+            let a = randmat(m, k, (m * k) as u64);
+            let b = randmat(k, n, (k * n + 1) as u64);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.sub(&want).max_abs() < 1e-10, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_and_tn_match() {
+        let a = randmat(13, 7, 1);
+        let b = randmat(19, 7, 2);
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.sub(&want).max_abs() < 1e-12);
+
+        let c = randmat(13, 5, 3);
+        let got = a.matmul_tn(&c);
+        let want = a.transpose().matmul(&c);
+        assert!(got.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = randmat(37, 12, 5);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn submatrix_and_set() {
+        let a = randmat(10, 8, 9);
+        let s = a.submatrix(2, 3, 4, 5);
+        assert_eq!(s.shape(), (4, 5));
+        assert_eq!(s[(0, 0)], a[(2, 3)]);
+        let mut b = Mat::zeros(10, 8);
+        b.set_submatrix(2, 3, &s);
+        assert_eq!(b[(5, 7)], a[(5, 7)]);
+        assert_eq!(b[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let a = randmat(6, 3, 11);
+        let s = a.select_rows(&[4, 0, 4]);
+        assert_eq!(s.row(0), a.row(4));
+        assert_eq!(s.row(1), a.row(0));
+        assert_eq!(s.row(2), a.row(4));
+    }
+
+    #[test]
+    fn ridge_adds_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.add_ridge(0.5);
+        assert_eq!(a[(1, 1)], 0.5);
+        assert_eq!(a[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = randmat(9, 4, 13);
+        let v: Vec<f64> = (0..4).map(|i| i as f64).collect();
+        let got = a.matvec(&v);
+        let want = a.matmul(&Mat::col_vec(&v));
+        for i in 0..9 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate (offline, no BLAS/LAPACK).
+//!
+//! Built from scratch for this reproduction: the paper's methods and all
+//! its baselines are pure dense-linear-algebra algorithms, so this module
+//! is the foundation everything native sits on. The PJRT artifacts handle
+//! the *large* N x N work on the accelerated path; this handles the small
+//! core-matrix algebra (O_b is C x C) and the entire baseline zoo.
+
+pub mod chol;
+pub mod eig;
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use chol::{cholesky, solve_lower, solve_upper_from_lower, spd_solve, CholError};
+pub use eig::{jacobi_eig, sym_eig, sym_eig_desc, Eig};
+pub use mat::{dot, matmul_into, Mat};
+pub use qr::{gram_schmidt, qr_thin};
+pub use svd::{null_space, rank, svd, Svd};

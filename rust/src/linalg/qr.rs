@@ -1,0 +1,163 @@
+//! QR factorization (Householder) and modified Gram–Schmidt.
+//!
+//! Gram–Schmidt is what SRKDA applies to the block matrix C̄ (Sec. 3.1);
+//! Householder QR backs KODA's orthogonalization step and general
+//! orthonormal-basis needs.
+
+use super::mat::{dot, Mat};
+
+/// Thin Householder QR: A (m x n, m >= n) = Q (m x n) R (n x n).
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin needs m >= n");
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Householder vector for column k below the diagonal
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * dot(&v, &v).sqrt();
+        if alpha == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = dot(&v, &v);
+        if vnorm2 > 0.0 {
+            // apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
+            for j in k..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += v[i - k] * r[(i, j)];
+                }
+                let c = 2.0 * s / vnorm2;
+                for i in k..m {
+                    r[(i, j)] -= c * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // build Q by applying the Householder reflectors to the identity
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2 = dot(v, v);
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * q[(i, j)];
+            }
+            let c = 2.0 * s / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= c * v[i - k];
+            }
+        }
+    }
+    // R upper-triangular part
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rr)
+}
+
+/// Modified Gram–Schmidt on the columns of `a`; returns an orthonormal
+/// basis of the column space, dropping columns whose residual norm falls
+/// below `tol` (rank-revealing, as SRKDA needs on C̄'s eigenvector set).
+pub fn gram_schmidt(a: &Mat, tol: f64) -> Mat {
+    let (m, n) = a.shape();
+    let mut basis: Vec<Vec<f64>> = Vec::new();
+    for j in 0..n {
+        let mut v = a.col(j);
+        for b in &basis {
+            let c = dot(&v, b);
+            for i in 0..m {
+                v[i] -= c * b[i];
+            }
+        }
+        // re-orthogonalize once (classic twice-is-enough)
+        for b in &basis {
+            let c = dot(&v, b);
+            for i in 0..m {
+                v[i] -= c * b[i];
+            }
+        }
+        let nrm = dot(&v, &v).sqrt();
+        if nrm > tol {
+            for x in v.iter_mut() {
+                *x /= nrm;
+            }
+            basis.push(v);
+        }
+    }
+    let mut q = Mat::zeros(m, basis.len());
+    for (c, b) in basis.iter().enumerate() {
+        for r in 0..m {
+            q[(r, c)] = b[r];
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        for &(m, n) in &[(5, 3), (20, 20), (50, 10)] {
+            let a = randmat(m, n, (m + n) as u64);
+            let (q, r) = qr_thin(&a);
+            assert!(q.matmul(&r).sub(&a).max_abs() < 1e-10, "{m}x{n}");
+            let qtq = q.matmul_tn(&q);
+            assert!(qtq.sub(&Mat::eye(n)).max_abs() < 1e-10);
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormalizes() {
+        let a = randmat(30, 8, 3);
+        let q = gram_schmidt(&a, 1e-10);
+        assert_eq!(q.cols(), 8);
+        assert!(q.matmul_tn(&q).sub(&Mat::eye(8)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn gram_schmidt_drops_dependent_columns() {
+        let mut a = randmat(20, 3, 4);
+        let c0 = a.col(0);
+        let c1 = a.col(1);
+        let dep: Vec<f64> = c0.iter().zip(&c1).map(|(x, y)| 2.0 * x - y).collect();
+        a.set_col(2, &dep);
+        let q = gram_schmidt(&a, 1e-8);
+        assert_eq!(q.cols(), 2);
+    }
+
+    #[test]
+    fn gram_schmidt_spans_same_space() {
+        let a = randmat(15, 4, 8);
+        let q = gram_schmidt(&a, 1e-10);
+        // projection of a onto span(q) equals a
+        let proj = q.matmul(&q.matmul_tn(&a));
+        assert!(proj.sub(&a).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,171 @@
+//! Thin SVD via one-sided Jacobi rotations.
+//!
+//! Backs the SVD-based baselines of Sec. 3.2 (KUDA/KODA/KNDA use cascades
+//! of SVDs) and rank decisions. One-sided Jacobi orthogonalizes the columns
+//! of A in place; singular values are the resulting column norms. Slow
+//! (O(n^2 m) per sweep) but very accurate — exactly what the baseline
+//! methods need, and their cost is the point of the comparison anyway.
+
+use super::mat::{dot, Mat};
+
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, m x r (columns).
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors, n x r (columns).
+    pub v: Mat,
+}
+
+/// Thin SVD of `a` (m x n). Singular values below `tol * s_max` are
+/// truncated (rank-revealing).
+pub fn svd(a: &Mat, tol: f64) -> Svd {
+    let (m, n) = a.shape();
+    let mut u = a.clone(); // columns get orthogonalized
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0_f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let up = u.col(p);
+                let uq = u.col(q);
+                let apq = dot(&up, &uq);
+                let app = dot(&up, &up);
+                let aqq = dot(&uq, &uq);
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) entry of AᵀA
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let uip = u[(i, p)];
+                    let uiq = u[(i, q)];
+                    u[(i, p)] = c * uip - s * uiq;
+                    u[(i, q)] = s * uip + c * uiq;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // singular values = column norms; sort descending, truncate at tol
+    let mut pairs: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let cj = u.col(j);
+            (dot(&cj, &cj).sqrt(), j)
+        })
+        .collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let smax = pairs.first().map(|p| p.0).unwrap_or(0.0);
+    let rank = pairs.iter().take_while(|p| p.0 > tol * smax && p.0 > 0.0).count();
+
+    let mut uu = Mat::zeros(m, rank);
+    let mut vv = Mat::zeros(n, rank);
+    let mut s = Vec::with_capacity(rank);
+    for (c, &(sv, j)) in pairs.iter().take(rank).enumerate() {
+        s.push(sv);
+        for i in 0..m {
+            uu[(i, c)] = u[(i, j)] / sv;
+        }
+        for i in 0..n {
+            vv[(i, c)] = v[(i, j)];
+        }
+    }
+    Svd { u: uu, s, v: vv }
+}
+
+/// Numerical rank via SVD.
+pub fn rank(a: &Mat, tol: f64) -> usize {
+    svd(a, tol).s.len()
+}
+
+/// Orthonormal basis of the null space of `a` (n x (n - rank)).
+pub fn null_space(a: &Mat, tol: f64) -> Mat {
+    let n = a.cols();
+    let dec = svd(a, tol);
+    let r = dec.s.len();
+    // the right singular vectors NOT in the row space span the null space;
+    // recover them by orthogonalizing the complement of V's columns.
+    let mut proj = Mat::eye(n);
+    for c in 0..r {
+        let v = dec.v.col(c);
+        for i in 0..n {
+            for j in 0..n {
+                proj[(i, j)] -= v[i] * v[j];
+            }
+        }
+    }
+    super::qr::gram_schmidt(&proj, 1e-8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        for &(m, n) in &[(8, 5), (20, 20), (30, 7)] {
+            let a = randmat(m, n, (m * n) as u64);
+            let d = svd(&a, 1e-12);
+            // U S Vᵀ = A
+            let us = Mat::from_fn(m, d.s.len(), |i, j| d.u[(i, j)] * d.s[j]);
+            let rec = us.matmul_nt(&d.v);
+            assert!(rec.sub(&a).max_abs() < 1e-9, "{m}x{n}");
+            // orthonormality
+            let r = d.s.len();
+            assert!(d.u.matmul_tn(&d.u).sub(&Mat::eye(r)).max_abs() < 1e-9);
+            assert!(d.v.matmul_tn(&d.v).sub(&Mat::eye(r)).max_abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rank_detects_deficiency() {
+        let b = randmat(10, 3, 2);
+        let low = b.matmul_nt(&b); // 10x10 rank 3
+        assert_eq!(rank(&low, 1e-9), 3);
+        assert_eq!(rank(&Mat::eye(6), 1e-9), 6);
+    }
+
+    #[test]
+    fn singular_values_descend() {
+        let a = randmat(12, 9, 5);
+        let d = svd(&a, 1e-12);
+        for i in 1..d.s.len() {
+            assert!(d.s[i] <= d.s[i - 1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn null_space_is_annihilated() {
+        let b = randmat(4, 6, 9); // 4x6: null space dim 2
+        let ns = null_space(&b, 1e-10);
+        assert_eq!(ns.cols(), 2);
+        let prod = b.matmul(&ns);
+        assert!(prod.max_abs() < 1e-8);
+    }
+}

@@ -1,0 +1,287 @@
+//! `akda` CLI — the coordinator launcher.
+//!
+//! Subcommands:
+//!   datasets                      print the Table-1 registry (scaled)
+//!   eval --suite med|cross10|cross100 [...]
+//!                                 regenerate the MAP + speedup tables
+//!   toy                           Sec. 6.2 toy example (Figs. 2–3 data)
+//!   serve --dataset NAME          train a detector bank and serve scores
+//!   check                         verify artifacts + PJRT round trip
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use akda::coordinator::{evaluate_ovr, select_hyper, EvalConfig, Hyper, MethodId, WorkPool};
+use akda::data::{cross_dataset_collection, med_datasets, Condition, DatasetSpec};
+use akda::eval::tables::{map_table, results_csv, speedup_table, DatasetRow};
+use akda::runtime::PjrtEngine;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("AKDA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Result<Args> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", rest[i]))?;
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.insert(k.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "datasets" => cmd_datasets(),
+        "eval" => cmd_eval(&args),
+        "toy" => cmd_toy(&args),
+        "serve" => cmd_serve(&args),
+        "check" => cmd_check(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `akda help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "akda — Accelerated Kernel Discriminant Analysis (paper reproduction)\n\n\
+         USAGE: akda <command> [flags]\n\n\
+         COMMANDS:\n\
+           datasets                         print the dataset registry (Table 1)\n\
+           eval --suite med|cross10|cross100\n\
+                [--methods csv] [--cv] [--pjrt] [--config file] [--out dir]\n\
+                                            regenerate MAP + speedup tables (Tables 2-7)\n\
+           toy [--out dir]                  Sec. 6.2 toy example (Figs. 2-3 data)\n\
+           serve --dataset NAME [--pjrt]    train a detector bank, demo scoring service\n\
+           check                            verify artifacts + PJRT round trip\n\n\
+         ENV: AKDA_ARTIFACTS (default: ./artifacts)"
+    );
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("Cross-dataset collection (Table 1, scaled — DESIGN.md §3):");
+    for d in cross_dataset_collection() {
+        println!("  {}", d.describe(Condition::Ex10));
+    }
+    println!("TRECVID MED (Sec. 6.1.1, scaled):");
+    for d in med_datasets() {
+        println!("  {}", d.describe(Condition::Ex10));
+    }
+    Ok(())
+}
+
+fn suite_of(name: &str) -> Result<(Vec<DatasetSpec>, Condition, &'static str)> {
+    Ok(match name {
+        "med" => (med_datasets(), Condition::Ex100, "TRECVID MED (Tables 2, 5)"),
+        "cross10" => (
+            cross_dataset_collection(),
+            Condition::Ex10,
+            "cross-dataset 10Ex (Tables 3, 6)",
+        ),
+        "cross100" => (
+            cross_dataset_collection(),
+            Condition::Ex100,
+            "cross-dataset 100Ex (Tables 4, 7)",
+        ),
+        other => bail!("unknown suite {other:?} (med|cross10|cross100)"),
+    })
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let suite = args.get("suite").unwrap_or("cross10");
+    let (datasets, cond, title) = suite_of(suite)?;
+    let cfg = match args.get("config") {
+        Some(path) => EvalConfig::from_file(std::path::Path::new(path))?,
+        None => EvalConfig::default(),
+    };
+    let methods: Vec<MethodId> = match args.get("methods") {
+        Some(csv) => csv
+            .split(',')
+            .map(|m| {
+                MethodId::from_name(m.trim())
+                    .with_context(|| format!("unknown method {m:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => MethodId::table_columns(),
+    };
+    let use_cv = args.get("cv").is_some();
+    let engine = if args.get("pjrt").is_some()
+        || methods.iter().any(|m| matches!(m, MethodId::AkdaPjrt | MethodId::AksdaPjrt))
+    {
+        Some(Arc::new(PjrtEngine::from_dir(&artifacts_dir())?))
+    } else {
+        None
+    };
+    let pool = WorkPool::new(cfg.workers);
+
+    let mut rows = Vec::new();
+    for spec in &datasets {
+        eprintln!("== {} [{}]", spec.name, cond.name());
+        let split = spec.split(cond);
+        let mut results = Vec::new();
+        for &id in &methods {
+            let hp = if use_cv {
+                let hp = select_hyper(&split, id, &cfg, engine.as_ref())?;
+                eprintln!("   {}: CV picked rho={} c={} h={}", id.name(), hp.rho, hp.c, hp.h);
+                hp
+            } else {
+                Hyper { rho: 0.05, c: 1.0, h: 2 }
+            };
+            let res = evaluate_ovr(&split, id, hp, cfg.eps, engine.as_ref(), Some(&pool))?;
+            eprintln!(
+                "   {:<10} MAP={:.2}% train={:.2}s test={:.2}s",
+                res.method, 100.0 * res.map, res.train_s, res.test_s
+            );
+            results.push(res);
+        }
+        rows.push(DatasetRow { dataset: spec.name.to_string(), results });
+    }
+
+    println!("{}", map_table(&format!("MAP — {title}"), &rows));
+    println!("{}", speedup_table(&format!("train/test speedup over KDA — {title}"), &rows));
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("results_{suite}.csv"));
+        std::fs::write(&path, results_csv(&rows))?;
+        eprintln!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    // delegate to the shared implementation used by examples/toy_example.rs
+    let out = args.get("out").unwrap_or("toy_output");
+    akda_toy::run(std::path::Path::new(out), artifacts_dir().as_path())
+}
+
+/// The toy example logic is shared with examples/toy_example.rs via include.
+mod akda_toy {
+    include!("../../examples/toy_impl.rs");
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use akda::coordinator::{DetectorBank, ScoringService};
+    use akda::da::DrMethod;
+    use akda::svm::{LinearSvm, LinearSvmConfig};
+    use std::time::Duration;
+
+    let name = args.get("dataset").unwrap_or("eth80");
+    let spec = akda::data::by_name(name).with_context(|| format!("dataset {name:?}"))?;
+    let split = spec.split(Condition::Ex100);
+    eprintln!("training detector bank on {} (C={})", name, split.n_classes);
+
+    let proj: Box<dyn akda::da::Projection> = if args.get("pjrt").is_some() {
+        let engine = Arc::new(PjrtEngine::from_dir(&artifacts_dir())?);
+        akda::runtime::AkdaPjrt { kernel: akda::kernels::Kernel::Rbf { rho: 0.05 }, engine }
+            .fit(&split.x_train, &split.y_train, split.n_classes)?
+    } else {
+        akda::da::akda::Akda::new(akda::kernels::Kernel::Rbf { rho: 0.05 })
+            .fit(&split.x_train, &split.y_train, split.n_classes)?
+    };
+    let z = proj.project(&split.x_train);
+    let svms = (0..split.n_classes)
+        .map(|cls| {
+            let y: Vec<f64> = split
+                .y_train
+                .iter()
+                .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                .collect();
+            (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
+        })
+        .collect();
+    let bank = Arc::new(DetectorBank { projection: proj, svms });
+    let svc = ScoringService::start(bank, split.x_train.cols(), 64, Duration::from_millis(5));
+    let client = svc.client();
+
+    // demo: score the test set through the service, report accuracy + stats
+    let t0 = std::time::Instant::now();
+    let mut correct = 0;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..split.x_test.rows() {
+            let client = client.clone();
+            let row = split.x_test.row(i).to_vec();
+            handles.push(s.spawn(move || client.score(row).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let scores = h.join().unwrap();
+            let pred = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == split.y_test[i] {
+                correct += 1;
+            }
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    println!(
+        "served {} requests in {:.2}s ({:.0} req/s), accuracy {:.1}%, batches={} max_batch={}",
+        split.x_test.rows(),
+        dt,
+        split.x_test.rows() as f64 / dt,
+        100.0 * correct as f64 / split.x_test.rows() as f64,
+        stats.batches,
+        stats.max_batch
+    );
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let dir = artifacts_dir();
+    let engine = PjrtEngine::from_dir(&dir)?;
+    let mf_entries = engine.handle().manifest().entries.len();
+    println!("manifest: {mf_entries} artifacts in {dir:?}");
+    // smoke: tiny fit through the smallest bucket
+    use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![20, 20],
+        dim: 8,
+        class_sep: 2.0,
+        noise: 0.5,
+        modes_per_class: 1,
+        seed: 1,
+    });
+    let theta = akda::da::core::theta_binary(&labels);
+    let psi = engine.fit(&x, &theta, akda::kernels::Kernel::Rbf { rho: 0.2 })?;
+    anyhow::ensure!(psi.is_finite(), "non-finite psi");
+    println!("PJRT round trip OK (psi {}x{})", psi.rows(), psi.cols());
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! The accelerated AKDA/AKSDA engine: routes the Gram + Cholesky hot spots
+//! (>99% of the paper's flops) through the AOT Pallas/XLA artifacts, with
+//! exact zero-padding into the shape buckets (DESIGN.md §5).
+//!
+//! The tiny core-matrix eigenproblem stays native (Alg. 1 step 1-2 — the
+//! whole point of AKDA is that it is O(C³) ≪ N³).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::server::{Arg, PjrtHandle};
+use crate::cluster::kmeans::partition_classes;
+use crate::da::{core, DrMethod, Projection};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+
+/// Accelerated engine over a running PJRT server.
+#[derive(Clone)]
+pub struct PjrtEngine {
+    handle: PjrtHandle,
+}
+
+fn kernel_tag(kernel: Kernel) -> Result<&'static str> {
+    match kernel {
+        Kernel::Linear => Ok("linear"),
+        Kernel::Rbf { .. } => Ok("rbf"),
+        Kernel::Poly { .. } => {
+            anyhow::bail!("no AOT artifacts for the polynomial kernel; use the native engine")
+        }
+    }
+}
+
+/// Pad a row-major matrix (converted to f32) into a (rows_pad, cols_pad)
+/// zero-padded buffer.
+fn pad_f32(m: &Mat, rows_pad: usize, cols_pad: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows_pad * cols_pad];
+    for r in 0..m.rows() {
+        for c in 0..m.cols() {
+            out[r * cols_pad + c] = m[(r, c)] as f32;
+        }
+    }
+    out
+}
+
+fn mask_f32(n_real: usize, n_pad: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n_pad];
+    m[..n_real].fill(1.0);
+    m
+}
+
+impl PjrtEngine {
+    pub fn new(handle: PjrtHandle) -> Self {
+        PjrtEngine { handle }
+    }
+
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        Ok(Self::new(PjrtHandle::start(dir)?))
+    }
+
+    pub fn handle(&self) -> &PjrtHandle {
+        &self.handle
+    }
+
+    /// Solve K Ψ = Θ on the accelerated path. Returns Ψ (n × theta.cols()).
+    pub fn fit(&self, x: &Mat, theta: &Mat, kernel: Kernel) -> Result<Mat> {
+        let (n, l) = x.shape();
+        ensure!(theta.rows() == n, "theta rows must match observations");
+        let tag = kernel_tag(kernel)?;
+        let mf = self.handle.manifest();
+        let d_max = mf.d_max;
+        ensure!(
+            theta.cols() <= d_max,
+            "theta has {} cols > bucket D_max {d_max}; re-emit artifacts with a larger D_MAX",
+            theta.cols()
+        );
+        let entry = mf.fit_bucket(tag, n, l)?;
+        let (bn, bl) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let inputs = vec![
+            Arg::new(pad_f32(x, bn, bl), vec![bn as i64, bl as i64]),
+            Arg::new(pad_f32(theta, bn, d_max), vec![bn as i64, d_max as i64]),
+            Arg::new(vec![kernel.rho() as f32], vec![1, 1]),
+            Arg::new(mask_f32(n, bn), vec![bn as i64, 1]),
+        ];
+        let name = entry.name.clone();
+        let out = self.handle.execute(&name, inputs)?;
+        ensure!(out.len() == bn * d_max, "fit output size mismatch");
+        // unpad: rows 0..n, cols 0..theta.cols()
+        let d = theta.cols();
+        Ok(Mat::from_fn(n, d, |r, c| out[r * d_max + c] as f64))
+    }
+
+    /// Gram matrix via the standalone gram artifact (used by hybrid
+    /// baselines and the cross-check tests).
+    pub fn gram(&self, x: &Mat, kernel: Kernel) -> Result<Mat> {
+        let (n, l) = x.shape();
+        let tag = kernel_tag(kernel)?;
+        let entry = self.handle.manifest().gram_bucket(tag, n, l)?;
+        let (bn, bl) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let inputs = vec![
+            Arg::new(pad_f32(x, bn, bl), vec![bn as i64, bl as i64]),
+            Arg::new(vec![kernel.rho() as f32], vec![1, 1]),
+            Arg::new(mask_f32(n, bn), vec![bn as i64, 1]),
+        ];
+        let name = entry.name.clone();
+        let out = self.handle.execute(&name, inputs)?;
+        ensure!(out.len() == bn * bn, "gram output size mismatch");
+        Ok(Mat::from_fn(n, n, |r, c| out[r * bn + c] as f64))
+    }
+
+    /// Project test rows: Z = K_cross Ψ, chunked through the fixed-size
+    /// test bucket of the project artifact.
+    pub fn project(&self, x_train: &Mat, x_test: &Mat, psi: &Mat, kernel: Kernel)
+        -> Result<Mat> {
+        let (n_tr, l) = x_train.shape();
+        let d = psi.cols();
+        let tag = kernel_tag(kernel)?;
+        let mf = self.handle.manifest();
+        let d_max = mf.d_max;
+        let entry = mf.project_bucket(tag, n_tr, l)?;
+        let (bn, bl) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let chunk = entry.inputs[1].shape[0];
+        let name = entry.name.clone();
+
+        let x_train_pad = Arg::new(pad_f32(x_train, bn, bl), vec![bn as i64, bl as i64]);
+        let psi_pad = Arg::new(pad_f32(psi, bn, d_max), vec![bn as i64, d_max as i64]);
+        let rho = Arg::new(vec![kernel.rho() as f32], vec![1, 1]);
+        let mask = Arg::new(mask_f32(n_tr, bn), vec![bn as i64, 1]);
+
+        let ne = x_test.rows();
+        let mut z = Mat::zeros(ne, d);
+        let mut start = 0;
+        while start < ne {
+            let take = chunk.min(ne - start);
+            let xe = x_test.submatrix(start, 0, take, x_test.cols());
+            let inputs = vec![
+                x_train_pad.clone(),
+                Arg::new(pad_f32(&xe, chunk, bl), vec![chunk as i64, bl as i64]),
+                psi_pad.clone(),
+                rho.clone(),
+                mask.clone(),
+            ];
+            let out = self.handle.execute(&name, inputs)?;
+            ensure!(out.len() == chunk * d_max, "project output size mismatch");
+            for r in 0..take {
+                for c in 0..d {
+                    z[(start + r, c)] = out[r * d_max + c] as f64;
+                }
+            }
+            start += take;
+        }
+        Ok(z)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DrMethod adapters: accelerated AKDA / AKSDA.
+// ---------------------------------------------------------------------------
+
+/// AKDA with the hot path on PJRT (artifacts bake eps = 1e-3).
+pub struct AkdaPjrt {
+    pub kernel: Kernel,
+    pub engine: Arc<PjrtEngine>,
+}
+
+pub struct PjrtProjection {
+    engine: Arc<PjrtEngine>,
+    x_train: Mat,
+    psi: Mat,
+    kernel: Kernel,
+}
+
+impl Projection for PjrtProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        self.engine
+            .project(&self.x_train, x_test, &self.psi, self.kernel)
+            .expect("pjrt project")
+    }
+    fn dim(&self) -> usize {
+        self.psi.cols()
+    }
+}
+
+impl DrMethod for AkdaPjrt {
+    fn name(&self) -> &'static str {
+        "akda-pjrt"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let theta = if n_classes == 2 {
+            core::theta_binary(labels)
+        } else {
+            core::theta(labels, n_classes)
+        };
+        let psi = self.engine.fit(x, &theta, self.kernel).context("akda-pjrt fit")?;
+        Ok(Box::new(PjrtProjection {
+            engine: self.engine.clone(),
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+        }))
+    }
+}
+
+/// AKSDA with the hot path on PJRT.
+pub struct AksdaPjrt {
+    pub kernel: Kernel,
+    pub engine: Arc<PjrtEngine>,
+    pub h_per_class: usize,
+    pub seed: u64,
+}
+
+impl DrMethod for AksdaPjrt {
+    fn name(&self) -> &'static str {
+        "aksda-pjrt"
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        let part = partition_classes(x, labels, n_classes, self.h_per_class, self.seed);
+        let (v, _) = core::v_matrix(&part);
+        let psi = self.engine.fit(x, &v, self.kernel).context("aksda-pjrt fit")?;
+        Ok(Box::new(PjrtProjection {
+            engine: self.engine.clone(),
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+        }))
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO text files. The runtime resolves shape buckets
+//! against it instead of hard-coding the python-side bucket lists.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub d_max: usize,
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|t| {
+            let name = t.req("name")?.as_str().context("name")?.to_string();
+            let shape = t
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = parse(&text)?;
+        let d_max = j.req("d_max")?.as_usize().context("d_max")?;
+        let entries = j
+            .req("entries")?
+            .as_arr()
+            .context("entries")?
+            .iter()
+            .map(|e| {
+                Ok(ArtifactEntry {
+                    name: e.req("name")?.as_str().context("name")?.to_string(),
+                    file: dir.join(e.req("file")?.as_str().context("file")?),
+                    inputs: tensor_specs(e.req("inputs")?)?,
+                    outputs: tensor_specs(e.req("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { d_max, entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Smallest fit bucket (n, l) covering a live problem, for a kernel.
+    /// Returns the entry name.
+    pub fn fit_bucket(&self, kernel: &str, n: usize, l: usize) -> Result<&ArtifactEntry> {
+        self.pick(&format!("fit_{kernel}_"), n, l)
+    }
+
+    pub fn gram_bucket(&self, kernel: &str, n: usize, l: usize) -> Result<&ArtifactEntry> {
+        self.pick(&format!("gram_{kernel}_"), n, l)
+    }
+
+    /// Project buckets are keyed by (n_train, l); the fixed n_test chunk
+    /// size is read from the entry's x_test input spec.
+    pub fn project_bucket(&self, kernel: &str, n_train: usize, l: usize)
+        -> Result<&ArtifactEntry> {
+        let mut best: Option<&ArtifactEntry> = None;
+        for e in &self.entries {
+            if !e.name.starts_with(&format!("project_{kernel}_")) {
+                continue;
+            }
+            let (bn, bl) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+            if bn >= n_train && bl >= l {
+                let better = match best {
+                    None => true,
+                    Some(b) => (bn, bl) < (b.inputs[0].shape[0], b.inputs[0].shape[1]),
+                };
+                if better {
+                    best = Some(e);
+                }
+            }
+        }
+        best.with_context(|| {
+            format!("no project_{kernel} bucket covers n_train={n_train} l={l}")
+        })
+    }
+
+    fn pick(&self, prefix: &str, n: usize, l: usize) -> Result<&ArtifactEntry> {
+        let mut best: Option<&ArtifactEntry> = None;
+        for e in &self.entries {
+            if !e.name.starts_with(prefix) {
+                continue;
+            }
+            let (bn, bl) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+            if bn >= n && bl >= l {
+                let better = match best {
+                    None => true,
+                    Some(b) => (bn, bl) < (b.inputs[0].shape[0], b.inputs[0].shape[1]),
+                };
+                if better {
+                    best = Some(e);
+                }
+            }
+        }
+        best.with_context(|| format!("no {prefix}* bucket covers n={n} l={l}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        assert_eq!(m.d_max, 32);
+        assert!(m.entries.len() >= 12);
+        assert!(m.find("fit_rbf_n256_l64").is_some());
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_cover() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let e = m.fit_bucket("rbf", 200, 50).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 64]);
+        let e = m.fit_bucket("rbf", 257, 64).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![512, 64]);
+        let e = m.fit_bucket("linear", 1000, 100).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![1024, 256]);
+        assert!(m.fit_bucket("rbf", 1_000_000, 64).is_err());
+    }
+
+    #[test]
+    fn project_bucket_has_test_chunk() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let e = m.project_bucket("rbf", 300, 64).unwrap();
+        assert_eq!(e.inputs[0].shape[0], 512); // train bucket
+        assert!(e.inputs[1].shape[0] >= 256); // test chunk
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`) and
+//! executes them on the PJRT CPU client — the L3 side of the three-layer
+//! architecture. Python never runs here; the binary is self-contained
+//! once `artifacts/` exists.
+
+pub mod engine;
+pub mod manifest;
+pub mod server;
+
+pub use engine::{AkdaPjrt, AksdaPjrt, PjrtEngine};
+pub use manifest::Manifest;
+pub use server::{Arg, PjrtHandle};

@@ -1,0 +1,152 @@
+//! PJRT execution server.
+//!
+//! The `xla` crate's PJRT handles wrap raw pointers (not `Send`/`Sync`),
+//! so a dedicated server thread owns the client and the compiled-
+//! executable cache; the rest of the system talks to it through a cloneable
+//! `PjrtHandle` over mpsc channels. XLA's CPU backend is internally
+//! multi-threaded, so serializing submissions costs little — and it gives
+//! the coordinator a single queue to meter (vLLM-router-style).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// One tensor argument: f32 data + dims.
+#[derive(Debug, Clone)]
+pub struct Arg {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl Arg {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        debug_assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>(),
+            "arg data/dims mismatch"
+        );
+        Arg { data, dims }
+    }
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Arg>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    /// Drop cached executables (used by tests to exercise reload).
+    FlushCache,
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the PJRT server thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Request>,
+    manifest: Arc<Manifest>,
+}
+
+impl PjrtHandle {
+    /// Start the server over an artifact directory.
+    pub fn start(artifact_dir: &std::path::Path) -> Result<PjrtHandle> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let (tx, rx) = channel::<Request>();
+        let mf = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-server".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // fail every request with the init error
+                        while let Ok(req) = rx.recv() {
+                            if let Request::Execute { reply, .. } = req {
+                                let _ = reply.send(Err(anyhow::anyhow!(
+                                    "PJRT client init failed: {e}"
+                                )));
+                            }
+                        }
+                        return;
+                    }
+                };
+                let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                let path_of = |name: &str| -> Option<PathBuf> {
+                    mf.find(name).map(|e| e.file.clone())
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::FlushCache => cache.clear(),
+                        Request::Execute { artifact, inputs, reply } => {
+                            let result = (|| -> Result<Vec<f32>> {
+                                if !cache.contains_key(&artifact) {
+                                    let path = path_of(&artifact).with_context(|| {
+                                        format!("unknown artifact {artifact:?}")
+                                    })?;
+                                    let proto = xla::HloModuleProto::from_text_file(&path)
+                                        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+                                    let comp = xla::XlaComputation::from_proto(&proto);
+                                    let exe = client
+                                        .compile(&comp)
+                                        .map_err(|e| anyhow::anyhow!("compile {artifact}: {e}"))?;
+                                    cache.insert(artifact.clone(), exe);
+                                }
+                                let exe = cache.get(&artifact).unwrap();
+                                let literals: Vec<xla::Literal> = inputs
+                                    .iter()
+                                    .map(|a| {
+                                        xla::Literal::vec1(&a.data)
+                                            .reshape(&a.dims)
+                                            .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+                                    })
+                                    .collect::<Result<_>>()?;
+                                let out = exe
+                                    .execute::<xla::Literal>(&literals)
+                                    .map_err(|e| anyhow::anyhow!("execute {artifact}: {e}"))?;
+                                let lit = out[0][0]
+                                    .to_literal_sync()
+                                    .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+                                // artifacts are lowered with return_tuple=True
+                                let first = lit
+                                    .to_tuple1()
+                                    .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+                                first
+                                    .to_vec::<f32>()
+                                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+                            })();
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .context("spawn pjrt-server")?;
+        Ok(PjrtHandle { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name; returns the first output, flattened.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Arg>) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("pjrt server is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("pjrt server dropped reply"))?
+    }
+
+    pub fn flush_cache(&self) {
+        let _ = self.tx.send(Request::FlushCache);
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}

@@ -1,0 +1,191 @@
+//! Binary kernel SVM via SMO (simplified working-set selection) — the
+//! paper's KSVM baseline column (LIBSVM's role in Sec. 6.3.1).
+
+use crate::kernels::{cross_gram, gram, Kernel};
+use crate::linalg::Mat;
+
+#[derive(Debug, Clone)]
+pub struct KernelSvm {
+    pub support_x: Mat,
+    pub support_coef: Vec<f64>, // α_i y_i of the support vectors
+    pub b: f64,
+    pub kernel: Kernel,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSvmConfig {
+    pub c: f64,
+    pub kernel: Kernel,
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for KernelSvmConfig {
+    fn default() -> Self {
+        KernelSvmConfig {
+            c: 1.0,
+            kernel: Kernel::Rbf { rho: 0.5 },
+            max_iter: 10_000,
+            tol: 1e-3,
+        }
+    }
+}
+
+impl KernelSvm {
+    /// SMO with maximal-violating-pair working-set selection.
+    pub fn train(x: &Mat, y: &[f64], cfg: KernelSvmConfig) -> KernelSvm {
+        let n = x.rows();
+        assert_eq!(y.len(), n);
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        let k = gram(x, cfg.kernel);
+        let mut alpha = vec![0.0_f64; n];
+        // gradient of the dual objective: g_i = Σ_j α_j y_i y_j K_ij − 1
+        let mut grad = vec![-1.0_f64; n];
+
+        for _it in 0..cfg.max_iter {
+            // maximal violating pair (i from I_up, j from I_low)
+            let mut i_sel = usize::MAX;
+            let mut g_max = f64::NEG_INFINITY;
+            let mut j_sel = usize::MAX;
+            let mut g_min = f64::INFINITY;
+            for t in 0..n {
+                let up = (y[t] > 0.0 && alpha[t] < cfg.c) || (y[t] < 0.0 && alpha[t] > 0.0);
+                let low = (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < cfg.c);
+                let v = -y[t] * grad[t];
+                if up && v > g_max {
+                    g_max = v;
+                    i_sel = t;
+                }
+                if low && v < g_min {
+                    g_min = v;
+                    j_sel = t;
+                }
+            }
+            if i_sel == usize::MAX || j_sel == usize::MAX || g_max - g_min < cfg.tol {
+                break;
+            }
+            let (i, j) = (i_sel, j_sel);
+            let eta = (k[(i, i)] + k[(j, j)] - 2.0 * k[(i, j)]).max(1e-12);
+            let delta = (g_max - g_min) / eta;
+            // clip to the box
+            let (old_ai, old_aj) = (alpha[i], alpha[j]);
+            let mut d = delta;
+            if y[i] > 0.0 {
+                d = d.min(cfg.c - alpha[i]);
+            } else {
+                d = d.min(alpha[i]);
+            }
+            if y[j] > 0.0 {
+                d = d.min(alpha[j]);
+            } else {
+                d = d.min(cfg.c - alpha[j]);
+            }
+            alpha[i] += y[i] * d;
+            alpha[j] -= y[j] * d;
+            let (di, dj) = ((alpha[i] - old_ai) * y[i], (alpha[j] - old_aj) * y[j]);
+            for t in 0..n {
+                grad[t] += y[t] * (di * k[(i, t)] + dj * k[(j, t)]);
+            }
+        }
+
+        // bias from free support vectors (fallback: margin midpoint)
+        let mut b_sum = 0.0;
+        let mut b_cnt = 0usize;
+        for t in 0..n {
+            if alpha[t] > 1e-9 && alpha[t] < cfg.c - 1e-9 {
+                // y_t (f(x_t)) = 1 ⇒ b = y_t − Σ α_j y_j K_jt
+                let f: f64 = (0..n).map(|j2| alpha[j2] * y[j2] * k[(j2, t)]).sum();
+                b_sum += y[t] - f;
+                b_cnt += 1;
+            }
+        }
+        let b = if b_cnt > 0 {
+            b_sum / b_cnt as f64
+        } else {
+            let mut lo = f64::NEG_INFINITY;
+            let mut hi = f64::INFINITY;
+            for t in 0..n {
+                let f: f64 = (0..n).map(|j2| alpha[j2] * y[j2] * k[(j2, t)]).sum();
+                if y[t] > 0.0 {
+                    hi = hi.min(y[t] - f);
+                } else {
+                    lo = lo.max(y[t] - f);
+                }
+            }
+            if lo.is_finite() && hi.is_finite() { 0.5 * (lo + hi) } else { 0.0 }
+        };
+
+        // keep only the support vectors
+        let sv_idx: Vec<usize> = (0..n).filter(|&t| alpha[t] > 1e-9).collect();
+        let support_x = x.select_rows(&sv_idx);
+        let support_coef = sv_idx.iter().map(|&t| alpha[t] * y[t]).collect();
+        KernelSvm { support_x, support_coef, b, kernel: cfg.kernel }
+    }
+
+    pub fn decision_batch(&self, x: &Mat) -> Vec<f64> {
+        let kc = cross_gram(x, &self.support_x, self.kernel);
+        (0..x.rows())
+            .map(|i| {
+                crate::linalg::dot(kc.row(i), &self.support_coef) + self.b
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::concentric_shells;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_nonlinear_shells() {
+        let (x, labels) = concentric_shells(40, 3, 1);
+        let y: Vec<f64> = labels.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect();
+        let svm = KernelSvm::train(&x, &y, KernelSvmConfig::default());
+        let scores = svm.decision_batch(&x);
+        let errors = (0..80).filter(|&i| scores[i].signum() != y[i]).count();
+        assert!(errors <= 2, "errors={errors}");
+    }
+
+    #[test]
+    fn linear_kernel_matches_linear_svm_behavior() {
+        let mut rng = Rng::new(2);
+        let mut x = Mat::zeros(60, 2);
+        let mut y = Vec::new();
+        for i in 0..60 {
+            let cls = if i < 30 { 1.0 } else { -1.0 };
+            x[(i, 0)] = cls * 2.0 + 0.4 * rng.normal();
+            x[(i, 1)] = rng.normal();
+            y.push(cls);
+        }
+        let svm = KernelSvm::train(
+            &x,
+            &y,
+            KernelSvmConfig { kernel: Kernel::Linear, ..Default::default() },
+        );
+        let scores = svm.decision_batch(&x);
+        let errors = (0..60).filter(|&i| scores[i].signum() != y[i]).count();
+        assert_eq!(errors, 0);
+    }
+
+    #[test]
+    fn support_vectors_are_subset() {
+        let (x, labels) = concentric_shells(30, 3, 5);
+        let y: Vec<f64> = labels.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect();
+        let svm = KernelSvm::train(&x, &y, KernelSvmConfig::default());
+        assert!(svm.support_x.rows() <= 60);
+        assert!(svm.support_x.rows() > 0);
+        assert_eq!(svm.support_x.rows(), svm.support_coef.len());
+    }
+
+    #[test]
+    fn dual_constraint_satisfied() {
+        // Σ α_i y_i ≈ 0 (KKT) — recover from stored coefficients
+        let (x, labels) = concentric_shells(25, 2, 7);
+        let y: Vec<f64> = labels.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect();
+        let svm = KernelSvm::train(&x, &y, KernelSvmConfig::default());
+        let s: f64 = svm.support_coef.iter().sum();
+        assert!(s.abs() < 1e-6, "Σ α y = {s}");
+    }
+}

@@ -1,0 +1,9 @@
+//! SVM substrate: the paper evaluates every DR method as DR + binary
+//! linear SVM, with raw LSVM and KSVM as extra baseline columns
+//! (Sec. 6.3). Implemented from scratch (no LIBSVM/LIBLINEAR offline).
+
+pub mod kernel;
+pub mod linear;
+
+pub use kernel::{KernelSvm, KernelSvmConfig};
+pub use linear::{LinearSvm, LinearSvmConfig};

@@ -1,0 +1,6 @@
+//! Small shared utilities: deterministic RNG, thread heuristics, timing.
+
+pub mod json;
+pub mod rng;
+pub mod threads;
+pub mod timer;

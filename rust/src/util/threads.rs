@@ -1,0 +1,75 @@
+//! Thread-count heuristics for the scoped-thread parallel loops.
+//!
+//! No rayon offline; `std::thread::scope` stripes are used everywhere. This
+//! module centralizes the "how many threads is worth it" decision so the
+//! perf pass can tune one place.
+
+use std::sync::OnceLock;
+
+static AVAILABLE: OnceLock<usize> = OnceLock::new();
+
+/// Number of worker threads available (cached).
+pub fn available() -> usize {
+    *AVAILABLE.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Suggested thread count for a loop with `work_items` independent rows.
+/// Spawning threads for tiny loops costs more than it saves.
+pub fn suggested(work_items: usize) -> usize {
+    if work_items < 64 {
+        1
+    } else {
+        available().min(work_items / 16).max(1)
+    }
+}
+
+/// Run `f(i)` for i in 0..n on up to `suggested(n)` threads, collecting
+/// results in order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let nthreads = suggested(n).min(n.max(1));
+    if nthreads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(nthreads);
+    let stripes: Vec<&mut [Option<T>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|s| {
+        for (ti, stripe) in stripes.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (d, slot) in stripe.iter_mut().enumerate() {
+                    *slot = Some(f(ti * chunk + d));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(1000, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_small_and_empty() {
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn suggested_bounds() {
+        assert_eq!(suggested(1), 1);
+        assert!(suggested(10_000) >= 1);
+        assert!(suggested(10_000) <= available());
+    }
+}

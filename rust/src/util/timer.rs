@@ -1,0 +1,61 @@
+//! Wall-clock timing helpers used by the evaluation harness (the paper's
+//! ϑ (training time) and φ (testing time) measurements, Sec. 6.3.1).
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulating stopwatch for split train/test phases.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    pub train_s: f64,
+    pub test_s: f64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn train<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, s) = timed(f);
+        self.train_s += s;
+        out
+    }
+
+    pub fn test<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, s) = timed(f);
+        self.test_s += s;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_measures_something() {
+        let (v, s) = timed(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(s >= 0.009);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut w = Stopwatch::new();
+        w.train(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        w.train(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        w.test(|| ());
+        assert!(w.train_s >= 0.009);
+        assert!(w.test_s < 0.01);
+    }
+}
