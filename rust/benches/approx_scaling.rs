@@ -1,0 +1,132 @@
+//! Approximate-AKDA scaling bench: exact AKDA (O(N²F) Gram + N³/3
+//! Cholesky) vs the `approx` subsystem's Nyström / RFF training path
+//! (O(N m F) features + O(N m²) Gram + m³/3 Cholesky) as N grows, on a
+//! binary OvR-style problem.
+//!
+//! Acceptance probe for the subsystem: at the largest N the Nyström path
+//! must train ≥5× faster than exact AKDA while its toy-example accuracy
+//! stays within 2 points of exact.
+//!
+//! Env: AKDA_APPROX_MAX_N (default 4096), AKDA_LANDMARKS (default 96),
+//!      AKDA_RFF_FEATURES (default 256)
+//! Run: cargo bench --bench approx_scaling
+
+use std::time::Instant;
+
+use akda::da::akda::Akda;
+use akda::da::akda_approx::AkdaApprox;
+use akda::da::{DrMethod, Projection};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::svm::{LinearSvm, LinearSvmConfig};
+
+fn problem(n: usize, dim: usize, seed: u64) -> (Mat, Vec<usize>) {
+    gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![n / 8, n - n / 8], // imbalanced, like OvR
+        dim,
+        class_sep: 2.0,
+        noise: 0.8,
+        modes_per_class: 2,
+        seed,
+    })
+}
+
+/// Train an LSVM in the projected subspace and report test accuracy.
+fn accuracy(
+    proj: &dyn Projection,
+    x_train: &Mat,
+    y_train: &[usize],
+    x_test: &Mat,
+    y_test: &[usize],
+) -> f64 {
+    let z_train = proj.project(x_train);
+    let z_test = proj.project(x_test);
+    let y_pm: Vec<f64> = y_train.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect();
+    let svm = LinearSvm::train(&z_train, &y_pm, LinearSvmConfig::default());
+    let scores = svm.decision_batch(&z_test);
+    let correct = scores
+        .iter()
+        .zip(y_test.iter())
+        .filter(|&(&s, &l)| (s > 0.0) == (l == 0))
+        .count();
+    correct as f64 / y_test.len() as f64
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let dim = 64;
+    let max_n = env_usize("AKDA_APPROX_MAX_N", 4096);
+    let landmarks = env_usize("AKDA_LANDMARKS", 96);
+    let rff_features = env_usize("AKDA_RFF_FEATURES", 256);
+    let kernel = Kernel::Rbf { rho: 0.05 };
+
+    println!("# approx scaling bench (binary, L={dim}, m={landmarks}, rff_d={rff_features})");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "N", "akda_s", "nystrom_s", "rff_s", "nys_spd", "rff_spd", "acc_ex", "acc_nys", "acc_rff"
+    );
+
+    // 512, 1024, ... doubling up to max_n — raising AKDA_APPROX_MAX_N
+    // extends the sweep, lowering it trims the tail
+    let mut sizes = Vec::new();
+    let mut n = 512usize;
+    while n <= max_n {
+        sizes.push(n);
+        n *= 2;
+    }
+    let mut last: Option<(f64, f64, f64)> = None; // (nys speedup, exact acc, nys acc)
+    for &n in &sizes {
+        let (x, labels) = problem(n, dim, n as u64);
+        let (x_test, y_test) = problem(512, dim, n as u64 + 1);
+
+        let exact = Akda::new(kernel);
+        let t0 = Instant::now();
+        let p_exact = exact.fit(&x, &labels, 2).expect("exact AKDA");
+        let t_exact = t0.elapsed().as_secs_f64();
+
+        let nystrom = AkdaApprox::nystrom(kernel, landmarks);
+        let t0 = Instant::now();
+        let p_nys = nystrom.fit(&x, &labels, 2).expect("nystrom AKDA");
+        let t_nys = t0.elapsed().as_secs_f64();
+
+        let rff = AkdaApprox::rff(kernel, rff_features);
+        let t0 = Instant::now();
+        let p_rff = rff.fit(&x, &labels, 2).expect("rff AKDA");
+        let t_rff = t0.elapsed().as_secs_f64();
+
+        let acc_ex = accuracy(p_exact.as_ref(), &x, &labels, &x_test, &y_test);
+        let acc_nys = accuracy(p_nys.as_ref(), &x, &labels, &x_test, &y_test);
+        let acc_rff = accuracy(p_rff.as_ref(), &x, &labels, &x_test, &y_test);
+
+        println!(
+            "{:>6} {:>10.4} {:>10.4} {:>10.4} {:>8.1}x {:>8.1}x {:>8.1}% {:>8.1}% {:>8.1}%",
+            n,
+            t_exact,
+            t_nys,
+            t_rff,
+            t_exact / t_nys.max(1e-12),
+            t_exact / t_rff.max(1e-12),
+            100.0 * acc_ex,
+            100.0 * acc_nys,
+            100.0 * acc_rff,
+        );
+        last = Some((t_exact / t_nys.max(1e-12), acc_ex, acc_nys));
+    }
+
+    if let Some((speedup, acc_ex, acc_nys)) = last {
+        let gap = 100.0 * (acc_ex - acc_nys).abs();
+        println!(
+            "# largest N: nystrom speedup {speedup:.1}x (target >=5x), accuracy gap {gap:.2} \
+             points (target <=2)"
+        );
+        println!(
+            "# acceptance: {}",
+            if speedup >= 5.0 && gap <= 2.0 { "PASS" } else { "CHECK" }
+        );
+    }
+}

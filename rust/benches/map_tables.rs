@@ -26,7 +26,7 @@ fn main() {
                        MethodId::Aksda];
     }
     let pool = WorkPool::new(akda::util::threads::available());
-    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
 
     let mut rows = Vec::new();
     for spec in &datasets {

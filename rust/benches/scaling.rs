@@ -45,7 +45,7 @@ fn time_method(
     id: MethodId,
     engine: Option<&Arc<PjrtEngine>>,
 ) -> (f64, f64) {
-    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
     // warm-up for the PJRT path (executable compile is one-time)
     if matches!(id, MethodId::AkdaPjrt) {
         let _ = evaluate_ovr(split, id, hp, 1e-3, engine, None);

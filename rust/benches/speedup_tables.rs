@@ -32,7 +32,7 @@ fn main() {
     // per-class jobs run on the pool; ϑ_m sums per-job stopwatch times, so
     // the ratios stay comparable (all methods see the same oversubscription)
     let pool = WorkPool::new((akda::util::threads::available() / 2).max(1));
-    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
 
     let mut rows = Vec::new();
     for spec in &datasets {

@@ -1,0 +1,82 @@
+//! Approximate kernel-feature subsystem: explicit low-dimensional feature
+//! maps φ: R^F → R^m with φ(x)·φ(y) ≈ k(x, y).
+//!
+//! AKDA's accelerated pipeline still pays O(N²F) for the Gram matrix and
+//! N³/3 for its Cholesky — fine at the paper's scale, a wall at N ≫ 10⁴.
+//! The standard escape hatch ("Scalable Kernel Learning via the
+//! Discriminant Information") is to replace the implicit kernel expansion
+//! with an explicit m-dimensional feature map, m ≪ N, and run the exact
+//! same core-matrix + Cholesky machinery on the m-dim Gram ΦᵀΦ instead of
+//! the N×N kernel matrix:
+//!
+//! * [`NystromMap`] — data-dependent landmark features
+//!   φ(x) = k(x, Z) K_zz^{−1/2}, landmarks Z from `cluster::kmeans`;
+//! * [`RffMap`] — data-independent random Fourier features for the RBF
+//!   kernel (Rahimi & Recht's construction, seeded and deterministic).
+//!
+//! Both are pluggable behind the [`FeatureMap`] trait so
+//! `da::akda_approx::AkdaApprox` (and any future consumer) can treat
+//! approximators uniformly.
+
+pub mod nystrom;
+pub mod rff;
+
+pub use nystrom::NystromMap;
+pub use rff::RffMap;
+
+use crate::linalg::Mat;
+
+/// Default landmark / random-feature budget m — the single source for
+/// `coordinator::Hyper::default` and `coordinator::EvalConfig::default`.
+pub const DEFAULT_BUDGET: usize = 64;
+
+/// An explicit feature map approximating a Mercer kernel: `transform`
+/// returns the N×m feature matrix Φ with Φ Φᵀ ≈ K.
+pub trait FeatureMap: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Output feature dimensionality m (may be below the requested budget
+    /// when the landmark Gram is rank-deficient).
+    fn dim(&self) -> usize;
+    /// Map observations (rows of `x`) into the feature space.
+    fn transform(&self, x: &Mat) -> Mat;
+}
+
+/// Which approximator to build — the knob the coordinator and CLI expose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApproxKind {
+    Nystrom,
+    Rff,
+}
+
+impl ApproxKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApproxKind::Nystrom => "nystrom",
+            ApproxKind::Rff => "rff",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feature_maps_are_object_safe_and_uniform() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(12, 5, |_, _| rng.normal());
+        let kernel = Kernel::Rbf { rho: 0.4 };
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(NystromMap::fit(&x, kernel, 6, 1).unwrap()),
+            Box::new(RffMap::fit(5, kernel, 32, 1).unwrap()),
+        ];
+        for map in &maps {
+            let phi = map.transform(&x);
+            assert_eq!(phi.rows(), 12);
+            assert_eq!(phi.cols(), map.dim());
+            assert!(phi.is_finite(), "{}", map.name());
+        }
+    }
+}

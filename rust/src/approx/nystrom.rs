@@ -1,0 +1,166 @@
+//! Nyström landmark features.
+//!
+//! Pick m landmarks Z covering the data (k-means centroids — reusing
+//! `cluster::kmeans`, the same routine AKSDA's subclass partitioning
+//! uses), form the small landmark Gram K_zz = k(Z, Z), eigendecompose it
+//! (`linalg::eig`, m×m — cheap), and map
+//!
+//!   φ(x) = k(x, Z) · U_r Λ_r^{−1/2}          (r = rank of K_zz)
+//!
+//! so that Φ Φᵀ = K_nz K_zz^{+} K_zn — the Nyström approximation of the
+//! full Gram matrix. When the landmarks are the training set itself
+//! (m = N) the approximation is exact: Φ Φᵀ = K.
+//!
+//! Cost: O(N m) kernel evaluations + O(m³) eigen work, vs O(N²) / O(N³)
+//! for the exact Gram + Cholesky path.
+
+use anyhow::Result;
+
+use super::FeatureMap;
+use crate::cluster::kmeans::kmeans;
+use crate::kernels::{cross_gram, gram, Kernel};
+use crate::linalg::{sym_eig_desc, Mat};
+
+/// Lloyd iterations for landmark selection. Landmarks only need to *cover*
+/// the data, not to converge — a short run is the standard trade-off and
+/// keeps selection well below the O(N m²) feature-map cost.
+const LANDMARK_KMEANS_ITERS: usize = 15;
+
+/// Relative eigenvalue cut-off below which landmark-Gram directions are
+/// dropped (pseudo-inverse behaviour for rank-deficient K_zz).
+const RANK_TOL: f64 = 1e-12;
+
+pub struct NystromMap {
+    /// m×F landmark matrix Z.
+    pub landmarks: Mat,
+    pub kernel: Kernel,
+    /// m×r whitening W = U_r Λ_r^{−1/2}; φ(x) = k(x, Z) W.
+    w: Mat,
+}
+
+impl NystromMap {
+    /// Select landmarks from the rows of `x` and build the feature map.
+    /// `m` is clamped to [1, N]; at m = N the training rows themselves are
+    /// the landmarks (exact Nyström — used by the equivalence tests).
+    pub fn fit(x: &Mat, kernel: Kernel, m: usize, seed: u64) -> Result<Self> {
+        let n = x.rows();
+        anyhow::ensure!(n > 0, "Nystrom needs at least one observation");
+        let m = m.clamp(1, n);
+        let landmarks = if m == n {
+            x.clone()
+        } else {
+            kmeans(x, m, LANDMARK_KMEANS_ITERS, seed).centroids
+        };
+        let k_zz = gram(&landmarks, kernel);
+        let eig = sym_eig_desc(&k_zz)
+            .map_err(|e| anyhow::anyhow!("landmark Gram eigendecomposition failed: {e}"))?;
+        let lam_max = eig.values.first().copied().unwrap_or(0.0);
+        anyhow::ensure!(
+            lam_max > 0.0,
+            "landmark Gram has no positive eigenvalue — degenerate kernel/landmarks"
+        );
+        let tol = lam_max * RANK_TOL;
+        let r = eig.values.iter().take_while(|&&l| l > tol).count();
+        let rows = landmarks.rows();
+        let mut w = Mat::zeros(rows, r);
+        for j in 0..r {
+            let s = 1.0 / eig.values[j].sqrt();
+            for i in 0..rows {
+                w[(i, j)] = eig.vectors[(i, j)] * s;
+            }
+        }
+        Ok(NystromMap { landmarks, kernel, w })
+    }
+}
+
+impl FeatureMap for NystromMap {
+    fn name(&self) -> &'static str {
+        "nystrom"
+    }
+
+    fn dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        cross_gram(x, &self.landmarks, self.kernel).matmul(&self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blobs(n_per: usize, centers: &[[f64; 2]], seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let n = n_per * centers.len();
+        let mut x = Mat::zeros(n, 2);
+        for (c, ctr) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let r = c * n_per + i;
+                x[(r, 0)] = ctr[0] + 0.15 * rng.normal();
+                x[(r, 1)] = ctr[1] + 0.15 * rng.normal();
+            }
+        }
+        x
+    }
+
+    fn gram_err(x: &Mat, kernel: Kernel, m: usize) -> f64 {
+        let map = NystromMap::fit(x, kernel, m, 5).unwrap();
+        let phi = map.transform(x);
+        let approx = phi.matmul_nt(&phi);
+        let exact = gram(x, kernel);
+        approx.sub(&exact).frobenius_norm() / exact.frobenius_norm()
+    }
+
+    #[test]
+    fn full_landmarks_reproduce_exact_gram() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(30, 4, |_, _| rng.normal());
+        let kernel = Kernel::Rbf { rho: 0.5 };
+        let map = NystromMap::fit(&x, kernel, 30, 2).unwrap();
+        let phi = map.transform(&x);
+        let k = gram(&x, kernel);
+        assert!(phi.matmul_nt(&phi).sub(&k).max_abs() < 1e-6, "m = N must be exact");
+    }
+
+    #[test]
+    fn more_landmarks_tighten_the_approximation() {
+        let x = blobs(30, &[[0.0, 0.0], [4.0, 0.0], [0.0, 4.0]], 9);
+        let kernel = Kernel::Rbf { rho: 0.5 };
+        let coarse = gram_err(&x, kernel, 3);
+        let fine = gram_err(&x, kernel, 45);
+        assert!(fine < coarse, "err(m=45)={fine} vs err(m=3)={coarse}");
+        assert!(fine < 0.1, "err(m=45)={fine}");
+    }
+
+    #[test]
+    fn linear_kernel_rank_deficiency_is_truncated() {
+        // 2-D data: linear landmark Gram has rank ≤ 2 regardless of m
+        let x = blobs(20, &[[1.0, 0.5], [-1.0, 2.0]], 4);
+        let map = NystromMap::fit(&x, Kernel::Linear, 10, 3).unwrap();
+        assert!(map.dim() <= 2, "dim {} should collapse to input rank", map.dim());
+        let phi = map.transform(&x);
+        let k = gram(&x, Kernel::Linear);
+        assert!(phi.matmul_nt(&phi).sub(&k).frobenius_norm() / k.frobenius_norm() < 0.2);
+    }
+
+    #[test]
+    fn budget_is_clamped_to_n() {
+        let mut rng = Rng::new(8);
+        let x = Mat::from_fn(7, 3, |_, _| rng.normal());
+        let map = NystromMap::fit(&x, Kernel::Rbf { rho: 1.0 }, 100, 1).unwrap();
+        assert_eq!(map.landmarks.rows(), 7);
+        assert!(map.dim() <= 7);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let x = blobs(15, &[[0.0, 0.0], [3.0, 3.0]], 2);
+        let kernel = Kernel::Rbf { rho: 0.7 };
+        let a = NystromMap::fit(&x, kernel, 6, 42).unwrap().transform(&x);
+        let b = NystromMap::fit(&x, kernel, 6, 42).unwrap().transform(&x);
+        assert_eq!(a, b);
+    }
+}

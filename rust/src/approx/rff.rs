@@ -1,0 +1,142 @@
+//! Random Fourier features for the RBF kernel (Rahimi & Recht).
+//!
+//! For k(x, y) = exp(−ρ‖x − y‖²) — exactly `kernels::Kernel::Rbf`, whose
+//! bandwidth `Kernel::rho` this map consumes — Bochner's theorem gives
+//! k(x, y) = E_ω[cos(ωᵀ(x − y))] with ω ~ N(0, 2ρ I). Sampling p
+//! frequencies and stacking the cos/sin pair per frequency,
+//!
+//!   φ(x) = p^{−1/2} [cos(ω_1ᵀx), sin(ω_1ᵀx), …, cos(ω_pᵀx), sin(ω_pᵀx)]
+//!
+//! yields an unbiased estimate φ(x)·φ(y) → k(x, y) with O(p^{−1/2})
+//! Monte-Carlo error. Unlike Nyström the map is data-independent: only
+//! the input dimensionality and a seed are needed, so it can be built
+//! before any data arrives (streaming / serving friendly).
+
+use anyhow::Result;
+
+use super::FeatureMap;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub struct RffMap {
+    /// F×p frequency matrix Ω, ω_j ~ N(0, 2ρ I).
+    omega: Mat,
+    /// p^{−1/2} normalization so Φ Φᵀ is an unbiased Gram estimate.
+    scale: f64,
+}
+
+impl RffMap {
+    /// Build a map with `n_features` output dimensions (rounded down to an
+    /// even count — features come in cos/sin pairs; at least one pair).
+    pub fn fit(dim_in: usize, kernel: Kernel, n_features: usize, seed: u64) -> Result<Self> {
+        let rho = match kernel {
+            Kernel::Rbf { rho } => rho,
+            other => anyhow::bail!(
+                "RFF approximates the RBF kernel only, got {:?} kernel",
+                other.name()
+            ),
+        };
+        anyhow::ensure!(rho > 0.0, "RFF needs a positive RBF bandwidth, got {rho}");
+        anyhow::ensure!(dim_in > 0, "RFF needs a positive input dimensionality");
+        let pairs = (n_features / 2).max(1);
+        let mut rng = Rng::new(seed);
+        let sd = (2.0 * rho).sqrt();
+        let omega = Mat::from_fn(dim_in, pairs, |_, _| sd * rng.normal());
+        Ok(RffMap { omega, scale: 1.0 / (pairs as f64).sqrt() })
+    }
+}
+
+impl FeatureMap for RffMap {
+    fn name(&self) -> &'static str {
+        "rff"
+    }
+
+    fn dim(&self) -> usize {
+        2 * self.omega.cols()
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        let proj = x.matmul(&self.omega); // N×p phases
+        let (n, p) = proj.shape();
+        let mut out = Mat::zeros(n, 2 * p);
+        for i in 0..n {
+            let phases = proj.row(i);
+            let orow = out.row_mut(i);
+            for (j, &ph) in phases.iter().enumerate() {
+                let (s, c) = ph.sin_cos();
+                orow[2 * j] = self.scale * c;
+                orow[2 * j + 1] = self.scale * s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gram;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn mean_abs_gram_err(x: &Mat, rho: f64, d: usize) -> f64 {
+        let map = RffMap::fit(x.cols(), Kernel::Rbf { rho }, d, 7).unwrap();
+        let phi = map.transform(x);
+        let approx = phi.matmul_nt(&phi);
+        let exact = gram(x, Kernel::Rbf { rho });
+        let n = x.rows();
+        approx.sub(&exact).data().iter().map(|v| v.abs()).sum::<f64>() / (n * n) as f64
+    }
+
+    #[test]
+    fn gram_estimate_converges_with_feature_count() {
+        // Satellite regression: ΦΦᵀ must approach the exact Kernel::Rbf
+        // Gram as the feature budget grows (Monte-Carlo rate p^{-1/2}).
+        let x = randmat(40, 6, 11);
+        let coarse = mean_abs_gram_err(&x, 0.3, 128);
+        let fine = mean_abs_gram_err(&x, 0.3, 8192);
+        assert!(fine < coarse, "err(d=8192)={fine} vs err(d=128)={coarse}");
+        assert!(fine < 0.03, "err(d=8192)={fine}");
+    }
+
+    #[test]
+    fn diagonal_is_exactly_one() {
+        // φ(x)·φ(x) = (1/p) Σ (cos² + sin²) = 1 = k(x, x), with zero
+        // Monte-Carlo variance — a structural property of the pairing.
+        let x = randmat(10, 4, 3);
+        let map = RffMap::fit(4, Kernel::Rbf { rho: 0.8 }, 64, 1).unwrap();
+        let phi = map.transform(&x);
+        for i in 0..10 {
+            let d: f64 = phi.row(i).iter().map(|v| v * v).sum();
+            assert!((d - 1.0).abs() < 1e-12, "row {i}: {d}");
+        }
+    }
+
+    #[test]
+    fn dim_is_even_and_at_least_two() {
+        let map = RffMap::fit(5, Kernel::Rbf { rho: 1.0 }, 33, 2).unwrap();
+        assert_eq!(map.dim(), 32);
+        let map = RffMap::fit(5, Kernel::Rbf { rho: 1.0 }, 1, 2).unwrap();
+        assert_eq!(map.dim(), 2);
+    }
+
+    #[test]
+    fn rejects_non_rbf_kernels() {
+        assert!(RffMap::fit(4, Kernel::Linear, 16, 1).is_err());
+        assert!(RffMap::fit(4, Kernel::Poly { degree: 2, c: 1.0 }, 16, 1).is_err());
+        assert!(RffMap::fit(4, Kernel::Rbf { rho: 0.0 }, 16, 1).is_err());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let x = randmat(8, 3, 5);
+        let kernel = Kernel::Rbf { rho: 0.5 };
+        let a = RffMap::fit(3, kernel, 64, 9).unwrap().transform(&x);
+        let b = RffMap::fit(3, kernel, 64, 9).unwrap().transform(&x);
+        assert_eq!(a, b);
+    }
+}

@@ -24,6 +24,9 @@ pub struct EvalConfig {
     pub workers: usize,
     /// Kernel ridge ε (paper: 1e-3).
     pub eps: f64,
+    /// Landmark / random-feature budget m for the approximate methods
+    /// (akda-nystrom / akda-rff) — used both during CV and the final fit.
+    pub landmarks: usize,
     pub seed: u64,
 }
 
@@ -38,6 +41,7 @@ impl Default for EvalConfig {
             cv_learn_frac: 0.3,
             workers: crate::util::threads::available(),
             eps: 1e-3,
+            landmarks: crate::approx::DEFAULT_BUDGET,
             seed: 2024,
         }
     }
@@ -92,11 +96,13 @@ impl EvalConfig {
                 "cv_learn_frac" => cfg.cv_learn_frac = v.parse()?,
                 "workers" => cfg.workers = v.parse()?,
                 "eps" => cfg.eps = v.parse()?,
+                "landmarks" => cfg.landmarks = v.parse()?,
                 "seed" => cfg.seed = v.parse()?,
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
         anyhow::ensure!(!cfg.rho_grid.is_empty() && !cfg.c_grid.is_empty());
+        anyhow::ensure!(cfg.landmarks >= 1, "landmarks must be >= 1");
         anyhow::ensure!(cfg.cv_folds >= 2, "cv_folds must be >= 2");
         anyhow::ensure!(
             cfg.cv_learn_frac > 0.0 && cfg.cv_learn_frac < 1.0,
@@ -133,13 +139,14 @@ mod tests {
     #[test]
     fn parses_config_text() {
         let c = EvalConfig::from_str_cfg(
-            "rho_grid = 0.5, 1.0\nc_grid=1\n# comment\ncv_folds = 4\nseed=7\n",
+            "rho_grid = 0.5, 1.0\nc_grid=1\n# comment\ncv_folds = 4\nseed=7\nlandmarks=128\n",
         )
         .unwrap();
         assert_eq!(c.rho_grid, vec![0.5, 1.0]);
         assert_eq!(c.c_grid, vec![1.0]);
         assert_eq!(c.cv_folds, 4);
         assert_eq!(c.seed, 7);
+        assert_eq!(c.landmarks, 128);
     }
 
     #[test]
@@ -147,5 +154,6 @@ mod tests {
         assert!(EvalConfig::from_str_cfg("nope = 1").is_err());
         assert!(EvalConfig::from_str_cfg("cv_folds = 1").is_err());
         assert!(EvalConfig::from_str_cfg("cv_learn_frac = 1.5").is_err());
+        assert!(EvalConfig::from_str_cfg("landmarks = 0").is_err());
     }
 }

@@ -13,5 +13,5 @@ pub mod service;
 
 pub use config::EvalConfig;
 pub use jobs::WorkPool;
-pub use protocol::{evaluate_ovr, select_hyper, Hyper, MethodId};
+pub use protocol::{build_dr, evaluate_ovr, select_hyper, Hyper, MethodId};
 pub use service::{DetectorBank, ScoringService};

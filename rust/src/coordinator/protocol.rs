@@ -6,6 +6,7 @@
 //! time is excluded from the reported training time, as in the paper.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -15,6 +16,7 @@ use crate::data::Split;
 use crate::da::{self, DrMethod};
 use crate::eval::{average_precision, mean_average_precision, MethodResult};
 use crate::kernels::Kernel;
+use crate::linalg::Mat;
 use crate::runtime::PjrtEngine;
 use crate::svm::{KernelSvm, KernelSvmConfig, LinearSvm, LinearSvmConfig};
 use crate::util::rng::Rng;
@@ -32,6 +34,11 @@ pub enum MethodId {
     Akda,
     /// AKDA with the hot path on the PJRT artifacts.
     AkdaPjrt,
+    /// AKDA on Nyström landmark features (the `approx` subsystem) —
+    /// O(N m²) training, m landmarks from k-means.
+    AkdaNystrom,
+    /// AKDA on random Fourier features (RBF kernel only).
+    AkdaRff,
     Ksvm,
     Ksda,
     Gsda,
@@ -50,6 +57,8 @@ impl MethodId {
             MethodId::Srkda => "srkda",
             MethodId::Akda => "akda",
             MethodId::AkdaPjrt => "akda-pjrt",
+            MethodId::AkdaNystrom => "akda-nystrom",
+            MethodId::AkdaRff => "akda-rff",
             MethodId::Ksvm => "ksvm",
             MethodId::Ksda => "ksda",
             MethodId::Gsda => "gsda",
@@ -69,6 +78,8 @@ impl MethodId {
             "srkda" => Srkda,
             "akda" => Akda,
             "akda-pjrt" => AkdaPjrt,
+            "akda-nystrom" => AkdaNystrom,
+            "akda-rff" => AkdaRff,
             "ksvm" => Ksvm,
             "ksda" => Ksda,
             "gsda" => Gsda,
@@ -92,7 +103,10 @@ impl MethodId {
     /// The full column set of Tables 2–7 (native engines).
     pub fn table_columns() -> Vec<MethodId> {
         use MethodId::*;
-        vec![Pca, Lda, Lsvm, Kda, Gda, Srkda, Akda, Ksvm, Ksda, Gsda, Aksda]
+        vec![
+            Pca, Lda, Lsvm, Kda, Gda, Srkda, Akda, AkdaNystrom, AkdaRff, Ksvm, Ksda,
+            Gsda, Aksda,
+        ]
     }
 }
 
@@ -102,12 +116,37 @@ pub struct Hyper {
     pub rho: f64,
     pub c: f64,
     pub h: usize,
+    /// Landmark / random-feature budget m for the approximate methods
+    /// (akda-nystrom / akda-rff); ignored by the exact ones.
+    pub m: usize,
 }
 
 impl Default for Hyper {
     fn default() -> Self {
-        Hyper { rho: 0.1, c: 1.0, h: 2 }
+        Hyper { rho: 0.1, c: 1.0, h: 2, m: crate::approx::DEFAULT_BUDGET }
     }
+}
+
+/// Label-independent approximate-AKDA state shared across the one-vs-rest
+/// classes of one `evaluate_ovr` call: the prepared training-side state
+/// (map, Φ, Cholesky) plus the test features Φ_test.
+struct SharedApprox {
+    prep: da::akda_approx::PreparedFeatures,
+    phi_test: Mat,
+}
+
+/// The approximate-AKDA configuration for a grid point — one source for
+/// `build_dr` and the shared-feature-map path of `evaluate_ovr` (the
+/// constructors own the default block/seed).
+fn approx_config(id: MethodId, hp: Hyper, eps: f64) -> da::akda_approx::AkdaApprox {
+    let kernel = Kernel::Rbf { rho: hp.rho };
+    let mut dr = if id == MethodId::AkdaRff {
+        da::akda_approx::AkdaApprox::rff(kernel, hp.m)
+    } else {
+        da::akda_approx::AkdaApprox::nystrom(kernel, hp.m)
+    };
+    dr.eps = eps;
+    dr
 }
 
 /// Build the DR method for a spec (None for the pure-SVM columns).
@@ -130,6 +169,9 @@ pub fn build_dr(
             eps,
             block: crate::linalg::chol::DEFAULT_BLOCK,
         })),
+        MethodId::AkdaNystrom | MethodId::AkdaRff => {
+            Some(Box::new(approx_config(id, hp, eps)))
+        }
         MethodId::AkdaPjrt => {
             let engine = engine
                 .ok_or_else(|| anyhow::anyhow!("akda-pjrt needs a PJRT engine"))?;
@@ -179,8 +221,27 @@ pub fn evaluate_ovr(
     let classes: Vec<usize> = (0..split.n_classes).collect();
     let engine = engine.cloned();
     let split = Arc::new(split.clone());
+    // The approximate methods' state up to the RHS — feature map, Φ,
+    // Cholesky of ΦᵀΦ + εI, and the test features Φ_test — is
+    // label-independent: build it once, share it across the C one-vs-rest
+    // fits, and charge its cost to the train/test time once (below).
+    let mut shared_train_s = 0.0;
+    let mut shared_test_s = 0.0;
+    let shared: Option<Arc<SharedApprox>> = match id {
+        MethodId::AkdaNystrom | MethodId::AkdaRff => {
+            let t0 = Instant::now();
+            let prep = approx_config(id, hp, eps).prepare(&split.x_train)?;
+            shared_train_s = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let phi_test = prep.map.transform(&split.x_test);
+            shared_test_s = t0.elapsed().as_secs_f64();
+            Some(Arc::new(SharedApprox { prep, phi_test }))
+        }
+        _ => None,
+    };
     let run_class = {
         let split = split.clone();
+        let shared = shared.clone();
         move |cls: usize| -> Result<(f64, f64, f64)> {
             let mut watch = Stopwatch::new();
             // binary relabel: target class → 0, rest → 1 (Sec. 4.4 order)
@@ -220,10 +281,21 @@ pub fn evaluate_ovr(
                     watch.test(|| svm.decision_batch(&split.x_test))
                 }
                 _ => {
-                    let dr = build_dr(id, hp, eps, engine.as_ref())?
-                        .expect("DR method");
-                    let proj = watch.train(|| dr.fit(&split.x_train, &y_bin, 2))?;
-                    let z_train = watch.train(|| proj.project(&split.x_train));
+                    let (z_train, z_test) = if let Some(sh) = &shared {
+                        // Φ / Φ_test are cached — z = Φ W, no re-transform
+                        let proj = watch.train(|| sh.prep.fit(&y_bin, 2))?;
+                        let z_tr = watch.train(|| sh.prep.phi.matmul(&proj.w));
+                        let z_te = watch.test(|| sh.phi_test.matmul(&proj.w));
+                        (z_tr, z_te)
+                    } else {
+                        let dr = build_dr(id, hp, eps, engine.as_ref())?
+                            .expect("DR method");
+                        let proj =
+                            watch.train(|| dr.fit(&split.x_train, &y_bin, 2))?;
+                        let z_tr = watch.train(|| proj.project(&split.x_train));
+                        let z_te = watch.test(|| proj.project(&split.x_test));
+                        (z_tr, z_te)
+                    };
                     let y_pm: Vec<f64> = y_bin
                         .iter()
                         .map(|&b| if b == 0 { 1.0 } else { -1.0 })
@@ -235,7 +307,6 @@ pub fn evaluate_ovr(
                             LinearSvmConfig { c: hp.c, ..Default::default() },
                         )
                     });
-                    let z_test = watch.test(|| proj.project(&split.x_test));
                     watch.test(|| svm.decision_batch(&z_test))
                 }
             };
@@ -255,8 +326,8 @@ pub fn evaluate_ovr(
     };
 
     let mut aps = Vec::new();
-    let mut train_s = 0.0;
-    let mut test_s = 0.0;
+    let mut train_s = shared_train_s;
+    let mut test_s = shared_test_s;
     for r in per_class {
         let (ap, tr, te) = r?;
         aps.push(ap);
@@ -287,7 +358,7 @@ pub fn select_hyper(
     for &rho in rho_grid {
         for &c in &cfg.c_grid {
             for &h in h_grid {
-                let hp = Hyper { rho, c, h };
+                let hp = Hyper { rho, c, h, m: cfg.landmarks };
                 let mut maps = Vec::new();
                 for fold in 0..cfg.cv_folds {
                     let mut rng = Rng::new(cfg.seed ^ (fold as u64) << 8);
@@ -351,7 +422,7 @@ mod tests {
     fn akda_ovr_beats_chance() {
         let split = small_split();
         let res = evaluate_ovr(
-            &split, MethodId::Akda, Hyper { rho: 0.05, c: 1.0, h: 1 },
+            &split, MethodId::Akda, Hyper { rho: 0.05, c: 1.0, h: 1, ..Default::default() },
             1e-3, None, None,
         )
         .unwrap();
@@ -365,7 +436,12 @@ mod tests {
         let split = small_split();
         for id in MethodId::table_columns() {
             let res = evaluate_ovr(
-                &split, id, Hyper { rho: 0.05, c: 1.0, h: 2 }, 1e-3, None, None,
+                &split,
+                id,
+                Hyper { rho: 0.05, c: 1.0, h: 2, m: 24 },
+                1e-3,
+                None,
+                None,
             )
             .unwrap_or_else(|e| panic!("{} failed: {e}", id.name()));
             assert!(res.map >= 0.0 && res.map <= 1.0, "{}", id.name());
@@ -375,7 +451,7 @@ mod tests {
     #[test]
     fn pool_and_serial_agree() {
         let split = small_split();
-        let hp = Hyper { rho: 0.05, c: 1.0, h: 1 };
+        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, ..Default::default() };
         let serial =
             evaluate_ovr(&split, MethodId::Akda, hp, 1e-3, None, None).unwrap();
         let pool = WorkPool::new(4);
@@ -397,6 +473,22 @@ mod tests {
         let hp = select_hyper(&split, MethodId::Akda, &cfg, None).unwrap();
         assert!(cfg.rho_grid.contains(&hp.rho));
         assert!(cfg.c_grid.contains(&hp.c));
+    }
+
+    #[test]
+    fn approx_akda_tracks_exact_akda_on_ovr() {
+        let split = small_split();
+        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24 };
+        let exact =
+            evaluate_ovr(&split, MethodId::Akda, hp, 1e-3, None, None).unwrap();
+        let nystrom =
+            evaluate_ovr(&split, MethodId::AkdaNystrom, hp, 1e-3, None, None).unwrap();
+        assert!(
+            nystrom.map > exact.map - 0.1,
+            "nystrom MAP {} vs exact {}",
+            nystrom.map,
+            exact.map
+        );
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Approximate AKDA: Algorithm 1's core-matrix + Cholesky pipeline run on
+//! an explicit m-dimensional kernel-feature space (m ≪ N) instead of the
+//! implicit N-dimensional kernel expansion.
+//!
+//! Steps: (1) target matrix Θ from the C×C core matrix, exactly as exact
+//! AKDA (O(C³), binary analytic fast path included); (2) features
+//! Φ = φ(X) via a pluggable `approx::FeatureMap` (Nyström landmarks or
+//! RFF) — O(N m F); (3) solve (ΦᵀΦ + εI) W = ΦᵀΘ by Cholesky — O(N m²)
+//! to form the m×m Gram plus m³/3 for the factorization. Training drops
+//! from O(N³) to O(N m²).
+//!
+//! Why this is the right system: with Ψ the exact solution of
+//! (K + εI) Ψ = Θ (Eq. 44) and K = Φ Φᵀ, the feature-space weights
+//! W = (ΦᵀΦ + εI)⁻¹ ΦᵀΘ produce the *same* projections φ(x)ᵀW as the
+//! kernel expansion k(x,·)ᵀΨ — the push-through identity
+//! Φᵀ(ΦΦᵀ + εI)⁻¹ = (ΦᵀΦ + εI)⁻¹Φᵀ. The `nystrom_full_landmarks_*` test
+//! verifies the m = N case end-to-end against `Akda`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::core;
+use super::{DrMethod, Projection};
+use crate::approx::{ApproxKind, FeatureMap, NystromMap, RffMap};
+use crate::kernels::Kernel;
+use crate::linalg::{chol, Mat};
+
+/// Approximate-AKDA configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AkdaApprox {
+    pub kernel: Kernel,
+    /// Ridge added to ΦᵀΦ (the feature-space mirror of Sec. 4.3's ε).
+    pub eps: f64,
+    /// Cholesky block size (perf knob; output is block-size invariant).
+    pub block: usize,
+    /// Which feature approximator to build.
+    pub kind: ApproxKind,
+    /// Landmark (Nyström) or random-feature (RFF) budget m.
+    pub m: usize,
+    /// Seed for landmark selection / frequency sampling.
+    pub seed: u64,
+}
+
+impl AkdaApprox {
+    pub fn nystrom(kernel: Kernel, m: usize) -> Self {
+        AkdaApprox {
+            kernel,
+            eps: 1e-3,
+            block: chol::DEFAULT_BLOCK,
+            kind: ApproxKind::Nystrom,
+            m,
+            seed: 7,
+        }
+    }
+
+    pub fn rff(kernel: Kernel, m: usize) -> Self {
+        AkdaApprox { kind: ApproxKind::Rff, ..AkdaApprox::nystrom(kernel, m) }
+    }
+
+    /// Build the configured feature map from the training rows.
+    pub fn build_map(&self, x: &Mat) -> Result<Box<dyn FeatureMap>> {
+        Ok(match self.kind {
+            ApproxKind::Nystrom => {
+                Box::new(NystromMap::fit(x, self.kernel, self.m, self.seed)?)
+            }
+            ApproxKind::Rff => {
+                Box::new(RffMap::fit(x.cols(), self.kernel, self.m, self.seed)?)
+            }
+        })
+    }
+
+    /// Build the entire label-independent training state once: the
+    /// feature map, the training features Φ, and the Cholesky factor of
+    /// ΦᵀΦ + εI. One-vs-rest loops (coordinator protocol) share it across
+    /// the C binary fits, so each per-class fit costs only the RHS ΦᵀΘ
+    /// plus two m×m triangular solves — not k-means + transform + m³/3.
+    pub fn prepare(&self, x: &Mat) -> Result<PreparedFeatures> {
+        let map: Arc<dyn FeatureMap> = Arc::from(self.build_map(x)?);
+        let phi = map.transform(x);
+        let mut c = phi.matmul_tn(&phi);
+        c.add_ridge(self.eps);
+        let chol_l = chol::cholesky(&c, self.block)
+            .map_err(|e| anyhow::anyhow!("approximate AKDA Cholesky failed: {e}"))?;
+        Ok(PreparedFeatures { map, phi, chol_l })
+    }
+}
+
+/// Label-independent training state shared across per-label fits.
+pub struct PreparedFeatures {
+    pub map: Arc<dyn FeatureMap>,
+    /// N×m training features Φ (also the per-class z_train source:
+    /// z_train = Φ W).
+    pub phi: Mat,
+    /// Lower Cholesky factor of ΦᵀΦ + εI.
+    chol_l: Mat,
+}
+
+impl PreparedFeatures {
+    /// Solve for one labelling reusing the cached factorization.
+    pub fn fit(&self, labels: &[usize], n_classes: usize) -> Result<ApproxProjection> {
+        let theta = if n_classes == 2 {
+            core::theta_binary(labels)
+        } else {
+            core::theta(labels, n_classes)
+        };
+        let b = self.phi.matmul_tn(&theta);
+        let y = chol::solve_lower(&self.chol_l, &b);
+        let w = chol::solve_upper_from_lower(&self.chol_l, &y);
+        Ok(ApproxProjection { map: self.map.clone(), w })
+    }
+}
+
+impl DrMethod for AkdaApprox {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            ApproxKind::Nystrom => "akda-nystrom",
+            ApproxKind::Rff => "akda-rff",
+        }
+    }
+
+    fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<Box<dyn Projection>> {
+        Ok(Box::new(self.prepare(x)?.fit(labels, n_classes)?))
+    }
+}
+
+/// Fitted approximate projection: z = Wᵀ φ(x). Test-time cost is O(m F)
+/// per observation — independent of the training-set size N, unlike
+/// `KernelProjection`'s O(N F).
+pub struct ApproxProjection {
+    /// Shared so OvR loops reuse one map across the C per-class models.
+    pub map: Arc<dyn FeatureMap>,
+    pub w: Mat,
+}
+
+impl Projection for ApproxProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        self.map.transform(x_test).matmul(&self.w)
+    }
+
+    fn dim(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::da::akda::Akda;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+
+    fn toy(n_per: usize, c: usize, seed: u64) -> (Mat, Vec<usize>) {
+        gaussian_classes(&GaussianSpec {
+            n_classes: c,
+            n_per_class: vec![n_per; c],
+            dim: 8,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed,
+        })
+    }
+
+    /// Max |a − b| after aligning each column's sign (projections are
+    /// defined up to per-direction sign).
+    fn sign_aligned_gap(a: &Mat, b: &Mat) -> f64 {
+        assert_eq!(a.shape(), b.shape());
+        let mut worst = 0.0_f64;
+        for c in 0..a.cols() {
+            let dot: f64 = (0..a.rows()).map(|r| a[(r, c)] * b[(r, c)]).sum();
+            let s = if dot >= 0.0 { 1.0 } else { -1.0 };
+            for r in 0..a.rows() {
+                worst = worst.max((a[(r, c)] - s * b[(r, c)]).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn nystrom_full_landmarks_matches_exact_akda_binary() {
+        // Satellite regression: with landmarks = N the Nyström features
+        // reproduce K exactly, so the feature-space solve must give the
+        // exact AKDA projections (up to sign).
+        let (x, labels) = toy(20, 2, 1);
+        let kernel = Kernel::Rbf { rho: 0.4 };
+        let exact = Akda { kernel, eps: 1e-3, block: 32 };
+        let approx = AkdaApprox::nystrom(kernel, 40);
+        let pe = exact.fit(&x, &labels, 2).unwrap();
+        let pa = approx.fit(&x, &labels, 2).unwrap();
+        let (xt, _) = toy(15, 2, 9);
+        let gap = sign_aligned_gap(&pe.project(&xt), &pa.project(&xt));
+        assert!(gap < 1e-5, "projection gap {gap}");
+    }
+
+    #[test]
+    fn nystrom_full_landmarks_matches_exact_akda_multiclass() {
+        let (x, labels) = toy(15, 3, 2);
+        let kernel = Kernel::Rbf { rho: 0.3 };
+        let exact = Akda { kernel, eps: 1e-3, block: 32 };
+        let approx = AkdaApprox::nystrom(kernel, 45);
+        let pe = exact.fit(&x, &labels, 3).unwrap();
+        let pa = approx.fit(&x, &labels, 3).unwrap();
+        assert_eq!(pa.dim(), 2);
+        let (xt, _) = toy(10, 3, 11);
+        let gap = sign_aligned_gap(&pe.project(&xt), &pa.project(&xt));
+        assert!(gap < 1e-5, "projection gap {gap}");
+    }
+
+    fn separation_gap(z: &Mat, labels: &[usize]) -> f64 {
+        let n = z.rows();
+        let z0: Vec<f64> = (0..n).filter(|&i| labels[i] == 0).map(|i| z[(i, 0)]).collect();
+        let z1: Vec<f64> = (0..n).filter(|&i| labels[i] == 1).map(|i| z[(i, 0)]).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (m0, m1) = (mean(&z0), mean(&z1));
+        let sd = |v: &[f64], m: f64| {
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        (m0 - m1).abs() / (sd(&z0, m0) + sd(&z1, m1)).max(1e-12)
+    }
+
+    #[test]
+    fn nystrom_with_few_landmarks_still_separates() {
+        let (x, labels) = toy(40, 2, 3);
+        let approx = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, 16);
+        let proj = approx.fit(&x, &labels, 2).unwrap();
+        assert!(proj.dim() >= 1);
+        let gap = separation_gap(&proj.project(&x), &labels);
+        assert!(gap > 2.0, "class separation too weak: {gap}");
+    }
+
+    #[test]
+    fn rff_separates_classes() {
+        let (x, labels) = toy(40, 2, 4);
+        let approx = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 256);
+        let proj = approx.fit(&x, &labels, 2).unwrap();
+        assert_eq!(proj.dim(), 1);
+        let gap = separation_gap(&proj.project(&x), &labels);
+        assert!(gap > 2.0, "class separation too weak: {gap}");
+    }
+
+    #[test]
+    fn method_names_reflect_the_approximator() {
+        let kernel = Kernel::Rbf { rho: 0.1 };
+        assert_eq!(AkdaApprox::nystrom(kernel, 8).name(), "akda-nystrom");
+        assert_eq!(AkdaApprox::rff(kernel, 8).name(), "akda-rff");
+    }
+
+    #[test]
+    fn rff_rejects_linear_kernel_at_fit_time() {
+        let (x, labels) = toy(10, 2, 5);
+        let approx = AkdaApprox::rff(Kernel::Linear, 32);
+        assert!(approx.fit(&x, &labels, 2).is_err());
+    }
+}

@@ -4,6 +4,7 @@
 //! the coordinator treat them uniformly.
 
 pub mod akda;
+pub mod akda_approx;
 pub mod aksda;
 pub mod core;
 pub mod equivalence;

@@ -19,10 +19,11 @@ impl DatasetRow {
     }
 }
 
-/// Paper column order (Tables 2–7).
+/// Paper column order (Tables 2–7), extended with the approximate-AKDA
+/// columns from the `approx` subsystem.
 pub const METHOD_COLUMNS: &[&str] = &[
-    "pca", "lda", "lsvm", "kda", "gda", "srkda", "akda", "ksvm",
-    "ksda", "gsda", "aksda",
+    "pca", "lda", "lsvm", "kda", "gda", "srkda", "akda", "akda-nystrom",
+    "akda-rff", "ksvm", "ksda", "gsda", "aksda",
 ];
 
 /// Render a MAP table (Tables 2–4 layout) with a trailing Average row.
@@ -31,7 +32,7 @@ pub fn map_table(title: &str, rows: &[DatasetRow]) -> String {
     let _ = writeln!(out, "{title}");
     let _ = write!(out, "{:<12}", "dataset");
     for m in METHOD_COLUMNS {
-        let _ = write!(out, "{:>8}", m);
+        let _ = write!(out, "{:>14}", m);
     }
     let _ = writeln!(out);
     let mut sums = vec![0.0; METHOD_COLUMNS.len()];
@@ -41,12 +42,12 @@ pub fn map_table(title: &str, rows: &[DatasetRow]) -> String {
         for (ci, m) in METHOD_COLUMNS.iter().enumerate() {
             match row.get(m) {
                 Some(r) => {
-                    let _ = write!(out, "{:>7.2}%", 100.0 * r.map);
+                    let _ = write!(out, "{:>13.2}%", 100.0 * r.map);
                     sums[ci] += r.map;
                     counts[ci] += 1;
                 }
                 None => {
-                    let _ = write!(out, "{:>8}", "-");
+                    let _ = write!(out, "{:>14}", "-");
                 }
             }
         }
@@ -56,9 +57,9 @@ pub fn map_table(title: &str, rows: &[DatasetRow]) -> String {
         let _ = write!(out, "{:<12}", "Average");
         for ci in 0..METHOD_COLUMNS.len() {
             if counts[ci] > 0 {
-                let _ = write!(out, "{:>7.2}%", 100.0 * sums[ci] / counts[ci] as f64);
+                let _ = write!(out, "{:>13.2}%", 100.0 * sums[ci] / counts[ci] as f64);
             } else {
-                let _ = write!(out, "{:>8}", "-");
+                let _ = write!(out, "{:>14}", "-");
             }
         }
         let _ = writeln!(out);
@@ -73,7 +74,7 @@ pub fn speedup_table(title: &str, rows: &[DatasetRow]) -> String {
     let _ = writeln!(out, "{title}");
     let _ = write!(out, "{:<12}", "dataset");
     for m in METHOD_COLUMNS {
-        let _ = write!(out, "{:>12}", m);
+        let _ = write!(out, "{:>14}", m);
     }
     let _ = writeln!(out);
     for row in rows {
@@ -84,10 +85,10 @@ pub fn speedup_table(title: &str, rows: &[DatasetRow]) -> String {
             match row.get(m) {
                 Some(r) => {
                     let (t, p) = r.speedup_over(&kda);
-                    let _ = write!(out, "{:>12}", format!("{}/{}", fmt_ratio(t), fmt_ratio(p)));
+                    let _ = write!(out, "{:>14}", format!("{}/{}", fmt_ratio(t), fmt_ratio(p)));
                 }
                 None => {
-                    let _ = write!(out, "{:>12}", "-");
+                    let _ = write!(out, "{:>14}", "-");
                 }
             }
         }
@@ -143,6 +144,9 @@ mod tests {
         assert!(t.contains("60.00%"));
         assert!(t.contains("Average"));
         assert!(t.contains("akda"));
+        // the approx subsystem's columns are part of the layout
+        assert!(t.contains("akda-nystrom"));
+        assert!(t.contains("akda-rff"));
     }
 
     #[test]

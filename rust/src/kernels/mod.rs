@@ -88,7 +88,9 @@ pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
             });
         }
     });
-    // mirror the upper triangle
+    // Mirror the computed upper triangle into the lower one for EVERY
+    // kernel type — callers (Cholesky, centering, projections) read
+    // K[(j, i)] and must never see the unwritten half.
     for i in 0..n {
         for j in (i + 1)..n {
             k[(j, i)] = k[(i, j)];
@@ -189,6 +191,38 @@ mod tests {
             for t in 0..11 {
                 let want = Kernel::Rbf { rho: 0.2 }.eval(xe.row(e), xt.row(t));
                 assert!((k[(e, t)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_lower_triangle_is_mirrored_for_all_kernels() {
+        // Regression: only the upper triangle is computed in the threaded
+        // sweep; the lower triangle must be mirrored (not left zero) for
+        // every kernel type, Poly included.
+        let x = randmat(17, 4, 8);
+        for kernel in [
+            Kernel::Linear,
+            Kernel::Rbf { rho: 0.7 },
+            Kernel::Poly { degree: 3, c: 0.5 },
+        ] {
+            let k = gram(&x, kernel);
+            for i in 0..17 {
+                for j in 0..i {
+                    assert!(
+                        (k[(i, j)] - k[(j, i)]).abs() < 1e-12,
+                        "{}: K[({i},{j})] asymmetric",
+                        kernel.name()
+                    );
+                    let want = kernel.eval(x.row(i), x.row(j));
+                    assert!(
+                        (k[(i, j)] - want).abs() < 1e-9 * (1.0 + want.abs()),
+                        "{}: lower triangle entry ({i},{j}) = {} want {}",
+                        kernel.name(),
+                        k[(i, j)],
+                        want
+                    );
+                }
             }
         }
     }

@@ -9,9 +9,13 @@
 //!   lowered to fixed-shape HLO artifacts (`artifacts/*.hlo.txt`).
 //! * L3 (this crate): PJRT runtime, dataset/eval/SVM substrates, and the
 //!   coordinator that runs the paper's one-vs-rest training protocol.
+//! * `approx`: kernel-feature approximation subsystem (Nyström landmarks,
+//!   random Fourier features) feeding `da::akda_approx` — the O(N m²)
+//!   large-N training path (m ≪ N) beyond the paper's exact O(N³) regime.
 //!
 //! See `DESIGN.md` for the systems inventory and the experiment index.
 
+pub mod approx;
 pub mod cluster;
 pub mod coordinator;
 pub mod da;

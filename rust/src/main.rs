@@ -13,7 +13,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use akda::coordinator::{evaluate_ovr, select_hyper, EvalConfig, Hyper, MethodId, WorkPool};
+use akda::coordinator::{
+    build_dr, evaluate_ovr, select_hyper, EvalConfig, Hyper, MethodId, WorkPool,
+};
 use akda::data::{cross_dataset_collection, med_datasets, Condition, DatasetSpec};
 use akda::eval::tables::{map_table, results_csv, speedup_table, DatasetRow};
 use akda::runtime::PjrtEngine;
@@ -53,6 +55,12 @@ impl Args {
     }
 }
 
+fn parse_landmarks(s: &str) -> Result<usize> {
+    let m: usize = s.parse().context("--landmarks must be a positive integer")?;
+    anyhow::ensure!(m >= 1, "--landmarks must be a positive integer, got 0");
+    Ok(m)
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -81,10 +89,13 @@ fn print_help() {
          COMMANDS:\n\
            datasets                         print the dataset registry (Table 1)\n\
            eval --suite med|cross10|cross100\n\
-                [--methods csv] [--cv] [--pjrt] [--config file] [--out dir]\n\
-                                            regenerate MAP + speedup tables (Tables 2-7)\n\
+                [--methods csv] [--landmarks M] [--cv] [--pjrt] [--config file] [--out dir]\n\
+                                            regenerate MAP + speedup tables (Tables 2-7);\n\
+                                            methods include akda-nystrom|akda-rff (approx\n\
+                                            subsystem, --landmarks sets the budget m)\n\
            toy [--out dir]                  Sec. 6.2 toy example (Figs. 2-3 data)\n\
-           serve --dataset NAME [--pjrt]    train a detector bank, demo scoring service\n\
+           serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
+                 [--landmarks M] [--pjrt]   train a detector bank, demo scoring service\n\
            check                            verify artifacts + PJRT round trip\n\n\
          ENV: AKDA_ARTIFACTS (default: ./artifacts)"
     );
@@ -122,7 +133,7 @@ fn suite_of(name: &str) -> Result<(Vec<DatasetSpec>, Condition, &'static str)> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let suite = args.get("suite").unwrap_or("cross10");
     let (datasets, cond, title) = suite_of(suite)?;
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => EvalConfig::from_file(std::path::Path::new(path))?,
         None => EvalConfig::default(),
     };
@@ -137,6 +148,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
         None => MethodId::table_columns(),
     };
     let use_cv = args.get("cv").is_some();
+    // set before CV so select_hyper scores the grid at the same budget m
+    // the final fit uses
+    if let Some(m) = args.get("landmarks") {
+        cfg.landmarks = parse_landmarks(m)?;
+    }
     let engine = if args.get("pjrt").is_some()
         || methods.iter().any(|m| matches!(m, MethodId::AkdaPjrt | MethodId::AksdaPjrt))
     {
@@ -157,7 +173,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 eprintln!("   {}: CV picked rho={} c={} h={}", id.name(), hp.rho, hp.c, hp.h);
                 hp
             } else {
-                Hyper { rho: 0.05, c: 1.0, h: 2 }
+                Hyper { rho: 0.05, c: 1.0, h: 2, m: cfg.landmarks }
             };
             let res = evaluate_ovr(&split, id, hp, cfg.eps, engine.as_ref(), Some(&pool))?;
             eprintln!(
@@ -201,16 +217,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("dataset").unwrap_or("eth80");
     let spec = akda::data::by_name(name).with_context(|| format!("dataset {name:?}"))?;
     let split = spec.split(Condition::Ex100);
-    eprintln!("training detector bank on {} (C={})", name, split.n_classes);
-
-    let proj: Box<dyn akda::da::Projection> = if args.get("pjrt").is_some() {
-        let engine = Arc::new(PjrtEngine::from_dir(&artifacts_dir())?);
-        akda::runtime::AkdaPjrt { kernel: akda::kernels::Kernel::Rbf { rho: 0.05 }, engine }
-            .fit(&split.x_train, &split.y_train, split.n_classes)?
-    } else {
-        akda::da::akda::Akda::new(akda::kernels::Kernel::Rbf { rho: 0.05 })
-            .fit(&split.x_train, &split.y_train, split.n_classes)?
+    let use_pjrt = args.get("pjrt").is_some();
+    let method = match args.get("method") {
+        Some(m) => m,
+        None if use_pjrt => "akda-pjrt",
+        None => "akda",
     };
+    let id = MethodId::from_name(method)
+        .with_context(|| format!("unknown method {method:?}"))?;
+    let needs_engine = matches!(id, MethodId::AkdaPjrt | MethodId::AksdaPjrt);
+    if use_pjrt && !needs_engine {
+        bail!("--pjrt serves the PJRT engines; use --method akda-pjrt|aksda-pjrt or drop --pjrt");
+    }
+    eprintln!(
+        "training detector bank on {} (C={}) with {}",
+        name, split.n_classes, method
+    );
+
+    let engine = if needs_engine {
+        Some(Arc::new(PjrtEngine::from_dir(&artifacts_dir())?))
+    } else {
+        None
+    };
+    let mut hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
+    if let Some(m) = args.get("landmarks") {
+        hp.m = parse_landmarks(m)?;
+    }
+    let dr = build_dr(id, hp, 1e-3, engine.as_ref())?
+        .with_context(|| format!("{method} has no DR stage to serve"))?;
+    let proj: Box<dyn akda::da::Projection> =
+        dr.fit(&split.x_train, &split.y_train, split.n_classes)?;
     let z = proj.project(&split.x_train);
     let svms = (0..split.n_classes)
         .map(|cls| {

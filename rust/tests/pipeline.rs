@@ -27,7 +27,7 @@ fn full_eval_row_all_methods() {
     // one full table row: every method column on one dataset
     let split = tiny_split();
     let pool = WorkPool::new(4);
-    let hp = Hyper { rho: 0.05, c: 1.0, h: 2 };
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, m: 24 };
     let mut maps = std::collections::BTreeMap::new();
     for id in MethodId::table_columns() {
         let res = evaluate_ovr(&split, id, hp, 1e-3, None, Some(&pool)).unwrap();
@@ -55,7 +55,7 @@ fn kernel_methods_beat_linear_on_shells() {
     let (x, y) = synthetic::concentric_shells(60, 6, 3);
     let (xt, yt) = synthetic::concentric_shells(80, 6, 4);
     let split = Split { x_train: x, y_train: y, x_test: xt, y_test: yt, n_classes: 2 };
-    let hp = Hyper { rho: 0.5, c: 1.0, h: 2 };
+    let hp = Hyper { rho: 0.5, c: 1.0, h: 2, ..Default::default() };
     let akda = evaluate_ovr(&split, MethodId::Akda, hp, 1e-3, None, None).unwrap();
     let lda = evaluate_ovr(&split, MethodId::Lda, hp, 1e-3, None, None).unwrap();
     let lsvm = evaluate_ovr(&split, MethodId::Lsvm, hp, 1e-3, None, None).unwrap();
@@ -110,7 +110,12 @@ fn cv_improves_or_matches_fixed_hyper() {
     let mut worst = f64::INFINITY;
     for &rho in &cfg.rho_grid {
         let r = evaluate_ovr(
-            &split, MethodId::Akda, Hyper { rho, c: 1.0, h: 2 }, 1e-3, None, None,
+            &split,
+            MethodId::Akda,
+            Hyper { rho, c: 1.0, h: 2, ..Default::default() },
+            1e-3,
+            None,
+            None,
         )
         .unwrap();
         worst = worst.min(r.map);
