@@ -16,7 +16,10 @@
 //!
 //! Both are pluggable behind the [`FeatureMap`] trait so
 //! `da::akda_approx::AkdaApprox` (and any future consumer) can treat
-//! approximators uniformly.
+//! approximators uniformly. Because `transform` is row-independent, maps
+//! also drive the out-of-core tiled pipeline (`da::akda_stream`): blocks
+//! of rows can be transformed and absorbed one tile at a time with
+//! results identical to the in-memory path.
 
 pub mod nystrom;
 pub mod rff;

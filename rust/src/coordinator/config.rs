@@ -27,6 +27,11 @@ pub struct EvalConfig {
     /// Landmark / random-feature budget m for the approximate methods
     /// (akda-nystrom / akda-rff) — used both during CV and the final fit.
     pub landmarks: usize,
+    /// Tile height B for the out-of-core streaming path: when set, the
+    /// approximate methods accumulate ΦᵀΦ and the class sums tile by tile
+    /// (`da::akda_stream`) instead of materializing the N×m Φ. `None`
+    /// (default) = in-memory.
+    pub stream_block: Option<usize>,
     pub seed: u64,
 }
 
@@ -42,6 +47,7 @@ impl Default for EvalConfig {
             workers: crate::util::threads::available(),
             eps: 1e-3,
             landmarks: crate::approx::DEFAULT_BUDGET,
+            stream_block: None,
             seed: 2024,
         }
     }
@@ -97,12 +103,17 @@ impl EvalConfig {
                 "workers" => cfg.workers = v.parse()?,
                 "eps" => cfg.eps = v.parse()?,
                 "landmarks" => cfg.landmarks = v.parse()?,
+                "stream_block" => cfg.stream_block = Some(v.parse()?),
                 "seed" => cfg.seed = v.parse()?,
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
         anyhow::ensure!(!cfg.rho_grid.is_empty() && !cfg.c_grid.is_empty());
         anyhow::ensure!(cfg.landmarks >= 1, "landmarks must be >= 1");
+        anyhow::ensure!(
+            !matches!(cfg.stream_block, Some(0)),
+            "stream_block must be >= 1"
+        );
         anyhow::ensure!(cfg.cv_folds >= 2, "cv_folds must be >= 2");
         anyhow::ensure!(
             cfg.cv_learn_frac > 0.0 && cfg.cv_learn_frac < 1.0,
@@ -155,5 +166,13 @@ mod tests {
         assert!(EvalConfig::from_str_cfg("cv_folds = 1").is_err());
         assert!(EvalConfig::from_str_cfg("cv_learn_frac = 1.5").is_err());
         assert!(EvalConfig::from_str_cfg("landmarks = 0").is_err());
+        assert!(EvalConfig::from_str_cfg("stream_block = 0").is_err());
+    }
+
+    #[test]
+    fn parses_stream_block() {
+        assert_eq!(EvalConfig::default().stream_block, None);
+        let c = EvalConfig::from_str_cfg("stream_block = 4096").unwrap();
+        assert_eq!(c.stream_block, Some(4096));
     }
 }

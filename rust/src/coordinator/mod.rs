@@ -2,9 +2,15 @@
 //!
 //! * `jobs` — worker pool scheduling the per-class one-vs-rest jobs.
 //! * `protocol` — Sec. 6.3's evaluation loop (binary OvR, DR + LSVM, MAP,
-//!   timing) and the 3-fold CV grid search.
+//!   timing) and the 3-fold CV grid search. For the approximate methods
+//!   it builds the label-independent training state once per evaluation —
+//!   in memory (`da::akda_approx::PreparedFeatures`) or, when
+//!   `Hyper::stream_block` is set, through the out-of-core tiled pipeline
+//!   (`da::akda_stream::PreparedStream`) — and shares it across the C
+//!   per-class fits.
 //! * `service` — post-training scoring service with dynamic micro-batching.
-//! * `config` — reproducible run configuration.
+//! * `config` — reproducible run configuration (`EvalConfig`), including
+//!   the streaming tile height `stream_block`.
 
 pub mod config;
 pub mod jobs;

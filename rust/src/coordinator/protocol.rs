@@ -119,26 +119,44 @@ pub struct Hyper {
     /// Landmark / random-feature budget m for the approximate methods
     /// (akda-nystrom / akda-rff); ignored by the exact ones.
     pub m: usize,
+    /// When set, the approximate methods train through the out-of-core
+    /// tiled pipeline (`da::akda_stream`) with this tile height B instead
+    /// of materializing the N×m feature matrix — peak accumulator memory
+    /// O(B·m + m²) instead of O(N·m). `None` = in-memory (default).
+    pub stream_block: Option<usize>,
 }
 
 impl Default for Hyper {
     fn default() -> Self {
-        Hyper { rho: 0.1, c: 1.0, h: 2, m: crate::approx::DEFAULT_BUDGET }
+        Hyper {
+            rho: 0.1,
+            c: 1.0,
+            h: 2,
+            m: crate::approx::DEFAULT_BUDGET,
+            stream_block: None,
+        }
     }
 }
 
 /// Label-independent approximate-AKDA state shared across the one-vs-rest
-/// classes of one `evaluate_ovr` call: the prepared training-side state
-/// (map, Φ, Cholesky) plus the test features Φ_test.
-struct SharedApprox {
-    prep: da::akda_approx::PreparedFeatures,
-    phi_test: Mat,
+/// classes of one `evaluate_ovr` call.
+enum SharedApprox {
+    /// In-memory: prepared training-side state (map, Φ, Cholesky) plus the
+    /// test features Φ_test, both resident for the whole OvR loop.
+    Dense { prep: da::akda_approx::PreparedFeatures, phi_test: Mat },
+    /// Out-of-core: every one-vs-rest solve comes from the same tiled
+    /// accumulation state, so all C directions are stacked into one m×C W
+    /// at build time and the train/test rows are projected through the
+    /// tiled pipeline exactly once (no N×m feature matrix is ever
+    /// resident). Per-class work is a column slice of these N×C scores.
+    Stream { z_train: Mat, z_test: Mat },
 }
 
 /// The approximate-AKDA configuration for a grid point — one source for
-/// `build_dr` and the shared-feature-map path of `evaluate_ovr` (the
-/// constructors own the default block/seed).
-fn approx_config(id: MethodId, hp: Hyper, eps: f64) -> da::akda_approx::AkdaApprox {
+/// `build_dr`, the shared-feature-map path of `evaluate_ovr`, and the
+/// serve subcommand's streaming bank (the constructors own the default
+/// block/seed).
+pub fn approx_config(id: MethodId, hp: Hyper, eps: f64) -> da::akda_approx::AkdaApprox {
     let kernel = Kernel::Rbf { rho: hp.rho };
     let mut dr = if id == MethodId::AkdaRff {
         da::akda_approx::AkdaApprox::rff(kernel, hp.m)
@@ -221,22 +239,59 @@ pub fn evaluate_ovr(
     let classes: Vec<usize> = (0..split.n_classes).collect();
     let engine = engine.cloned();
     let split = Arc::new(split.clone());
-    // The approximate methods' state up to the RHS — feature map, Φ,
-    // Cholesky of ΦᵀΦ + εI, and the test features Φ_test — is
+    // The approximate methods' state up to the RHS — feature map, Gram
+    // Cholesky, and (dense path only) the features Φ / Φ_test — is
     // label-independent: build it once, share it across the C one-vs-rest
     // fits, and charge its cost to the train/test time once (below).
     let mut shared_train_s = 0.0;
     let mut shared_test_s = 0.0;
+    let mut peak_f64 = None;
     let shared: Option<Arc<SharedApprox>> = match id {
-        MethodId::AkdaNystrom | MethodId::AkdaRff => {
-            let t0 = Instant::now();
-            let prep = approx_config(id, hp, eps).prepare(&split.x_train)?;
-            shared_train_s = t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let phi_test = prep.map.transform(&split.x_test);
-            shared_test_s = t0.elapsed().as_secs_f64();
-            Some(Arc::new(SharedApprox { prep, phi_test }))
-        }
+        MethodId::AkdaNystrom | MethodId::AkdaRff => match hp.stream_block {
+            Some(block_rows) => {
+                // out-of-core tiling: accumulate ΦᵀΦ + class sums tile by
+                // tile, then stack all C one-vs-rest solves into one m×C W
+                // so a single tiled pass over train (and test) serves every
+                // class — the dense arm's Φ-cache equivalent at O(B·m)
+                let t0 = Instant::now();
+                let mut src = crate::data::stream::MemBlockSource::new(
+                    &split.x_train,
+                    &split.y_train,
+                    block_rows,
+                );
+                let prep = approx_config(id, hp, eps).prepare_stream(&mut src)?;
+                let mut w_all = Mat::zeros(prep.map.dim(), split.n_classes);
+                for cls in 0..split.n_classes {
+                    w_all.set_col(cls, &prep.solve_w_class(cls)?.col(0));
+                }
+                let z_train = da::akda_stream::project_blocked(
+                    prep.map.as_ref(),
+                    &w_all,
+                    &split.x_train,
+                    block_rows,
+                );
+                shared_train_s = t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let z_test = da::akda_stream::project_blocked(
+                    prep.map.as_ref(),
+                    &w_all,
+                    &split.x_test,
+                    block_rows,
+                );
+                shared_test_s = t0.elapsed().as_secs_f64();
+                peak_f64 = Some(prep.stats.peak_resident_f64());
+                Some(Arc::new(SharedApprox::Stream { z_train, z_test }))
+            }
+            None => {
+                let t0 = Instant::now();
+                let prep = approx_config(id, hp, eps).prepare(&split.x_train)?;
+                shared_train_s = t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let phi_test = prep.map.transform(&split.x_test);
+                shared_test_s = t0.elapsed().as_secs_f64();
+                Some(Arc::new(SharedApprox::Dense { prep, phi_test }))
+            }
+        },
         _ => None,
     };
     let run_class = {
@@ -281,20 +336,30 @@ pub fn evaluate_ovr(
                     watch.test(|| svm.decision_batch(&split.x_test))
                 }
                 _ => {
-                    let (z_train, z_test) = if let Some(sh) = &shared {
-                        // Φ / Φ_test are cached — z = Φ W, no re-transform
-                        let proj = watch.train(|| sh.prep.fit(&y_bin, 2))?;
-                        let z_tr = watch.train(|| sh.prep.phi.matmul(&proj.w));
-                        let z_te = watch.test(|| sh.phi_test.matmul(&proj.w));
-                        (z_tr, z_te)
-                    } else {
-                        let dr = build_dr(id, hp, eps, engine.as_ref())?
-                            .expect("DR method");
-                        let proj =
-                            watch.train(|| dr.fit(&split.x_train, &y_bin, 2))?;
-                        let z_tr = watch.train(|| proj.project(&split.x_train));
-                        let z_te = watch.test(|| proj.project(&split.x_test));
-                        (z_tr, z_te)
+                    let (z_train, z_test) = match shared.as_deref() {
+                        Some(SharedApprox::Dense { prep, phi_test }) => {
+                            // Φ / Φ_test are cached — z = Φ W, no re-transform
+                            let proj = watch.train(|| prep.fit(&y_bin, 2))?;
+                            let z_tr = watch.train(|| prep.phi.matmul(&proj.w));
+                            let z_te = watch.test(|| phi_test.matmul(&proj.w));
+                            (z_tr, z_te)
+                        }
+                        Some(SharedApprox::Stream { z_train, z_test }) => {
+                            // solves + tiled projections were shared and
+                            // charged once above; per-class cost is a slice
+                            let z_tr = watch.train(|| Mat::col_vec(&z_train.col(cls)));
+                            let z_te = watch.test(|| Mat::col_vec(&z_test.col(cls)));
+                            (z_tr, z_te)
+                        }
+                        None => {
+                            let dr = build_dr(id, hp, eps, engine.as_ref())?
+                                .expect("DR method");
+                            let proj =
+                                watch.train(|| dr.fit(&split.x_train, &y_bin, 2))?;
+                            let z_tr = watch.train(|| proj.project(&split.x_train));
+                            let z_te = watch.test(|| proj.project(&split.x_test));
+                            (z_tr, z_te)
+                        }
                     };
                     let y_pm: Vec<f64> = y_bin
                         .iter()
@@ -339,6 +404,7 @@ pub fn evaluate_ovr(
         map: mean_average_precision(&aps),
         train_s,
         test_s,
+        peak_f64,
     })
 }
 
@@ -358,7 +424,13 @@ pub fn select_hyper(
     for &rho in rho_grid {
         for &c in &cfg.c_grid {
             for &h in h_grid {
-                let hp = Hyper { rho, c, h, m: cfg.landmarks };
+                let hp = Hyper {
+                    rho,
+                    c,
+                    h,
+                    m: cfg.landmarks,
+                    stream_block: cfg.stream_block,
+                };
                 let mut maps = Vec::new();
                 for fold in 0..cfg.cv_folds {
                     let mut rng = Rng::new(cfg.seed ^ (fold as u64) << 8);
@@ -438,7 +510,7 @@ mod tests {
             let res = evaluate_ovr(
                 &split,
                 id,
-                Hyper { rho: 0.05, c: 1.0, h: 2, m: 24 },
+                Hyper { rho: 0.05, c: 1.0, h: 2, m: 24, ..Default::default() },
                 1e-3,
                 None,
                 None,
@@ -478,7 +550,7 @@ mod tests {
     #[test]
     fn approx_akda_tracks_exact_akda_on_ovr() {
         let split = small_split();
-        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24 };
+        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24, ..Default::default() };
         let exact =
             evaluate_ovr(&split, MethodId::Akda, hp, 1e-3, None, None).unwrap();
         let nystrom =
@@ -488,6 +560,36 @@ mod tests {
             "nystrom MAP {} vs exact {}",
             nystrom.map,
             exact.map
+        );
+    }
+
+    #[test]
+    fn streaming_ovr_tracks_dense_ovr_and_reports_memory() {
+        // same data, same budget: the tiled path must reproduce the dense
+        // approximate path's MAP (solves agree to ~1e-12) and report its
+        // peak accumulator residency, which dense runs leave unset
+        let split = small_split();
+        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24, ..Default::default() };
+        let dense =
+            evaluate_ovr(&split, MethodId::AkdaNystrom, hp, 1e-3, None, None).unwrap();
+        assert!(dense.peak_f64.is_none());
+        let hp_s = Hyper { stream_block: Some(16), ..hp };
+        let stream =
+            evaluate_ovr(&split, MethodId::AkdaNystrom, hp_s, 1e-3, None, None).unwrap();
+        let peak = stream.peak_f64.expect("streaming runs report residency");
+        assert!(peak > 0);
+        // the whole point: tiles, not the resident N×F input + N×m Φ
+        let (n, f) = (split.x_train.rows(), split.x_train.cols());
+        let dense_equiv = n * (f + 24) + 24 * 24;
+        assert!(
+            peak < dense_equiv,
+            "peak {peak} should be below the in-memory residency {dense_equiv}"
+        );
+        assert!(
+            (stream.map - dense.map).abs() < 0.02,
+            "stream MAP {} vs dense {}",
+            stream.map,
+            dense.map
         );
     }
 

@@ -6,10 +6,30 @@
 //! eigenproblem is C×C. The binary case (Sec. 4.4) skips even that via the
 //! analytic θ (Eq. 50).
 //!
+//! **Why a linear solve replaces the eigenproblem.** Conventional KDA
+//! diagonalizes S_b ψ = λ S_t ψ with S_b = K C_b K, S_t = K C_t K
+//! (N×N, O(N³) per iteration plus the scatter construction). The target
+//! matrix Θ from `da::core` is the NZEP of the central factor C_b and
+//! simultaneously reduces all three central factors (Θᵀ C_b Θ = I,
+//! Θᵀ C_w Θ = 0, Θᵀ C_t Θ = I — Eqs. 41–43). Substituting Ψ = K⁻¹Θ
+//! (computed here as the solution of K Ψ = Θ, Eq. 44) turns those
+//! identities into the scatter-space reductions
+//!
+//!   Ψᵀ S_b Ψ = I,   Ψᵀ S_w Ψ = 0,   Ψᵀ S_t Ψ = I   (Eqs. 45–47)
+//!
+//! — exactly the simultaneous diagonalization KDA's eigenproblem seeks,
+//! with eigenvalue 1 in every retained direction (the discriminant
+//! criterion is saturated; the `simultaneous_reduction_holds` test checks
+//! all three identities numerically). When K is ill-conditioned, K + εI
+//! regularizes the solve (Sec. 4.3) at O(ε) perturbation of the
+//! projections.
+//!
 //! This is the *native* engine (pure Rust, used by the baselines' timing
 //! comparison and as a cross-check); the *accelerated* engine that routes
 //! the Gram+Cholesky hot spots through the Pallas/PJRT artifacts lives in
-//! `crate::runtime::engine`.
+//! `crate::runtime::engine`; the large-N approximations live in
+//! `da::akda_approx` (in-memory, O(N m²)) and `da::akda_stream`
+//! (out-of-core, peak memory independent of N).
 
 use anyhow::Result;
 

@@ -43,6 +43,28 @@ pub struct AkdaApprox {
 }
 
 impl AkdaApprox {
+    /// Nyström-featured AKDA with an m-landmark budget (landmarks picked
+    /// by k-means on the training rows; see `approx::NystromMap`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use akda::da::akda_approx::AkdaApprox;
+    /// use akda::da::{DrMethod, Projection};
+    /// use akda::kernels::Kernel;
+    /// use akda::linalg::Mat;
+    /// use akda::util::rng::Rng;
+    ///
+    /// // two noisy clusters, labels 0/1
+    /// let mut rng = Rng::new(7);
+    /// let x = Mat::from_fn(30, 3, |r, _| (r % 2) as f64 * 4.0 + rng.normal());
+    /// let labels: Vec<usize> = (0..30).map(|i| i % 2).collect();
+    ///
+    /// let akda = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.3 }, 8);
+    /// let proj = akda.fit(&x, &labels, 2).unwrap();
+    /// assert_eq!(proj.dim(), 1); // C - 1 discriminant directions
+    /// assert!(proj.project(&x).is_finite());
+    /// ```
     pub fn nystrom(kernel: Kernel, m: usize) -> Self {
         AkdaApprox {
             kernel,
@@ -54,6 +76,26 @@ impl AkdaApprox {
         }
     }
 
+    /// Random-Fourier-featured AKDA with an m-feature budget (RBF kernel
+    /// only; the map is data-independent, see `approx::RffMap`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use akda::da::akda_approx::AkdaApprox;
+    /// use akda::da::{DrMethod, Projection};
+    /// use akda::kernels::Kernel;
+    /// use akda::linalg::Mat;
+    /// use akda::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(3);
+    /// let x = Mat::from_fn(24, 4, |r, _| (r % 2) as f64 * 3.0 + rng.normal());
+    /// let labels: Vec<usize> = (0..24).map(|i| i % 2).collect();
+    ///
+    /// let akda = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 64);
+    /// let proj = akda.fit(&x, &labels, 2).unwrap();
+    /// assert_eq!(proj.dim(), 1);
+    /// ```
     pub fn rff(kernel: Kernel, m: usize) -> Self {
         AkdaApprox { kind: ApproxKind::Rff, ..AkdaApprox::nystrom(kernel, m) }
     }
@@ -97,7 +139,32 @@ pub struct PreparedFeatures {
 }
 
 impl PreparedFeatures {
-    /// Solve for one labelling reusing the cached factorization.
+    /// Solve for one labelling reusing the cached factorization: only the
+    /// RHS ΦᵀΘ and two m×m triangular solves per call.
+    ///
+    /// # Examples
+    ///
+    /// One prepared state, several one-vs-rest fits:
+    ///
+    /// ```
+    /// use akda::da::akda_approx::AkdaApprox;
+    /// use akda::kernels::Kernel;
+    /// use akda::linalg::Mat;
+    /// use akda::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(11);
+    /// let x = Mat::from_fn(30, 3, |r, _| (r % 3) as f64 * 3.0 + rng.normal());
+    /// let labels: Vec<usize> = (0..30).map(|i| i % 3).collect();
+    ///
+    /// let akda = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.3 }, 10);
+    /// let prep = akda.prepare(&x).unwrap(); // map + Φ + Cholesky, once
+    /// for cls in 0..3 {
+    ///     let y_bin: Vec<usize> = labels.iter().map(|&l| usize::from(l != cls)).collect();
+    ///     let proj = prep.fit(&y_bin, 2).unwrap(); // RHS + triangular solves only
+    ///     assert_eq!(proj.w.rows(), prep.map.dim());
+    ///     assert_eq!(proj.w.cols(), 1);
+    /// }
+    /// ```
     pub fn fit(&self, labels: &[usize], n_classes: usize) -> Result<ApproxProjection> {
         let theta = if n_classes == 2 {
             core::theta_binary(labels)

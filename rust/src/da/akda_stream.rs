@@ -1,0 +1,541 @@
+//! Streaming (out-of-core) approximate AKDA: the tiled Φ pipeline.
+//!
+//! The in-memory approximate path (`da::akda_approx`) materializes the
+//! full N×m feature matrix Φ before solving (ΦᵀΦ + εI) W = ΦᵀΘ — peak
+//! memory O(N·m), which caps N at what fits in RAM. But the solve only
+//! ever consumes two small aggregates of Φ:
+//!
+//! * the m×m Gram accumulator  G = ΦᵀΦ = Σ_blocks Φ_bᵀ Φ_b, and
+//! * the m×C class sums        S = ΦᵀR (column j = Σ over class-j rows
+//!   of φ(x)),
+//!
+//! both of which accumulate tile by tile. Since every Θ of the AKDA
+//! family is class-piecewise-constant — row n of Θ is
+//! Ξ row `label(n)` scaled by 1/sqrt(N of that class) (Eq. 40), or the
+//! analytic binary pair of Eq. 50 — the right-hand side is a C-term
+//! recombination ΦᵀΘ = S N^{−1/2} Ξ of the class sums. One pass over the
+//! stream therefore yields the label-independent state for *all* C
+//! one-vs-rest solves at peak memory O(B·m + m² + m·C) for tile height B,
+//! independent of N.
+//!
+//! Numerics: `linalg::accumulate_tn` performs the identical
+//! floating-point operations in the identical order as the in-memory
+//! `matmul_tn`, so G — and hence its Cholesky factor — is bit-for-bit
+//! independent of the tile size; only the ΦᵀΘ recombination differs from
+//! the dense path, by one reassociation (≲1e-12 relative). The
+//! `streaming_*` tests pin both properties.
+//!
+//! Map fitting without X in RAM: RFF is data-independent (needs only F);
+//! Nyström fits its landmarks on a bounded [`reservoir_sample`] of the
+//! stream.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::akda_approx::{AkdaApprox, ApproxProjection};
+use super::{core, Projection};
+use crate::approx::{ApproxKind, FeatureMap, NystromMap, RffMap};
+use crate::data::stream::{reservoir_sample, BlockSource};
+use crate::linalg::{accumulate_tn, chol, Mat};
+
+/// Default reservoir budget for streaming Nyström landmark fitting (rows
+/// kept resident while sampling; the actual cap is the max of this and
+/// 4·m so the k-means always sees a healthy multiple of the landmarks).
+pub const DEFAULT_SAMPLE_CAP: usize = 2048;
+
+/// Upper bound on accepted class labels while streaming. The accumulator
+/// grows its m-vector class sums to max-label+1, so without a cap one
+/// malformed label in an untrusted CSV (e.g. `999999999,...`) would
+/// trigger a multi-gigabyte allocation before the end-of-stream
+/// every-class-nonempty check could reject it.
+pub const MAX_STREAM_CLASSES: usize = 65_536;
+
+/// Accumulation-pass bookkeeping: what flowed through and what stayed
+/// resident — the numbers the eval tables report as peak resident tiles.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    /// Total rows streamed (N).
+    pub rows: usize,
+    /// Tiles processed.
+    pub blocks: usize,
+    /// Largest tile height B seen.
+    pub peak_block_rows: usize,
+    /// Feature dimensionality m of the map.
+    pub m: usize,
+    /// Distinct classes observed.
+    pub n_classes: usize,
+    /// Input feature dimensionality F of the stream.
+    pub n_features: usize,
+    /// Residency of the map-fitting phase (Nyström reservoir sample of
+    /// the raw stream; 0 for data-independent maps like RFF or when the
+    /// map was fitted elsewhere and only shared in).
+    pub map_fit_resident_f64: usize,
+}
+
+impl StreamStats {
+    /// Peak resident f64 count across the streaming fit: the larger of
+    /// the map-fitting phase (reservoir sample) and the accumulation
+    /// phase — one raw B×F input tile + its B×m feature tile + the m×m
+    /// Gram + the m×C class sums.
+    pub fn peak_resident_f64(&self) -> usize {
+        let accumulation = self.peak_block_rows * (self.n_features + self.m)
+            + self.m * self.m
+            + self.m * self.n_classes;
+        accumulation.max(self.map_fit_resident_f64)
+    }
+
+    /// What the in-memory path keeps resident instead: the full N×F input
+    /// plus the full N×m Φ plus the m×m Gram.
+    pub fn dense_resident_f64(&self) -> usize {
+        self.rows * (self.n_features + self.m) + self.m * self.m
+    }
+}
+
+/// Tile-by-tile accumulator for G = ΦᵀΦ and the per-class feature sums.
+/// Feed it φ-transformed tiles in row order; results are independent of
+/// where the tile boundaries fall.
+pub struct TiledAccumulator {
+    /// m×m Gram accumulator G = ΦᵀΦ.
+    g: Mat,
+    /// Per-class m-vector sums (grows as new labels appear).
+    class_sums: Vec<Vec<f64>>,
+    counts: Vec<usize>,
+    stats: StreamStats,
+}
+
+impl TiledAccumulator {
+    pub fn new(m: usize) -> Self {
+        TiledAccumulator {
+            g: Mat::zeros(m, m),
+            class_sums: Vec::new(),
+            counts: Vec::new(),
+            stats: StreamStats { m, ..StreamStats::default() },
+        }
+    }
+
+    /// Absorb one φ-tile (rows of Φ) with its labels. Labels are bounded
+    /// by [`MAX_STREAM_CLASSES`] so a corrupt row cannot force an
+    /// unbounded class-sum allocation.
+    pub fn absorb(&mut self, phi: &Mat, labels: &[usize]) -> Result<()> {
+        assert_eq!(phi.rows(), labels.len(), "tile rows/labels mismatch");
+        assert_eq!(phi.cols(), self.g.rows(), "tile width must be m");
+        accumulate_tn(&mut self.g, phi, phi);
+        for (r, &l) in labels.iter().enumerate() {
+            if l >= self.counts.len() {
+                anyhow::ensure!(
+                    l < MAX_STREAM_CLASSES,
+                    "label {l} exceeds the streaming class cap {MAX_STREAM_CLASSES} \
+                     (corrupt row?)"
+                );
+                self.counts.resize(l + 1, 0);
+                self.class_sums.resize(l + 1, vec![0.0; phi.cols()]);
+            }
+            self.counts[l] += 1;
+            for (s, &v) in self.class_sums[l].iter_mut().zip(phi.row(r)) {
+                *s += v;
+            }
+        }
+        self.stats.rows += phi.rows();
+        self.stats.blocks += 1;
+        self.stats.peak_block_rows = self.stats.peak_block_rows.max(phi.rows());
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+}
+
+impl AkdaApprox {
+    /// Fit the configured feature map without materializing the dataset:
+    /// RFF directly from the stream's feature dimensionality, Nyström from
+    /// a bounded reservoir sample of the stream.
+    pub fn build_map_stream(&self, source: &mut dyn BlockSource) -> Result<Box<dyn FeatureMap>> {
+        Ok(match self.kind {
+            ApproxKind::Nystrom => {
+                let cap = DEFAULT_SAMPLE_CAP.max(4 * self.m);
+                let sample = reservoir_sample(source, cap, self.seed)?;
+                Box::new(NystromMap::fit(&sample, self.kernel, self.m, self.seed)?)
+            }
+            ApproxKind::Rff => {
+                Box::new(RffMap::fit(source.n_features(), self.kernel, self.m, self.seed)?)
+            }
+        })
+    }
+
+    /// Streaming counterpart of [`AkdaApprox::prepare`]: build the feature
+    /// map out of core, then accumulate G and the class sums tile by tile.
+    /// Peak memory is O(B·m + m² + m·C) — independent of the stream
+    /// length N.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use akda::da::akda_approx::AkdaApprox;
+    /// use akda::data::stream::MemBlockSource;
+    /// use akda::kernels::Kernel;
+    /// use akda::linalg::Mat;
+    /// use akda::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(1);
+    /// let x = Mat::from_fn(24, 4, |_, _| rng.normal());
+    /// let labels: Vec<usize> = (0..24).map(|i| i % 2).collect();
+    /// // stream the 24 rows through the tiled pipeline, 5 rows at a time
+    /// let mut source = MemBlockSource::new(&x, &labels, 5);
+    /// let prep = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 32)
+    ///     .prepare_stream(&mut source)
+    ///     .unwrap();
+    /// let proj = prep.fit_class(0).unwrap(); // class 0 vs rest
+    /// assert_eq!(proj.w.cols(), 1);
+    /// assert_eq!(prep.stats.peak_block_rows, 5);
+    /// assert_eq!(prep.stats.rows, 24);
+    /// ```
+    pub fn prepare_stream(&self, source: &mut dyn BlockSource) -> Result<PreparedStream> {
+        let map: Arc<dyn FeatureMap> = Arc::from(self.build_map_stream(source)?);
+        let mut prep = PreparedStream::accumulate(self, map, source)?;
+        if self.kind == ApproxKind::Nystrom {
+            // charge the landmark-fitting reservoir (a second transient
+            // peak) so the reported residency is honest end to end
+            let cap = DEFAULT_SAMPLE_CAP.max(4 * self.m);
+            prep.stats.map_fit_resident_f64 =
+                cap.min(prep.stats.rows) * prep.stats.n_features;
+        }
+        Ok(prep)
+    }
+}
+
+/// Label-independent streaming training state: the feature map, the
+/// Cholesky factor of G + εI, and the class sums S — everything needed to
+/// solve any one-vs-rest (or the multiclass) problem without revisiting
+/// the data. The streaming mirror of
+/// `da::akda_approx::PreparedFeatures`, minus the resident N×m Φ.
+pub struct PreparedStream {
+    pub map: Arc<dyn FeatureMap>,
+    /// Lower Cholesky factor of ΦᵀΦ + εI.
+    chol_l: Mat,
+    /// m×C class sums S = ΦᵀR.
+    class_sums: Mat,
+    /// Per-class row counts N_i.
+    counts: Vec<usize>,
+    pub stats: StreamStats,
+}
+
+impl PreparedStream {
+    /// Accumulate G and S over `source` with an already-fitted map — the
+    /// map-sharing entry point the equivalence tests and the coordinator
+    /// use (fit the map once, stream with it).
+    pub fn accumulate(
+        cfg: &AkdaApprox,
+        map: Arc<dyn FeatureMap>,
+        source: &mut dyn BlockSource,
+    ) -> Result<PreparedStream> {
+        let mut acc = TiledAccumulator::new(map.dim());
+        acc.stats.n_features = source.n_features();
+        source.reset()?;
+        while let Some(block) = source.next_block()? {
+            let phi = map.transform(&block.x);
+            acc.absorb(&phi, &block.labels)?;
+        }
+        let TiledAccumulator { mut g, class_sums, counts, mut stats } = acc;
+        anyhow::ensure!(stats.rows > 0, "cannot train on an empty stream");
+        anyhow::ensure!(
+            counts.len() >= 2 && counts.iter().all(|&c| c > 0),
+            "stream must contain at least two classes, every label in 0..C"
+        );
+        g.add_ridge(cfg.eps);
+        let chol_l = chol::cholesky(&g, cfg.block)
+            .map_err(|e| anyhow::anyhow!("streaming AKDA Cholesky failed: {e}"))?;
+        let (m, c) = (stats.m, counts.len());
+        stats.n_classes = c;
+        let class_sums = Mat::from_fn(m, c, |i, j| class_sums[j][i]);
+        Ok(PreparedStream { map, chol_l, class_sums, counts, stats })
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Two m×m triangular solves against the cached factor.
+    fn solve(&self, b: &Mat) -> Mat {
+        let y = chol::solve_lower(&self.chol_l, b);
+        chol::solve_upper_from_lower(&self.chol_l, &y)
+    }
+
+    /// Block-wise `solve_w` for the one-vs-rest problem `cls` vs rest:
+    /// recombine the class sums into ΦᵀΘ with the analytic binary θ
+    /// coefficients (Eq. 50, target class plays class 0 / the '+' branch),
+    /// then solve (ΦᵀΦ + εI) W = ΦᵀΘ. No data access — O(m·C + m²).
+    pub fn solve_w_class(&self, cls: usize) -> Result<Mat> {
+        anyhow::ensure!(cls < self.counts.len(), "class {cls} out of range");
+        let n_c = self.counts[cls] as f64;
+        let n: f64 = self.counts.iter().map(|&c| c as f64).sum();
+        let n_rest = n - n_c;
+        // θ entries: sqrt(N₂/(N₁N)) on the target rows, −sqrt(N₁/(N₂N))
+        // on the rest — identical to `core::theta_binary` with the target
+        // class relabelled 0.
+        let pos = (n_rest / (n_c * n)).sqrt();
+        let neg = -(n_c / (n_rest * n)).sqrt();
+        let m = self.class_sums.rows();
+        let b = Mat::from_fn(m, 1, |i, _| {
+            let mut rest = 0.0;
+            for j in 0..self.counts.len() {
+                if j != cls {
+                    rest += self.class_sums[(i, j)];
+                }
+            }
+            pos * self.class_sums[(i, cls)] + neg * rest
+        });
+        Ok(self.solve(&b))
+    }
+
+    /// Block-wise `solve_w` for the full multiclass problem: ΦᵀΘ =
+    /// S N_C^{−1/2} Ξ with Ξ the NZEP of the C×C core matrix (Eq. 40),
+    /// then one solve for all C−1 discriminant directions.
+    pub fn solve_w_multiclass(&self) -> Result<Mat> {
+        let c = self.counts.len();
+        if c == 2 {
+            // analytic binary fast path — same sign branch as the dense
+            // `PreparedFeatures::fit` (Sec. 4.4)
+            return self.solve_w_class(0);
+        }
+        let xi = core::core_eigenvectors(&self.counts);
+        let scaled = Mat::from_fn(c, c - 1, |i, k| xi[(i, k)] / (self.counts[i] as f64).sqrt());
+        let b = self.class_sums.matmul(&scaled);
+        Ok(self.solve(&b))
+    }
+
+    /// Fitted one-vs-rest projection (`cls` scores positive).
+    pub fn fit_class(&self, cls: usize) -> Result<ApproxProjection> {
+        Ok(ApproxProjection { map: self.map.clone(), w: self.solve_w_class(cls)? })
+    }
+
+    /// Fitted multiclass projection (C−1 discriminant directions).
+    pub fn fit_multiclass(&self) -> Result<ApproxProjection> {
+        Ok(ApproxProjection { map: self.map.clone(), w: self.solve_w_multiclass()? })
+    }
+}
+
+/// Project rows through z = φ(x) W one tile at a time: peak extra memory
+/// is one B×m feature tile instead of the full N×m Φ. Bit-for-bit equal
+/// to `map.transform(x).matmul(w)` — both are row-independent.
+pub fn project_blocked(map: &dyn FeatureMap, w: &Mat, x: &Mat, block_rows: usize) -> Mat {
+    let block_rows = block_rows.max(1);
+    let mut z = Mat::zeros(x.rows(), w.cols());
+    let mut r0 = 0;
+    while r0 < x.rows() {
+        let nr = block_rows.min(x.rows() - r0);
+        let tile = map.transform(&x.submatrix(r0, 0, nr, x.cols())).matmul(w);
+        z.set_submatrix(r0, 0, &tile);
+        r0 += nr;
+    }
+    z
+}
+
+/// Fitted streaming projection: same numbers as
+/// `da::akda_approx::ApproxProjection`, but projects tile by tile so
+/// serving/eval never materializes an N×m feature matrix either.
+pub struct BlockedProjection {
+    pub map: Arc<dyn FeatureMap>,
+    pub w: Mat,
+    pub block_rows: usize,
+}
+
+impl Projection for BlockedProjection {
+    fn project(&self, x_test: &Mat) -> Mat {
+        project_blocked(self.map.as_ref(), &self.w, x_test, self.block_rows)
+    }
+
+    fn dim(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::{CsvBlockSource, MemBlockSource};
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+    use crate::kernels::Kernel;
+
+    fn toy(n_per: usize, c: usize, seed: u64) -> (Mat, Vec<usize>) {
+        gaussian_classes(&GaussianSpec {
+            n_classes: c,
+            n_per_class: vec![n_per; c],
+            dim: 6,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed,
+        })
+    }
+
+    /// Streaming with a shared map must reproduce the dense solve to
+    /// 1e-10, and be bit-for-bit identical across block sizes {1, 7, N}.
+    #[test]
+    fn streaming_matches_dense_solve_across_block_sizes() {
+        let (x, labels) = toy(20, 2, 1);
+        let n = x.rows();
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.4 }, 12);
+        let prep_dense = cfg.prepare(&x).unwrap();
+        let y_bin: Vec<usize> = labels.iter().map(|&l| usize::from(l != 0)).collect();
+        let w_dense = prep_dense.fit(&y_bin, 2).unwrap().w;
+
+        let mut ws = Vec::new();
+        for block in [1usize, 7, n] {
+            let mut src = MemBlockSource::new(&x, &labels, block);
+            let ps = PreparedStream::accumulate(&cfg, prep_dense.map.clone(), &mut src).unwrap();
+            assert_eq!(ps.stats.rows, n);
+            assert!(ps.stats.peak_block_rows <= block);
+            let w = ps.solve_w_class(0).unwrap();
+            let gap = w.sub(&w_dense).max_abs();
+            assert!(gap < 1e-10, "block={block}: dense gap {gap}");
+            ws.push(w);
+        }
+        for w in &ws[1..] {
+            assert!(
+                w.sub(&ws[0]).max_abs() == 0.0,
+                "tiled solve must be bit-for-bit block-size invariant"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_multiclass_matches_dense_solve() {
+        let (x, labels) = toy(15, 3, 2);
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.3 }, 14);
+        let prep_dense = cfg.prepare(&x).unwrap();
+        let w_dense = prep_dense.fit(&labels, 3).unwrap().w;
+        let mut src = MemBlockSource::new(&x, &labels, 7);
+        let ps = PreparedStream::accumulate(&cfg, prep_dense.map.clone(), &mut src).unwrap();
+        assert_eq!(ps.n_classes(), 3);
+        let w = ps.solve_w_multiclass().unwrap();
+        assert_eq!(w.cols(), 2);
+        let gap = w.sub(&w_dense).max_abs();
+        assert!(gap < 1e-10, "multiclass dense gap {gap}");
+    }
+
+    /// RFF is data-independent, so the fully-streaming path (map fitted
+    /// from the stream) must match the dense in-memory fit end to end.
+    #[test]
+    fn rff_streaming_end_to_end_matches_dense_fit() {
+        use crate::da::DrMethod;
+        let (x, labels) = toy(25, 2, 3);
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 64);
+        let y_bin: Vec<usize> = labels.to_vec();
+        let dense = cfg.fit(&x, &y_bin, 2).unwrap();
+        let mut src = MemBlockSource::new(&x, &labels, 9);
+        let ps = cfg.prepare_stream(&mut src).unwrap();
+        let proj = ps.fit_class(0).unwrap();
+        let (xt, _) = toy(10, 2, 8);
+        let gap = dense.project(&xt).sub(&proj.project(&xt)).max_abs();
+        assert!(gap < 1e-10, "end-to-end RFF gap {gap}");
+    }
+
+    /// Nyström with reservoir-fitted landmarks (a genuine subsample) still
+    /// produces a usable discriminant.
+    #[test]
+    fn nystrom_reservoir_streaming_separates_classes() {
+        let (x, labels) = toy(40, 2, 4);
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, 12);
+        let mut src = MemBlockSource::new(&x, &labels, 16);
+        let ps = cfg.prepare_stream(&mut src).unwrap();
+        let proj = ps.fit_class(0).unwrap();
+        let z = proj.project(&x);
+        let z0: Vec<f64> =
+            (0..z.rows()).filter(|&i| labels[i] == 0).map(|i| z[(i, 0)]).collect();
+        let z1: Vec<f64> =
+            (0..z.rows()).filter(|&i| labels[i] == 1).map(|i| z[(i, 0)]).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (m0, m1) = (mean(&z0), mean(&z1));
+        let sd = |v: &[f64], m: f64| {
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        let gap = (m0 - m1).abs() / (sd(&z0, m0) + sd(&z1, m1)).max(1e-12);
+        assert!(gap > 2.0, "class separation too weak: {gap}");
+    }
+
+    #[test]
+    fn project_blocked_is_bitwise_equal_to_dense_projection() {
+        let (x, labels) = toy(18, 2, 5);
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.6 }, 10);
+        let prep = cfg.prepare(&x).unwrap();
+        let y_bin: Vec<usize> = labels.to_vec();
+        let proj = prep.fit(&y_bin, 2).unwrap();
+        let dense_z = proj.map.transform(&x).matmul(&proj.w);
+        for block in [1usize, 5, 36] {
+            let z = project_blocked(proj.map.as_ref(), &proj.w, &x, block);
+            assert!(z.sub(&dense_z).max_abs() == 0.0, "block={block}");
+        }
+        let blocked = BlockedProjection { map: proj.map.clone(), w: proj.w.clone(), block_rows: 4 };
+        assert_eq!(blocked.dim(), proj.w.cols());
+        assert!(blocked.project(&x).sub(&dense_z).max_abs() == 0.0);
+    }
+
+    /// Training from a CSV stream must equal training from memory — the
+    /// CSV writer emits shortest-round-trip floats, so even bit-for-bit.
+    #[test]
+    fn csv_stream_training_matches_mem_stream_training() {
+        let (x, labels) = toy(16, 2, 6);
+        let dir = std::env::temp_dir().join("akda_stream_train_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("train.csv");
+        crate::data::csv::save_labeled(&path, &x, &labels).unwrap();
+
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.4 }, 32);
+        let mut mem = MemBlockSource::new(&x, &labels, 5);
+        let w_mem = cfg.prepare_stream(&mut mem).unwrap().solve_w_class(0).unwrap();
+        let mut csv = CsvBlockSource::open(&path, 5).unwrap();
+        let w_csv = cfg.prepare_stream(&mut csv).unwrap().solve_w_class(0).unwrap();
+        assert!(w_csv.sub(&w_mem).max_abs() == 0.0, "CSV stream must match memory");
+    }
+
+    #[test]
+    fn stats_report_tile_and_dense_residency() {
+        let (x, labels) = toy(30, 2, 7);
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 16);
+        let mut src = MemBlockSource::new(&x, &labels, 10);
+        let ps = cfg.prepare_stream(&mut src).unwrap();
+        let (m, f) = (ps.map.dim(), x.cols());
+        assert_eq!(ps.stats.m, m);
+        assert_eq!(ps.stats.n_features, f);
+        assert_eq!(ps.stats.rows, 60);
+        assert_eq!(ps.stats.blocks, 6);
+        // RFF needs no data to fit, so the accumulation tile is the peak
+        assert_eq!(ps.stats.map_fit_resident_f64, 0);
+        assert_eq!(
+            ps.stats.peak_resident_f64(),
+            10 * (f + m) + m * m + 2 * m
+        );
+        assert_eq!(ps.stats.dense_resident_f64(), 60 * (f + m) + m * m);
+        assert!(ps.stats.peak_resident_f64() < ps.stats.dense_resident_f64());
+    }
+
+    #[test]
+    fn nystrom_stats_charge_the_reservoir_phase() {
+        let (x, labels) = toy(30, 2, 8);
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, 8);
+        let mut src = MemBlockSource::new(&x, &labels, 10);
+        let ps = cfg.prepare_stream(&mut src).unwrap();
+        // cap (2048) exceeds N, so the whole 60-row stream was sampled
+        assert_eq!(ps.stats.map_fit_resident_f64, 60 * x.cols());
+        assert!(ps.stats.peak_resident_f64() >= ps.stats.map_fit_resident_f64);
+    }
+
+    #[test]
+    fn absorb_rejects_runaway_labels() {
+        let mut acc = TiledAccumulator::new(3);
+        let phi = Mat::from_fn(2, 3, |r, c| (r + c) as f64);
+        assert!(acc.absorb(&phi, &[0, 1]).is_ok());
+        assert!(acc.absorb(&phi, &[0, MAX_STREAM_CLASSES]).is_err());
+    }
+
+    #[test]
+    fn rejects_single_class_and_empty_streams() {
+        let (x, _) = toy(10, 2, 9);
+        let ones = vec![1usize; x.rows()]; // label 0 never appears
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 16);
+        let mut src = MemBlockSource::new(&x, &ones, 4);
+        assert!(cfg.prepare_stream(&mut src).is_err());
+    }
+}

@@ -2,6 +2,41 @@
 //! matrices, their tiny eigenproblems, and the target matrices Θ / V that
 //! the big Cholesky solve consumes.
 //!
+//! The chain of reductions that makes AKDA cheap:
+//!
+//! 1. **Central factors.** The kernel scatter matrices factor as
+//!    S_b = K C_b K, S_w = K C_w K, S_t = K C_t K, where the N×N central
+//!    factors C_b, C_w, C_t (Eq. 29) depend on the *labels only*. They
+//!    are idempotent projectors with C_t = C_b + C_w and C_b C_w = 0
+//!    (Sec. 4.2) — so the generalized eigenproblem S_b ψ = λ S_t ψ can be
+//!    attacked through the label structure instead of the data.
+//!
+//! 2. **Core matrix.** C_b itself compresses to the C×C *core matrix*
+//!    O_b = I − ṅṅᵀ/N (Eq. 30, ṅ = per-class sqrt-counts,
+//!    `core_matrix`): C_b = R N^{−1/2} O_b N^{−1/2} Rᵀ with R the N×C
+//!    one-hot class indicator. O_b is an idempotent projector of rank
+//!    C−1 whose null vector is ṅ (Eq. 32).
+//!
+//! 3. **NZEP.** The nonzero-eigenpair eigenvectors Ξ of O_b — the C−1
+//!    directions with eigenvalue exactly 1 (`core_eigenvectors`, Eq. 39)
+//!    — lift to the NZEP of C_b as Θ = R N^{−1/2} Ξ (Eq. 40, `theta`).
+//!    Row n of Θ is just row `label(n)` of Ξ scaled by 1/sqrt(N of that
+//!    class): O(N·C) work, no N×N matrix is ever formed, and Θ is
+//!    class-piecewise-constant (the property the out-of-core streaming
+//!    path exploits to rebuild ΦᵀΘ from m×C class sums).
+//!
+//! 4. **Simultaneous reduction.** Θ satisfies Θᵀ C_b Θ = I,
+//!    Θᵀ C_w Θ = 0, Θᵀ C_t Θ = I (Eqs. 41–43) — so Ψ with K Ψ = Θ
+//!    simultaneously diagonalizes all three scatter matrices, and the
+//!    entire generalized eigenproblem collapses to one SPD linear solve
+//!    (Cholesky; see `da::akda`). For C = 2 even the C×C EVD disappears:
+//!    θ is analytic (Eqs. 49–50, `theta_binary`).
+//!
+//! The subclass mirror (AKSDA, Sec. 5) swaps O_b for the H×H subclass
+//! core matrix O_bs (`core_matrix_subclass`) whose NZEP (U, Ω) has
+//! eigenvalues in (0, 1] rather than exactly 1; V = R_H N_H^{−1/2} U
+//! (`v_matrix`, Eq. 66) plays Θ's role with Vᵀ C_bs V = Ω (Eqs. 67–69).
+//!
 //! Everything here is O(C³) / O(H³) — the whole point of AKDA is that the
 //! only eigenproblem left is this small one (Alg. 1 step 1, Alg. 2 step 1).
 
@@ -109,9 +144,8 @@ impl SubclassPartition {
 }
 
 /// Subclass core matrix O_bs (element-wise form, Sec. 5.1):
-///   [O_bs]_aa = (N − N_class(a)) / N
-///   [O_bs]_ab = 0 within the same class
-///   [O_bs]_ab = −sqrt(N_a N_b) / N across classes.
+/// `(O_bs)_aa = (N − N_class(a)) / N`; `(O_bs)_ab = 0` within the same
+/// class; `(O_bs)_ab = −sqrt(N_a N_b) / N` across classes.
 pub fn core_matrix_subclass(part: &SubclassPartition) -> Mat {
     let counts = part.counts();
     let h = counts.len();

@@ -2,9 +2,24 @@
 //! baseline it is evaluated against (Sec. 6.3: PCA, LDA, KDA, GDA, SRKDA,
 //! KSDA, GSDA), behind one `DrMethod` trait so the evaluation harness and
 //! the coordinator treat them uniformly.
+//!
+//! Module map, in pipeline order:
+//!
+//! * `core` — the label-side factorization (core matrices, NZEPs, Θ / V
+//!   targets) shared by every AKDA-family trainer;
+//! * `akda` / `aksda` — the paper's exact engines (Gram + Cholesky,
+//!   Algorithms 1–2), `incremental` the bordered-Cholesky online variant;
+//! * `akda_approx` — the same solve on an explicit m-dimensional feature
+//!   map (Nyström / RFF, m ≪ N): O(N m²) training, full N×m Φ resident;
+//! * `akda_stream` — the out-of-core tiling of `akda_approx`: identical
+//!   math, peak memory O(B·m + m²) for tile height B, any dataset size;
+//! * `kda`, `gda`, `srkda`, `ksda`, `lda`, `pca` — the baseline zoo,
+//!   paying their conventional costs for the timing comparisons;
+//! * `equivalence` — cross-method identity checks (AKDA vs KDA etc.).
 
 pub mod akda;
 pub mod akda_approx;
+pub mod akda_stream;
 pub mod aksda;
 pub mod core;
 pub mod equivalence;

@@ -8,28 +8,42 @@ use anyhow::{Context, Result};
 
 use crate::linalg::Mat;
 
+/// Parse one `label,f1,f2,...` line; `Ok(None)` for blanks and `#`
+/// comments. Shared with the out-of-core reader (`data::stream`) so both
+/// paths accept the exact same format. `lineno` is 1-based (diagnostics).
+pub(crate) fn parse_labeled_line(line: &str, lineno: usize) -> Result<Option<(usize, Vec<f64>)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split(',');
+    let label: usize = parts
+        .next()
+        .context("missing label")?
+        .trim()
+        .parse()
+        .with_context(|| format!("bad label on line {lineno}"))?;
+    let feats: Vec<f64> = parts
+        .map(|p| p.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad feature on line {lineno}"))?;
+    Ok(Some((label, feats)))
+}
+
 /// Load a labelled feature matrix: each line `label,f1,f2,...`.
+///
+/// Materializes the whole file; for N ≫ RAM datasets use
+/// `data::stream::CsvBlockSource`, which reads the same format tile by
+/// tile.
 pub fn load_labeled(path: &Path) -> Result<(Mat, Vec<usize>)> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut labels = Vec::new();
     for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
         let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some((label, feats)) = parse_labeled_line(&line, lineno + 1)? else {
             continue;
-        }
-        let mut parts = line.split(',');
-        let label: usize = parts
-            .next()
-            .context("missing label")?
-            .trim()
-            .parse()
-            .with_context(|| format!("bad label on line {}", lineno + 1))?;
-        let feats: Vec<f64> = parts
-            .map(|p| p.trim().parse::<f64>())
-            .collect::<std::result::Result<_, _>>()
-            .with_context(|| format!("bad feature on line {}", lineno + 1))?;
+        };
         if let Some(first) = rows.first() {
             anyhow::ensure!(
                 feats.len() == first.len(),

@@ -1,9 +1,12 @@
 //! Dataset substrate: synthetic generators (the paper's datasets are
-//! unavailable — see DESIGN.md §3), the Table-1 registry, and CSV I/O for
-//! bringing your own features.
+//! unavailable — see DESIGN.md §3), the Table-1 registry, CSV I/O for
+//! bringing your own features, and the out-of-core block-streaming layer
+//! (`stream`) that feeds N ≫ RAM datasets through the tiled AKDA path
+//! one row-tile at a time.
 
 pub mod csv;
 pub mod registry;
+pub mod stream;
 pub mod synthetic;
 
 pub use registry::{by_name, cross_dataset_collection, med_datasets, Condition, DatasetSpec, Split};

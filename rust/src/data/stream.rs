@@ -1,0 +1,347 @@
+//! Out-of-core block streaming: feed row-tiles of a labelled dataset to
+//! consumers that never need the whole N×F matrix resident.
+//!
+//! The streaming AKDA path (`da::akda_stream`) only ever touches one tile
+//! of B rows at a time — it accumulates the m×m Gram ΦᵀΦ and the m×C
+//! class sums ΦᵀR block by block — so a [`BlockSource`] is all it needs
+//! from the data layer:
+//!
+//! * [`MemBlockSource`] — chunked adapter over an in-memory `Mat` (the
+//!   coordinator's `Split`s), used to bound peak memory of the Φ pipeline
+//!   and to test streaming ≡ in-memory equivalence;
+//! * [`CsvBlockSource`] — reads the `data::csv` `label,f1,f2,...` format
+//!   tile by tile without ever loading the whole file, the genuine
+//!   N ≫ RAM path.
+//!
+//! Sources are rewindable ([`BlockSource::reset`]) because a streaming fit
+//! may traverse the data more than once: a reservoir-sampling pass to pick
+//! Nyström landmarks ([`reservoir_sample`]), then the accumulation pass.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::csv::parse_labeled_line;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Default tile height B for the streaming paths: large enough that the
+/// per-block transform amortizes, small enough that a B×m tile of f64
+/// features stays well under typical cache/RAM budgets.
+pub const DEFAULT_BLOCK_ROWS: usize = 1024;
+
+/// One tile of a labelled dataset: `x.rows() == labels.len()`.
+#[derive(Debug, Clone)]
+pub struct LabeledBlock {
+    pub x: Mat,
+    pub labels: Vec<usize>,
+}
+
+/// A rewindable supplier of row-tiles. Implementors yield the dataset in
+/// row order, each block at most the configured tile height; the streaming
+/// accumulator's results are independent of where the block boundaries
+/// fall (see `linalg::accumulate_tn`).
+pub trait BlockSource {
+    /// Feature dimensionality F — constant across blocks.
+    fn n_features(&self) -> usize;
+    /// Rewind to the first row so the stream can be traversed again.
+    fn reset(&mut self) -> Result<()>;
+    /// Next tile, or `None` once the stream is exhausted.
+    fn next_block(&mut self) -> Result<Option<LabeledBlock>>;
+}
+
+/// Chunked in-memory adapter: streams an already-resident matrix in tiles
+/// of `block_rows`, so downstream consumers exercise the exact same tiled
+/// code path as the out-of-core sources.
+pub struct MemBlockSource<'a> {
+    x: &'a Mat,
+    labels: &'a [usize],
+    block_rows: usize,
+    pos: usize,
+}
+
+impl<'a> MemBlockSource<'a> {
+    pub fn new(x: &'a Mat, labels: &'a [usize], block_rows: usize) -> Self {
+        assert_eq!(x.rows(), labels.len(), "rows/labels length mismatch");
+        assert!(block_rows >= 1, "block_rows must be >= 1");
+        MemBlockSource { x, labels, block_rows, pos: 0 }
+    }
+}
+
+impl BlockSource for MemBlockSource<'_> {
+    fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_block(&mut self) -> Result<Option<LabeledBlock>> {
+        if self.pos >= self.x.rows() {
+            return Ok(None);
+        }
+        let nr = self.block_rows.min(self.x.rows() - self.pos);
+        let block = LabeledBlock {
+            x: self.x.submatrix(self.pos, 0, nr, self.x.cols()),
+            labels: self.labels[self.pos..self.pos + nr].to_vec(),
+        };
+        self.pos += nr;
+        Ok(Some(block))
+    }
+}
+
+/// Streaming reader for the `data::csv::load_labeled` format
+/// (`label,f1,f2,...` lines, `#` comments and blanks skipped): holds one
+/// tile of at most `block_rows` parsed rows plus one line buffer — the
+/// file is never resident. `reset` reopens the file.
+pub struct CsvBlockSource {
+    path: PathBuf,
+    block_rows: usize,
+    n_features: usize,
+    reader: BufReader<File>,
+    lineno: usize,
+}
+
+impl CsvBlockSource {
+    /// Open `path`, peeking the first data line to learn F, then rewind.
+    pub fn open(path: &Path, block_rows: usize) -> Result<Self> {
+        anyhow::ensure!(block_rows >= 1, "block_rows must be >= 1");
+        let mut src = CsvBlockSource {
+            path: path.to_path_buf(),
+            block_rows,
+            n_features: 0,
+            reader: open_reader(path)?,
+            lineno: 0,
+        };
+        let first = src
+            .next_row()?
+            .with_context(|| format!("empty dataset {path:?}"))?;
+        src.n_features = first.1.len();
+        anyhow::ensure!(src.n_features > 0, "no features on first data line of {path:?}");
+        src.reset()?;
+        Ok(src)
+    }
+
+    /// Next parsed data row (skipping blanks/comments), or `None` at EOF.
+    fn next_row(&mut self) -> Result<Option<(usize, Vec<f64>)>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            self.lineno += 1;
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("read {:?} line {}", self.path, self.lineno))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            if let Some(row) = parse_labeled_line(&line, self.lineno)? {
+                return Ok(Some(row));
+            }
+        }
+    }
+}
+
+fn open_reader(path: &Path) -> Result<BufReader<File>> {
+    Ok(BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    ))
+}
+
+impl BlockSource for CsvBlockSource {
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader = open_reader(&self.path)?;
+        self.lineno = 0;
+        Ok(())
+    }
+
+    fn next_block(&mut self) -> Result<Option<LabeledBlock>> {
+        // cap the pre-allocation hint: an oversized block_rows must not
+        // abort on a small file — the Vec grows if the tile really is huge
+        let rows_hint = self.block_rows.min(64 * 1024);
+        let mut data = Vec::with_capacity(rows_hint * self.n_features);
+        let mut labels = Vec::with_capacity(rows_hint);
+        while labels.len() < self.block_rows {
+            let Some((label, feats)) = self.next_row()? else { break };
+            anyhow::ensure!(
+                feats.len() == self.n_features,
+                "inconsistent feature count on line {} of {:?} (got {}, want {})",
+                self.lineno,
+                self.path,
+                feats.len(),
+                self.n_features
+            );
+            labels.push(label);
+            data.extend(feats);
+        }
+        if labels.is_empty() {
+            return Ok(None);
+        }
+        let x = Mat::from_vec(labels.len(), self.n_features, data);
+        Ok(Some(LabeledBlock { x, labels }))
+    }
+}
+
+/// Uniform reservoir sample (Algorithm R) of up to `cap` rows from a
+/// stream — O(cap·F) memory however long the stream is. This is how the
+/// streaming Nyström path picks its landmark-fitting subset without
+/// materializing X.
+pub fn reservoir_sample(source: &mut dyn BlockSource, cap: usize, seed: u64) -> Result<Mat> {
+    anyhow::ensure!(cap >= 1, "reservoir cap must be >= 1");
+    let f = source.n_features();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut seen = 0usize;
+    let mut rng = Rng::new(seed);
+    source.reset()?;
+    while let Some(block) = source.next_block()? {
+        for r in 0..block.x.rows() {
+            seen += 1;
+            if rows.len() < cap {
+                rows.push(block.x.row(r).to_vec());
+            } else {
+                let j = rng.below(seen);
+                if j < cap {
+                    rows[j] = block.x.row(r).to_vec();
+                }
+            }
+        }
+    }
+    anyhow::ensure!(seen > 0, "cannot sample from an empty source");
+    let mut data = Vec::with_capacity(rows.len() * f);
+    let n = rows.len();
+    for row in rows {
+        data.extend(row);
+    }
+    Ok(Mat::from_vec(n, f, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csv::{load_labeled, save_labeled};
+    use crate::util::rng::Rng as TestRng;
+
+    fn toy(n: usize, f: usize, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = TestRng::new(seed);
+        let x = Mat::from_fn(n, f, |_, _| rng.normal());
+        let labels: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        (x, labels)
+    }
+
+    /// Drain a source and splice the tiles back together.
+    fn drain(source: &mut dyn BlockSource) -> (Mat, Vec<usize>, Vec<usize>) {
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut labels = Vec::new();
+        let mut block_sizes = Vec::new();
+        source.reset().unwrap();
+        while let Some(b) = source.next_block().unwrap() {
+            assert_eq!(b.x.rows(), b.labels.len());
+            block_sizes.push(b.x.rows());
+            for r in 0..b.x.rows() {
+                rows.push(b.x.row(r).to_vec());
+            }
+            labels.extend(b.labels);
+        }
+        let f = source.n_features();
+        let n = rows.len();
+        let mut data = Vec::with_capacity(n * f);
+        for row in rows {
+            data.extend(row);
+        }
+        (Mat::from_vec(n, f, data), labels, block_sizes)
+    }
+
+    #[test]
+    fn mem_source_tiles_cover_the_matrix() {
+        let (x, labels) = toy(23, 4, 1);
+        for block in [1usize, 7, 23, 100] {
+            let mut src = MemBlockSource::new(&x, &labels, block);
+            let (x2, l2, sizes) = drain(&mut src);
+            assert!(x2.sub(&x).max_abs() == 0.0, "block={block}");
+            assert_eq!(l2, labels);
+            assert!(sizes.iter().all(|&s| s <= block));
+            assert_eq!(sizes.iter().sum::<usize>(), 23);
+            // rewind works: second traversal yields the same tiles
+            let (x3, l3, _) = drain(&mut src);
+            assert!(x3.sub(&x).max_abs() == 0.0);
+            assert_eq!(l3, labels);
+        }
+    }
+
+    #[test]
+    fn csv_source_round_trips_against_load_labeled() {
+        let dir = std::env::temp_dir().join("akda_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt_stream.csv");
+        let (x, labels) = toy(31, 5, 2);
+        save_labeled(&path, &x, &labels).unwrap();
+        let (x_mem, l_mem) = load_labeled(&path).unwrap();
+        for block in [1usize, 7, 31, 64] {
+            let mut src = CsvBlockSource::open(&path, block).unwrap();
+            assert_eq!(src.n_features(), 5);
+            let (x_st, l_st, _) = drain(&mut src);
+            assert!(x_st.sub(&x_mem).max_abs() == 0.0, "block={block}");
+            assert_eq!(l_st, l_mem);
+        }
+    }
+
+    #[test]
+    fn csv_source_skips_comments_and_rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("akda_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comments_stream.csv");
+        std::fs::write(&path, "# header\n\n0,1.0,2.0\n1,3.0,4.0\n").unwrap();
+        let mut src = CsvBlockSource::open(&path, 8).unwrap();
+        let (x, l, _) = drain(&mut src);
+        assert_eq!(x.shape(), (2, 2));
+        assert_eq!(l, vec![0, 1]);
+
+        let ragged = dir.join("ragged_stream.csv");
+        std::fs::write(&ragged, "0,1.0,2.0\n1,3.0\n").unwrap();
+        let mut src = CsvBlockSource::open(&ragged, 8).unwrap();
+        src.reset().unwrap();
+        assert!(src.next_block().is_err());
+    }
+
+    #[test]
+    fn csv_open_rejects_empty_files() {
+        let dir = std::env::temp_dir().join("akda_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty_stream.csv");
+        std::fs::write(&path, "# only comments\n\n").unwrap();
+        assert!(CsvBlockSource::open(&path, 8).is_err());
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_when_it_fits() {
+        let (x, labels) = toy(12, 3, 3);
+        let mut src = MemBlockSource::new(&x, &labels, 5);
+        let sample = reservoir_sample(&mut src, 50, 7).unwrap();
+        assert!(sample.sub(&x).max_abs() == 0.0, "cap >= N keeps rows in order");
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic() {
+        let (x, labels) = toy(40, 3, 4);
+        let mut src = MemBlockSource::new(&x, &labels, 9);
+        let a = reservoir_sample(&mut src, 10, 11).unwrap();
+        let b = reservoir_sample(&mut src, 10, 11).unwrap();
+        assert_eq!(a.shape(), (10, 3));
+        assert!(a.sub(&b).max_abs() == 0.0, "same seed, same sample");
+        // every sampled row is a row of x
+        for r in 0..a.rows() {
+            let found = (0..x.rows()).any(|i| {
+                x.row(i).iter().zip(a.row(r)).all(|(p, q)| p == q)
+            });
+            assert!(found, "sample row {r} not from the stream");
+        }
+    }
+}

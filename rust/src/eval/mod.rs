@@ -44,6 +44,10 @@ pub struct MethodResult {
     pub map: f64,
     pub train_s: f64,
     pub test_s: f64,
+    /// Peak resident f64 count of the training accumulator when the method
+    /// ran through the out-of-core tiled path (`da::akda_stream`);
+    /// `None` for fully in-memory runs.
+    pub peak_f64: Option<usize>,
 }
 
 impl MethodResult {
@@ -104,9 +108,9 @@ mod tests {
     #[test]
     fn speedup_ratios() {
         let kda = MethodResult {
-            method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 2.0 };
+            method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 2.0, peak_f64: None };
         let akda = MethodResult {
-            method: "akda".into(), map: 0.6, train_s: 1.0, test_s: 2.0 };
+            method: "akda".into(), map: 0.6, train_s: 1.0, test_s: 2.0, peak_f64: None };
         let (t, p) = akda.speedup_over(&kda);
         assert!((t - 10.0).abs() < 1e-12);
         assert!((p - 1.0).abs() < 1e-12);

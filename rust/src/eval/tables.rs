@@ -107,16 +107,58 @@ fn fmt_ratio(r: f64) -> String {
     }
 }
 
+/// Render the peak-resident-tile table for streaming runs: entries are the
+/// peak resident f64 count of each method's training accumulator (the
+/// `da::akda_stream` B·m + m² + m·C tiles), "-" for methods that ran
+/// fully in memory.
+pub fn memory_table(title: &str, rows: &[DatasetRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = write!(out, "{:<12}", "dataset");
+    for m in METHOD_COLUMNS {
+        let _ = write!(out, "{:>14}", m);
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        let _ = write!(out, "{:<12}", row.dataset);
+        for m in METHOD_COLUMNS {
+            match row.get(m).and_then(|r| r.peak_f64) {
+                Some(peak) => {
+                    let _ = write!(out, "{:>14}", fmt_f64_count(peak));
+                }
+                None => {
+                    let _ = write!(out, "{:>14}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Human-readable size of an f64 count (8 bytes each).
+fn fmt_f64_count(n: usize) -> String {
+    let bytes = (n as f64) * 8.0;
+    if bytes >= 1e9 {
+        format!("{:.2}GB", bytes / 1e9)
+    } else if bytes >= 1e6 {
+        format!("{:.1}MB", bytes / 1e6)
+    } else {
+        format!("{:.1}KB", bytes / 1e3)
+    }
+}
+
 /// Machine-readable CSV dump next to the pretty table (for EXPERIMENTS.md
-/// and plotting).
+/// and plotting). `peak_f64` is empty for in-memory runs.
 pub fn results_csv(rows: &[DatasetRow]) -> String {
-    let mut out = String::from("dataset,method,map,train_s,test_s\n");
+    let mut out = String::from("dataset,method,map,train_s,test_s,peak_f64\n");
     for row in rows {
         for r in &row.results {
+            let peak = r.peak_f64.map(|p| p.to_string()).unwrap_or_default();
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{:.6},{:.6}",
-                row.dataset, r.method, r.map, r.train_s, r.test_s
+                "{},{},{:.6},{:.6},{:.6},{}",
+                row.dataset, r.method, r.map, r.train_s, r.test_s, peak
             );
         }
     }
@@ -131,8 +173,27 @@ mod tests {
         DatasetRow {
             dataset: "toy".into(),
             results: vec![
-                MethodResult { method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 1.0 },
-                MethodResult { method: "akda".into(), map: 0.6, train_s: 0.5, test_s: 1.0 },
+                MethodResult {
+                    method: "kda".into(),
+                    map: 0.5,
+                    train_s: 10.0,
+                    test_s: 1.0,
+                    peak_f64: None,
+                },
+                MethodResult {
+                    method: "akda".into(),
+                    map: 0.6,
+                    train_s: 0.5,
+                    test_s: 1.0,
+                    peak_f64: None,
+                },
+                MethodResult {
+                    method: "akda-nystrom".into(),
+                    map: 0.6,
+                    train_s: 0.4,
+                    test_s: 1.0,
+                    peak_f64: Some(200_000),
+                },
             ],
         }
     }
@@ -159,7 +220,22 @@ mod tests {
     #[test]
     fn csv_roundtrip_fields() {
         let c = results_csv(&[row()]);
-        assert!(c.lines().count() == 3);
+        assert!(c.lines().count() == 4);
+        assert!(c.starts_with("dataset,method,map,train_s,test_s,peak_f64\n"));
         assert!(c.contains("toy,akda,0.600000"));
+        // streaming runs carry their residency, in-memory rows leave it empty
+        assert!(c.contains("toy,akda-nystrom,0.600000,0.400000,1.000000,200000"));
+        assert!(c.contains("toy,kda,0.500000,10.000000,1.000000,\n"));
+    }
+
+    #[test]
+    fn memory_table_shows_streaming_residency_only() {
+        let t = memory_table("Table Z", &[row()]);
+        // 200_000 f64 = 1.6 MB
+        assert!(t.contains("1.6MB"), "table:\n{t}");
+        // in-memory methods show a dash
+        let kda_col = t.lines().nth(1).unwrap();
+        assert!(kda_col.contains("kda"));
+        assert!(t.lines().nth(2).unwrap().contains('-'));
     }
 }

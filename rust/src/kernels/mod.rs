@@ -3,7 +3,11 @@
 //! The accelerated path computes Gram matrices through the Pallas/PJRT
 //! artifacts; this native implementation (a) serves the baselines, which
 //! must pay the same 2N²F cost the paper charges them, and (b)
-//! cross-checks the artifact numerics in the integration tests.
+//! cross-checks the artifact numerics in the integration tests. The
+//! `approx` subsystem sidesteps the N×N Gram entirely with explicit
+//! feature maps whose inner products approximate these kernels; both
+//! consume the same `Kernel` enum, so a method switches between exact,
+//! approximate, and streaming training without touching kernel choice.
 
 use crate::linalg::mat::{dot, Mat};
 use crate::util::threads;

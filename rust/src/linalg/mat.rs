@@ -265,23 +265,8 @@ impl Mat {
 
     /// A^T * B without materializing A^T.
     pub fn matmul_tn(&self, b: &Mat) -> Mat {
-        assert_eq!(self.rows, b.rows, "matmul_tn inner dim mismatch");
-        let (m, n) = (self.cols, b.cols);
-        let mut out = Mat::zeros(m, n);
-        // accumulate rank-1 updates row by row: out += a_row^T * b_row
-        for r in 0..self.rows {
-            let arow = self.row(r);
-            let brow = b.row(r);
-            for i in 0..m {
-                let a = arow[i];
-                if a != 0.0 {
-                    let orow = out.row_mut(i);
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += a * bv;
-                    }
-                }
-            }
-        }
+        let mut out = Mat::zeros(self.cols, b.cols);
+        accumulate_tn(&mut out, self, b);
         out
     }
 
@@ -331,6 +316,33 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         s += a[j] * b[j];
     }
     s
+}
+
+/// acc += A^T * B without materializing A^T, as a sequence of row-by-row
+/// rank-1 updates (acc += a_rᵀ b_r for r = 0, 1, …).
+///
+/// Because the update order is strictly row-sequential, accumulating the
+/// row-blocks of a partitioned A (and B) in order performs the exact same
+/// floating-point operations as one `matmul_tn` over the full matrices —
+/// no reassociation, so tiled out-of-core accumulation (`data::stream` /
+/// `da::akda_stream`) is bit-for-bit identical to the in-memory product
+/// for every block size.
+pub fn accumulate_tn(acc: &mut Mat, a: &Mat, b: &Mat) {
+    assert_eq!(a.rows, b.rows, "accumulate_tn inner dim mismatch");
+    assert_eq!(acc.shape(), (a.cols, b.cols), "accumulate_tn acc shape mismatch");
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for i in 0..a.cols {
+            let av = arow[i];
+            if av != 0.0 {
+                let orow = acc.row_mut(i);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
 }
 
 /// out = A * B, threaded over row stripes of A; inner kernel iterates the
@@ -410,6 +422,25 @@ mod tests {
         let got = a.matmul_tn(&c);
         let want = a.transpose().matmul(&c);
         assert!(got.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_tn_is_block_size_invariant() {
+        // the contract the out-of-core tiling rests on: summing row-blocks
+        // in order is bit-for-bit the full product, for every block size
+        let a = randmat(23, 6, 21);
+        let b = randmat(23, 4, 22);
+        let full = a.matmul_tn(&b);
+        for block in [1usize, 7, 23] {
+            let mut acc = Mat::zeros(6, 4);
+            let mut r0 = 0;
+            while r0 < 23 {
+                let nr = block.min(23 - r0);
+                accumulate_tn(&mut acc, &a.submatrix(r0, 0, nr, 6), &b.submatrix(r0, 0, nr, 4));
+                r0 += nr;
+            }
+            assert_eq!(acc, full, "block={block} must be bit-for-bit");
+        }
     }
 
     #[test]

@@ -5,6 +5,15 @@
 //! is the foundation everything native sits on. The PJRT artifacts handle
 //! the *large* N x N work on the accelerated path; this handles the small
 //! core-matrix algebra (O_b is C x C) and the entire baseline zoo.
+//!
+//! * `mat` — the row-major `Mat` type: blocked/threaded products
+//!   (`matmul`, `matmul_nt`, `matmul_tn`) and the order-preserving tiled
+//!   accumulator `accumulate_tn` that the out-of-core pipeline builds on;
+//! * `chol` — blocked Cholesky + triangular solves (the paper's N³/3 hot
+//!   spot, and the m×m solve of the approximate/streaming paths);
+//! * `eig` — Jacobi and tridiagonal symmetric eigensolvers (the C×C core
+//!   eigenproblem, Nyström whitening);
+//! * `qr`, `svd` — orthogonalization and rank tools for the baselines.
 
 pub mod chol;
 pub mod eig;
@@ -14,6 +23,6 @@ pub mod svd;
 
 pub use chol::{cholesky, solve_lower, solve_upper_from_lower, spd_solve, CholError};
 pub use eig::{jacobi_eig, sym_eig, sym_eig_desc, Eig};
-pub use mat::{dot, matmul_into, Mat};
+pub use mat::{accumulate_tn, dot, matmul_into, Mat};
 pub use qr::{gram_schmidt, qr_thin};
 pub use svd::{null_space, rank, svd, Svd};

@@ -17,7 +17,7 @@ use akda::coordinator::{
     build_dr, evaluate_ovr, select_hyper, EvalConfig, Hyper, MethodId, WorkPool,
 };
 use akda::data::{cross_dataset_collection, med_datasets, Condition, DatasetSpec};
-use akda::eval::tables::{map_table, results_csv, speedup_table, DatasetRow};
+use akda::eval::tables::{map_table, memory_table, results_csv, speedup_table, DatasetRow};
 use akda::runtime::PjrtEngine;
 
 fn artifacts_dir() -> PathBuf {
@@ -61,6 +61,28 @@ fn parse_landmarks(s: &str) -> Result<usize> {
     Ok(m)
 }
 
+/// `--stream [--block-size B]` → `Some(B)`; `--block-size` alone implies
+/// `--stream`; `--stream B` is accepted as shorthand for the pair;
+/// neither flag → `None` (in-memory).
+fn parse_stream_flags(args: &Args) -> Result<Option<usize>> {
+    let stream = args.get("stream");
+    let block = args.get("block-size");
+    if stream.is_none() && block.is_none() {
+        return Ok(None);
+    }
+    // a bare `--stream` parses as "true" (see Args::parse); any other
+    // attached value is a tile height, same as --block-size
+    let explicit = block.or_else(|| stream.filter(|v| *v != "true"));
+    match explicit {
+        Some(s) => {
+            let b: usize = s.parse().context("--block-size must be a positive integer")?;
+            anyhow::ensure!(b >= 1, "--block-size must be a positive integer, got 0");
+            Ok(Some(b))
+        }
+        None => Ok(Some(akda::data::stream::DEFAULT_BLOCK_ROWS)),
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -89,13 +111,17 @@ fn print_help() {
          COMMANDS:\n\
            datasets                         print the dataset registry (Table 1)\n\
            eval --suite med|cross10|cross100\n\
-                [--methods csv] [--landmarks M] [--cv] [--pjrt] [--config file] [--out dir]\n\
+                [--methods csv] [--landmarks M] [--stream] [--block-size B]\n\
+                [--cv] [--pjrt] [--config file] [--out dir]\n\
                                             regenerate MAP + speedup tables (Tables 2-7);\n\
                                             methods include akda-nystrom|akda-rff (approx\n\
-                                            subsystem, --landmarks sets the budget m)\n\
+                                            subsystem, --landmarks sets the budget m);\n\
+                                            --stream trains them out of core in tiles of\n\
+                                            B rows and adds a peak-residency table\n\
            toy [--out dir]                  Sec. 6.2 toy example (Figs. 2-3 data)\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
-                 [--landmarks M] [--pjrt]   train a detector bank, demo scoring service\n\
+                 [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
+                                            train a detector bank, demo scoring service\n\
            check                            verify artifacts + PJRT round trip\n\n\
          ENV: AKDA_ARTIFACTS (default: ./artifacts)"
     );
@@ -149,9 +175,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     let use_cv = args.get("cv").is_some();
     // set before CV so select_hyper scores the grid at the same budget m
-    // the final fit uses
+    // (and the same execution mode) the final fit uses
     if let Some(m) = args.get("landmarks") {
         cfg.landmarks = parse_landmarks(m)?;
+    }
+    if let Some(b) = parse_stream_flags(args)? {
+        cfg.stream_block = Some(b);
     }
     let engine = if args.get("pjrt").is_some()
         || methods.iter().any(|m| matches!(m, MethodId::AkdaPjrt | MethodId::AksdaPjrt))
@@ -173,7 +202,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 eprintln!("   {}: CV picked rho={} c={} h={}", id.name(), hp.rho, hp.c, hp.h);
                 hp
             } else {
-                Hyper { rho: 0.05, c: 1.0, h: 2, m: cfg.landmarks }
+                Hyper {
+                    rho: 0.05,
+                    c: 1.0,
+                    h: 2,
+                    m: cfg.landmarks,
+                    stream_block: cfg.stream_block,
+                }
             };
             let res = evaluate_ovr(&split, id, hp, cfg.eps, engine.as_ref(), Some(&pool))?;
             eprintln!(
@@ -187,6 +222,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
     println!("{}", map_table(&format!("MAP — {title}"), &rows));
     println!("{}", speedup_table(&format!("train/test speedup over KDA — {title}"), &rows));
+    if rows.iter().any(|r| r.results.iter().any(|m| m.peak_f64.is_some())) {
+        println!(
+            "{}",
+            memory_table(&format!("peak resident training tiles — {title}"), &rows)
+        );
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir)?;
@@ -243,10 +284,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(m) = args.get("landmarks") {
         hp.m = parse_landmarks(m)?;
     }
-    let dr = build_dr(id, hp, 1e-3, engine.as_ref())?
-        .with_context(|| format!("{method} has no DR stage to serve"))?;
-    let proj: Box<dyn akda::da::Projection> =
-        dr.fit(&split.x_train, &split.y_train, split.n_classes)?;
+    hp.stream_block = parse_stream_flags(args)?;
+    let proj: Box<dyn akda::da::Projection> = match (hp.stream_block, id) {
+        (Some(block_rows), MethodId::AkdaNystrom | MethodId::AkdaRff) => {
+            // out-of-core training: tiled ΦᵀΦ/class-sum accumulation, then
+            // one m×m solve — the bank never sees an N×m feature matrix
+            let ap = akda::coordinator::protocol::approx_config(id, hp, 1e-3);
+            let mut src = akda::data::stream::MemBlockSource::new(
+                &split.x_train,
+                &split.y_train,
+                block_rows,
+            );
+            let prep = ap.prepare_stream(&mut src)?;
+            // the comparison is training-STATE residency: registry datasets
+            // are served from RAM either way (a CsvBlockSource would make
+            // the whole run out-of-core), but the tiled path never builds
+            // the N×m Φ the in-memory trainer would hold on top
+            eprintln!(
+                "streaming fit: {} tiles of <= {} rows, training-state peak {:.2} MB \
+                 vs {:.2} MB in-memory (dataset itself stays resident here)",
+                prep.stats.blocks,
+                prep.stats.peak_block_rows,
+                prep.stats.peak_resident_f64() as f64 * 8.0 / 1e6,
+                prep.stats.dense_resident_f64() as f64 * 8.0 / 1e6,
+            );
+            let w = prep.solve_w_multiclass()?;
+            Box::new(akda::da::akda_stream::BlockedProjection {
+                map: prep.map.clone(),
+                w,
+                block_rows,
+            })
+        }
+        (Some(_), _) => {
+            bail!("--stream applies to --method akda-nystrom|akda-rff only")
+        }
+        (None, _) => {
+            let dr = build_dr(id, hp, 1e-3, engine.as_ref())?
+                .with_context(|| format!("{method} has no DR stage to serve"))?;
+            dr.fit(&split.x_train, &split.y_train, split.n_classes)?
+        }
+    };
     let z = proj.project(&split.x_train);
     let svms = (0..split.n_classes)
         .map(|cls| {

@@ -27,7 +27,7 @@ fn full_eval_row_all_methods() {
     // one full table row: every method column on one dataset
     let split = tiny_split();
     let pool = WorkPool::new(4);
-    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, m: 24 };
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, m: 24, ..Default::default() };
     let mut maps = std::collections::BTreeMap::new();
     for id in MethodId::table_columns() {
         let res = evaluate_ovr(&split, id, hp, 1e-3, None, Some(&pool)).unwrap();

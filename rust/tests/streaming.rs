@@ -1,0 +1,78 @@
+//! Integration: the out-of-core streaming path through the public API —
+//! coordinator protocol with `Hyper::stream_block` set, block-size
+//! invariance of the tiled solve, and CSV-to-projection training without
+//! ever materializing the dataset or the N×m feature matrix.
+
+use akda::coordinator::{evaluate_ovr, Hyper, MethodId};
+use akda::da::akda_approx::AkdaApprox;
+use akda::data::stream::{CsvBlockSource, MemBlockSource};
+use akda::data::{by_name, Condition, Split};
+use akda::kernels::Kernel;
+
+fn tiny_split() -> Split {
+    let mut d = by_name("eth80").unwrap();
+    d.n_classes = 4;
+    d.test_per_class = 20;
+    d.split(Condition::Ex10)
+}
+
+#[test]
+fn streamed_protocol_matches_in_memory_protocol() {
+    let split = tiny_split();
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24, ..Default::default() };
+    for id in [MethodId::AkdaNystrom, MethodId::AkdaRff] {
+        let dense = evaluate_ovr(&split, id, hp, 1e-3, None, None).unwrap();
+        // tiled runs at several block sizes, including B = 1 and B >= N
+        let mut maps = Vec::new();
+        for block in [1usize, 7, 4096] {
+            let hp_s = Hyper { stream_block: Some(block), ..hp };
+            let res = evaluate_ovr(&split, id, hp_s, 1e-3, None, None).unwrap();
+            let peak = res.peak_f64.expect("streaming reports residency");
+            assert!(peak > 0, "{}: peak residency", id.name());
+            assert!(
+                (res.map - dense.map).abs() < 0.02,
+                "{} block={}: stream MAP {} vs dense {}",
+                id.name(),
+                block,
+                res.map,
+                dense.map
+            );
+            maps.push(res.map);
+        }
+        // the tiled accumulation is block-size invariant, so the whole
+        // protocol (solve -> LSVM -> ranking) must agree exactly
+        for m in &maps[1..] {
+            assert_eq!(*m, maps[0], "{}: MAP must not depend on B", id.name());
+        }
+    }
+}
+
+#[test]
+fn csv_file_trains_a_projection_out_of_core() {
+    let split = tiny_split();
+    let dir = std::env::temp_dir().join("akda_streaming_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.csv");
+    akda::data::csv::save_labeled(&path, &split.x_train, &split.y_train).unwrap();
+
+    let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.05 }, 64);
+    // out-of-core: 8-row tiles from disk
+    let mut csv = CsvBlockSource::open(&path, 8).unwrap();
+    let prep_csv = cfg.prepare_stream(&mut csv).unwrap();
+    // same pipeline from memory — must agree bit-for-bit (the CSV writer
+    // emits shortest-round-trip floats)
+    let mut mem = MemBlockSource::new(&split.x_train, &split.y_train, 8);
+    let prep_mem = cfg.prepare_stream(&mut mem).unwrap();
+
+    assert_eq!(prep_csv.stats.rows, split.x_train.rows());
+    assert_eq!(prep_csv.n_classes(), split.n_classes);
+    let z_csv = prep_csv.fit_multiclass().unwrap();
+    let z_mem = prep_mem.fit_multiclass().unwrap();
+    assert!(z_csv.w.sub(&z_mem.w).max_abs() == 0.0);
+
+    use akda::da::Projection;
+    let z = z_csv.project(&split.x_test);
+    assert_eq!(z.rows(), split.x_test.rows());
+    assert_eq!(z.cols(), split.n_classes - 1);
+    assert!(z.is_finite());
+}
