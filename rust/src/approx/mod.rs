@@ -42,6 +42,9 @@ pub trait FeatureMap: Send + Sync {
     fn dim(&self) -> usize;
     /// Map observations (rows of `x`) into the feature space.
     fn transform(&self, x: &Mat) -> Mat;
+    /// Introspection hook for the model-artifact subsystem
+    /// (`model::codec` downcasts to the concrete map to serialize it).
+    fn as_any(&self) -> &dyn std::any::Any;
 }
 
 /// Which approximator to build — the knob the coordinator and CLI expose.

@@ -71,6 +71,25 @@ impl NystromMap {
         }
         Ok(NystromMap { landmarks, kernel, w })
     }
+
+    /// The m×r whitening factor W = U_r Λ_r^{−1/2} (φ(x) = k(x, Z) W) —
+    /// exposed for the model-artifact subsystem.
+    pub fn whitening(&self) -> &Mat {
+        &self.w
+    }
+
+    /// Reassemble a fitted map from persisted state (`model::codec`):
+    /// exactly the landmarks and whitening a previous `fit` produced, so
+    /// `transform` is bit-for-bit identical to the original map's.
+    pub fn from_parts(landmarks: Mat, kernel: Kernel, whitening: Mat) -> Result<Self> {
+        anyhow::ensure!(
+            landmarks.rows() == whitening.rows(),
+            "Nystrom state mismatch: {} landmarks vs {} whitening rows",
+            landmarks.rows(),
+            whitening.rows()
+        );
+        Ok(NystromMap { landmarks, kernel, w: whitening })
+    }
 }
 
 impl FeatureMap for NystromMap {
@@ -84,6 +103,10 @@ impl FeatureMap for NystromMap {
 
     fn transform(&self, x: &Mat) -> Mat {
         cross_gram(x, &self.landmarks, self.kernel).matmul(&self.w)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -45,6 +45,28 @@ impl RffMap {
         let omega = Mat::from_fn(dim_in, pairs, |_, _| sd * rng.normal());
         Ok(RffMap { omega, scale: 1.0 / (pairs as f64).sqrt() })
     }
+
+    /// The F×p frequency matrix Ω — exposed for the model-artifact
+    /// subsystem.
+    pub fn omega(&self) -> &Mat {
+        &self.omega
+    }
+
+    /// The p^{−1/2} normalization factor.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Reassemble a fitted map from persisted state (`model::codec`); the
+    /// map is fully determined by Ω and the scale, so the reconstruction
+    /// transforms bit-for-bit identically to the original.
+    pub fn from_parts(omega: Mat, scale: f64) -> Result<Self> {
+        anyhow::ensure!(
+            omega.rows() > 0 && omega.cols() > 0 && scale > 0.0,
+            "RFF state must have a nonempty frequency matrix and positive scale"
+        );
+        Ok(RffMap { omega, scale })
+    }
 }
 
 impl FeatureMap for RffMap {
@@ -70,6 +92,10 @@ impl FeatureMap for RffMap {
             }
         }
         out
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -26,7 +26,15 @@ pub struct EvalConfig {
     pub eps: f64,
     /// Landmark / random-feature budget m for the approximate methods
     /// (akda-nystrom / akda-rff) — used both during CV and the final fit.
+    /// Setting it (config `landmarks = M` or CLI `--landmarks M`) also
+    /// pins `m_grid` to `[M]` so CV cannot override the explicit budget;
+    /// an explicit `m_grid` key wins regardless of line order (keys are
+    /// processed in sorted order, `landmarks` before `m_grid`).
     pub landmarks: usize,
+    /// CV grid over the landmark budget m, searched like rho/C/H by
+    /// `select_hyper` for the approximate methods only. Empty = don't
+    /// search, always use `landmarks`.
+    pub m_grid: Vec<usize>,
     /// Tile height B for the out-of-core streaming path: when set, the
     /// approximate methods accumulate ΦᵀΦ and the class sums tile by tile
     /// (`da::akda_stream`) instead of materializing the N×m Φ. `None`
@@ -47,6 +55,8 @@ impl Default for EvalConfig {
             workers: crate::util::threads::available(),
             eps: 1e-3,
             landmarks: crate::approx::DEFAULT_BUDGET,
+            // compressed like rho/C/H: bracket the default budget
+            m_grid: vec![32, crate::approx::DEFAULT_BUDGET, 128],
             stream_block: None,
             seed: 2024,
         }
@@ -102,7 +112,18 @@ impl EvalConfig {
                 "cv_learn_frac" => cfg.cv_learn_frac = v.parse()?,
                 "workers" => cfg.workers = v.parse()?,
                 "eps" => cfg.eps = v.parse()?,
-                "landmarks" => cfg.landmarks = v.parse()?,
+                "landmarks" => {
+                    cfg.landmarks = v.parse()?;
+                    // an explicit budget pins the CV grid; a later (sorted
+                    // after) explicit m_grid key overrides this
+                    cfg.m_grid = vec![cfg.landmarks];
+                }
+                "m_grid" => {
+                    cfg.m_grid = v
+                        .split(',')
+                        .map(|p| Ok(p.trim().parse::<usize>()?))
+                        .collect::<Result<_>>()?
+                }
                 "stream_block" => cfg.stream_block = Some(v.parse()?),
                 "seed" => cfg.seed = v.parse()?,
                 other => anyhow::bail!("unknown config key {other:?}"),
@@ -110,6 +131,10 @@ impl EvalConfig {
         }
         anyhow::ensure!(!cfg.rho_grid.is_empty() && !cfg.c_grid.is_empty());
         anyhow::ensure!(cfg.landmarks >= 1, "landmarks must be >= 1");
+        anyhow::ensure!(
+            cfg.m_grid.iter().all(|&m| m >= 1),
+            "m_grid entries must be >= 1"
+        );
         anyhow::ensure!(
             !matches!(cfg.stream_block, Some(0)),
             "stream_block must be >= 1"
@@ -158,6 +183,8 @@ mod tests {
         assert_eq!(c.cv_folds, 4);
         assert_eq!(c.seed, 7);
         assert_eq!(c.landmarks, 128);
+        // an explicit landmarks key pins the CV m-grid too
+        assert_eq!(c.m_grid, vec![128]);
     }
 
     #[test]
@@ -167,6 +194,18 @@ mod tests {
         assert!(EvalConfig::from_str_cfg("cv_learn_frac = 1.5").is_err());
         assert!(EvalConfig::from_str_cfg("landmarks = 0").is_err());
         assert!(EvalConfig::from_str_cfg("stream_block = 0").is_err());
+    }
+
+    #[test]
+    fn parses_m_grid() {
+        assert_eq!(EvalConfig::default().m_grid, vec![32, 64, 128]);
+        let c = EvalConfig::from_str_cfg("m_grid = 16, 48").unwrap();
+        assert_eq!(c.m_grid, vec![16, 48]);
+        assert!(EvalConfig::from_str_cfg("m_grid = 16, 0").is_err());
+        // explicit m_grid beats the landmarks pin, whatever the line order
+        let c = EvalConfig::from_str_cfg("m_grid = 16, 48\nlandmarks = 99").unwrap();
+        assert_eq!(c.landmarks, 99);
+        assert_eq!(c.m_grid, vec![16, 48]);
     }
 
     #[test]

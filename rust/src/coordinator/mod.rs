@@ -20,4 +20,4 @@ pub mod service;
 pub use config::EvalConfig;
 pub use jobs::WorkPool;
 pub use protocol::{build_dr, evaluate_ovr, select_hyper, Hyper, MethodId};
-pub use service::{DetectorBank, ScoringService};
+pub use service::{BankHandle, DetectorBank, ScoringService};

@@ -100,6 +100,12 @@ impl MethodId {
         )
     }
 
+    /// Whether the method consumes the landmark / random-feature budget m
+    /// (the `approx` subsystem methods) — these CV-search `m_grid`.
+    pub fn uses_landmarks(&self) -> bool {
+        matches!(self, MethodId::AkdaNystrom | MethodId::AkdaRff)
+    }
+
     /// The full column set of Tables 2–7 (native engines).
     pub fn table_columns() -> Vec<MethodId> {
         use MethodId::*;
@@ -405,12 +411,16 @@ pub fn evaluate_ovr(
         train_s,
         test_s,
         peak_f64,
+        budget: id.uses_landmarks().then_some(hp.m),
     })
 }
 
 /// 3-fold CV hyper-parameter selection (Sec. 6.3.1): per fold, the
 /// training set is split 30% learn / 70% validate; the grid point with the
-/// best mean validation MAP wins.
+/// best mean validation MAP wins. For the approximate methods the
+/// landmark / random-feature budget m joins the grid (`EvalConfig::m_grid`)
+/// exactly like rho/C/H; exact methods keep the single configured budget
+/// (it is ignored by their trainers anyway).
 pub fn select_hyper(
     split: &Split,
     id: MethodId,
@@ -419,58 +429,62 @@ pub fn select_hyper(
 ) -> Result<Hyper> {
     let rho_grid: &[f64] = if id.uses_kernel() { &cfg.rho_grid } else { &[0.1] };
     let h_grid: &[usize] = if id.uses_subclasses() { &cfg.h_grid } else { &[1] };
+    let single_m = [cfg.landmarks];
+    let m_grid: &[usize] = if id.uses_landmarks() && !cfg.m_grid.is_empty() {
+        &cfg.m_grid
+    } else {
+        &single_m
+    };
     let mut best = (f64::NEG_INFINITY, Hyper::default());
     let n = split.y_train.len();
+    // flatten the (rho, C, H, m) product so the fold loop stays readable
+    let mut grid = Vec::new();
     for &rho in rho_grid {
         for &c in &cfg.c_grid {
             for &h in h_grid {
-                let hp = Hyper {
-                    rho,
-                    c,
-                    h,
-                    m: cfg.landmarks,
-                    stream_block: cfg.stream_block,
-                };
-                let mut maps = Vec::new();
-                for fold in 0..cfg.cv_folds {
-                    let mut rng = Rng::new(cfg.seed ^ (fold as u64) << 8);
-                    // stratified learn/validate split
-                    let mut learn_idx = Vec::new();
-                    let mut val_idx = Vec::new();
-                    for cls in 0..split.n_classes {
-                        let mut idx: Vec<usize> = (0..n)
-                            .filter(|&i| split.y_train[i] == cls)
-                            .collect();
-                        rng.shuffle(&mut idx);
-                        let k = ((idx.len() as f64 * cfg.cv_learn_frac).round()
-                            as usize)
-                            .clamp(2.min(idx.len()), idx.len().saturating_sub(1))
-                            .max(1);
-                        learn_idx.extend_from_slice(&idx[..k]);
-                        val_idx.extend_from_slice(&idx[k..]);
-                    }
-                    learn_idx.sort_unstable();
-                    val_idx.sort_unstable();
-                    if learn_idx.len() < 2 * split.n_classes || val_idx.is_empty() {
-                        continue;
-                    }
-                    let sub = Split {
-                        x_train: split.x_train.select_rows(&learn_idx),
-                        y_train: learn_idx.iter().map(|&i| split.y_train[i]).collect(),
-                        x_test: split.x_train.select_rows(&val_idx),
-                        y_test: val_idx.iter().map(|&i| split.y_train[i]).collect(),
-                        n_classes: split.n_classes,
-                    };
-                    if let Ok(res) = evaluate_ovr(&sub, id, hp, cfg.eps, engine, None) {
-                        maps.push(res.map);
-                    }
+                for &m in m_grid {
+                    grid.push(Hyper { rho, c, h, m, stream_block: cfg.stream_block });
                 }
-                if !maps.is_empty() {
-                    let mean = maps.iter().sum::<f64>() / maps.len() as f64;
-                    if mean > best.0 {
-                        best = (mean, hp);
-                    }
-                }
+            }
+        }
+    }
+    for hp in grid {
+        let mut maps = Vec::new();
+        for fold in 0..cfg.cv_folds {
+            let mut rng = Rng::new(cfg.seed ^ (fold as u64) << 8);
+            // stratified learn/validate split
+            let mut learn_idx = Vec::new();
+            let mut val_idx = Vec::new();
+            for cls in 0..split.n_classes {
+                let mut idx: Vec<usize> =
+                    (0..n).filter(|&i| split.y_train[i] == cls).collect();
+                rng.shuffle(&mut idx);
+                let k = ((idx.len() as f64 * cfg.cv_learn_frac).round() as usize)
+                    .clamp(2.min(idx.len()), idx.len().saturating_sub(1))
+                    .max(1);
+                learn_idx.extend_from_slice(&idx[..k]);
+                val_idx.extend_from_slice(&idx[k..]);
+            }
+            learn_idx.sort_unstable();
+            val_idx.sort_unstable();
+            if learn_idx.len() < 2 * split.n_classes || val_idx.is_empty() {
+                continue;
+            }
+            let sub = Split {
+                x_train: split.x_train.select_rows(&learn_idx),
+                y_train: learn_idx.iter().map(|&i| split.y_train[i]).collect(),
+                x_test: split.x_train.select_rows(&val_idx),
+                y_test: val_idx.iter().map(|&i| split.y_train[i]).collect(),
+                n_classes: split.n_classes,
+            };
+            if let Ok(res) = evaluate_ovr(&sub, id, hp, cfg.eps, engine, None) {
+                maps.push(res.map);
+            }
+        }
+        if !maps.is_empty() {
+            let mean = maps.iter().sum::<f64>() / maps.len() as f64;
+            if mean > best.0 {
+                best = (mean, hp);
             }
         }
     }
@@ -545,6 +559,36 @@ mod tests {
         let hp = select_hyper(&split, MethodId::Akda, &cfg, None).unwrap();
         assert!(cfg.rho_grid.contains(&hp.rho));
         assert!(cfg.c_grid.contains(&hp.c));
+    }
+
+    #[test]
+    fn cv_searches_the_landmark_grid_for_approx_methods_only() {
+        let split = small_split();
+        let cfg = EvalConfig {
+            rho_grid: vec![0.05],
+            c_grid: vec![1.0],
+            h_grid: vec![1],
+            m_grid: vec![4, 24],
+            cv_folds: 2,
+            ..Default::default()
+        };
+        let hp = select_hyper(&split, MethodId::AkdaNystrom, &cfg, None).unwrap();
+        assert!(cfg.m_grid.contains(&hp.m), "picked m={}", hp.m);
+        // exact methods don't search m: they keep the configured budget
+        let hp = select_hyper(&split, MethodId::Akda, &cfg, None).unwrap();
+        assert_eq!(hp.m, cfg.landmarks);
+    }
+
+    #[test]
+    fn results_report_the_budget_for_approx_methods_only() {
+        let split = small_split();
+        let hp = Hyper { rho: 0.05, c: 1.0, h: 1, m: 24, ..Default::default() };
+        let exact =
+            evaluate_ovr(&split, MethodId::Akda, hp, 1e-3, None, None).unwrap();
+        assert_eq!(exact.budget, None);
+        let approx =
+            evaluate_ovr(&split, MethodId::AkdaNystrom, hp, 1e-3, None, None).unwrap();
+        assert_eq!(approx.budget, Some(24));
     }
 
     #[test]

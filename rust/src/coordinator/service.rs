@@ -1,14 +1,23 @@
 //! Scoring service: the request-path component of the coordinator.
 //!
-//! After training, a `ScoringService` owns the fitted per-class detectors
-//! (DR projection + LSVM) and serves score requests over a channel with
+//! After training, a `ScoringService` serves score requests against a
+//! detector bank (DR projection + per-class LSVMs) over a channel with
 //! dynamic micro-batching: requests arriving within a batching window are
 //! projected through the kernel expansion *together* (one cross-kernel
 //! block instead of many single-row ones — the same motivation as vLLM's
 //! continuous batching, applied to kernel projections).
+//!
+//! The service does not own the bank directly: it reads it through a
+//! [`BankHandle`], a swappable `Arc<DetectorBank>` slot. The model
+//! registry's hot-reload watcher (`model::registry::HotReloader`) swaps a
+//! freshly published model into the handle while the service is running —
+//! each micro-batch picks up the current bank at dispatch time, so
+//! in-flight requests finish against the bank they started with and no
+//! request is ever dropped across a swap.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -39,6 +48,43 @@ impl DetectorBank {
 
     pub fn class_names(&self) -> Vec<String> {
         self.svms.iter().map(|(n, _)| n.clone()).collect()
+    }
+}
+
+/// A swappable slot holding the currently-served detector bank.
+///
+/// Cloning the handle shares the slot: `swap` on any clone is visible to
+/// every reader at its next `get`. The scoring loop calls `get` once per
+/// micro-batch, so a swap takes effect at the next batch boundary without
+/// interrupting the batch being scored.
+#[derive(Clone)]
+pub struct BankHandle {
+    slot: Arc<RwLock<Arc<DetectorBank>>>,
+    generation: Arc<AtomicUsize>,
+}
+
+impl BankHandle {
+    pub fn new(bank: Arc<DetectorBank>) -> Self {
+        BankHandle {
+            slot: Arc::new(RwLock::new(bank)),
+            generation: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// The bank to score the next batch with.
+    pub fn get(&self) -> Arc<DetectorBank> {
+        self.slot.read().expect("bank slot poisoned").clone()
+    }
+
+    /// Publish a new bank to every reader (hot reload).
+    pub fn swap(&self, bank: Arc<DetectorBank>) {
+        *self.slot.write().expect("bank slot poisoned") = bank;
+        self.generation.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Number of swaps since creation (monitoring / tests).
+    pub fn generation(&self) -> usize {
+        self.generation.load(Ordering::SeqCst)
     }
 }
 
@@ -87,10 +133,23 @@ pub struct ScoringService {
 }
 
 impl ScoringService {
-    /// `max_batch`: flush threshold; `window`: max time the first request
-    /// in a batch waits for company.
+    /// Serve a fixed bank (no hot reload): convenience over
+    /// [`ScoringService::start_reloadable`].
     pub fn start(
         bank: Arc<DetectorBank>,
+        input_dim: usize,
+        max_batch: usize,
+        window: Duration,
+    ) -> ScoringService {
+        Self::start_reloadable(BankHandle::new(bank), input_dim, max_batch, window)
+    }
+
+    /// `max_batch`: flush threshold; `window`: max time the first request
+    /// in a batch waits for company. The service reads `handle` at every
+    /// batch boundary, so `BankHandle::swap` hot-reloads the model without
+    /// dropping queued or in-flight requests.
+    pub fn start_reloadable(
+        handle: BankHandle,
         input_dim: usize,
         max_batch: usize,
         window: Duration,
@@ -121,7 +180,8 @@ impl ScoringService {
                     let x = Mat::from_fn(batch.len(), input_dim, |r, c| {
                         batch[r].features[c]
                     });
-                    let scores = bank.score(&x);
+                    // re-read the handle per batch: a hot swap lands here
+                    let scores = handle.get().score(&x);
                     stats.requests += batch.len();
                     stats.batches += 1;
                     stats.max_batch = stats.max_batch.max(batch.len());
@@ -246,6 +306,46 @@ mod tests {
         assert_eq!(stats.requests, 16);
         assert!(stats.batches < 16, "batching happened: {stats:?}");
         assert!(stats.max_batch >= 2);
+    }
+
+    #[test]
+    fn hot_swap_serves_new_bank_without_dropping_requests() {
+        let (bank_a, x, _) = bank();
+        let handle = BankHandle::new(bank_a.clone());
+        let svc = ScoringService::start_reloadable(
+            handle.clone(), 6, 4, Duration::from_millis(2));
+        let client = svc.client();
+
+        // a second bank with all-zero detectors: every score becomes b = 0
+        let labels: Vec<usize> = (0..60).map(|i| i / 20).collect();
+        let projection =
+            Akda::new(Kernel::Rbf { rho: 0.3 }).fit(&x, &labels, 3).unwrap();
+        let zero_svms = (0..3)
+            .map(|c| {
+                let w = vec![0.0; projection.dim()];
+                (format!("class{c}"), LinearSvm { w, b: 0.0 })
+            })
+            .collect();
+        let bank_b = Arc::new(DetectorBank { projection, svms: zero_svms });
+
+        // requests against bank A answer normally
+        let before = client.score(x.row(0).to_vec()).unwrap();
+        assert!(before.iter().any(|s| *s != 0.0));
+        // swap under the running service, then keep issuing requests
+        handle.swap(bank_b);
+        assert_eq!(handle.generation(), 1);
+        let after = client.score(x.row(0).to_vec()).unwrap();
+        assert!(after.iter().all(|s| *s == 0.0), "swap must take effect: {after:?}");
+        // no request was dropped across the swap
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let client = client.clone();
+                let row = x.row(i).to_vec();
+                s.spawn(move || {
+                    assert_eq!(client.score(row).unwrap().len(), 3);
+                });
+            }
+        });
     }
 
     #[test]

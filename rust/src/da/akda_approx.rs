@@ -209,6 +209,10 @@ impl Projection for ApproxProjection {
     fn dim(&self) -> usize {
         self.w.cols()
     }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 #[cfg(test)]

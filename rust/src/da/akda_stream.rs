@@ -349,6 +349,10 @@ impl Projection for BlockedProjection {
     fn dim(&self) -> usize {
         self.w.cols()
     }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 #[cfg(test)]

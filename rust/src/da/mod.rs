@@ -39,6 +39,11 @@ pub trait Projection: Send + Sync {
     fn project(&self, x_test: &Mat) -> Mat;
     /// Discriminant-subspace dimensionality D.
     fn dim(&self) -> usize;
+    /// Introspection hook for the model-artifact subsystem: lets
+    /// `model::codec` downcast a fitted `Box<dyn Projection>` back to its
+    /// concrete type so every trained state can be serialized without the
+    /// trait knowing about the on-disk format.
+    fn as_any(&self) -> &dyn std::any::Any;
 }
 
 /// A dimensionality-reduction method (the "m-th method" of Sec. 6.3.1).
@@ -67,6 +72,9 @@ impl Projection for IdentityProjection {
     }
     fn dim(&self) -> usize {
         self.dim
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 
@@ -107,6 +115,9 @@ impl Projection for KernelProjection {
     fn dim(&self) -> usize {
         self.psi.cols()
     }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
 }
 
 /// Linear projection z = Wᵀ(x − μ) for the input-space methods (PCA/LDA).
@@ -124,5 +135,8 @@ impl Projection for LinearProjection {
     }
     fn dim(&self) -> usize {
         self.w.cols()
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }

@@ -48,6 +48,10 @@ pub struct MethodResult {
     /// ran through the out-of-core tiled path (`da::akda_stream`);
     /// `None` for fully in-memory runs.
     pub peak_f64: Option<usize>,
+    /// Landmark / random-feature budget m the run used — `Some` for the
+    /// approximate methods (reports the CV-selected budget when
+    /// `select_hyper` searched `m_grid`), `None` for exact methods.
+    pub budget: Option<usize>,
 }
 
 impl MethodResult {
@@ -108,9 +112,11 @@ mod tests {
     #[test]
     fn speedup_ratios() {
         let kda = MethodResult {
-            method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 2.0, peak_f64: None };
+            method: "kda".into(), map: 0.5, train_s: 10.0, test_s: 2.0,
+            peak_f64: None, budget: None };
         let akda = MethodResult {
-            method: "akda".into(), map: 0.6, train_s: 1.0, test_s: 2.0, peak_f64: None };
+            method: "akda".into(), map: 0.6, train_s: 1.0, test_s: 2.0,
+            peak_f64: None, budget: None };
         let (t, p) = akda.speedup_over(&kda);
         assert!((t - 10.0).abs() < 1e-12);
         assert!((p - 1.0).abs() < 1e-12);

@@ -149,16 +149,19 @@ fn fmt_f64_count(n: usize) -> String {
 }
 
 /// Machine-readable CSV dump next to the pretty table (for EXPERIMENTS.md
-/// and plotting). `peak_f64` is empty for in-memory runs.
+/// and plotting). `peak_f64` is empty for in-memory runs; `m` is the
+/// landmark/random-feature budget (CV-selected when `--cv` searched
+/// `m_grid`), empty for exact methods.
 pub fn results_csv(rows: &[DatasetRow]) -> String {
-    let mut out = String::from("dataset,method,map,train_s,test_s,peak_f64\n");
+    let mut out = String::from("dataset,method,map,train_s,test_s,peak_f64,m\n");
     for row in rows {
         for r in &row.results {
             let peak = r.peak_f64.map(|p| p.to_string()).unwrap_or_default();
+            let m = r.budget.map(|m| m.to_string()).unwrap_or_default();
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{:.6},{:.6},{}",
-                row.dataset, r.method, r.map, r.train_s, r.test_s, peak
+                "{},{},{:.6},{:.6},{:.6},{},{}",
+                row.dataset, r.method, r.map, r.train_s, r.test_s, peak, m
             );
         }
     }
@@ -179,6 +182,7 @@ mod tests {
                     train_s: 10.0,
                     test_s: 1.0,
                     peak_f64: None,
+                    budget: None,
                 },
                 MethodResult {
                     method: "akda".into(),
@@ -186,6 +190,7 @@ mod tests {
                     train_s: 0.5,
                     test_s: 1.0,
                     peak_f64: None,
+                    budget: None,
                 },
                 MethodResult {
                     method: "akda-nystrom".into(),
@@ -193,6 +198,7 @@ mod tests {
                     train_s: 0.4,
                     test_s: 1.0,
                     peak_f64: Some(200_000),
+                    budget: Some(64),
                 },
             ],
         }
@@ -221,11 +227,12 @@ mod tests {
     fn csv_roundtrip_fields() {
         let c = results_csv(&[row()]);
         assert!(c.lines().count() == 4);
-        assert!(c.starts_with("dataset,method,map,train_s,test_s,peak_f64\n"));
+        assert!(c.starts_with("dataset,method,map,train_s,test_s,peak_f64,m\n"));
         assert!(c.contains("toy,akda,0.600000"));
-        // streaming runs carry their residency, in-memory rows leave it empty
-        assert!(c.contains("toy,akda-nystrom,0.600000,0.400000,1.000000,200000"));
-        assert!(c.contains("toy,kda,0.500000,10.000000,1.000000,\n"));
+        // streaming runs carry their residency + budget, exact rows leave
+        // both trailing fields empty
+        assert!(c.contains("toy,akda-nystrom,0.600000,0.400000,1.000000,200000,64"));
+        assert!(c.contains("toy,kda,0.500000,10.000000,1.000000,,\n"));
     }
 
     #[test]

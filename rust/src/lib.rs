@@ -12,6 +12,9 @@
 //! * `approx`: kernel-feature approximation subsystem (Nyström landmarks,
 //!   random Fourier features) feeding `da::akda_approx` — the O(N m²)
 //!   large-N training path (m ≪ N) beyond the paper's exact O(N³) regime.
+//! * `model`: trained-model artifact subsystem — versioned, checksummed
+//!   `.akda` persistence, a directory-backed registry, and hot-reload so
+//!   `akda serve --model` never retrains.
 //!
 //! See `DESIGN.md` for the systems inventory and the experiment index.
 
@@ -23,6 +26,7 @@ pub mod data;
 pub mod eval;
 pub mod kernels;
 pub mod linalg;
+pub mod model;
 pub mod runtime;
 pub mod svm;
 pub mod util;

@@ -5,8 +5,16 @@
 //!   eval --suite med|cross10|cross100 [...]
 //!                                 regenerate the MAP + speedup tables
 //!   toy                           Sec. 6.2 toy example (Figs. 2–3 data)
-//!   serve --dataset NAME          train a detector bank and serve scores
+//!   train --dataset NAME          fit a detector bank, evaluate it, and
+//!                                 publish it to the model registry
+//!   models                        list / inspect published models
+//!   serve --model NAME[@V]        load a published model and serve scores
+//!                                 (zero training work on this path)
+//!   serve --dataset NAME          train in process, then serve scores
 //!   check                         verify artifacts + PJRT round trip
+//!
+//! The model registry root is `--models-dir DIR`, else `$AKDA_MODELS`,
+//! else `./models` (layout: `<dir>/<name>/<version>/{model.akda,MANIFEST}`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -24,6 +32,14 @@ fn artifacts_dir() -> PathBuf {
     std::env::var("AKDA_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn models_dir(args: &Args) -> PathBuf {
+    args.get("models-dir").map(PathBuf::from).unwrap_or_else(|| {
+        std::env::var("AKDA_MODELS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("models"))
+    })
 }
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -94,6 +110,8 @@ fn main() -> Result<()> {
         "datasets" => cmd_datasets(),
         "eval" => cmd_eval(&args),
         "toy" => cmd_toy(&args),
+        "train" => cmd_train(&args),
+        "models" => cmd_models(&args),
         "serve" => cmd_serve(&args),
         "check" => cmd_check(),
         "help" | "--help" | "-h" => {
@@ -119,11 +137,27 @@ fn print_help() {
                                             --stream trains them out of core in tiles of\n\
                                             B rows and adds a peak-residency table\n\
            toy [--out dir]                  Sec. 6.2 toy example (Figs. 2-3 data)\n\
+           train --dataset NAME [--method akda|aksda|akda-nystrom|akda-rff|...]\n\
+                 [--cond 10|100] [--landmarks M] [--stream] [--block-size B]\n\
+                 [--name MODEL] [--models-dir DIR] [--pjrt]\n\
+                                            fit a detector bank, evaluate it on the\n\
+                                            test split, and publish it as the next\n\
+                                            version of MODEL (default: dataset name)\n\
+           models [--models-dir DIR] [--inspect NAME[@V]]\n\
+                                            list published models, or dump one\n\
+                                            version's manifest + artifact sections\n\
+           serve --model NAME[@V] [--models-dir DIR] [--watch [SECS]]\n\
+                 [--dataset NAME]           serve a published model: load, verify\n\
+                                            checksums, score — zero training work;\n\
+                                            --watch hot-reloads newly published\n\
+                                            versions under the running service\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
                  [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
-                                            train a detector bank, demo scoring service\n\
+                                            train a detector bank in process, then\n\
+                                            serve it (no registry involved)\n\
            check                            verify artifacts + PJRT round trip\n\n\
-         ENV: AKDA_ARTIFACTS (default: ./artifacts)"
+         ENV: AKDA_ARTIFACTS (default: ./artifacts)\n\
+              AKDA_MODELS    (default: ./models)"
     );
 }
 
@@ -175,9 +209,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     let use_cv = args.get("cv").is_some();
     // set before CV so select_hyper scores the grid at the same budget m
-    // (and the same execution mode) the final fit uses
+    // (and the same execution mode) the final fit uses; an explicit
+    // --landmarks also pins the CV m-grid so CV cannot override it
     if let Some(m) = args.get("landmarks") {
         cfg.landmarks = parse_landmarks(m)?;
+        cfg.m_grid = vec![cfg.landmarks];
     }
     if let Some(b) = parse_stream_flags(args)? {
         cfg.stream_block = Some(b);
@@ -199,7 +235,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
         for &id in &methods {
             let hp = if use_cv {
                 let hp = select_hyper(&split, id, &cfg, engine.as_ref())?;
-                eprintln!("   {}: CV picked rho={} c={} h={}", id.name(), hp.rho, hp.c, hp.h);
+                if id.uses_landmarks() {
+                    eprintln!(
+                        "   {}: CV picked rho={} c={} h={} m={}",
+                        id.name(), hp.rho, hp.c, hp.h, hp.m
+                    );
+                } else {
+                    eprintln!(
+                        "   {}: CV picked rho={} c={} h={}",
+                        id.name(), hp.rho, hp.c, hp.h
+                    );
+                }
                 hp
             } else {
                 Hyper {
@@ -249,15 +295,31 @@ mod akda_toy {
     include!("../../examples/toy_impl.rs");
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    use akda::coordinator::{DetectorBank, ScoringService};
-    use akda::da::DrMethod;
-    use akda::svm::{LinearSvm, LinearSvmConfig};
-    use std::time::Duration;
+fn parse_condition(s: &str) -> Result<Condition> {
+    match s {
+        "10" | "10Ex" | "ex10" => Ok(Condition::Ex10),
+        "100" | "100Ex" | "ex100" => Ok(Condition::Ex100),
+        other => bail!("unknown condition {other:?} (10|100)"),
+    }
+}
 
-    let name = args.get("dataset").unwrap_or("eth80");
-    let spec = akda::data::by_name(name).with_context(|| format!("dataset {name:?}"))?;
-    let split = spec.split(Condition::Ex100);
+/// Training request shared by `akda train` and the train-in-process arm of
+/// `akda serve`: dataset split, method, hyper-parameters, optional engine.
+struct TrainSpec {
+    dataset: String,
+    cond: Condition,
+    split: akda::data::Split,
+    id: MethodId,
+    hp: Hyper,
+    engine: Option<Arc<PjrtEngine>>,
+}
+
+fn parse_train_spec(args: &Args) -> Result<TrainSpec> {
+    let dataset = args.get("dataset").unwrap_or("eth80").to_string();
+    let spec =
+        akda::data::by_name(&dataset).with_context(|| format!("dataset {dataset:?}"))?;
+    let cond = parse_condition(args.get("cond").unwrap_or("100"))?;
+    let split = spec.split(cond);
     let use_pjrt = args.get("pjrt").is_some();
     let method = match args.get("method") {
         Some(m) => m,
@@ -270,11 +332,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if use_pjrt && !needs_engine {
         bail!("--pjrt serves the PJRT engines; use --method akda-pjrt|aksda-pjrt or drop --pjrt");
     }
-    eprintln!(
-        "training detector bank on {} (C={}) with {}",
-        name, split.n_classes, method
-    );
-
     let engine = if needs_engine {
         Some(Arc::new(PjrtEngine::from_dir(&artifacts_dir())?))
     } else {
@@ -285,11 +342,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hp.m = parse_landmarks(m)?;
     }
     hp.stream_block = parse_stream_flags(args)?;
-    let proj: Box<dyn akda::da::Projection> = match (hp.stream_block, id) {
+    Ok(TrainSpec { dataset, cond, split, id, hp, engine })
+}
+
+/// Fit the multiclass projection + one-vs-rest LSVM bank — the single
+/// training path behind `akda train` and `akda serve --dataset`. Returns
+/// the bank and the wall-clock training seconds.
+fn fit_detector_bank(ts: &TrainSpec) -> Result<(Arc<akda::coordinator::DetectorBank>, f64)> {
+    use akda::coordinator::DetectorBank;
+    use akda::da::DrMethod;
+    use akda::svm::{LinearSvm, LinearSvmConfig};
+
+    let split = &ts.split;
+    let t0 = std::time::Instant::now();
+    let proj: Box<dyn akda::da::Projection> = match (ts.hp.stream_block, ts.id) {
         (Some(block_rows), MethodId::AkdaNystrom | MethodId::AkdaRff) => {
             // out-of-core training: tiled ΦᵀΦ/class-sum accumulation, then
             // one m×m solve — the bank never sees an N×m feature matrix
-            let ap = akda::coordinator::protocol::approx_config(id, hp, 1e-3);
+            let ap = akda::coordinator::protocol::approx_config(ts.id, ts.hp, 1e-3);
             let mut src = akda::data::stream::MemBlockSource::new(
                 &split.x_train,
                 &split.y_train,
@@ -319,8 +389,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             bail!("--stream applies to --method akda-nystrom|akda-rff only")
         }
         (None, _) => {
-            let dr = build_dr(id, hp, 1e-3, engine.as_ref())?
-                .with_context(|| format!("{method} has no DR stage to serve"))?;
+            let dr = build_dr(ts.id, ts.hp, 1e-3, ts.engine.as_ref())?
+                .with_context(|| format!("{} has no DR stage to serve", ts.id.name()))?;
             dr.fit(&split.x_train, &split.y_train, split.n_classes)?
         }
     };
@@ -336,44 +406,295 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let bank = Arc::new(DetectorBank { projection: proj, svms });
-    let svc = ScoringService::start(bank, split.x_train.cols(), 64, Duration::from_millis(5));
-    let client = svc.client();
+    Ok((bank, t0.elapsed().as_secs_f64()))
+}
 
-    // demo: score the test set through the service, report accuracy + stats
-    let t0 = std::time::Instant::now();
-    let mut correct = 0;
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for i in 0..split.x_test.rows() {
-            let client = client.clone();
-            let row = split.x_test.row(i).to_vec();
-            handles.push(s.spawn(move || client.score(row).unwrap()));
+/// Argmax class of one observation's per-class scores — the single
+/// prediction rule shared by `eval_bank` and `drive_demo` (CI asserts
+/// their printed accuracies are equal, so tie-breaking must match).
+fn predict(scores: &[f64]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(c, _)| c)
+        .unwrap()
+}
+
+/// Direct (service-less) test-split evaluation of a trained bank:
+/// multiclass accuracy + one-vs-rest MAP. Used by `akda train` to stamp
+/// the manifest; `serve`'s demo reports the same accuracy through the
+/// scoring service, so the two paths cross-check each other.
+fn eval_bank(bank: &akda::coordinator::DetectorBank, split: &akda::data::Split) -> (f64, f64) {
+    use akda::eval::{average_precision, mean_average_precision};
+
+    let scores = bank.score(&split.x_test);
+    let n = split.x_test.rows();
+    let mut correct = 0usize;
+    for i in 0..n {
+        if predict(scores.row(i)) == split.y_test[i] {
+            correct += 1;
         }
-        for (i, h) in handles.into_iter().enumerate() {
-            let scores = h.join().unwrap();
-            let pred = scores
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(c, _)| c)
-                .unwrap();
-            if pred == split.y_test[i] {
-                correct += 1;
-            }
+    }
+    let accuracy = correct as f64 / n as f64;
+    let aps: Vec<f64> = (0..split.n_classes)
+        .map(|cls| {
+            let col = scores.col(cls);
+            let positive: Vec<bool> = split.y_test.iter().map(|&l| l == cls).collect();
+            average_precision(&col, &positive)
+        })
+        .collect();
+    (accuracy, mean_average_precision(&aps))
+}
+
+/// Drive the demo load through the scoring service from a fixed-size pool
+/// of client workers, each walking a strided chunk of the test rows — the
+/// request path stays concurrent (so micro-batching kicks in) without
+/// spawning one OS thread per test row.
+fn drive_demo(
+    svc: &akda::coordinator::ScoringService,
+    split: &akda::data::Split,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let client = svc.client();
+    let n = split.x_test.rows();
+    let workers = akda::util::threads::available().clamp(2, 16).min(n.max(1));
+    let correct = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let client = client.clone();
+            let correct = &correct;
+            s.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    let scores = client.score(split.x_test.row(i).to_vec()).unwrap();
+                    if predict(&scores) == split.y_test[i] {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                    i += workers;
+                }
+            });
         }
     });
     let dt = t0.elapsed().as_secs_f64();
     let stats = svc.stats();
     println!(
-        "served {} requests in {:.2}s ({:.0} req/s), accuracy {:.1}%, batches={} max_batch={}",
-        split.x_test.rows(),
+        "served {} requests in {:.2}s ({:.0} req/s, {} client workers), \
+         accuracy {:.2}%, batches={} max_batch={}",
+        n,
         dt,
-        split.x_test.rows() as f64 / dt,
-        100.0 * correct as f64 / split.x_test.rows() as f64,
+        n as f64 / dt,
+        workers,
+        100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64,
         stats.batches,
         stats.max_batch
     );
     Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use akda::model::{ModelManifest, ModelRegistry};
+
+    let ts = parse_train_spec(args)?;
+    eprintln!(
+        "training detector bank on {} [{}] (C={}) with {}",
+        ts.dataset,
+        ts.cond.name(),
+        ts.split.n_classes,
+        ts.id.name()
+    );
+    let (bank, train_s) = fit_detector_bank(&ts)?;
+    let (accuracy, map) = eval_bank(&bank, &ts.split);
+    println!(
+        "train-eval: accuracy {:.2}%  MAP {:.2}%  (train {:.2}s)",
+        100.0 * accuracy,
+        100.0 * map,
+        train_s
+    );
+
+    let artifact = akda::model::encode_bank(&bank, ts.id.name())?;
+    let manifest = ModelManifest {
+        method: ts.id.name().to_string(),
+        dataset: ts.dataset.clone(),
+        condition: ts.cond.name().to_string(),
+        rho: ts.hp.rho,
+        c: ts.hp.c,
+        h: ts.hp.h,
+        m: ts.hp.m,
+        stream_block: ts.hp.stream_block,
+        n_classes: ts.split.n_classes,
+        input_dim: ts.split.x_train.cols(),
+        train_s,
+        map,
+        accuracy,
+        ..Default::default()
+    };
+    let name = args.get("name").unwrap_or(ts.dataset.as_str());
+    let registry = ModelRegistry::open(models_dir(args));
+    let entry = registry.publish(name, &artifact, &manifest)?;
+    println!(
+        "published {} -> {:?} (serve it with: akda serve --model {})",
+        entry.spec(),
+        entry.dir,
+        entry.spec()
+    );
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    use akda::model::ModelRegistry;
+
+    let registry = ModelRegistry::open(models_dir(args));
+    if let Some(spec) = args.get("inspect") {
+        let (entry, artifact) = registry.load_artifact(spec)?;
+        println!("# {} — {:?}", entry.spec(), entry.artifact_path());
+        print!("{}", entry.manifest.to_text());
+        println!("# artifact sections (checksums verified):");
+        for (name, rows, cols) in artifact.section_summaries() {
+            println!("  {name:<18} {rows:>6} x {cols}");
+        }
+        return Ok(());
+    }
+    let names = registry.models()?;
+    if names.is_empty() {
+        println!(
+            "no models in {:?} — train one with `akda train --dataset NAME`",
+            registry.root()
+        );
+        return Ok(());
+    }
+    println!(
+        "{:<16} {:<8} {:<14} {:<12} {:>6} {:>9} {:>9}",
+        "model", "latest", "method", "dataset", "vers", "MAP", "accuracy"
+    );
+    for name in names {
+        let (latest, n_versions) = registry.latest_with_count(&name)?;
+        let mf = &latest.manifest;
+        println!(
+            "{:<16} v{:<7} {:<14} {:<12} {:>6} {:>8.2}% {:>8.2}%",
+            name,
+            latest.version,
+            mf.method,
+            mf.dataset,
+            n_versions,
+            100.0 * mf.map,
+            100.0 * mf.accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use akda::coordinator::{BankHandle, ScoringService};
+    use akda::model::{HotReloader, ModelRegistry};
+    use std::time::Duration;
+
+    // registry path: load a published model — zero training work (the
+    // bank is decoded from checksummed tensors; no fit call anywhere)
+    if let Some(spec) = args.get("model") {
+        // the stored model carries its own hyper-parameters; reject the
+        // training knobs instead of silently ignoring them
+        for flag in ["method", "landmarks", "stream", "block-size", "cond", "pjrt"] {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--{flag} configures training and conflicts with --model \
+                 (the published model's hyper-parameters are used as stored)"
+            );
+        }
+        anyhow::ensure!(
+            !(spec.contains('@') && args.get("watch").is_some()),
+            "--watch tracks the latest version and would override the \
+             pinned {spec:?}; drop --watch or use the bare model name"
+        );
+        let registry = ModelRegistry::open(models_dir(args));
+        let (entry, artifact) = registry.load_artifact(spec)?;
+        // size the service from the checksummed artifact, not the
+        // editable plain-text MANIFEST (which is informational only)
+        let input_dim = akda::model::codec::input_dim(&artifact)?;
+        let bank = akda::model::decode_bank(&artifact)
+            .with_context(|| format!("decoding model {}", entry.spec()))?;
+        let mf = entry.manifest.clone();
+        eprintln!(
+            "loaded {} (method {}, trained on {} [{}], C={}) — no retraining",
+            entry.spec(),
+            mf.method,
+            mf.dataset,
+            mf.condition,
+            bank.svms.len()
+        );
+        // demo traffic comes from the dataset the model was trained on
+        // (or an explicit --dataset override with matching features)
+        let dataset = args.get("dataset").unwrap_or(mf.dataset.as_str());
+        let dspec = akda::data::by_name(dataset)
+            .with_context(|| format!("dataset {dataset:?}"))?;
+        let split = dspec.split(parse_condition(&mf.condition)?);
+        anyhow::ensure!(
+            split.x_test.cols() == input_dim,
+            "dataset {dataset:?} has {} features but {} expects {}",
+            split.x_test.cols(),
+            entry.spec(),
+            input_dim
+        );
+        let handle = BankHandle::new(Arc::new(bank));
+        let watcher = match args.get("watch") {
+            Some(v) => {
+                let poll: f64 =
+                    if v == "true" { 2.0 } else { v.parse().context("--watch SECS")? };
+                anyhow::ensure!(poll > 0.0, "--watch SECS must be positive");
+                eprintln!("watching {:?} for new versions every {poll}s", registry.root());
+                Some(HotReloader::start(
+                    registry.clone(),
+                    entry.name.clone(),
+                    handle.clone(),
+                    entry.version,
+                    input_dim,
+                    Duration::from_secs_f64(poll),
+                ))
+            }
+            None => None,
+        };
+        let svc = ScoringService::start_reloadable(
+            handle,
+            input_dim,
+            64,
+            Duration::from_millis(5),
+        );
+        drive_demo(&svc, &split)?;
+        return match watcher {
+            // --watch means "stay up": keep the service + watcher alive so
+            // newly published versions actually get hot-swapped in
+            Some(_watcher) => {
+                eprintln!(
+                    "demo complete; still serving {} with hot reload — Ctrl-C to stop",
+                    entry.spec()
+                );
+                loop {
+                    std::thread::sleep(Duration::from_secs(60));
+                }
+            }
+            None => Ok(()),
+        };
+    }
+
+    // in-process path: train a bank now, then serve it
+    let ts = parse_train_spec(args)?;
+    eprintln!(
+        "training detector bank on {} (C={}) with {}",
+        ts.dataset,
+        ts.split.n_classes,
+        ts.id.name()
+    );
+    let (bank, train_s) = fit_detector_bank(&ts)?;
+    eprintln!("trained in {train_s:.2}s — tip: `akda train` publishes instead");
+    let svc = ScoringService::start(
+        bank,
+        ts.split.x_train.cols(),
+        64,
+        Duration::from_millis(5),
+    );
+    drive_demo(&svc, &ts.split)
 }
 
 fn cmd_check() -> Result<()> {

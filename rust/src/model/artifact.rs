@@ -1,0 +1,410 @@
+//! The `.akda` model-artifact format: a hand-rolled, versioned, checksummed
+//! binary container for trained-model state. No serde, no external crates —
+//! the whole format is ~200 lines of explicit little-endian encoding so the
+//! on-disk layout is auditable byte by byte.
+//!
+//! # Layout (format version 1)
+//!
+//! ```text
+//! offset 0   magic           8 bytes  b"AKDAMODL"
+//!            format version  u32 LE   (readers reject newer versions)
+//!            meta count      u32 LE
+//!            meta entries    count x (str key, str value)
+//!            section count   u32 LE
+//!            sections        count x section
+//!            file checksum   u64 LE   FNV-1a 64 over every preceding byte
+//!
+//! str     := u32 LE byte length, then that many UTF-8 bytes
+//! section := str name
+//!            u64 LE rows, u64 LE cols
+//!            rows*cols x f64 LE      (row-major tensor payload)
+//!            u64 LE section checksum (FNV-1a 64 over name/shape/payload
+//!                                     bytes of this section)
+//! ```
+//!
+//! Meta entries carry the small, discrete state (method id, projection
+//! kind, class names, integer shapes); every floating-point quantity lives
+//! in an f64 tensor section so save -> load round-trips are bit-for-bit.
+//!
+//! # Integrity
+//!
+//! Two checksum layers: each section checksums its own bytes (localizes
+//! corruption to a named tensor) and the trailing file checksum covers the
+//! whole byte stream including the header and the section checksums.
+//! `from_bytes` verifies the file checksum first — truncation, bit flips,
+//! and magic/version mismatches all fail with a descriptive `Err`, never a
+//! panic or a silently-wrong model. Tensor payload lengths are validated
+//! against the remaining buffer before allocation, so a corrupt shape
+//! cannot trigger an unbounded allocation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Leading magic bytes of every `.akda` artifact.
+pub const MAGIC: &[u8; 8] = b"AKDAMODL";
+
+/// Current writer format version. Readers accept versions `<=` this.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Conventional file name inside a registry version directory.
+pub const ARTIFACT_FILE: &str = "model.akda";
+
+/// An in-memory model artifact: string metadata plus named f64 tensors.
+#[derive(Debug, Clone, Default)]
+pub struct ModelArtifact {
+    /// Discrete state: method id, projection kind, class names, dims.
+    pub meta: BTreeMap<String, String>,
+    /// Named tensor sections in write order.
+    sections: Vec<(String, Mat)>,
+}
+
+impl ModelArtifact {
+    pub fn new() -> Self {
+        ModelArtifact::default()
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: impl Into<String>) {
+        self.meta.insert(key.to_string(), value.into());
+    }
+
+    pub fn meta_str(&self, key: &str) -> Result<&str> {
+        self.meta
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("artifact is missing meta key {key:?}"))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta_str(key)?
+            .parse()
+            .with_context(|| format!("artifact meta key {key:?} is not an integer"))
+    }
+
+    /// Append a named tensor section (names must be unique).
+    pub fn push_tensor(&mut self, name: &str, tensor: Mat) {
+        assert!(
+            self.sections.iter().all(|(n, _)| n != name),
+            "duplicate artifact section {name:?}"
+        );
+        self.sections.push((name.to_string(), tensor));
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Mat> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .with_context(|| format!("artifact is missing tensor section {name:?}"))
+    }
+
+    pub fn has_tensor(&self, name: &str) -> bool {
+        self.sections.iter().any(|(n, _)| n == name)
+    }
+
+    /// Section names with shapes, for `akda models --inspect`.
+    pub fn section_summaries(&self) -> Vec<(String, usize, usize)> {
+        self.sections
+            .iter()
+            .map(|(n, t)| (n.clone(), t.rows(), t.cols()))
+            .collect()
+    }
+
+    /// Serialize to the format described in the module docs.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.meta.len() as u32).to_le_bytes());
+        for (k, v) in &self.meta {
+            write_str(&mut out, k);
+            write_str(&mut out, v);
+        }
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, tensor) in &self.sections {
+            let start = out.len();
+            write_str(&mut out, name);
+            out.extend_from_slice(&(tensor.rows() as u64).to_le_bytes());
+            out.extend_from_slice(&(tensor.cols() as u64).to_le_bytes());
+            for v in tensor.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            let sum = fnv1a64(&out[start..]);
+            out.extend_from_slice(&sum.to_le_bytes());
+        }
+        let file_sum = fnv1a64(&out);
+        out.extend_from_slice(&file_sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully verify an artifact byte stream.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(
+            bytes.len() >= MAGIC.len() + 4 + 8,
+            "artifact truncated: {} bytes is smaller than any valid artifact \
+             (checksum verification impossible)",
+            bytes.len()
+        );
+        ensure!(
+            &bytes[..MAGIC.len()] == MAGIC,
+            "bad artifact magic: not an .akda model file"
+        );
+        // Whole-file checksum first: catches truncation and bit flips
+        // anywhere before we interpret any field.
+        let body_len = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        let actual = fnv1a64(&bytes[..body_len]);
+        ensure!(
+            stored == actual,
+            "artifact file checksum mismatch (stored {stored:#018x}, computed \
+             {actual:#018x}) — file is truncated or corrupt"
+        );
+
+        let mut r = Reader { buf: &bytes[..body_len], pos: MAGIC.len() };
+        let version = r.u32()?;
+        ensure!(
+            version <= FORMAT_VERSION,
+            "artifact format version {version} is newer than this reader \
+             (max {FORMAT_VERSION})"
+        );
+        let n_meta = r.u32()? as usize;
+        let mut meta = BTreeMap::new();
+        for _ in 0..n_meta {
+            let k = r.str()?;
+            let v = r.str()?;
+            meta.insert(k, v);
+        }
+        let n_sections = r.u32()? as usize;
+        let mut sections = Vec::with_capacity(n_sections.min(1024));
+        for _ in 0..n_sections {
+            let start = r.pos;
+            let name = r.str()?;
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let len = rows
+                .checked_mul(cols)
+                .and_then(|n| n.checked_mul(8))
+                .map(|_| rows * cols)
+                .with_context(|| format!("section {name:?}: shape overflow"))?;
+            ensure!(
+                len * 8 <= r.remaining(),
+                "section {name:?} claims {rows}x{cols} f64s but only {} bytes \
+                 remain — artifact truncated or corrupt",
+                r.remaining()
+            );
+            // length is validated above, so decode the payload in one take
+            // (per-element bounds-checked reads are measurably slower on
+            // multi-megabyte kernel-expansion tensors)
+            let payload = r.take(len * 8)?;
+            let data: Vec<f64> = payload
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let computed = fnv1a64(&r.buf[start..r.pos]);
+            let stored = r.u64()?;
+            ensure!(
+                stored == computed,
+                "section {name:?} checksum mismatch — tensor payload corrupt"
+            );
+            sections.push((name, Mat::from_vec(rows, cols, data)));
+        }
+        ensure!(
+            r.remaining() == 0,
+            "{} trailing bytes after the last section — artifact corrupt",
+            r.remaining()
+        );
+        Ok(ModelArtifact { meta, sections })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing artifact {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading artifact {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing artifact {path:?}"))
+    }
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for integrity checks
+/// of a local trusted-path format (this is corruption detection, not
+/// cryptographic authentication).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over the verified body bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "artifact truncated: wanted {n} bytes, {} remain",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        match std::str::from_utf8(bytes) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => bail!("artifact string field is not valid UTF-8"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelArtifact {
+        let mut a = ModelArtifact::new();
+        a.set_meta("method", "akda");
+        a.set_meta("classes", "3");
+        a.push_tensor("psi", Mat::from_fn(4, 2, |r, c| (r * 2 + c) as f64 * 0.5));
+        a.push_tensor("w", Mat::from_fn(1, 3, |_, c| -(c as f64) / 3.0));
+        a
+    }
+
+    #[test]
+    fn roundtrip_preserves_meta_and_tensors_bitwise() {
+        let a = sample();
+        let b = ModelArtifact::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.tensor("psi").unwrap(), b.tensor("psi").unwrap());
+        assert_eq!(a.tensor("w").unwrap(), b.tensor("w").unwrap());
+        assert_eq!(b.section_summaries(), vec![
+            ("psi".to_string(), 4, 2),
+            ("w".to_string(), 1, 3),
+        ]);
+    }
+
+    #[test]
+    fn nonfinite_values_survive_bitwise() {
+        // the format must not normalize payload bits (NaN payloads, -0.0)
+        let mut a = ModelArtifact::new();
+        a.push_tensor(
+            "t",
+            Mat::from_vec(1, 3, vec![f64::NAN, -0.0, f64::INFINITY]),
+        );
+        let b = ModelArtifact::from_bytes(&a.to_bytes()).unwrap();
+        let bits: Vec<u64> =
+            b.tensor("t").unwrap().data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits[0], f64::NAN.to_bits());
+        assert_eq!(bits[1], (-0.0_f64).to_bits());
+        assert_eq!(bits[2], f64::INFINITY.to_bits());
+    }
+
+    #[test]
+    fn every_truncation_point_is_rejected() {
+        let bytes = sample().to_bytes();
+        for cut in 0..bytes.len() {
+            let err = ModelArtifact::from_bytes(&bytes[..cut])
+                .expect_err("truncated artifact must not parse");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("checksum") || msg.contains("truncated"),
+                "cut={cut}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let bytes = sample().to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(
+                ModelArtifact::from_bytes(&bad).is_err(),
+                "bit flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_future_versions() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        // re-seal so only the magic is wrong
+        let n = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..n]).to_le_bytes();
+        bytes[n..].copy_from_slice(&sum);
+        let msg = format!("{:#}", ModelArtifact::from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("magic"), "{msg}");
+
+        let mut bytes = sample().to_bytes();
+        bytes[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let n = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..n]).to_le_bytes();
+        bytes[n..].copy_from_slice(&sum);
+        let msg = format!("{:#}", ModelArtifact::from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("version"), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_shape_cannot_force_a_huge_allocation() {
+        // blow up a section's row count and re-seal both checksums: the
+        // length-vs-remaining check must fire before any allocation
+        let a = sample();
+        let mut bytes = a.to_bytes();
+        // section table starts after magic+version+meta; find "psi" name
+        let pat = b"psi";
+        let at = bytes.windows(pat.len()).position(|w| w == pat).unwrap();
+        let rows_at = at + pat.len();
+        bytes[rows_at..rows_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let n = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..n]).to_le_bytes();
+        bytes[n..].copy_from_slice(&sum);
+        let msg = format!("{:#}", ModelArtifact::from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("overflow") || msg.contains("truncated"), "{msg}");
+    }
+
+    #[test]
+    fn missing_keys_give_descriptive_errors() {
+        let a = sample();
+        assert!(a.tensor("nope").is_err());
+        assert!(a.meta_str("nope").is_err());
+        assert!(a.meta_usize("method").is_err()); // "akda" is not an integer
+        assert_eq!(a.meta_usize("classes").unwrap(), 3);
+    }
+}

@@ -1,0 +1,410 @@
+//! Encode/decode trained state to and from [`ModelArtifact`]s.
+//!
+//! Every servable trained state has a `projection` meta kind and a fixed
+//! set of tensor sections:
+//!
+//! | kind        | concrete type                     | sections |
+//! |-------------|-----------------------------------|----------|
+//! | `identity`  | `da::IdentityProjection`          | — (dims in meta) |
+//! | `kernel`    | `da::KernelProjection` (also saves `runtime::PjrtProjection`) | `kernel.x_train`, `kernel.psi`, optional `kernel.center`, `kernel.params` |
+//! | `linear`    | `da::LinearProjection`            | `linear.w`, `linear.mean` |
+//! | `approx`    | `da::akda_approx::ApproxProjection` | `approx.w` + map sections |
+//! | `blocked`   | `da::akda_stream::BlockedProjection` | `approx.w` + map sections + `blocked.rows` meta |
+//!
+//! Feature maps (meta `approx.map`): `nystrom` saves `map.landmarks` +
+//! `map.whitening` + its kernel; `rff` saves `map.omega` + `map.scale`.
+//! Kernels are a meta kind (`linear`/`rbf`/`poly`) plus a 1×2 f64
+//! parameter section (`<prefix>.params` = `[rho, 0]` for RBF,
+//! `[degree, c]` for poly) so bandwidths round-trip bit-for-bit.
+//!
+//! The detector bank adds the one-vs-rest LSVM state: `svm.w` (C×D) and
+//! `svm.b` (1×C), with class names in `class.<i>.name` meta keys.
+//!
+//! Decoding is the artifact mirror of `coordinator::build_dr`: a
+//! `projection`-kind dispatch that reconstructs the exact concrete type,
+//! so a loaded bank scores bit-for-bit identically to the bank that was
+//! saved (pinned by `tests/model_roundtrip.rs`). Encoding uses the
+//! `Projection::as_any` / `FeatureMap::as_any` introspection hooks to
+//! recover the concrete types from the trait objects the training paths
+//! return.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::artifact::ModelArtifact;
+use crate::approx::{FeatureMap, NystromMap, RffMap};
+use crate::coordinator::DetectorBank;
+use crate::da::akda_approx::ApproxProjection;
+use crate::da::akda_stream::BlockedProjection;
+use crate::da::{IdentityProjection, KernelProjection, LinearProjection, Projection};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::PjrtProjection;
+use crate::svm::LinearSvm;
+
+/// Meta key naming the projection kind (the decode dispatch tag).
+pub const PROJECTION_KEY: &str = "projection";
+/// Meta key for the input dimensionality the projection consumes.
+pub const INPUT_DIM_KEY: &str = "input_dim";
+
+// ---------------------------------------------------------------------------
+// Kernel <-> sections
+// ---------------------------------------------------------------------------
+
+fn encode_kernel(art: &mut ModelArtifact, prefix: &str, kernel: Kernel) {
+    let (kind, p0, p1) = match kernel {
+        Kernel::Linear => ("linear", 0.0, 0.0),
+        Kernel::Rbf { rho } => ("rbf", rho, 0.0),
+        Kernel::Poly { degree, c } => ("poly", degree as f64, c),
+    };
+    art.set_meta(&format!("{prefix}.kind"), kind);
+    art.push_tensor(&format!("{prefix}.params"), Mat::from_vec(1, 2, vec![p0, p1]));
+}
+
+fn decode_kernel(art: &ModelArtifact, prefix: &str) -> Result<Kernel> {
+    let kind = art.meta_str(&format!("{prefix}.kind"))?;
+    let params = art.tensor(&format!("{prefix}.params"))?;
+    ensure!(params.shape() == (1, 2), "{prefix}.params must be 1x2");
+    Ok(match kind {
+        "linear" => Kernel::Linear,
+        "rbf" => Kernel::Rbf { rho: params[(0, 0)] },
+        "poly" => Kernel::Poly { degree: params[(0, 0)] as i32, c: params[(0, 1)] },
+        other => bail!("unknown kernel kind {other:?} in artifact"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Feature map <-> sections
+// ---------------------------------------------------------------------------
+
+fn encode_map(art: &mut ModelArtifact, map: &dyn FeatureMap) -> Result<()> {
+    if let Some(ny) = map.as_any().downcast_ref::<NystromMap>() {
+        art.set_meta("approx.map", "nystrom");
+        encode_kernel(art, "map.kernel", ny.kernel);
+        art.push_tensor("map.landmarks", ny.landmarks.clone());
+        art.push_tensor("map.whitening", ny.whitening().clone());
+    } else if let Some(rff) = map.as_any().downcast_ref::<RffMap>() {
+        art.set_meta("approx.map", "rff");
+        art.push_tensor("map.omega", rff.omega().clone());
+        art.push_tensor("map.scale", Mat::from_vec(1, 1, vec![rff.scale()]));
+    } else {
+        bail!("feature map {:?} has no artifact encoding", map.name());
+    }
+    Ok(())
+}
+
+fn decode_map(art: &ModelArtifact) -> Result<Arc<dyn FeatureMap>> {
+    Ok(match art.meta_str("approx.map")? {
+        "nystrom" => {
+            let kernel = decode_kernel(art, "map.kernel")?;
+            let landmarks = art.tensor("map.landmarks")?.clone();
+            let whitening = art.tensor("map.whitening")?.clone();
+            Arc::new(NystromMap::from_parts(landmarks, kernel, whitening)?)
+        }
+        "rff" => {
+            let omega = art.tensor("map.omega")?.clone();
+            let scale = art.tensor("map.scale")?;
+            ensure!(scale.shape() == (1, 1), "map.scale must be 1x1");
+            Arc::new(RffMap::from_parts(omega, scale[(0, 0)])?)
+        }
+        other => bail!("unknown feature-map kind {other:?} in artifact"),
+    })
+}
+
+fn map_input_dim(map: &dyn FeatureMap) -> Result<usize> {
+    if let Some(ny) = map.as_any().downcast_ref::<NystromMap>() {
+        Ok(ny.landmarks.cols())
+    } else if let Some(rff) = map.as_any().downcast_ref::<RffMap>() {
+        Ok(rff.omega().rows())
+    } else {
+        bail!("feature map {:?} has no artifact encoding", map.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Projection <-> artifact
+// ---------------------------------------------------------------------------
+
+/// Serialize a fitted projection into `art` (kind tag, input dim, tensor
+/// sections). Fails on projection types with no on-disk representation.
+pub fn encode_projection(art: &mut ModelArtifact, proj: &dyn Projection) -> Result<()> {
+    let any = proj.as_any();
+    if let Some(p) = any.downcast_ref::<KernelProjection>() {
+        encode_kernel_expansion(art, &p.x_train, &p.psi, p.kernel, p.center_against.as_ref());
+    } else if let Some(p) = any.downcast_ref::<PjrtProjection>() {
+        // the f32 PJRT engine accelerates training; the persisted model is
+        // the plain kernel expansion it produced, served natively on load
+        let (x_train, psi, kernel) = p.expansion_state();
+        encode_kernel_expansion(art, x_train, psi, kernel, None);
+    } else if let Some(p) = any.downcast_ref::<LinearProjection>() {
+        art.set_meta(PROJECTION_KEY, "linear");
+        art.set_meta(INPUT_DIM_KEY, p.mean.len().to_string());
+        art.push_tensor("linear.w", p.w.clone());
+        art.push_tensor("linear.mean", Mat::from_vec(1, p.mean.len(), p.mean.clone()));
+    } else if let Some(p) = any.downcast_ref::<ApproxProjection>() {
+        art.set_meta(PROJECTION_KEY, "approx");
+        art.set_meta(INPUT_DIM_KEY, map_input_dim(p.map.as_ref())?.to_string());
+        encode_map(art, p.map.as_ref())?;
+        art.push_tensor("approx.w", p.w.clone());
+    } else if let Some(p) = any.downcast_ref::<BlockedProjection>() {
+        art.set_meta(PROJECTION_KEY, "blocked");
+        art.set_meta(INPUT_DIM_KEY, map_input_dim(p.map.as_ref())?.to_string());
+        art.set_meta("blocked.rows", p.block_rows.to_string());
+        encode_map(art, p.map.as_ref())?;
+        art.push_tensor("approx.w", p.w.clone());
+    } else if let Some(p) = any.downcast_ref::<IdentityProjection>() {
+        art.set_meta(PROJECTION_KEY, "identity");
+        art.set_meta(INPUT_DIM_KEY, p.dim().to_string());
+    } else {
+        bail!("projection type has no artifact encoding (unknown concrete type)");
+    }
+    Ok(())
+}
+
+fn encode_kernel_expansion(
+    art: &mut ModelArtifact,
+    x_train: &Mat,
+    psi: &Mat,
+    kernel: Kernel,
+    center: Option<&Mat>,
+) {
+    art.set_meta(PROJECTION_KEY, "kernel");
+    art.set_meta(INPUT_DIM_KEY, x_train.cols().to_string());
+    encode_kernel(art, "kernel", kernel);
+    art.push_tensor("kernel.x_train", x_train.clone());
+    art.push_tensor("kernel.psi", psi.clone());
+    if let Some(k_train) = center {
+        art.push_tensor("kernel.center", k_train.clone());
+    }
+}
+
+/// Reconstruct the concrete projection from an artifact — the load-path
+/// mirror of `coordinator::build_dr`'s method dispatch, keyed on the
+/// `projection` meta kind instead of a `MethodId`. Performs no training:
+/// every tensor is used exactly as stored.
+pub fn decode_projection(art: &ModelArtifact) -> Result<Box<dyn Projection>> {
+    Ok(match art.meta_str(PROJECTION_KEY)? {
+        "kernel" => {
+            let x_train = art.tensor("kernel.x_train")?.clone();
+            let psi = art.tensor("kernel.psi")?.clone();
+            ensure!(
+                x_train.rows() == psi.rows(),
+                "kernel expansion mismatch: {} support points vs {} psi rows",
+                x_train.rows(),
+                psi.rows()
+            );
+            let center_against = if art.has_tensor("kernel.center") {
+                Some(art.tensor("kernel.center")?.clone())
+            } else {
+                None
+            };
+            Box::new(KernelProjection {
+                x_train,
+                psi,
+                kernel: decode_kernel(art, "kernel")?,
+                center_against,
+            })
+        }
+        "linear" => {
+            let w = art.tensor("linear.w")?.clone();
+            let mean = art.tensor("linear.mean")?;
+            ensure!(
+                mean.rows() == 1 && mean.cols() == w.rows(),
+                "linear projection mismatch: mean 1x{} vs w {}x{}",
+                mean.cols(),
+                w.rows(),
+                w.cols()
+            );
+            Box::new(LinearProjection { w, mean: mean.data().to_vec() })
+        }
+        "approx" => {
+            let map = decode_map(art)?;
+            let w = decode_approx_w(art, map.as_ref())?;
+            Box::new(ApproxProjection { map, w })
+        }
+        "blocked" => {
+            let map = decode_map(art)?;
+            let w = decode_approx_w(art, map.as_ref())?;
+            let block_rows = art.meta_usize("blocked.rows")?.max(1);
+            Box::new(BlockedProjection { map, w, block_rows })
+        }
+        "identity" => Box::new(IdentityProjection::new(art.meta_usize(INPUT_DIM_KEY)?)),
+        other => bail!("unknown projection kind {other:?} in artifact"),
+    })
+}
+
+fn decode_approx_w(art: &ModelArtifact, map: &dyn FeatureMap) -> Result<Mat> {
+    let w = art.tensor("approx.w")?.clone();
+    ensure!(
+        w.rows() == map.dim(),
+        "approx weights mismatch: map dim {} vs w rows {}",
+        map.dim(),
+        w.rows()
+    );
+    Ok(w)
+}
+
+// ---------------------------------------------------------------------------
+// Detector bank <-> artifact
+// ---------------------------------------------------------------------------
+
+/// Serialize a full trained detector bank (projection + OvR LSVM bank)
+/// into a fresh artifact. `method` is the training `MethodId` name,
+/// recorded for inspection and manifest generation.
+pub fn encode_bank(bank: &DetectorBank, method: &str) -> Result<ModelArtifact> {
+    let mut art = ModelArtifact::new();
+    art.set_meta("method", method);
+    encode_projection(&mut art, bank.projection.as_ref())?;
+    let c = bank.svms.len();
+    ensure!(c > 0, "cannot save a detector bank with no detectors");
+    let d = bank.svms[0].1.w.len();
+    ensure!(
+        bank.svms.iter().all(|(_, s)| s.w.len() == d),
+        "all OvR detectors must share the projected dimensionality"
+    );
+    art.set_meta("classes", c.to_string());
+    for (i, (name, _)) in bank.svms.iter().enumerate() {
+        art.set_meta(&format!("class.{i}.name"), name.clone());
+    }
+    art.push_tensor("svm.w", Mat::from_fn(c, d, |i, j| bank.svms[i].1.w[j]));
+    art.push_tensor(
+        "svm.b",
+        Mat::from_fn(1, c, |_, j| bank.svms[j].1.b),
+    );
+    Ok(art)
+}
+
+/// Reconstruct a detector bank from an artifact. Pure deserialization —
+/// no `fit` call anywhere on this path (the `serve --model` guarantee).
+pub fn decode_bank(art: &ModelArtifact) -> Result<DetectorBank> {
+    let projection = decode_projection(art)?;
+    let c = art.meta_usize("classes")?;
+    let w = art.tensor("svm.w")?;
+    let b = art.tensor("svm.b")?;
+    ensure!(
+        w.rows() == c && b.shape() == (1, c),
+        "SVM bank mismatch: classes={c}, svm.w {}x{}, svm.b {}x{}",
+        w.rows(),
+        w.cols(),
+        b.rows(),
+        b.cols()
+    );
+    ensure!(
+        w.cols() == projection.dim(),
+        "SVM bank dimensionality {} does not match projection dim {}",
+        w.cols(),
+        projection.dim()
+    );
+    let svms = (0..c)
+        .map(|i| {
+            let name = art
+                .meta_str(&format!("class.{i}.name"))
+                .map(|s| s.to_string())
+                .unwrap_or_else(|_| format!("class{i}"));
+            Ok((name, LinearSvm { w: w.row(i).to_vec(), b: b[(0, i)] }))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DetectorBank { projection, svms })
+}
+
+/// The input dimensionality a decoded bank's scoring service must accept.
+pub fn input_dim(art: &ModelArtifact) -> Result<usize> {
+    art.meta_usize(INPUT_DIM_KEY)
+        .context("artifact has no input_dim — not a bank artifact?")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::da::DrMethod;
+
+    fn roundtrip(proj: &dyn Projection, x: &Mat) {
+        let mut art = ModelArtifact::new();
+        encode_projection(&mut art, proj).unwrap();
+        let art = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let loaded = decode_projection(&art).unwrap();
+        assert_eq!(loaded.dim(), proj.dim());
+        let (a, b) = (proj.project(x), loaded.project(x));
+        assert_eq!(a, b, "projection must round-trip bit-for-bit");
+    }
+
+    fn toy() -> (Mat, Vec<usize>) {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x = Mat::from_fn(26, 5, |r, _| (r % 2) as f64 * 3.0 + rng.normal());
+        let labels = (0..26).map(|i| i % 2).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn kernel_projection_roundtrips_bitwise() {
+        let (x, labels) = toy();
+        let proj = crate::da::akda::Akda::new(Kernel::Rbf { rho: 0.37 })
+            .fit(&x, &labels, 2)
+            .unwrap();
+        roundtrip(proj.as_ref(), &x);
+    }
+
+    #[test]
+    fn centered_kernel_projection_keeps_its_centering() {
+        let (x, labels) = toy();
+        let proj = crate::da::gda::Gda { kernel: Kernel::Rbf { rho: 0.3 }, eps: 1e-3 }
+            .fit(&x, &labels, 2)
+            .unwrap();
+        let mut art = ModelArtifact::new();
+        encode_projection(&mut art, proj.as_ref()).unwrap();
+        assert!(art.has_tensor("kernel.center"));
+        roundtrip(proj.as_ref(), &x);
+    }
+
+    #[test]
+    fn linear_and_identity_projections_roundtrip() {
+        let (x, labels) = toy();
+        let proj = crate::da::pca::Pca::new().fit(&x, &labels, 2).unwrap();
+        roundtrip(proj.as_ref(), &x);
+        let ident = IdentityProjection::new(5);
+        roundtrip(&ident, &x);
+    }
+
+    #[test]
+    fn poly_and_linear_kernels_roundtrip_through_params() {
+        let (x, labels) = toy();
+        for kernel in [Kernel::Linear, Kernel::Poly { degree: 3, c: 1.25 }] {
+            let proj = crate::da::akda::Akda::new(kernel).fit(&x, &labels, 2).unwrap();
+            roundtrip(proj.as_ref(), &x);
+        }
+    }
+
+    #[test]
+    fn approx_and_blocked_projections_roundtrip() {
+        use crate::da::akda_approx::AkdaApprox;
+        let (x, labels) = toy();
+        for cfg in [
+            AkdaApprox::nystrom(Kernel::Rbf { rho: 0.4 }, 8),
+            AkdaApprox::rff(Kernel::Rbf { rho: 0.4 }, 32),
+        ] {
+            let proj = cfg.fit(&x, &labels, 2).unwrap();
+            roundtrip(proj.as_ref(), &x);
+            // the same state served through the tiled projection
+            let ap = proj.as_any().downcast_ref::<ApproxProjection>().unwrap();
+            let blocked = BlockedProjection {
+                map: ap.map.clone(),
+                w: ap.w.clone(),
+                block_rows: 7,
+            };
+            roundtrip(&blocked, &x);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_cross_wired_sections() {
+        // a kernel artifact with psi rows != support points must not load
+        let mut art = ModelArtifact::new();
+        art.set_meta(PROJECTION_KEY, "kernel");
+        art.set_meta(INPUT_DIM_KEY, "3");
+        encode_kernel(&mut art, "kernel", Kernel::Rbf { rho: 0.5 });
+        art.push_tensor("kernel.x_train", Mat::zeros(4, 3));
+        art.push_tensor("kernel.psi", Mat::zeros(5, 1));
+        assert!(decode_projection(&art).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Trained-model artifact subsystem: persist, version, and hot-serve AKDA
+//! models without retraining.
+//!
+//! The paper makes *training* cheap (core-matrix NZEP + Cholesky instead
+//! of simultaneous reduction), but a serving system also needs the result
+//! of that training to be durable: a detector bank that took a training
+//! pass to build should be loadable in milliseconds, rolled forward and
+//! back by version, and replaceable under a live scoring service. This
+//! module is that fourth layer — train → **publish → load** → serve:
+//!
+//! * [`artifact`] — the `.akda` on-disk format: a hand-rolled, versioned,
+//!   checksummed binary container (magic, format version, string meta,
+//!   named f64 tensor sections; per-section and whole-file FNV-1a 64
+//!   checksums). No dependencies, bit-for-bit round-trips.
+//! * [`codec`] — encode/decode between the trait objects the training
+//!   paths produce (`Box<dyn Projection>`, the OvR `LinearSvm` bank) and
+//!   artifacts, via the `Projection::as_any` / `FeatureMap::as_any`
+//!   introspection hooks. Covers every servable state: exact kernel
+//!   expansions (AKDA/AKSDA/KDA/GDA/SRKDA/KSDA, incl. PJRT-trained),
+//!   linear projections (PCA/LDA), approximate W + Nyström/RFF maps, and
+//!   the streaming `BlockedProjection`.
+//! * [`registry`] — the models directory
+//!   (`<dir>/<name>/<version>/{model.akda,MANIFEST}`): list/latest/
+//!   resolve, atomic write-temp-then-rename publish, and an
+//!   mtime/version-polling [`registry::HotReloader`] that swaps freshly
+//!   published models into a running `ScoringService` through its
+//!   [`coordinator::BankHandle`](crate::coordinator::BankHandle).
+//!
+//! The CLI surface is `akda train` (fit → eval → publish), `akda models`
+//! (list/inspect) and `akda serve --model NAME[@VERSION]` (load and
+//! serve with zero training work). `tests/model_roundtrip.rs` pins the
+//! core guarantee: for every servable method, a published-then-loaded
+//! model scores the test set bit-for-bit identically to the freshly
+//! trained one, and corrupt artifacts fail with checksum errors instead
+//! of panics or silently wrong models.
+
+pub mod artifact;
+pub mod codec;
+pub mod registry;
+
+pub use artifact::ModelArtifact;
+pub use codec::{decode_bank, encode_bank};
+pub use registry::{HotReloader, ModelManifest, ModelRegistry, ModelVersion};

@@ -1,0 +1,687 @@
+//! Directory-backed model registry: versioned publish, lookup, and
+//! hot-reload of trained `.akda` artifacts.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! <models-dir>/
+//!   <name>/                 one directory per model name
+//!     1/                    integer versions, monotonically increasing
+//!       model.akda          the checksummed binary artifact
+//!       MANIFEST            plain-text `key = value` metadata
+//!     2/
+//!       ...
+//!     .tmp-<pid>-<nonce>/   in-flight publish staging (never read)
+//! ```
+//!
+//! A publish stages the artifact + manifest into a hidden `.tmp-*`
+//! directory and `rename`s it to the next version number — on POSIX a
+//! same-filesystem rename is atomic, so readers either see a complete
+//! version directory or none at all; a concurrent publisher losing the
+//! rename race simply retries with the next number. Versions are
+//! immutable once published.
+//!
+//! # Hot reload
+//!
+//! [`HotReloader`] polls a model's latest `(version, mtime)` pair on an
+//! interval; when a newer version lands it decodes the artifact off the
+//! serving thread and swaps it into the `ScoringService`'s
+//! [`BankHandle`]. Swaps are rejected (with a logged reason) when the new
+//! model's input dimensionality differs from what the running service
+//! accepts, so a bad publish cannot wedge a live endpoint.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::artifact::{ModelArtifact, ARTIFACT_FILE};
+use super::codec;
+use crate::coordinator::{BankHandle, DetectorBank};
+
+/// Manifest file name inside a version directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Plain-text metadata published next to every artifact. Everything here
+/// is informational (the binary artifact is self-contained); the manifest
+/// exists so `akda models` and humans can inspect a registry with `cat`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelManifest {
+    /// Model name (set by `publish`).
+    pub name: String,
+    /// Version number (set by `publish`).
+    pub version: u32,
+    /// Training method id (`akda`, `aksda`, `akda-nystrom`, ...).
+    pub method: String,
+    /// Registry dataset the model was trained on.
+    pub dataset: String,
+    /// Condition name (`10Ex` / `100Ex`).
+    pub condition: String,
+    /// Hyper-parameters of the final fit.
+    pub rho: f64,
+    pub c: f64,
+    pub h: usize,
+    pub m: usize,
+    /// Streaming tile height, when trained out of core.
+    pub stream_block: Option<usize>,
+    pub n_classes: usize,
+    pub input_dim: usize,
+    /// Wall-clock training seconds (fit + SVM bank).
+    pub train_s: f64,
+    /// Train-time evaluation on the held-out test split.
+    pub map: f64,
+    pub accuracy: f64,
+    /// Publish time, seconds since the Unix epoch.
+    pub created_unix: u64,
+}
+
+impl ModelManifest {
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let mut kv = |k: &str, v: String| {
+            s.push_str(k);
+            s.push_str(" = ");
+            s.push_str(&v);
+            s.push('\n');
+        };
+        kv("name", self.name.clone());
+        kv("version", self.version.to_string());
+        kv("method", self.method.clone());
+        kv("dataset", self.dataset.clone());
+        kv("condition", self.condition.clone());
+        kv("rho", self.rho.to_string());
+        kv("c", self.c.to_string());
+        kv("h", self.h.to_string());
+        kv("m", self.m.to_string());
+        if let Some(b) = self.stream_block {
+            kv("stream_block", b.to_string());
+        }
+        kv("n_classes", self.n_classes.to_string());
+        kv("input_dim", self.input_dim.to_string());
+        kv("train_s", self.train_s.to_string());
+        kv("map", self.map.to_string());
+        kv("accuracy", self.accuracy.to_string());
+        kv("created_unix", self.created_unix.to_string());
+        s
+    }
+
+    /// Parse a manifest; unknown keys are ignored (newer writers may add
+    /// fields), missing keys keep their defaults.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut m = ModelManifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: expected key = value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let ctx = || format!("manifest key {k:?}");
+            match k {
+                "name" => m.name = v.to_string(),
+                "version" => m.version = v.parse().with_context(ctx)?,
+                "method" => m.method = v.to_string(),
+                "dataset" => m.dataset = v.to_string(),
+                "condition" => m.condition = v.to_string(),
+                "rho" => m.rho = v.parse().with_context(ctx)?,
+                "c" => m.c = v.parse().with_context(ctx)?,
+                "h" => m.h = v.parse().with_context(ctx)?,
+                "m" => m.m = v.parse().with_context(ctx)?,
+                "stream_block" => m.stream_block = Some(v.parse().with_context(ctx)?),
+                "n_classes" => m.n_classes = v.parse().with_context(ctx)?,
+                "input_dim" => m.input_dim = v.parse().with_context(ctx)?,
+                "train_s" => m.train_s = v.parse().with_context(ctx)?,
+                "map" => m.map = v.parse().with_context(ctx)?,
+                "accuracy" => m.accuracy = v.parse().with_context(ctx)?,
+                "created_unix" => m.created_unix = v.parse().with_context(ctx)?,
+                _ => {} // forward compatibility
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// One published model version on disk.
+#[derive(Debug, Clone)]
+pub struct ModelVersion {
+    pub name: String,
+    pub version: u32,
+    /// The version directory (`<root>/<name>/<version>`).
+    pub dir: PathBuf,
+    pub manifest: ModelManifest,
+}
+
+impl ModelVersion {
+    pub fn artifact_path(&self) -> PathBuf {
+        self.dir.join(ARTIFACT_FILE)
+    }
+
+    /// `name@version` — the spec string `resolve` accepts.
+    pub fn spec(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+}
+
+/// A models directory. Cheap to construct; every operation re-reads the
+/// filesystem so concurrent publishers/consumers stay coherent.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    root: PathBuf,
+}
+
+impl ModelRegistry {
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        ModelRegistry { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Model names with at least one published version, sorted.
+    pub fn models(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(names),
+            Err(e) => return Err(e).context("reading models dir"),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if entry.file_type()?.is_dir()
+                && !name.starts_with('.')
+                && !self.versions(&name)?.is_empty()
+            {
+                names.push(name);
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Published version numbers of `name`, ascending (empty if none).
+    pub fn versions(&self, name: &str) -> Result<Vec<u32>> {
+        let dir = self.root.join(name);
+        let mut versions = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(versions),
+            Err(e) => return Err(e).with_context(|| format!("reading model dir {dir:?}")),
+        };
+        for entry in entries {
+            let entry = entry?;
+            if !entry.file_type()?.is_dir() {
+                continue;
+            }
+            if let Ok(v) = entry.file_name().to_string_lossy().parse::<u32>() {
+                // only count complete versions (artifact present)
+                if entry.path().join(ARTIFACT_FILE).is_file() {
+                    versions.push(v);
+                }
+            }
+        }
+        versions.sort_unstable();
+        Ok(versions)
+    }
+
+    fn version_entry(&self, name: &str, version: u32) -> Result<ModelVersion> {
+        let dir = self.root.join(name).join(version.to_string());
+        let manifest_text = std::fs::read_to_string(dir.join(MANIFEST_FILE))
+            .with_context(|| format!("reading manifest for {name}@{version}"))?;
+        Ok(ModelVersion {
+            name: name.to_string(),
+            version,
+            dir,
+            manifest: ModelManifest::from_text(&manifest_text)?,
+        })
+    }
+
+    /// The newest published version of `name`.
+    pub fn latest(&self, name: &str) -> Result<ModelVersion> {
+        self.latest_with_count(name).map(|(entry, _)| entry)
+    }
+
+    /// The newest published version plus the total version count, from one
+    /// directory scan (what `akda models` lists per row).
+    pub fn latest_with_count(&self, name: &str) -> Result<(ModelVersion, usize)> {
+        let versions = self.versions(name)?;
+        let &v = versions
+            .last()
+            .with_context(|| format!("no published versions of model {name:?}"))?;
+        Ok((self.version_entry(name, v)?, versions.len()))
+    }
+
+    /// Resolve a `NAME` or `NAME@VERSION` spec. Names are validated on
+    /// this read path too (symmetric with `publish`), so a spec can never
+    /// traverse outside the registry root.
+    pub fn resolve(&self, spec: &str) -> Result<ModelVersion> {
+        match spec.split_once('@') {
+            Some((name, v)) => {
+                validate_name(name)?;
+                let version: u32 = v
+                    .parse()
+                    .with_context(|| format!("bad version in model spec {spec:?}"))?;
+                ensure!(
+                    self.versions(name)?.contains(&version),
+                    "model {name:?} has no published version {version}"
+                );
+                self.version_entry(name, version)
+            }
+            None => {
+                validate_name(spec)?;
+                self.latest(spec)
+            }
+        }
+    }
+
+    /// Load and fully verify the artifact of a resolved version.
+    pub fn load_artifact(&self, spec: &str) -> Result<(ModelVersion, ModelArtifact)> {
+        let entry = self.resolve(spec)?;
+        let artifact = ModelArtifact::load(&entry.artifact_path())?;
+        Ok((entry, artifact))
+    }
+
+    /// Load a servable detector bank: resolve, verify checksums, decode.
+    /// Pure deserialization — no training anywhere on this path.
+    pub fn load_bank(&self, spec: &str) -> Result<(ModelVersion, DetectorBank)> {
+        let (entry, artifact) = self.load_artifact(spec)?;
+        let bank = codec::decode_bank(&artifact)
+            .with_context(|| format!("decoding model {}", entry.spec()))?;
+        Ok((entry, bank))
+    }
+
+    /// Atomically publish `artifact` as the next version of `name`:
+    /// stage into a hidden temp directory, then rename it to the version
+    /// number. Returns the published entry. The `name`/`version`/
+    /// `created_unix` fields of `manifest` are filled in here.
+    pub fn publish(
+        &self,
+        name: &str,
+        artifact: &ModelArtifact,
+        manifest: &ModelManifest,
+    ) -> Result<ModelVersion> {
+        validate_name(name)?;
+        let model_dir = self.root.join(name);
+        std::fs::create_dir_all(&model_dir)
+            .with_context(|| format!("creating model dir {model_dir:?}"))?;
+        let bytes = artifact.to_bytes();
+        let created_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+
+        // stage once, then race on the rename: losing just means another
+        // publisher took our number — retry with the next one
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let tmp = model_dir.join(format!(".tmp-{}-{nonce}", std::process::id()));
+        std::fs::create_dir(&tmp).with_context(|| format!("staging dir {tmp:?}"))?;
+        // the artifact bytes are version-independent: stage them once; a
+        // version-collision retry only needs to rewrite the MANIFEST
+        if let Err(e) = std::fs::write(tmp.join(ARTIFACT_FILE), &bytes) {
+            let _ = std::fs::remove_dir_all(&tmp);
+            return Err(e).with_context(|| format!("staging artifact for {name:?}"));
+        }
+        let publish_attempt = |version: u32| -> Result<Option<ModelVersion>> {
+            let mut mf = manifest.clone();
+            mf.name = name.to_string();
+            mf.version = version;
+            mf.created_unix = created_unix;
+            std::fs::write(tmp.join(MANIFEST_FILE), mf.to_text())?;
+            let dst = model_dir.join(version.to_string());
+            match std::fs::rename(&tmp, &dst) {
+                Ok(()) => Ok(Some(ModelVersion {
+                    name: name.to_string(),
+                    version,
+                    dir: dst,
+                    manifest: mf,
+                })),
+                // the version dir appeared between our scan and the rename
+                // (EEXIST/ENOTEMPTY — detected portably via the dst probe
+                // rather than ErrorKind, which only gained DirectoryNotEmpty
+                // in recent Rust)
+                Err(_) if dst.exists() => Ok(None),
+                Err(e) => Err(e).with_context(|| format!("publishing {name}@{version}")),
+            }
+        };
+
+        let mut version = self.versions(name)?.last().copied().unwrap_or(0) + 1;
+        for _ in 0..64 {
+            match publish_attempt(version) {
+                Ok(Some(entry)) => return Ok(entry),
+                Ok(None) => version += 1,
+                Err(e) => {
+                    let _ = std::fs::remove_dir_all(&tmp);
+                    return Err(e);
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+        bail!("could not claim a version slot for model {name:?} after 64 attempts")
+    }
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    ensure!(!name.is_empty(), "model name must not be empty");
+    ensure!(
+        name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+        "model name {name:?} must be [A-Za-z0-9_-] (it becomes a directory \
+         name and the @-spec syntax)"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Hot reload
+// ---------------------------------------------------------------------------
+
+/// Background watcher that polls the registry and swaps newly published
+/// versions of one model into a [`BankHandle`] — the serving side of the
+/// train → publish → load loop. Drop (or `stop`) to halt the watcher; the
+/// scoring service itself is untouched either way.
+pub struct HotReloader {
+    stop: Arc<AtomicBool>,
+    reloads: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HotReloader {
+    /// Watch `name` in `registry`, swapping newer versions into `bank`.
+    /// `loaded_version` is what the service currently serves;
+    /// `expected_input_dim` guards against swapping in a model the running
+    /// clients cannot feed. Polls every `poll` (artifact decode happens on
+    /// the watcher thread, never blocking the scoring loop).
+    pub fn start(
+        registry: ModelRegistry,
+        name: String,
+        bank: BankHandle,
+        loaded_version: u32,
+        expected_input_dim: usize,
+        poll: Duration,
+    ) -> HotReloader {
+        let stop = Arc::new(AtomicBool::new(false));
+        let reloads = Arc::new(AtomicUsize::new(0));
+        let (stop2, reloads2) = (stop.clone(), reloads.clone());
+        let handle = std::thread::Builder::new()
+            .name("akda-model-watch".into())
+            .spawn(move || {
+                // (version, artifact mtime) last examined — starts at what
+                // the service loaded; versions are immutable so version
+                // alone almost always suffices, the mtime catches a
+                // replaced artifact file
+                let mut current: (u32, Option<std::time::SystemTime>) =
+                    (loaded_version, None);
+                while !stop2.load(Ordering::Relaxed) {
+                    match Self::poll_once(
+                        &registry,
+                        &name,
+                        &bank,
+                        expected_input_dim,
+                        &mut current,
+                    ) {
+                        Ok(true) => {
+                            reloads2.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Ok(false) => {}
+                        Err(e) => {
+                            eprintln!("model watch: reload of {name:?} failed: {e:#}");
+                        }
+                    }
+                    std::thread::sleep(poll);
+                }
+            })
+            .expect("spawn model watcher");
+        HotReloader { stop, reloads, handle: Some(handle) }
+    }
+
+    /// One poll step: returns whether a swap happened. `examined` is the
+    /// (version, artifact mtime) pair last looked at — it is advanced
+    /// *before* the load/decode attempt, so a version that fails to load
+    /// or is rejected is examined (and logged) once, not re-read and
+    /// re-checksummed on every poll; a republished artifact changes the
+    /// mtime and is picked up again.
+    fn poll_once(
+        registry: &ModelRegistry,
+        name: &str,
+        bank: &BankHandle,
+        expected_input_dim: usize,
+        examined: &mut (u32, Option<std::time::SystemTime>),
+    ) -> Result<bool> {
+        let latest = match registry.latest(name) {
+            Ok(l) => l,
+            // a registry that is momentarily empty (e.g. being re-created)
+            // is not an error worth spamming the log for
+            Err(_) => return Ok(false),
+        };
+        let mtime = std::fs::metadata(latest.artifact_path())
+            .and_then(|m| m.modified())
+            .ok();
+        // never auto-downgrade: if version dirs were deleted so the latest
+        // is older than what we serve, keep serving what we have
+        if latest.version < examined.0 {
+            return Ok(false);
+        }
+        if latest.version == examined.0 {
+            match (examined.1, mtime) {
+                // first sighting: record the mtime, nothing changed
+                (None, m) => {
+                    examined.1 = m;
+                    return Ok(false);
+                }
+                // transient metadata failure on an unchanged version is
+                // "unchanged", not a reload trigger (avoids oscillating
+                // re-decodes when mtime is briefly unreadable)
+                (Some(_), None) => return Ok(false),
+                (Some(a), Some(b)) if a == b => return Ok(false),
+                // genuinely replaced artifact file: fall through and reload
+                _ => {}
+            }
+        }
+        *examined = (latest.version, mtime);
+        let (entry, artifact) = registry.load_artifact(&latest.spec())?;
+        let dim = codec::input_dim(&artifact)?;
+        ensure!(
+            dim == expected_input_dim,
+            "refusing to hot-swap {}: input dim {} != served dim {}",
+            entry.spec(),
+            dim,
+            expected_input_dim
+        );
+        let new_bank = codec::decode_bank(&artifact)?;
+        bank.swap(Arc::new(new_bank));
+        eprintln!("model watch: hot-reloaded {}", entry.spec());
+        Ok(true)
+    }
+
+    /// Number of successful hot swaps so far.
+    pub fn reloads(&self) -> usize {
+        self.reloads.load(Ordering::SeqCst)
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HotReloader {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("akda_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_artifact(seed: f64) -> ModelArtifact {
+        let mut a = ModelArtifact::new();
+        a.set_meta("method", "test");
+        a.push_tensor("t", Mat::from_fn(2, 2, |r, c| seed + (r * 2 + c) as f64));
+        a
+    }
+
+    #[test]
+    fn manifest_text_roundtrips() {
+        let mf = ModelManifest {
+            name: "demo".into(),
+            version: 3,
+            method: "akda-nystrom".into(),
+            dataset: "eth80".into(),
+            condition: "100Ex".into(),
+            rho: 0.05,
+            c: 1.0,
+            h: 2,
+            m: 64,
+            stream_block: Some(256),
+            n_classes: 8,
+            input_dim: 64,
+            train_s: 1.25,
+            map: 0.97,
+            accuracy: 0.95,
+            created_unix: 1_760_000_000,
+        };
+        let back = ModelManifest::from_text(&mf.to_text()).unwrap();
+        assert_eq!(mf, back);
+        // no stream_block line when trained in memory
+        let mf2 = ModelManifest { stream_block: None, ..mf };
+        let text = mf2.to_text();
+        assert!(!text.contains("stream_block"));
+        assert_eq!(ModelManifest::from_text(&text).unwrap().stream_block, None);
+    }
+
+    #[test]
+    fn publish_assigns_increasing_versions_and_latest_wins() {
+        let root = tmpdir("versions");
+        let reg = ModelRegistry::open(&root);
+        assert!(reg.models().unwrap().is_empty());
+        assert!(reg.latest("demo").is_err());
+
+        let mf = ModelManifest { method: "akda".into(), ..Default::default() };
+        let v1 = reg.publish("demo", &tiny_artifact(0.0), &mf).unwrap();
+        let v2 = reg.publish("demo", &tiny_artifact(10.0), &mf).unwrap();
+        assert_eq!((v1.version, v2.version), (1, 2));
+        assert_eq!(reg.versions("demo").unwrap(), vec![1, 2]);
+        assert_eq!(reg.models().unwrap(), vec!["demo".to_string()]);
+
+        let latest = reg.latest("demo").unwrap();
+        assert_eq!(latest.version, 2);
+        assert_eq!(latest.manifest.name, "demo");
+        // resolve both spec forms
+        assert_eq!(reg.resolve("demo").unwrap().version, 2);
+        assert_eq!(reg.resolve("demo@1").unwrap().version, 1);
+        assert!(reg.resolve("demo@9").is_err());
+
+        // artifacts round-trip through the registry path
+        let (_, art) = reg.load_artifact("demo@1").unwrap();
+        assert_eq!(art.tensor("t").unwrap()[(0, 0)], 0.0);
+        let (_, art) = reg.load_artifact("demo").unwrap();
+        assert_eq!(art.tensor("t").unwrap()[(0, 0)], 10.0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn publish_is_staged_no_partial_version_dirs() {
+        let root = tmpdir("staging");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        reg.publish("m", &tiny_artifact(1.0), &mf).unwrap();
+        // no stray staging dirs survive a successful publish
+        let leftovers: Vec<_> = std::fs::read_dir(root.join("m"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.starts_with('.'))
+            .collect();
+        assert!(leftovers.is_empty(), "staging dirs left behind: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bad_model_names_are_rejected() {
+        let root = tmpdir("names");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        for bad in ["", "a/b", "a@1", "a b", "..", ".hidden"] {
+            assert!(reg.publish(bad, &tiny_artifact(0.0), &mf).is_err(), "{bad:?}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn read_path_rejects_traversal_specs() {
+        let root = tmpdir("traversal");
+        let reg = ModelRegistry::open(&root);
+        reg.publish("good", &tiny_artifact(0.0), &ModelManifest::default()).unwrap();
+        for bad in ["../good", "..", "a/b", "../good@1", "a/b@2"] {
+            assert!(reg.resolve(bad).is_err(), "{bad:?} must not resolve");
+            assert!(reg.load_artifact(bad).is_err(), "{bad:?} must not load");
+        }
+        assert!(reg.resolve("good").is_ok());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn poll_once_examines_a_bad_version_only_once() {
+        use crate::coordinator::DetectorBank;
+        use crate::da::IdentityProjection;
+        use crate::svm::LinearSvm;
+
+        let root = tmpdir("badpoll");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        reg.publish("m", &tiny_artifact(1.0), &mf).unwrap(); // v1 = "served"
+        let bank = DetectorBank {
+            projection: Box::new(IdentityProjection::new(2)),
+            svms: vec![("c0".into(), LinearSvm { w: vec![0.0; 2], b: 0.0 })],
+        };
+        let handle = BankHandle::new(Arc::new(bank));
+        let mut examined = (1u32, None);
+        // same version: records the mtime, no swap
+        assert!(!HotReloader::poll_once(&reg, "m", &handle, 2, &mut examined).unwrap());
+        // v2 is not a decodable bank (tiny_artifact has no projection/meta)
+        reg.publish("m", &tiny_artifact(2.0), &mf).unwrap();
+        assert!(HotReloader::poll_once(&reg, "m", &handle, 2, &mut examined).is_err());
+        // the bad version was marked examined: no re-read, no error loop
+        assert!(!HotReloader::poll_once(&reg, "m", &handle, 2, &mut examined).unwrap());
+        assert_eq!(handle.generation(), 0, "bad version must never swap in");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn incomplete_version_dirs_are_invisible() {
+        let root = tmpdir("incomplete");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        reg.publish("m", &tiny_artifact(1.0), &mf).unwrap();
+        // a version dir without an artifact (crashed publisher simulation)
+        std::fs::create_dir_all(root.join("m").join("7")).unwrap();
+        assert_eq!(reg.versions("m").unwrap(), vec![1]);
+        assert_eq!(reg.latest("m").unwrap().version, 1);
+        // the next publish must not collide with the junk dir either
+        let v = reg.publish("m", &tiny_artifact(2.0), &mf).unwrap();
+        assert!(v.version >= 2, "got {}", v.version);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -170,6 +170,16 @@ pub struct PjrtProjection {
     kernel: Kernel,
 }
 
+impl PjrtProjection {
+    /// Kernel-expansion state for the model-artifact subsystem: a saved
+    /// PJRT projection is served natively as a `da::KernelProjection`
+    /// (same support points and Ψ; the f32 engine is a training-time
+    /// accelerator, not part of the persisted model).
+    pub fn expansion_state(&self) -> (&Mat, &Mat, Kernel) {
+        (&self.x_train, &self.psi, self.kernel)
+    }
+}
+
 impl Projection for PjrtProjection {
     fn project(&self, x_test: &Mat) -> Mat {
         self.engine
@@ -178,6 +188,9 @@ impl Projection for PjrtProjection {
     }
     fn dim(&self) -> usize {
         self.psi.cols()
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -7,6 +7,6 @@ pub mod engine;
 pub mod manifest;
 pub mod server;
 
-pub use engine::{AkdaPjrt, AksdaPjrt, PjrtEngine};
+pub use engine::{AkdaPjrt, AksdaPjrt, PjrtEngine, PjrtProjection};
 pub use manifest::Manifest;
 pub use server::{Arg, PjrtHandle};

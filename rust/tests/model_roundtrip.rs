@@ -1,0 +1,272 @@
+//! Integration: the trained-model artifact subsystem end to end.
+//!
+//! The core guarantee of `model/`: for every servable method, a detector
+//! bank that is trained, published to a registry, and loaded back scores
+//! the test set **bit-for-bit** identically to the freshly trained bank —
+//! and the load path performs zero training work (decode only). Corrupt
+//! artifacts (truncation, bit flips) must fail with checksum errors, not
+//! panics or silently wrong models. The hot-reload path must swap a newly
+//! published version into a live scoring service without dropping
+//! requests.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use akda::coordinator::protocol::approx_config;
+use akda::coordinator::{
+    build_dr, BankHandle, DetectorBank, Hyper, MethodId, ScoringService,
+};
+use akda::da::akda_stream::BlockedProjection;
+use akda::da::{DrMethod, Projection};
+use akda::data::stream::MemBlockSource;
+use akda::data::{by_name, Condition, Split};
+use akda::model::{
+    decode_bank, encode_bank, HotReloader, ModelArtifact, ModelManifest, ModelRegistry,
+};
+use akda::svm::{LinearSvm, LinearSvmConfig};
+
+fn tiny_split() -> Split {
+    let mut d = by_name("mscorid").unwrap();
+    d.n_classes = 4;
+    d.test_per_class = 15;
+    d.split(Condition::Ex10)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("akda_model_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train the multiclass projection + OvR LSVM bank for one method — the
+/// same shape `akda train` builds.
+fn train_bank(split: &Split, id: MethodId, stream_block: Option<usize>) -> DetectorBank {
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, m: 16, stream_block };
+    let projection: Box<dyn Projection> = match stream_block {
+        Some(block_rows) => {
+            let ap = approx_config(id, hp, 1e-3);
+            let mut src = MemBlockSource::new(&split.x_train, &split.y_train, block_rows);
+            let prep = ap.prepare_stream(&mut src).unwrap();
+            let w = prep.solve_w_multiclass().unwrap();
+            Box::new(BlockedProjection { map: prep.map.clone(), w, block_rows })
+        }
+        None => build_dr(id, hp, 1e-3, None)
+            .unwrap()
+            .expect("DR method")
+            .fit(&split.x_train, &split.y_train, split.n_classes)
+            .unwrap(),
+    };
+    let z = projection.project(&split.x_train);
+    let svms = (0..split.n_classes)
+        .map(|cls| {
+            let y: Vec<f64> = split
+                .y_train
+                .iter()
+                .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                .collect();
+            (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
+        })
+        .collect();
+    DetectorBank { projection, svms }
+}
+
+/// Every servable training path: exact AKDA/AKSDA kernel expansions, the
+/// two approximate in-memory maps, and the streamed blocked projection.
+fn servable_banks(split: &Split) -> Vec<(&'static str, DetectorBank)> {
+    vec![
+        ("akda", train_bank(split, MethodId::Akda, None)),
+        ("aksda", train_bank(split, MethodId::Aksda, None)),
+        ("akda-nystrom", train_bank(split, MethodId::AkdaNystrom, None)),
+        ("akda-rff", train_bank(split, MethodId::AkdaRff, None)),
+        ("akda-nystrom-stream", train_bank(split, MethodId::AkdaNystrom, Some(8))),
+        ("akda-rff-stream", train_bank(split, MethodId::AkdaRff, Some(8))),
+    ]
+}
+
+#[test]
+fn every_servable_method_roundtrips_bit_for_bit() {
+    let split = tiny_split();
+    for (method, bank) in servable_banks(&split) {
+        // through bytes, exactly as the registry stores them
+        let artifact = encode_bank(&bank, method).unwrap();
+        let restored = ModelArtifact::from_bytes(&artifact.to_bytes()).unwrap();
+        let loaded = decode_bank(&restored).unwrap();
+
+        let fresh_scores = bank.score(&split.x_test);
+        let loaded_scores = loaded.score(&split.x_test);
+        assert_eq!(
+            fresh_scores, loaded_scores,
+            "{method}: loaded bank must score bit-for-bit identically"
+        );
+        assert_eq!(loaded.class_names(), bank.class_names(), "{method}");
+        assert_eq!(loaded.projection.dim(), bank.projection.dim(), "{method}");
+    }
+}
+
+#[test]
+fn publish_then_load_through_the_registry_is_bitwise_stable() {
+    let split = tiny_split();
+    let root = tmpdir("publish_load");
+    let registry = ModelRegistry::open(&root);
+    let bank = train_bank(&split, MethodId::AkdaNystrom, None);
+    let fresh_scores = bank.score(&split.x_test);
+
+    let artifact = encode_bank(&bank, "akda-nystrom").unwrap();
+    let manifest = ModelManifest {
+        method: "akda-nystrom".into(),
+        dataset: "mscorid".into(),
+        condition: "10Ex".into(),
+        n_classes: split.n_classes,
+        input_dim: split.x_train.cols(),
+        ..Default::default()
+    };
+    let entry = registry.publish("roundtrip", &artifact, &manifest).unwrap();
+    assert_eq!(entry.version, 1);
+
+    let (loaded_entry, loaded) = registry.load_bank("roundtrip").unwrap();
+    assert_eq!(loaded_entry.version, 1);
+    assert_eq!(loaded_entry.manifest.method, "akda-nystrom");
+    assert_eq!(loaded.score(&split.x_test), fresh_scores);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn truncated_artifacts_fail_with_checksum_errors_not_panics() {
+    let split = tiny_split();
+    let bank = train_bank(&split, MethodId::Akda, None);
+    let bytes = encode_bank(&bank, "akda").unwrap().to_bytes();
+    // cut at a spread of offsets including mid-header and mid-tensor
+    for frac in [0.0, 0.1, 0.35, 0.5, 0.75, 0.95] {
+        let cut = (bytes.len() as f64 * frac) as usize;
+        let err = ModelArtifact::from_bytes(&bytes[..cut])
+            .expect_err("truncated artifact must not decode");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("truncated"),
+            "cut={cut}: {msg}"
+        );
+    }
+    // missing the final byte (classic partial write)
+    assert!(ModelArtifact::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+}
+
+#[test]
+fn bit_flipped_artifacts_fail_with_checksum_errors_not_garbage_models() {
+    let split = tiny_split();
+    let bank = train_bank(&split, MethodId::AkdaRff, None);
+    let bytes = encode_bank(&bank, "akda-rff").unwrap().to_bytes();
+    // flip one bit at a spread of positions across the file (header, meta,
+    // tensor payloads, checksums) — every one must be caught
+    let step = (bytes.len() / 97).max(1);
+    for i in (0..bytes.len()).step_by(step) {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            ModelArtifact::from_bytes(&bad).is_err(),
+            "bit flip at byte {i}/{} went undetected",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn corrupt_artifact_on_disk_is_rejected_by_the_registry() {
+    let split = tiny_split();
+    let root = tmpdir("corrupt");
+    let registry = ModelRegistry::open(&root);
+    let bank = train_bank(&split, MethodId::Akda, None);
+    let artifact = encode_bank(&bank, "akda").unwrap();
+    let entry = registry
+        .publish("corrupt", &artifact, &ModelManifest::default())
+        .unwrap();
+    // flip a byte in the stored artifact
+    let path = entry.artifact_path();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = registry.load_bank("corrupt").expect_err("corrupt model must not load");
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn hot_reload_swaps_a_newly_published_version_under_live_traffic() {
+    let split = tiny_split();
+    let root = tmpdir("hot_reload");
+    let registry = ModelRegistry::open(&root);
+
+    let bank_v1 = train_bank(&split, MethodId::Akda, None);
+    let v1_scores = bank_v1.score(&split.x_test);
+    let manifest = ModelManifest {
+        input_dim: split.x_train.cols(),
+        n_classes: split.n_classes,
+        ..Default::default()
+    };
+    let a1 = encode_bank(&bank_v1, "akda").unwrap();
+    let e1 = registry.publish("live", &a1, &manifest).unwrap();
+
+    let (entry, loaded) = registry.load_bank("live").unwrap();
+    let handle = BankHandle::new(Arc::new(loaded));
+    let svc = ScoringService::start_reloadable(
+        handle.clone(),
+        split.x_train.cols(),
+        16,
+        Duration::from_millis(2),
+    );
+    let client = svc.client();
+    let before = client.score(split.x_test.row(0).to_vec()).unwrap();
+    assert_eq!(before, v1_scores.row(0).to_vec());
+
+    let watcher = HotReloader::start(
+        registry.clone(),
+        "live".into(),
+        handle.clone(),
+        entry.version,
+        split.x_train.cols(),
+        Duration::from_millis(10),
+    );
+
+    // publish v2 with a visibly different detector bank (zeroed SVMs)
+    let mut bank_v2 = train_bank(&split, MethodId::Akda, None);
+    for (_, svm) in bank_v2.svms.iter_mut() {
+        svm.w.iter_mut().for_each(|w| *w = 0.0);
+        svm.b = 0.0;
+    }
+    let a2 = encode_bank(&bank_v2, "akda").unwrap();
+    let e2 = registry.publish("live", &a2, &manifest).unwrap();
+    assert_eq!(e2.version, e1.version + 1);
+
+    // wait for the watcher to pick it up (bounded)
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while watcher.reloads() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(watcher.reloads() >= 1, "hot reload never happened");
+    assert!(handle.generation() >= 1);
+
+    // the service now answers with the v2 bank — all-zero scores — and
+    // requests issued across the swap were all answered
+    let after = client.score(split.x_test.row(0).to_vec()).unwrap();
+    assert!(after.iter().all(|s| *s == 0.0), "v2 must serve: {after:?}");
+    watcher.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn decode_is_pure_deserialization_zero_training_work() {
+    // the load path must not depend on anything but the artifact bytes:
+    // decoding twice gives banks that score identically, and decoding
+    // works without any dataset/split in scope (no fit inputs exist here)
+    let split = tiny_split();
+    let bytes = {
+        let bank = train_bank(&split, MethodId::AkdaNystrom, Some(4));
+        encode_bank(&bank, "akda-nystrom").unwrap().to_bytes()
+    };
+    let a = decode_bank(&ModelArtifact::from_bytes(&bytes).unwrap()).unwrap();
+    let b = decode_bank(&ModelArtifact::from_bytes(&bytes).unwrap()).unwrap();
+    assert_eq!(a.score(&split.x_test), b.score(&split.x_test));
+}
