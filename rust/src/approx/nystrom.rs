@@ -51,6 +51,17 @@ impl NystromMap {
         } else {
             kmeans(x, m, LANDMARK_KMEANS_ITERS, seed).centroids
         };
+        Self::from_landmarks(landmarks, kernel)
+    }
+
+    /// Build the map from an explicitly supplied landmark matrix: form the
+    /// m×m landmark Gram, eigendecompose, truncate near-null directions,
+    /// and whiten. This is both [`NystromMap::fit`]'s second half and the
+    /// incremental landmark-refresh entry point (`model::update` feeds it
+    /// warm-started k-means centroids as the data drifts) — O(m³) work,
+    /// independent of the stream length.
+    pub fn from_landmarks(landmarks: Mat, kernel: Kernel) -> Result<Self> {
+        anyhow::ensure!(landmarks.rows() > 0, "Nystrom needs at least one landmark");
         let k_zz = gram(&landmarks, kernel);
         let eig = sym_eig_desc(&k_zz)
             .map_err(|e| anyhow::anyhow!("landmark Gram eigendecomposition failed: {e}"))?;
@@ -176,6 +187,18 @@ mod tests {
         let map = NystromMap::fit(&x, Kernel::Rbf { rho: 1.0 }, 100, 1).unwrap();
         assert_eq!(map.landmarks.rows(), 7);
         assert!(map.dim() <= 7);
+    }
+
+    #[test]
+    fn from_landmarks_matches_fit_given_the_same_landmarks() {
+        let x = blobs(20, &[[0.0, 0.0], [4.0, 4.0]], 6);
+        let kernel = Kernel::Rbf { rho: 0.6 };
+        let fitted = NystromMap::fit(&x, kernel, 8, 11).unwrap();
+        let rebuilt =
+            NystromMap::from_landmarks(fitted.landmarks.clone(), kernel).unwrap();
+        assert_eq!(rebuilt.dim(), fitted.dim());
+        let (a, b) = (fitted.transform(&x), rebuilt.transform(&x));
+        assert!(a.sub(&b).max_abs() == 0.0, "same landmarks must give the same map");
     }
 
     #[test]

@@ -51,6 +51,26 @@ pub fn kmeans(x: &Mat, k: usize, max_iter: usize, seed: u64) -> Clustering {
         }
     }
 
+    lloyd(x, centroids, max_iter)
+}
+
+/// Warm-started k-means: Lloyd iterations from caller-supplied centroids
+/// instead of a fresh k-means++ seeding. This is the incremental
+/// landmark-refresh primitive (`model::update`): as data drifts, the
+/// current Nyström landmarks are the starting centroids, so a handful of
+/// iterations tracks the drift instead of re-clustering from scratch.
+/// Deterministic — no randomness is consumed.
+pub fn kmeans_warm(x: &Mat, init: &Mat, max_iter: usize) -> Clustering {
+    assert_eq!(x.cols(), init.cols(), "warm start dimensionality mismatch");
+    assert!(init.rows() >= 1 && x.rows() >= 1);
+    lloyd(x, init.clone(), max_iter)
+}
+
+/// Lloyd iterations from the given starting centroids (shared by
+/// [`kmeans`] and [`kmeans_warm`]).
+fn lloyd(x: &Mat, mut centroids: Mat, max_iter: usize) -> Clustering {
+    let (n, d) = x.shape();
+    let k = centroids.rows();
     let mut assignments = vec![0usize; n];
     let mut inertia = f64::INFINITY;
     for _ in 0..max_iter {
@@ -235,6 +255,28 @@ mod tests {
         let a = kmeans(&x, 2, 50, 42);
         let b = kmeans(&x, 2, 50, 42);
         assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn kmeans_warm_tracks_drifted_blobs() {
+        // fit on the original blobs, then warm-start on shifted data: the
+        // centroids must follow the drift without a fresh seeding
+        let x0 = blobs(25, &[[0.0, 0.0], [6.0, 0.0]], 12);
+        let cl0 = kmeans(&x0, 2, 50, 3);
+        let x1 = blobs(25, &[[1.0, 1.0], [7.0, 1.0]], 13);
+        let warm = kmeans_warm(&x1, &cl0.centroids, 25);
+        assert_eq!(warm.centroids.rows(), 2);
+        // each drifted blob center is within noise of a warm centroid
+        for target in [[1.0, 1.0], [7.0, 1.0]] {
+            let best = (0..2)
+                .map(|c| sq_dist(warm.centroids.row(c), &target))
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.05, "centroid missed drifted blob: {best}");
+        }
+        // deterministic: no randomness consumed
+        let again = kmeans_warm(&x1, &cl0.centroids, 25);
+        assert_eq!(warm.assignments, again.assignments);
+        assert!(warm.centroids.sub(&again.centroids).max_abs() == 0.0);
     }
 
     #[test]

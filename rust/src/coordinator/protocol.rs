@@ -173,6 +173,18 @@ pub fn approx_config(id: MethodId, hp: Hyper, eps: f64) -> da::akda_approx::Akda
     dr
 }
 
+/// The exact-AKDA configuration for a grid point — one source for
+/// [`build_dr`] and `akda train`'s factor-retaining path
+/// (`Akda::fit_with_factor`), so the model `akda train` publishes can
+/// never drift in kernel/ridge/block from the one `akda eval` evaluates.
+pub fn akda_config(hp: Hyper, eps: f64) -> da::akda::Akda {
+    da::akda::Akda {
+        kernel: Kernel::Rbf { rho: hp.rho },
+        eps,
+        block: crate::linalg::chol::DEFAULT_BLOCK,
+    }
+}
+
 /// Build the DR method for a spec (None for the pure-SVM columns).
 pub fn build_dr(
     id: MethodId,
@@ -188,11 +200,7 @@ pub fn build_dr(
         MethodId::Kda => Some(Box::new(da::kda::Kda { kernel, eps })),
         MethodId::Gda => Some(Box::new(da::gda::Gda { kernel, eps })),
         MethodId::Srkda => Some(Box::new(da::srkda::Srkda { kernel, eps })),
-        MethodId::Akda => Some(Box::new(da::akda::Akda {
-            kernel,
-            eps,
-            block: crate::linalg::chol::DEFAULT_BLOCK,
-        })),
+        MethodId::Akda => Some(Box::new(akda_config(hp, eps))),
         MethodId::AkdaNystrom | MethodId::AkdaRff => {
             Some(Box::new(approx_config(id, hp, eps)))
         }

@@ -16,7 +16,7 @@
 //! request is ever dropped across a swap.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
@@ -61,13 +61,23 @@ impl DetectorBank {
 pub struct BankHandle {
     slot: Arc<RwLock<Arc<DetectorBank>>>,
     generation: Arc<AtomicUsize>,
+    /// Registry version of the served bank (0 = not registry-backed).
+    version: Arc<AtomicU32>,
 }
 
 impl BankHandle {
     pub fn new(bank: Arc<DetectorBank>) -> Self {
+        Self::new_versioned(bank, 0)
+    }
+
+    /// A handle serving a specific registry version — lets monitoring,
+    /// the continual-learning tests, and GC callers (`Registry::prune`'s
+    /// `protect` argument) ask which published version is live right now.
+    pub fn new_versioned(bank: Arc<DetectorBank>, version: u32) -> Self {
         BankHandle {
             slot: Arc::new(RwLock::new(bank)),
             generation: Arc::new(AtomicUsize::new(0)),
+            version: Arc::new(AtomicU32::new(version)),
         }
     }
 
@@ -82,9 +92,24 @@ impl BankHandle {
         self.generation.fetch_add(1, Ordering::SeqCst);
     }
 
+    /// `swap` plus the registry version the new bank came from (what the
+    /// `HotReloader` calls after decoding a freshly published version).
+    pub fn swap_versioned(&self, bank: Arc<DetectorBank>, version: u32) {
+        // order matters for readers: the bank lands before the version
+        // advances, so a reader seeing version V always gets a bank at
+        // least as new as V
+        self.swap(bank);
+        self.version.store(version, Ordering::SeqCst);
+    }
+
     /// Number of swaps since creation (monitoring / tests).
     pub fn generation(&self) -> usize {
         self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Registry version currently served (0 when not registry-backed).
+    pub fn served_version(&self) -> u32 {
+        self.version.load(Ordering::SeqCst)
     }
 }
 
@@ -346,6 +371,23 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn bank_handle_tracks_served_version() {
+        let (bank, _, _) = bank();
+        let handle = BankHandle::new_versioned(bank.clone(), 3);
+        assert_eq!(handle.served_version(), 3);
+        assert_eq!(handle.generation(), 0);
+        handle.swap_versioned(bank.clone(), 4);
+        assert_eq!(handle.served_version(), 4);
+        assert_eq!(handle.generation(), 1);
+        // a plain swap (non-registry bank) leaves the version alone
+        handle.swap(bank);
+        assert_eq!(handle.served_version(), 4);
+        assert_eq!(handle.generation(), 2);
+        // unversioned handles report 0
+        assert_eq!(BankHandle::new(handle.get()).served_version(), 0);
     }
 
     #[test]

@@ -53,22 +53,57 @@ impl Akda {
         Akda { kernel, eps: 1e-3, block: chol::DEFAULT_BLOCK }
     }
 
-    /// Compute the expansion coefficients Ψ (Eq. 44) plus the target Θ.
-    pub fn solve_psi(&self, x: &Mat, labels: &[usize], n_classes: usize)
-        -> Result<(Mat, Mat)> {
+    /// Θ (binary analytic fast path, Sec. 4.4) plus the lower Cholesky
+    /// factor of K + εI — the single label/factor builder behind
+    /// [`Self::solve_psi`] and [`Self::fit_with_factor`], so the two can
+    /// never drift apart in ridge or Θ handling.
+    fn theta_and_factor(
+        &self,
+        x: &Mat,
+        labels: &[usize],
+        n_classes: usize,
+    ) -> Result<(Mat, Mat)> {
         // Step 1-2: Θ (binary analytic fast path, Sec. 4.4)
-        let theta = if n_classes == 2 {
-            core::theta_binary(labels)
-        } else {
-            core::theta(labels, n_classes)
-        };
+        let theta = core::theta_for(labels, n_classes);
         // Step 3: K
         let mut k = gram(x, self.kernel);
         k.add_ridge(self.eps);
-        // Step 4: K Ψ = Θ via Cholesky + two triangular solves
-        let psi = chol::spd_solve(&k, &theta, self.block)
+        let l = chol::cholesky(&k, self.block)
             .map_err(|e| anyhow::anyhow!("AKDA Cholesky failed: {e}"))?;
+        Ok((theta, l))
+    }
+
+    /// Compute the expansion coefficients Ψ (Eq. 44) plus the target Θ.
+    pub fn solve_psi(&self, x: &Mat, labels: &[usize], n_classes: usize)
+        -> Result<(Mat, Mat)> {
+        // Step 4: K Ψ = Θ via Cholesky + two triangular solves
+        let (theta, l) = self.theta_and_factor(x, labels, n_classes)?;
+        let psi = chol::solve_upper_from_lower(&l, &chol::solve_lower(&l, &theta));
         Ok((psi, theta))
+    }
+
+    /// [`DrMethod::fit`] plus the lower Cholesky factor of K + εI it
+    /// produced — the continual-learning entry point: `akda train`
+    /// persists the factor (`model::codec` resume sections) so `akda
+    /// update` can later grow it by bordered rows (`da::incremental`)
+    /// instead of refactorizing. Same [`Self::theta_and_factor`] and the
+    /// same two triangular solves as [`Self::solve_psi`], so the returned
+    /// projection is bit-for-bit what `fit` produces.
+    pub fn fit_with_factor(
+        &self,
+        x: &Mat,
+        labels: &[usize],
+        n_classes: usize,
+    ) -> Result<(KernelProjection, Mat)> {
+        let (theta, l) = self.theta_and_factor(x, labels, n_classes)?;
+        let psi = chol::solve_upper_from_lower(&l, &chol::solve_lower(&l, &theta));
+        let proj = KernelProjection {
+            x_train: x.clone(),
+            psi,
+            kernel: self.kernel,
+            center_against: None,
+        };
+        Ok((proj, l))
     }
 }
 
@@ -146,6 +181,21 @@ mod tests {
         };
         let gap = (m0 - m1).abs() / (sd(&z0, m0) + sd(&z1, m1)).max(1e-12);
         assert!(gap > 3.0, "class separation too weak: {gap}");
+    }
+
+    #[test]
+    fn fit_with_factor_matches_fit_bitwise() {
+        let (x, labels) = toy(15, 3, 8);
+        let akda = Akda::new(Kernel::Rbf { rho: 0.35 });
+        let via_fit = akda.fit(&x, &labels, 3).unwrap();
+        let (proj, l) = akda.fit_with_factor(&x, &labels, 3).unwrap();
+        let z_a = via_fit.project(&x);
+        let z_b = proj.project(&x);
+        assert!(z_a.sub(&z_b).max_abs() == 0.0, "same arithmetic, same bits");
+        // the factor really factors K + eps I
+        let mut k = gram(&x, akda.kernel);
+        k.add_ridge(akda.eps);
+        assert!(l.matmul_nt(&l).sub(&k).max_abs() < 1e-9);
     }
 
     #[test]

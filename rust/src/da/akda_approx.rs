@@ -120,11 +120,12 @@ impl AkdaApprox {
     pub fn prepare(&self, x: &Mat) -> Result<PreparedFeatures> {
         let map: Arc<dyn FeatureMap> = Arc::from(self.build_map(x)?);
         let phi = map.transform(x);
-        let mut c = phi.matmul_tn(&phi);
+        let gram = phi.matmul_tn(&phi);
+        let mut c = gram.clone();
         c.add_ridge(self.eps);
         let chol_l = chol::cholesky(&c, self.block)
             .map_err(|e| anyhow::anyhow!("approximate AKDA Cholesky failed: {e}"))?;
-        Ok(PreparedFeatures { map, phi, chol_l })
+        Ok(PreparedFeatures { map, phi, gram, chol_l })
     }
 }
 
@@ -134,11 +135,20 @@ pub struct PreparedFeatures {
     /// N×m training features Φ (also the per-class z_train source:
     /// z_train = Φ W).
     pub phi: Mat,
+    /// Pre-ridge m×m Gram G = ΦᵀΦ — kept (like `PreparedStream`'s) so the
+    /// model subsystem can persist it as resume state without recomputing
+    /// the O(N·m²) product.
+    gram: Mat,
     /// Lower Cholesky factor of ΦᵀΦ + εI.
     chol_l: Mat,
 }
 
 impl PreparedFeatures {
+    /// The pre-ridge m×m Gram accumulator G = ΦᵀΦ (resume state).
+    pub fn gram(&self) -> &Mat {
+        &self.gram
+    }
+
     /// Solve for one labelling reusing the cached factorization: only the
     /// RHS ΦᵀΘ and two m×m triangular solves per call.
     ///
@@ -166,11 +176,7 @@ impl PreparedFeatures {
     /// }
     /// ```
     pub fn fit(&self, labels: &[usize], n_classes: usize) -> Result<ApproxProjection> {
-        let theta = if n_classes == 2 {
-            core::theta_binary(labels)
-        } else {
-            core::theta(labels, n_classes)
-        };
+        let theta = core::theta_for(labels, n_classes);
         let b = self.phi.matmul_tn(&theta);
         let y = chol::solve_lower(&self.chol_l, &b);
         let w = chol::solve_upper_from_lower(&self.chol_l, &y);

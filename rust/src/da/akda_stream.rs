@@ -212,6 +212,10 @@ impl AkdaApprox {
 /// `da::akda_approx::PreparedFeatures`, minus the resident N×m Φ.
 pub struct PreparedStream {
     pub map: Arc<dyn FeatureMap>,
+    /// m×m Gram accumulator G = ΦᵀΦ *before* the ridge — kept so the
+    /// model subsystem can persist it and `akda update` can continue the
+    /// accumulation over new observations (`model::update`).
+    gram: Mat,
     /// Lower Cholesky factor of ΦᵀΦ + εI.
     chol_l: Mat,
     /// m×C class sums S = ΦᵀR.
@@ -243,13 +247,29 @@ impl PreparedStream {
             counts.len() >= 2 && counts.iter().all(|&c| c > 0),
             "stream must contain at least two classes, every label in 0..C"
         );
+        let gram = g.clone();
         g.add_ridge(cfg.eps);
         let chol_l = chol::cholesky(&g, cfg.block)
             .map_err(|e| anyhow::anyhow!("streaming AKDA Cholesky failed: {e}"))?;
         let (m, c) = (stats.m, counts.len());
         stats.n_classes = c;
         let class_sums = Mat::from_fn(m, c, |i, j| class_sums[j][i]);
-        Ok(PreparedStream { map, chol_l, class_sums, counts, stats })
+        Ok(PreparedStream { map, gram, chol_l, class_sums, counts, stats })
+    }
+
+    /// The pre-ridge m×m Gram accumulator G = ΦᵀΦ (resume state).
+    pub fn gram(&self) -> &Mat {
+        &self.gram
+    }
+
+    /// The m×C class sums S = ΦᵀR (resume state).
+    pub fn class_sums(&self) -> &Mat {
+        &self.class_sums
+    }
+
+    /// Per-class row counts (resume state).
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
     }
 
     pub fn n_classes(&self) -> usize {
@@ -268,41 +288,14 @@ impl PreparedStream {
     /// then solve (ΦᵀΦ + εI) W = ΦᵀΘ. No data access — O(m·C + m²).
     pub fn solve_w_class(&self, cls: usize) -> Result<Mat> {
         anyhow::ensure!(cls < self.counts.len(), "class {cls} out of range");
-        let n_c = self.counts[cls] as f64;
-        let n: f64 = self.counts.iter().map(|&c| c as f64).sum();
-        let n_rest = n - n_c;
-        // θ entries: sqrt(N₂/(N₁N)) on the target rows, −sqrt(N₁/(N₂N))
-        // on the rest — identical to `core::theta_binary` with the target
-        // class relabelled 0.
-        let pos = (n_rest / (n_c * n)).sqrt();
-        let neg = -(n_c / (n_rest * n)).sqrt();
-        let m = self.class_sums.rows();
-        let b = Mat::from_fn(m, 1, |i, _| {
-            let mut rest = 0.0;
-            for j in 0..self.counts.len() {
-                if j != cls {
-                    rest += self.class_sums[(i, j)];
-                }
-            }
-            pos * self.class_sums[(i, cls)] + neg * rest
-        });
-        Ok(self.solve(&b))
+        Ok(self.solve(&ovr_rhs(&self.class_sums, &self.counts, cls)))
     }
 
     /// Block-wise `solve_w` for the full multiclass problem: ΦᵀΘ =
     /// S N_C^{−1/2} Ξ with Ξ the NZEP of the C×C core matrix (Eq. 40),
     /// then one solve for all C−1 discriminant directions.
     pub fn solve_w_multiclass(&self) -> Result<Mat> {
-        let c = self.counts.len();
-        if c == 2 {
-            // analytic binary fast path — same sign branch as the dense
-            // `PreparedFeatures::fit` (Sec. 4.4)
-            return self.solve_w_class(0);
-        }
-        let xi = core::core_eigenvectors(&self.counts);
-        let scaled = Mat::from_fn(c, c - 1, |i, k| xi[(i, k)] / (self.counts[i] as f64).sqrt());
-        let b = self.class_sums.matmul(&scaled);
-        Ok(self.solve(&b))
+        Ok(self.solve(&multiclass_rhs(&self.class_sums, &self.counts)))
     }
 
     /// Fitted one-vs-rest projection (`cls` scores positive).
@@ -314,6 +307,45 @@ impl PreparedStream {
     pub fn fit_multiclass(&self) -> Result<ApproxProjection> {
         Ok(ApproxProjection { map: self.map.clone(), w: self.solve_w_multiclass()? })
     }
+}
+
+/// ΦᵀΘ for the one-vs-rest problem `cls` vs rest, recombined from the
+/// m×C class sums: θ entries are sqrt(N₂/(N₁N)) on the target rows and
+/// −sqrt(N₁/(N₂N)) on the rest — identical to `core::theta_binary` with
+/// the target class relabelled 0. O(m·C), no data access. Shared by
+/// [`PreparedStream::solve_w_class`] and the model-update path
+/// (`model::update`), which continues a persisted accumulator.
+pub fn ovr_rhs(class_sums: &Mat, counts: &[usize], cls: usize) -> Mat {
+    assert!(cls < counts.len(), "class {cls} out of range");
+    let n_c = counts[cls] as f64;
+    let n: f64 = counts.iter().map(|&c| c as f64).sum();
+    let n_rest = n - n_c;
+    let pos = (n_rest / (n_c * n)).sqrt();
+    let neg = -(n_c / (n_rest * n)).sqrt();
+    let m = class_sums.rows();
+    Mat::from_fn(m, 1, |i, _| {
+        let mut rest = 0.0;
+        for j in 0..counts.len() {
+            if j != cls {
+                rest += class_sums[(i, j)];
+            }
+        }
+        pos * class_sums[(i, cls)] + neg * rest
+    })
+}
+
+/// ΦᵀΘ for the full multiclass problem: S N_C^{−1/2} Ξ with Ξ the NZEP of
+/// the C×C core matrix (Eq. 40); the C = 2 case short-circuits to the
+/// analytic binary recombination (same sign branch as the dense
+/// `PreparedFeatures::fit`, Sec. 4.4).
+pub fn multiclass_rhs(class_sums: &Mat, counts: &[usize]) -> Mat {
+    let c = counts.len();
+    if c == 2 {
+        return ovr_rhs(class_sums, counts, 0);
+    }
+    let xi = core::core_eigenvectors(counts);
+    let scaled = Mat::from_fn(c, c - 1, |i, k| xi[(i, k)] / (counts[i] as f64).sqrt());
+    class_sums.matmul(&scaled)
 }
 
 /// Project rows through z = φ(x) W one tile at a time: peak extra memory

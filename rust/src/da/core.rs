@@ -111,6 +111,19 @@ pub fn theta_binary(labels: &[usize]) -> Mat {
     Mat::from_fn(labels.len(), 1, |r, _| if labels[r] == 0 { pos } else { neg })
 }
 
+/// Θ with the binary fast path: the analytic [`theta_binary`] (Eqs.
+/// 49–50) when C = 2, the NZEP route ([`theta`], Eq. 40) otherwise — the
+/// single dispatch every AKDA-family trainer (exact, approx, PJRT,
+/// incremental) shares, so the fast-path condition can never drift
+/// between them.
+pub fn theta_for(labels: &[usize], n_classes: usize) -> Mat {
+    if n_classes == 2 {
+        theta_binary(labels)
+    } else {
+        theta(labels, n_classes)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Subclass machinery (AKSDA, Sec. 5).
 // ---------------------------------------------------------------------------

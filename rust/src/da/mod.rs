@@ -8,7 +8,9 @@
 //! * `core` — the label-side factorization (core matrices, NZEPs, Θ / V
 //!   targets) shared by every AKDA-family trainer;
 //! * `akda` / `aksda` — the paper's exact engines (Gram + Cholesky,
-//!   Algorithms 1–2), `incremental` the bordered-Cholesky online variant;
+//!   Algorithms 1–2); `incremental` the multiclass bordered-Cholesky
+//!   online variant (Sec. 7 recursive learning — `model::update` runs it
+//!   over published registry models);
 //! * `akda_approx` — the same solve on an explicit m-dimensional feature
 //!   map (Nyström / RFF, m ≪ N): O(N m²) training, full N×m Φ resident;
 //! * `akda_stream` — the out-of-core tiling of `akda_approx`: identical

@@ -223,6 +223,141 @@ pub fn reservoir_sample(source: &mut dyn BlockSource, cap: usize, seed: u64) -> 
     Ok(Mat::from_vec(n, f, data))
 }
 
+/// A resumable labeled reservoir (Algorithm R over `(row, label)` pairs):
+/// a uniform sample of every observation ever absorbed, in O(cap·F)
+/// memory, that can be persisted and *continued* — absorb more rows later
+/// and the reservoir is still a uniform sample of the whole history. The
+/// model subsystem stores one per approximate model (`resume.reservoir`
+/// sections) so `akda update` can refresh landmarks and re-train the OvR
+/// SVM bank from a bounded, drift-tracking subsample instead of the full
+/// (unavailable) training history.
+#[derive(Debug, Clone)]
+pub struct LabeledReservoir {
+    cap: usize,
+    rows: Vec<Vec<f64>>,
+    labels: Vec<usize>,
+    /// Total observations ever offered (the Algorithm R denominator).
+    seen: usize,
+    rng: Rng,
+}
+
+impl LabeledReservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap >= 1, "reservoir cap must be >= 1");
+        LabeledReservoir { cap, rows: Vec::new(), labels: Vec::new(), seen: 0, rng: Rng::new(seed) }
+    }
+
+    /// Resume a persisted reservoir: the stored rows/labels plus the
+    /// running `seen` count. `seed` re-seeds the replacement RNG (the
+    /// uniformity guarantee needs `seen`, not the original RNG state).
+    ///
+    /// The cap can change across a resume without breaking uniformity,
+    /// within what the stored sample supports: shrinking takes a uniform
+    /// subsample of the stored rows (uniform-of-uniform stays uniform);
+    /// growing only applies while the reservoir has never overflowed
+    /// (`seen == stored rows`) — once rows have been discarded, the
+    /// effective cap is clamped to the stored row count, because admitting
+    /// new rows into the freed slots with probability 1 would bias the
+    /// "uniform over the whole history" sample toward the newest batch.
+    pub fn from_parts(x: &Mat, labels: &[usize], seen: usize, cap: usize, seed: u64) -> Result<Self> {
+        anyhow::ensure!(cap >= 1, "reservoir cap must be >= 1");
+        anyhow::ensure!(
+            x.rows() == labels.len(),
+            "reservoir state mismatch: {} rows vs {} labels",
+            x.rows(),
+            labels.len()
+        );
+        anyhow::ensure!(
+            seen >= x.rows(),
+            "reservoir state mismatch: seen {} < stored rows {}",
+            seen,
+            x.rows()
+        );
+        let mut rng = Rng::new(seed);
+        let mut rows: Vec<Vec<f64>> = (0..x.rows()).map(|r| x.row(r).to_vec()).collect();
+        let mut labels = labels.to_vec();
+        if cap < rows.len() {
+            // partial Fisher-Yates: keep a uniform cap-subset of the rows
+            for i in 0..cap {
+                let j = i + rng.below(rows.len() - i);
+                rows.swap(i, j);
+                labels.swap(i, j);
+            }
+            rows.truncate(cap);
+            labels.truncate(cap);
+        }
+        let cap = if seen > x.rows() { cap.min(rows.len()) } else { cap };
+        Ok(LabeledReservoir { cap, rows, labels, seen, rng })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total observations ever offered to the reservoir.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Offer one labelled observation (kept with probability cap/seen).
+    pub fn offer(&mut self, row: &[f64], label: usize) {
+        self.seen += 1;
+        if self.rows.len() < self.cap {
+            self.rows.push(row.to_vec());
+            self.labels.push(label);
+        } else {
+            let j = self.rng.below(self.seen);
+            if j < self.cap {
+                self.rows[j] = row.to_vec();
+                self.labels[j] = label;
+            }
+        }
+    }
+
+    /// Offer every row of a labelled tile.
+    pub fn absorb(&mut self, block: &LabeledBlock) {
+        for r in 0..block.x.rows() {
+            self.offer(block.x.row(r), block.labels[r]);
+        }
+    }
+
+    /// Snapshot the current sample as a matrix + label vector.
+    pub fn snapshot(&self) -> Result<(Mat, Vec<usize>)> {
+        anyhow::ensure!(!self.rows.is_empty(), "reservoir is empty");
+        let f = self.rows[0].len();
+        let n = self.rows.len();
+        let mut data = Vec::with_capacity(n * f);
+        for row in &self.rows {
+            data.extend_from_slice(row);
+        }
+        Ok((Mat::from_vec(n, f, data), self.labels.clone()))
+    }
+}
+
+/// Labeled mirror of [`reservoir_sample`]: one pass over the stream into a
+/// fresh [`LabeledReservoir`], returning the sampled rows, their labels,
+/// and the total row count seen.
+pub fn reservoir_sample_labeled(
+    source: &mut dyn BlockSource,
+    cap: usize,
+    seed: u64,
+) -> Result<(Mat, Vec<usize>, usize)> {
+    anyhow::ensure!(cap >= 1, "reservoir cap must be >= 1");
+    let mut res = LabeledReservoir::new(cap, seed);
+    source.reset()?;
+    while let Some(block) = source.next_block()? {
+        res.absorb(&block);
+    }
+    anyhow::ensure!(res.seen() > 0, "cannot sample from an empty source");
+    let seen = res.seen();
+    let (x, labels) = res.snapshot()?;
+    Ok((x, labels, seen))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,5 +478,86 @@ mod tests {
             });
             assert!(found, "sample row {r} not from the stream");
         }
+    }
+
+    #[test]
+    fn labeled_reservoir_keeps_rows_with_their_labels() {
+        let (x, labels) = toy(30, 3, 5);
+        let mut src = MemBlockSource::new(&x, &labels, 7);
+        let (sample, slabels, seen) = reservoir_sample_labeled(&mut src, 8, 21).unwrap();
+        assert_eq!(seen, 30);
+        assert_eq!((sample.rows(), slabels.len()), (8, 8));
+        // every sampled (row, label) pair exists in the stream
+        for r in 0..sample.rows() {
+            let found = (0..x.rows()).any(|i| {
+                labels[i] == slabels[r]
+                    && x.row(i).iter().zip(sample.row(r)).all(|(p, q)| p == q)
+            });
+            assert!(found, "sample pair {r} not from the stream");
+        }
+    }
+
+    #[test]
+    fn labeled_reservoir_resumes_from_parts() {
+        let (x, labels) = toy(24, 3, 6);
+        // one continuous reservoir over all 24 rows
+        let mut full = LabeledReservoir::new(6, 9);
+        let mut src = MemBlockSource::new(&x, &labels, 4);
+        src.reset().unwrap();
+        while let Some(b) = src.next_block().unwrap() {
+            full.absorb(&b);
+        }
+        assert_eq!(full.seen(), 24);
+        // a persisted-then-resumed reservoir keeps seen and stays bounded
+        let (snap_x, snap_l) = full.snapshot().unwrap();
+        let mut resumed =
+            LabeledReservoir::from_parts(&snap_x, &snap_l, full.seen(), 6, 10).unwrap();
+        let (x2, labels2) = toy(12, 3, 7);
+        let mut src2 = MemBlockSource::new(&x2, &labels2, 5);
+        src2.reset().unwrap();
+        while let Some(b) = src2.next_block().unwrap() {
+            resumed.absorb(&b);
+        }
+        assert_eq!(resumed.seen(), 36);
+        assert_eq!(resumed.len(), 6);
+        // bad persisted state is rejected
+        assert!(LabeledReservoir::from_parts(&snap_x, &snap_l[..3], 24, 6, 1).is_err());
+        assert!(LabeledReservoir::from_parts(&snap_x, &snap_l, 2, 6, 1).is_err());
+    }
+
+    #[test]
+    fn resumed_reservoir_cap_changes_stay_uniform() {
+        let (x, labels) = toy(24, 3, 6);
+        let mut full = LabeledReservoir::new(8, 9);
+        let mut src = MemBlockSource::new(&x, &labels, 4);
+        src.reset().unwrap();
+        while let Some(b) = src.next_block().unwrap() {
+            full.absorb(&b);
+        }
+        let (snap_x, snap_l) = full.snapshot().unwrap();
+
+        // shrink: a uniform subsample of the stored rows, paired correctly
+        let shrunk = LabeledReservoir::from_parts(&snap_x, &snap_l, full.seen(), 3, 11).unwrap();
+        assert_eq!(shrunk.len(), 3);
+        let (kept_x, kept_l) = shrunk.snapshot().unwrap();
+        for r in 0..kept_x.rows() {
+            let found = (0..snap_x.rows()).any(|i| {
+                snap_l[i] == kept_l[r]
+                    && snap_x.row(i).iter().zip(kept_x.row(r)).all(|(p, q)| p == q)
+            });
+            assert!(found, "shrunk row {r} is not one of the stored (row, label) pairs");
+        }
+
+        // growing an overflowed reservoir is clamped: admitting new rows
+        // into freed slots with probability 1 would bias the sample
+        let mut grown = LabeledReservoir::from_parts(&snap_x, &snap_l, full.seen(), 64, 12).unwrap();
+        grown.offer(x.row(0), labels[0]);
+        assert_eq!(grown.len(), snap_x.rows(), "overflowed reservoir must not grow");
+
+        // growing a never-overflowed reservoir (seen == stored) is fine
+        let mut fresh =
+            LabeledReservoir::from_parts(&snap_x, &snap_l, snap_x.rows(), 64, 13).unwrap();
+        fresh.offer(x.row(0), labels[0]);
+        assert_eq!(fresh.len(), snap_x.rows() + 1);
     }
 }

@@ -55,12 +55,23 @@ impl Args {
             let k = rest[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got {:?}", rest[i]))?;
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                flags.insert(k.to_string(), rest[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(k.to_string(), "true".to_string());
+            i += 1;
+            // consume the following non-flag tokens: single-valued flags
+            // get their value, the one multi-valued flag (`--diff A B`)
+            // gets the tokens joined with a space, bare flags get "true"
+            let mut vals: Vec<String> = Vec::new();
+            while i < rest.len() && !rest[i].starts_with("--") {
+                vals.push(rest[i].clone());
                 i += 1;
+            }
+            anyhow::ensure!(
+                vals.len() <= 1 || k == "diff",
+                "--{k} takes at most one value, got {vals:?} (stray token?)"
+            );
+            if vals.is_empty() {
+                flags.insert(k.to_string(), "true".to_string());
+            } else {
+                flags.insert(k.to_string(), vals.join(" "));
             }
         }
         Ok(Args { flags })
@@ -105,12 +116,17 @@ fn main() -> Result<()> {
         print_help();
         return Ok(());
     };
+    // `update` takes a positional NAME[@VERSION] before its flags
+    if cmd == "update" {
+        return cmd_update(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "datasets" => cmd_datasets(),
         "eval" => cmd_eval(&args),
         "toy" => cmd_toy(&args),
         "train" => cmd_train(&args),
+        "export" => cmd_export(&args),
         "models" => cmd_models(&args),
         "serve" => cmd_serve(&args),
         "check" => cmd_check(),
@@ -139,13 +155,36 @@ fn print_help() {
            toy [--out dir]                  Sec. 6.2 toy example (Figs. 2-3 data)\n\
            train --dataset NAME [--method akda|aksda|akda-nystrom|akda-rff|...]\n\
                  [--cond 10|100] [--landmarks M] [--stream] [--block-size B]\n\
-                 [--name MODEL] [--models-dir DIR] [--pjrt]\n\
+                 [--name MODEL] [--models-dir DIR] [--pjrt] [--no-resume]\n\
                                             fit a detector bank, evaluate it on the\n\
                                             test split, and publish it as the next\n\
-                                            version of MODEL (default: dataset name)\n\
+                                            version of MODEL (default: dataset name);\n\
+                                            akda / akda-nystrom / akda-rff models embed\n\
+                                            resume state so `akda update` can grow them\n\
+                                            (--no-resume skips it, shrinking the artifact)\n\
+           update NAME[@V] --data new.csv [--models-dir DIR]\n\
+                  [--refresh-landmarks] [--reservoir CAP]\n\
+                                            Sec. 7 recursive learning: decode the published\n\
+                                            model, grow it with the new rows — bordered-\n\
+                                            Cholesky extension (exact) or accumulator\n\
+                                            continuation (approx) — with ZERO full refits,\n\
+                                            re-evaluate, and publish the next version\n\
+                                            (a `serve --watch` service hot-swaps it in);\n\
+                                            --refresh-landmarks re-runs warm-started\n\
+                                            k-means so Nystrom landmarks track drift\n\
+           export --dataset NAME [--cond 10|100] [--split train|test]\n\
+                  [--skip K] [--stride S] [--rows N] --out FILE\n\
+                                            dump registry-dataset rows as label,f1,...\n\
+                                            CSV (update/drift simulations, smoke tests)\n\
            models [--models-dir DIR] [--inspect NAME[@V]]\n\
-                                            list published models, or dump one\n\
-                                            version's manifest + artifact sections\n\
+                  [--prune K [--model NAME [--protect V]]] [--diff A B]\n\
+                                            list published models, dump one version's\n\
+                                            manifest + artifact sections, GC old\n\
+                                            versions (newest K kept; latest never\n\
+                                            deleted, nor the --protect'ed version a\n\
+                                            running serve has pinned), or diff two\n\
+                                            versions' manifests, tensor checksums,\n\
+                                            and eval accuracy\n\
            serve --model NAME[@V] [--models-dir DIR] [--watch [SECS]]\n\
                  [--dataset NAME]           serve a published model: load, verify\n\
                                             checksums, score — zero training work;\n\
@@ -346,15 +385,25 @@ fn parse_train_spec(args: &Args) -> Result<TrainSpec> {
 }
 
 /// Fit the multiclass projection + one-vs-rest LSVM bank — the single
-/// training path behind `akda train` and `akda serve --dataset`. Returns
-/// the bank and the wall-clock training seconds.
-fn fit_detector_bank(ts: &TrainSpec) -> Result<(Arc<akda::coordinator::DetectorBank>, f64)> {
+/// training path behind `akda train` and `akda serve --dataset`. With
+/// `want_resume`, also returns (for the resumable methods akda /
+/// akda-nystrom / akda-rff) the continual-learning resume state `akda
+/// train` embeds so `akda update` can grow the model later; callers that
+/// discard it (`serve --dataset`, `train --no-resume`) pass `false` and
+/// skip the extra reservoir pass / aggregate retention entirely.
+fn fit_detector_bank(
+    ts: &TrainSpec,
+    want_resume: bool,
+) -> Result<(Arc<akda::coordinator::DetectorBank>, f64, Option<akda::model::ResumeState>)> {
     use akda::coordinator::DetectorBank;
     use akda::da::DrMethod;
-    use akda::svm::{LinearSvm, LinearSvmConfig};
+    use akda::model::codec::{ApproxResume, ExactResume};
+    use akda::model::update::{approx_resume_from_phi, DEFAULT_RESERVOIR_CAP, DEFAULT_UPDATE_SEED};
+    use akda::model::ResumeState;
 
     let split = &ts.split;
     let t0 = std::time::Instant::now();
+    let mut resume: Option<ResumeState> = None;
     let proj: Box<dyn akda::da::Projection> = match (ts.hp.stream_block, ts.id) {
         (Some(block_rows), MethodId::AkdaNystrom | MethodId::AkdaRff) => {
             // out-of-core training: tiled ΦᵀΦ/class-sum accumulation, then
@@ -379,6 +428,30 @@ fn fit_detector_bank(ts: &TrainSpec) -> Result<(Arc<akda::coordinator::DetectorB
                 prep.stats.dense_resident_f64() as f64 * 8.0 / 1e6,
             );
             let w = prep.solve_w_multiclass()?;
+            if want_resume {
+                // resume state: the accumulator aggregates plus a labeled
+                // reservoir of the stream (a second bounded pass)
+                let mut res_src = akda::data::stream::MemBlockSource::new(
+                    &split.x_train,
+                    &split.y_train,
+                    block_rows,
+                );
+                let (reservoir, reservoir_labels, seen) =
+                    akda::data::stream::reservoir_sample_labeled(
+                        &mut res_src,
+                        DEFAULT_RESERVOIR_CAP,
+                        DEFAULT_UPDATE_SEED,
+                    )?;
+                resume = Some(ResumeState::Approx(ApproxResume {
+                    gram: prep.gram().clone(),
+                    class_sums: prep.class_sums().clone(),
+                    counts: prep.counts().to_vec(),
+                    reservoir,
+                    reservoir_labels,
+                    seen,
+                    eps: ap.eps,
+                }));
+            }
             Box::new(akda::da::akda_stream::BlockedProjection {
                 map: prep.map.clone(),
                 w,
@@ -388,6 +461,44 @@ fn fit_detector_bank(ts: &TrainSpec) -> Result<(Arc<akda::coordinator::DetectorB
         (Some(_), _) => {
             bail!("--stream applies to --method akda-nystrom|akda-rff only")
         }
+        (None, MethodId::AkdaNystrom | MethodId::AkdaRff) => {
+            // same arithmetic as build_dr -> AkdaApprox::fit (prepare +
+            // fit), opened up so the Φ-side aggregates can seed the
+            // continual-learning resume state
+            let ap = akda::coordinator::protocol::approx_config(ts.id, ts.hp, 1e-3);
+            let prep = ap.prepare(&split.x_train)?;
+            let proj = prep.fit(&split.y_train, split.n_classes)?;
+            if want_resume {
+                resume = Some(ResumeState::Approx(approx_resume_from_phi(
+                    &prep.phi,
+                    prep.gram(),
+                    &split.x_train,
+                    &split.y_train,
+                    split.n_classes,
+                    ap.eps,
+                    DEFAULT_RESERVOIR_CAP,
+                    DEFAULT_UPDATE_SEED,
+                )?));
+            }
+            Box::new(proj)
+        }
+        (None, MethodId::Akda) => {
+            // same configuration and arithmetic as build_dr -> Akda::fit,
+            // keeping the Cholesky factor for bordered growth under
+            // `akda update`
+            let akda_cfg = akda::coordinator::protocol::akda_config(ts.hp, 1e-3);
+            let (proj, chol_l) =
+                akda_cfg.fit_with_factor(&split.x_train, &split.y_train, split.n_classes)?;
+            if want_resume {
+                resume = Some(ResumeState::Exact(ExactResume {
+                    chol_l,
+                    labels: split.y_train.clone(),
+                    eps: akda_cfg.eps,
+                    n_classes: split.n_classes,
+                }));
+            }
+            Box::new(proj)
+        }
         (None, _) => {
             let dr = build_dr(ts.id, ts.hp, 1e-3, ts.engine.as_ref())?
                 .with_context(|| format!("{} has no DR stage to serve", ts.id.name()))?;
@@ -395,18 +506,10 @@ fn fit_detector_bank(ts: &TrainSpec) -> Result<(Arc<akda::coordinator::DetectorB
         }
     };
     let z = proj.project(&split.x_train);
-    let svms = (0..split.n_classes)
-        .map(|cls| {
-            let y: Vec<f64> = split
-                .y_train
-                .iter()
-                .map(|&l| if l == cls { 1.0 } else { -1.0 })
-                .collect();
-            (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
-        })
-        .collect();
+    let svms =
+        akda::model::update::train_svm_bank(&z, &split.y_train, split.n_classes);
     let bank = Arc::new(DetectorBank { projection: proj, svms });
-    Ok((bank, t0.elapsed().as_secs_f64()))
+    Ok((bank, t0.elapsed().as_secs_f64(), resume))
 }
 
 /// Argmax class of one observation's per-class scores — the single
@@ -505,7 +608,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         ts.split.n_classes,
         ts.id.name()
     );
-    let (bank, train_s) = fit_detector_bank(&ts)?;
+    let want_resume = args.get("no-resume").is_none();
+    let (bank, train_s, resume) = fit_detector_bank(&ts, want_resume)?;
     let (accuracy, map) = eval_bank(&bank, &ts.split);
     println!(
         "train-eval: accuracy {:.2}%  MAP {:.2}%  (train {:.2}s)",
@@ -514,7 +618,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         train_s
     );
 
-    let artifact = akda::model::encode_bank(&bank, ts.id.name())?;
+    let mut artifact = akda::model::encode_bank(&bank, ts.id.name())?;
+    match &resume {
+        Some(state) => {
+            akda::model::codec::encode_resume(&mut artifact, state)?;
+            eprintln!(
+                "embedded {} resume state — grow this model later with `akda update`",
+                state.kind()
+            );
+        }
+        None if !want_resume => {
+            eprintln!("--no-resume: artifact is not updatable in place")
+        }
+        None => {}
+    }
     let manifest = ModelManifest {
         method: ts.id.name().to_string(),
         dataset: ts.dataset.clone(),
@@ -543,10 +660,213 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `akda update NAME[@V] --data new.csv` — the paper's Sec. 7 recursive
+/// learning wired through the registry: decode a published artifact, grow
+/// it with the new observations (zero full refits — bordered-Cholesky
+/// extension for exact models, accumulator continuation / warm landmark
+/// refresh for approximate ones), re-evaluate, and publish the next
+/// version. A running `serve --model NAME --watch` hot-swaps it in.
+fn cmd_update(rest: &[String]) -> Result<()> {
+    use akda::model::{ModelManifest, ModelRegistry, UpdateOptions};
+
+    let Some(spec) = rest.first().filter(|s| !s.starts_with("--")) else {
+        bail!("usage: akda update NAME[@VERSION] --data new.csv [--models-dir DIR] \
+               [--refresh-landmarks] [--reservoir CAP]")
+    };
+    let args = Args::parse(&rest[1..])?;
+    let data = args
+        .get("data")
+        .context("akda update needs --data new.csv (label,f1,f2,... rows)")?;
+    let (x_new, y_new) = akda::data::csv::load_labeled(std::path::Path::new(data))?;
+
+    let registry = ModelRegistry::open(models_dir(&args));
+    let (entry, artifact) = registry.load_artifact(spec)?;
+    let reservoir_cap = match args.get("reservoir") {
+        Some(cap) => {
+            let cap: usize = cap.parse().context("--reservoir CAP must be an integer")?;
+            anyhow::ensure!(cap >= 1, "--reservoir CAP must be >= 1");
+            cap
+        }
+        None => UpdateOptions::default().reservoir_cap,
+    };
+    let opts = UpdateOptions {
+        refresh_landmarks: args.get("refresh-landmarks").is_some(),
+        reservoir_cap,
+        ..Default::default()
+    };
+    eprintln!(
+        "updating {} with {} rows from {data:?} ({})",
+        entry.spec(),
+        x_new.rows(),
+        if opts.refresh_landmarks { "landmark refresh on" } else { "no landmark refresh" },
+    );
+
+    let t0 = std::time::Instant::now();
+    let (bank, new_artifact, report) = akda::model::apply_update(&artifact, &x_new, &y_new, &opts)?;
+    let update_s = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "update [{}]: +{} rows -> {} total (C={}), bordered growths {}, \
+         full refactorizations {} (structurally impossible), {:.2}s",
+        report.kind,
+        report.appended,
+        report.total_rows,
+        report.n_classes,
+        report.bordered_growths,
+        report.full_refactorizations,
+        update_s
+    );
+    if report.kind == "exact-bordered" && args.get("reservoir").is_some() {
+        eprintln!(
+            "note: --reservoir has no effect on exact models (the full \
+             training set is retained; reservoirs exist for approx models only)"
+        );
+    }
+
+    // re-evaluate on the held-out split the model was trained against
+    // (possible whenever the manifest names a registry dataset)
+    let mf = &entry.manifest;
+    let eval = akda::data::by_name(&mf.dataset)
+        .and_then(|dspec| parse_condition(&mf.condition).ok().map(|c| dspec.split(c)))
+        .filter(|split| split.x_test.cols() == x_new.cols());
+    let (accuracy, map) = match &eval {
+        Some(split) => {
+            let (accuracy, map) = eval_bank(&bank, split);
+            println!("update-eval: accuracy {:.2}%  MAP {:.2}%", 100.0 * accuracy, 100.0 * map);
+            (accuracy, map)
+        }
+        None => {
+            eprintln!(
+                "update-eval skipped: dataset {:?} is not in the registry",
+                mf.dataset
+            );
+            (0.0, 0.0)
+        }
+    };
+
+    let manifest = ModelManifest {
+        method: mf.method.clone(),
+        dataset: mf.dataset.clone(),
+        condition: mf.condition.clone(),
+        rho: mf.rho,
+        c: mf.c,
+        h: mf.h,
+        m: mf.m,
+        stream_block: mf.stream_block,
+        n_classes: report.n_classes,
+        input_dim: mf.input_dim,
+        train_s: update_s,
+        map,
+        accuracy,
+        updated_from: Some(entry.spec()),
+        ..Default::default()
+    };
+    let published = registry.publish(&entry.name, &new_artifact, &manifest)?;
+    println!(
+        "published {} (updated from {}; a `serve --model {} --watch` service \
+         hot-swaps it in)",
+        published.spec(),
+        entry.spec(),
+        published.name
+    );
+    Ok(())
+}
+
+/// `akda export` — dump registry-dataset rows as `label,f1,f2,...` CSV,
+/// the input format `akda update --data` (and the streaming
+/// `CsvBlockSource`) consume. `--skip`/`--stride`/`--rows` select a row
+/// subset, e.g. a strided slice of the test split as a drift simulation.
+fn cmd_export(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").context("export needs --dataset NAME")?;
+    let spec =
+        akda::data::by_name(dataset).with_context(|| format!("dataset {dataset:?}"))?;
+    let cond = parse_condition(args.get("cond").unwrap_or("100"))?;
+    let split = spec.split(cond);
+    let which = args.get("split").unwrap_or("test");
+    let (x, y) = match which {
+        "train" => (&split.x_train, &split.y_train),
+        "test" => (&split.x_test, &split.y_test),
+        other => bail!("unknown split {other:?} (train|test)"),
+    };
+    let parse_n = |key: &str, default: usize| -> Result<usize> {
+        match args.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    };
+    let skip = parse_n("skip", 0)?;
+    let stride = parse_n("stride", 1)?.max(1);
+    let rows = parse_n("rows", usize::MAX)?;
+    let idx: Vec<usize> = (skip..x.rows()).step_by(stride).take(rows).collect();
+    anyhow::ensure!(
+        !idx.is_empty(),
+        "selection is empty ({} has {} rows, skip {skip}, stride {stride})",
+        which,
+        x.rows()
+    );
+    let xm = x.select_rows(&idx);
+    let ym: Vec<usize> = idx.iter().map(|&i| y[i]).collect();
+    let out = args.get("out").context("export needs --out FILE")?;
+    akda::data::csv::save_labeled(std::path::Path::new(out), &xm, &ym)?;
+    println!(
+        "wrote {} rows x {} features ({} [{}] {which} split) to {out}",
+        xm.rows(),
+        xm.cols(),
+        dataset,
+        cond.name()
+    );
+    Ok(())
+}
+
 fn cmd_models(args: &Args) -> Result<()> {
     use akda::model::ModelRegistry;
 
     let registry = ModelRegistry::open(models_dir(args));
+    if let Some(pair) = args.get("diff") {
+        // `--diff A B` (space) and `--diff A,B` both work
+        let parts: Vec<&str> = if pair.contains(',') {
+            pair.split(',').map(str::trim).collect()
+        } else {
+            pair.split_whitespace().collect()
+        };
+        anyhow::ensure!(
+            parts.len() == 2,
+            "--diff takes two specs, e.g. `akda models --diff mymodel@1 mymodel@2`"
+        );
+        print!("{}", registry.diff(parts[0], parts[1])?);
+        return Ok(());
+    }
+    if let Some(k) = args.get("prune") {
+        let keep: usize = k.parse().context("--prune K must be an integer")?;
+        // the registry never deletes the newest version; --protect V
+        // additionally shields the version a running `serve` process has
+        // pinned (the CLI cannot see another process's BankHandle)
+        let protect: Option<u32> = match args.get("protect") {
+            Some(v) => {
+                anyhow::ensure!(
+                    args.get("model").is_some(),
+                    "--protect V names one model's version: pass --model NAME with it"
+                );
+                Some(v.parse().context("--protect V must be a version number")?)
+            }
+            None => None,
+        };
+        let names = match args.get("model") {
+            Some(n) => vec![n.to_string()],
+            None => registry.models()?,
+        };
+        anyhow::ensure!(!names.is_empty(), "no models in {:?}", registry.root());
+        for name in names {
+            let pruned = registry.prune(&name, keep, protect)?;
+            if pruned.is_empty() {
+                println!("{name}: nothing to prune (<= {keep} versions)");
+            } else {
+                let specs: Vec<String> =
+                    pruned.iter().map(|v| format!("{name}@{v}")).collect();
+                println!("{name}: pruned {} (kept the newest {keep})", specs.join(", "));
+            }
+        }
+        return Ok(());
+    }
     if let Some(spec) = args.get("inspect") {
         let (entry, artifact) = registry.load_artifact(spec)?;
         println!("# {} — {:?}", entry.spec(), entry.artifact_path());
@@ -637,7 +957,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             entry.spec(),
             input_dim
         );
-        let handle = BankHandle::new(Arc::new(bank));
+        // versioned handle: monitoring (and in-process GC callers) can ask
+        // which registry version is live; the watcher advances it on swap
+        let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
         let watcher = match args.get("watch") {
             Some(v) => {
                 let poll: f64 =
@@ -686,7 +1008,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ts.split.n_classes,
         ts.id.name()
     );
-    let (bank, train_s) = fit_detector_bank(&ts)?;
+    let (bank, train_s, _resume) = fit_detector_bank(&ts, false)?;
     eprintln!("trained in {train_s:.2}s — tip: `akda train` publishes instead");
     let svc = ScoringService::start(
         bank,

@@ -36,6 +36,27 @@
 //! panic or a silently-wrong model. Tensor payload lengths are validated
 //! against the remaining buffer before allocation, so a corrupt shape
 //! cannot trigger an unbounded allocation.
+//!
+//! # Examples
+//!
+//! ```
+//! use akda::linalg::Mat;
+//! use akda::model::ModelArtifact;
+//!
+//! let mut art = ModelArtifact::new();
+//! art.set_meta("method", "akda");
+//! art.push_tensor("psi", Mat::from_fn(3, 2, |r, c| (r + c) as f64));
+//!
+//! let bytes = art.to_bytes();
+//! let back = ModelArtifact::from_bytes(&bytes).unwrap();
+//! assert_eq!(back.meta_str("method").unwrap(), "akda");
+//! assert_eq!(back.tensor("psi").unwrap(), art.tensor("psi").unwrap()); // bit-for-bit
+//!
+//! // corruption is detected, never served
+//! let mut bad = bytes.clone();
+//! bad[bytes.len() / 2] ^= 1;
+//! assert!(ModelArtifact::from_bytes(&bad).is_err());
+//! ```
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -113,6 +134,30 @@ impl ModelArtifact {
             .collect()
     }
 
+    /// Per-section `(name, rows, cols, checksum)` — the same FNV-1a 64
+    /// the on-disk format stores for each section, so `akda models
+    /// --diff` can report which tensors actually changed between two
+    /// versions without comparing payloads element by element.
+    pub fn section_digests(&self) -> Vec<(String, usize, usize, u64)> {
+        self.sections
+            .iter()
+            .map(|(n, t)| {
+                // stream the exact bytes `write_section` emits (minus its
+                // trailing stored checksum) through the hash, so a large
+                // tensor payload is never materialized a second time
+                let mut header = Vec::with_capacity(4 + n.len() + 16);
+                write_str(&mut header, n);
+                header.extend_from_slice(&(t.rows() as u64).to_le_bytes());
+                header.extend_from_slice(&(t.cols() as u64).to_le_bytes());
+                let mut sum = fnv1a64_update(FNV_OFFSET_BASIS, &header);
+                for v in t.data() {
+                    sum = fnv1a64_update(sum, &v.to_le_bytes());
+                }
+                (n.clone(), t.rows(), t.cols(), sum)
+            })
+            .collect()
+    }
+
     /// Serialize to the format described in the module docs.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
@@ -125,15 +170,7 @@ impl ModelArtifact {
         }
         out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
         for (name, tensor) in &self.sections {
-            let start = out.len();
-            write_str(&mut out, name);
-            out.extend_from_slice(&(tensor.rows() as u64).to_le_bytes());
-            out.extend_from_slice(&(tensor.cols() as u64).to_le_bytes());
-            for v in tensor.data() {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-            let sum = fnv1a64(&out[start..]);
-            out.extend_from_slice(&sum.to_le_bytes());
+            write_section(&mut out, name, tensor);
         }
         let file_sum = fnv1a64(&out);
         out.extend_from_slice(&file_sum.to_le_bytes());
@@ -234,8 +271,12 @@ impl ModelArtifact {
 /// FNV-1a 64-bit — tiny, dependency-free, and plenty for integrity checks
 /// of a local trusted-path format (this is corruption detection, not
 /// cryptographic authentication).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64 state — the streaming form
+/// behind [`fnv1a64`], also used by `section_digests` to hash a tensor
+/// payload without copying it into a contiguous buffer first.
+fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x1_0000_0000_01b3);
@@ -243,9 +284,29 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET_BASIS, bytes)
+}
+
 fn write_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&(s.len() as u32).to_le_bytes());
     out.extend_from_slice(s.as_bytes());
+}
+
+/// Append one section (name, shape, payload, section checksum) to `out`.
+/// `section_digests` streams these exact bytes (minus the trailing
+/// checksum) through the hash, so its digest always matches what lands on
+/// disk — keep the two byte layouts in lockstep.
+fn write_section(out: &mut Vec<u8>, name: &str, tensor: &Mat) {
+    let start = out.len();
+    write_str(out, name);
+    out.extend_from_slice(&(tensor.rows() as u64).to_le_bytes());
+    out.extend_from_slice(&(tensor.cols() as u64).to_le_bytes());
+    for v in tensor.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = fnv1a64(&out[start..]);
+    out.extend_from_slice(&sum.to_le_bytes());
 }
 
 /// Bounds-checked little-endian reader over the verified body bytes.
@@ -397,6 +458,26 @@ mod tests {
         bytes[n..].copy_from_slice(&sum);
         let msg = format!("{:#}", ModelArtifact::from_bytes(&bytes).unwrap_err());
         assert!(msg.contains("overflow") || msg.contains("truncated"), "{msg}");
+    }
+
+    #[test]
+    fn section_digests_track_payload_changes() {
+        let a = sample();
+        let d1 = a.section_digests();
+        assert_eq!(d1.len(), 2);
+        assert_eq!((d1[0].0.as_str(), d1[0].1, d1[0].2), ("psi", 4, 2));
+        // identical artifact, identical digests
+        let b = ModelArtifact::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(d1, b.section_digests());
+        // one payload element changes, only that section's digest moves
+        let mut c = ModelArtifact::new();
+        c.set_meta("method", "akda");
+        c.set_meta("classes", "3");
+        c.push_tensor("psi", Mat::from_fn(4, 2, |r, col| (r * 2 + col) as f64 * 0.5 + 1.0));
+        c.push_tensor("w", Mat::from_fn(1, 3, |_, col| -(col as f64) / 3.0));
+        let d2 = c.section_digests();
+        assert_ne!(d1[0].3, d2[0].3, "psi digest must change");
+        assert_eq!(d1[1].3, d2[1].3, "w digest must not change");
     }
 
     #[test]

@@ -20,6 +20,21 @@
 //! The detector bank adds the one-vs-rest LSVM state: `svm.w` (C×D) and
 //! `svm.b` (1×C), with class names in `class.<i>.name` meta keys.
 //!
+//! # Resume sections (continual learning)
+//!
+//! A model published by `akda train` can additionally carry the state
+//! `akda update` needs to *continue* training without a full refit
+//! ([`ResumeState`], Sec. 7 recursive learning):
+//!
+//! | `resume.kind` | sections | consumed by |
+//! |---------------|----------|-------------|
+//! | `exact`  | `resume.chol_l` (N×N factor of K+εI), `resume.labels` (1×N), `resume.eps` (1×1), meta `resume.n_classes` | `da::incremental::IncrementalAkda::from_parts` → bordered-Cholesky growth |
+//! | `approx` | `resume.gram` (m×m ΦᵀΦ), `resume.class_sums` (m×C), `resume.counts` (1×C), `resume.reservoir` (r×F), `resume.reservoir_labels` (1×r), `resume.eps` (1×1), meta `resume.seen` | `model::update` → accumulator continuation / landmark refresh |
+//!
+//! Resume state is optional: [`decode_resume`] returns `None` for
+//! artifacts that never stored it (they still serve, they just cannot be
+//! updated in place).
+//!
 //! Decoding is the artifact mirror of `coordinator::build_dr`: a
 //! `projection`-kind dispatch that reconstructs the exact concrete type,
 //! so a loaded bank scores bit-for-bit identically to the bank that was
@@ -27,6 +42,31 @@
 //! `Projection::as_any` / `FeatureMap::as_any` introspection hooks to
 //! recover the concrete types from the trait objects the training paths
 //! return.
+//!
+//! # Examples
+//!
+//! A fitted projection round-trips through artifact bytes without loss:
+//!
+//! ```
+//! use akda::da::{DrMethod, Projection};
+//! use akda::kernels::Kernel;
+//! use akda::linalg::Mat;
+//! use akda::model::ModelArtifact;
+//! use akda::model::codec::{decode_projection, encode_projection};
+//! use akda::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(2);
+//! let x = Mat::from_fn(20, 4, |r, _| (r % 2) as f64 * 3.0 + rng.normal());
+//! let labels: Vec<usize> = (0..20).map(|i| i % 2).collect();
+//! let proj = akda::da::akda::Akda::new(Kernel::Rbf { rho: 0.4 })
+//!     .fit(&x, &labels, 2)
+//!     .unwrap();
+//!
+//! let mut art = ModelArtifact::new();
+//! encode_projection(&mut art, proj.as_ref()).unwrap();
+//! let loaded = decode_projection(&ModelArtifact::from_bytes(&art.to_bytes()).unwrap()).unwrap();
+//! assert_eq!(loaded.project(&x), proj.project(&x)); // bit-for-bit
+//! ```
 
 use std::sync::Arc;
 
@@ -314,6 +354,207 @@ pub fn input_dim(art: &ModelArtifact) -> Result<usize> {
         .context("artifact has no input_dim — not a bank artifact?")
 }
 
+// ---------------------------------------------------------------------------
+// Resume state <-> artifact (continual learning)
+// ---------------------------------------------------------------------------
+
+/// Meta key tagging which resume flavour an artifact carries.
+pub const RESUME_KIND_KEY: &str = "resume.kind";
+
+/// Exact-path resume state: everything `da::incremental` needs to grow a
+/// published AKDA model by bordered Cholesky rows (the training rows
+/// themselves live in the `kernel.x_train` section).
+#[derive(Debug, Clone)]
+pub struct ExactResume {
+    /// Lower Cholesky factor of K + εI over the training rows.
+    pub chol_l: Mat,
+    /// Training labels, same row order as `kernel.x_train`.
+    pub labels: Vec<usize>,
+    pub eps: f64,
+    pub n_classes: usize,
+}
+
+/// Approximate-path resume state: the tiled accumulator aggregates
+/// (`da::akda_stream`) plus a labeled reservoir of the training history
+/// for landmark refresh and SVM retraining.
+#[derive(Debug, Clone)]
+pub struct ApproxResume {
+    /// Pre-ridge m×m Gram accumulator G = ΦᵀΦ.
+    pub gram: Mat,
+    /// m×C class sums S = ΦᵀR.
+    pub class_sums: Mat,
+    /// Per-class row counts.
+    pub counts: Vec<usize>,
+    /// Labeled reservoir rows (uniform sample of the training history).
+    pub reservoir: Mat,
+    pub reservoir_labels: Vec<usize>,
+    /// Total rows ever absorbed by the reservoir (Algorithm R counter).
+    pub seen: usize,
+    pub eps: f64,
+}
+
+/// Optional continual-learning state carried next to a servable bank.
+#[derive(Debug, Clone)]
+pub enum ResumeState {
+    Exact(ExactResume),
+    Approx(ApproxResume),
+}
+
+impl ResumeState {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ResumeState::Exact(_) => "exact",
+            ResumeState::Approx(_) => "approx",
+        }
+    }
+}
+
+fn encode_usize_row(art: &mut ModelArtifact, name: &str, v: &[usize]) {
+    art.push_tensor(name, Mat::from_fn(1, v.len(), |_, j| v[j] as f64));
+}
+
+fn decode_usize_row(art: &ModelArtifact, name: &str) -> Result<Vec<usize>> {
+    let t = art.tensor(name)?;
+    ensure!(t.rows() == 1, "{name} must be a 1-row tensor, got {}x{}", t.rows(), t.cols());
+    let mut out = Vec::with_capacity(t.cols());
+    for &v in t.data() {
+        ensure!(
+            v >= 0.0 && v.fract() == 0.0 && v < (1u64 << 53) as f64,
+            "{name} holds a non-integer entry {v}"
+        );
+        out.push(v as usize);
+    }
+    Ok(out)
+}
+
+fn push_scalar(art: &mut ModelArtifact, name: &str, v: f64) {
+    art.push_tensor(name, Mat::from_vec(1, 1, vec![v]));
+}
+
+fn scalar(art: &ModelArtifact, name: &str) -> Result<f64> {
+    let t = art.tensor(name)?;
+    ensure!(t.shape() == (1, 1), "{name} must be 1x1");
+    Ok(t[(0, 0)])
+}
+
+/// Attach resume sections to a bank artifact (see the module docs table).
+pub fn encode_resume(art: &mut ModelArtifact, resume: &ResumeState) -> Result<()> {
+    art.set_meta(RESUME_KIND_KEY, resume.kind());
+    match resume {
+        ResumeState::Exact(r) => {
+            ensure!(
+                r.chol_l.rows() == r.chol_l.cols() && r.chol_l.rows() == r.labels.len(),
+                "exact resume mismatch: factor {}x{} vs {} labels",
+                r.chol_l.rows(),
+                r.chol_l.cols(),
+                r.labels.len()
+            );
+            art.set_meta("resume.n_classes", r.n_classes.to_string());
+            art.push_tensor("resume.chol_l", r.chol_l.clone());
+            encode_usize_row(art, "resume.labels", &r.labels);
+            push_scalar(art, "resume.eps", r.eps);
+        }
+        ResumeState::Approx(r) => {
+            ensure!(
+                r.gram.rows() == r.gram.cols() && r.gram.rows() == r.class_sums.rows(),
+                "approx resume mismatch: gram {}x{} vs class sums {}x{}",
+                r.gram.rows(),
+                r.gram.cols(),
+                r.class_sums.rows(),
+                r.class_sums.cols()
+            );
+            ensure!(
+                r.counts.len() == r.class_sums.cols(),
+                "approx resume mismatch: {} counts vs {} class-sum columns",
+                r.counts.len(),
+                r.class_sums.cols()
+            );
+            ensure!(
+                r.reservoir.rows() == r.reservoir_labels.len() && r.seen >= r.reservoir.rows(),
+                "approx resume mismatch: reservoir {} rows, {} labels, seen {}",
+                r.reservoir.rows(),
+                r.reservoir_labels.len(),
+                r.seen
+            );
+            art.set_meta("resume.seen", r.seen.to_string());
+            art.push_tensor("resume.gram", r.gram.clone());
+            art.push_tensor("resume.class_sums", r.class_sums.clone());
+            encode_usize_row(art, "resume.counts", &r.counts);
+            art.push_tensor("resume.reservoir", r.reservoir.clone());
+            encode_usize_row(art, "resume.reservoir_labels", &r.reservoir_labels);
+            push_scalar(art, "resume.eps", r.eps);
+        }
+    }
+    Ok(())
+}
+
+/// Decode the resume sections, `None` when the artifact never stored any
+/// (older artifacts, or training paths with no resumable state).
+pub fn decode_resume(art: &ModelArtifact) -> Result<Option<ResumeState>> {
+    let kind = match art.meta.get(RESUME_KIND_KEY) {
+        Some(k) => k.as_str(),
+        None => return Ok(None),
+    };
+    Ok(Some(match kind {
+        "exact" => {
+            let chol_l = art.tensor("resume.chol_l")?.clone();
+            let labels = decode_usize_row(art, "resume.labels")?;
+            ensure!(
+                chol_l.rows() == chol_l.cols() && chol_l.rows() == labels.len(),
+                "exact resume mismatch: factor {}x{} vs {} labels",
+                chol_l.rows(),
+                chol_l.cols(),
+                labels.len()
+            );
+            ResumeState::Exact(ExactResume {
+                chol_l,
+                labels,
+                eps: scalar(art, "resume.eps")?,
+                n_classes: art.meta_usize("resume.n_classes")?,
+            })
+        }
+        "approx" => {
+            let gram = art.tensor("resume.gram")?.clone();
+            let class_sums = art.tensor("resume.class_sums")?.clone();
+            let counts = decode_usize_row(art, "resume.counts")?;
+            let reservoir = art.tensor("resume.reservoir")?.clone();
+            let reservoir_labels = decode_usize_row(art, "resume.reservoir_labels")?;
+            let seen = art.meta_usize("resume.seen")?;
+            ensure!(
+                gram.rows() == gram.cols() && gram.rows() == class_sums.rows(),
+                "approx resume mismatch: gram {}x{} vs class sums {}x{}",
+                gram.rows(),
+                gram.cols(),
+                class_sums.rows(),
+                class_sums.cols()
+            );
+            ensure!(
+                counts.len() == class_sums.cols(),
+                "approx resume mismatch: {} counts vs {} class-sum columns",
+                counts.len(),
+                class_sums.cols()
+            );
+            ensure!(
+                reservoir.rows() == reservoir_labels.len() && seen >= reservoir.rows(),
+                "approx resume mismatch: reservoir {} rows, {} labels, seen {}",
+                reservoir.rows(),
+                reservoir_labels.len(),
+                seen
+            );
+            ResumeState::Approx(ApproxResume {
+                gram,
+                class_sums,
+                counts,
+                reservoir,
+                reservoir_labels,
+                seen,
+                eps: scalar(art, "resume.eps")?,
+            })
+        }
+        other => bail!("unknown resume kind {other:?} in artifact"),
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,6 +635,60 @@ mod tests {
             };
             roundtrip(&blocked, &x);
         }
+    }
+
+    #[test]
+    fn resume_state_roundtrips_both_kinds() {
+        let exact = ResumeState::Exact(ExactResume {
+            chol_l: Mat::from_fn(4, 4, |r, c| if c <= r { (r + c + 1) as f64 } else { 0.0 }),
+            labels: vec![0, 1, 0, 2],
+            eps: 1e-3,
+            n_classes: 3,
+        });
+        let approx = ResumeState::Approx(ApproxResume {
+            gram: Mat::from_fn(3, 3, |r, c| (r * 3 + c) as f64),
+            class_sums: Mat::from_fn(3, 2, |r, c| (r + c) as f64 * 0.5),
+            counts: vec![7, 9],
+            reservoir: Mat::from_fn(5, 2, |r, c| (r * 2 + c) as f64),
+            reservoir_labels: vec![0, 1, 1, 0, 1],
+            seen: 16,
+            eps: 2e-3,
+        });
+        for state in [exact, approx] {
+            let mut art = ModelArtifact::new();
+            encode_resume(&mut art, &state).unwrap();
+            let art = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+            let back = decode_resume(&art).unwrap().expect("resume stored");
+            assert_eq!(back.kind(), state.kind());
+            match (state, back) {
+                (ResumeState::Exact(a), ResumeState::Exact(b)) => {
+                    assert_eq!(a.chol_l, b.chol_l);
+                    assert_eq!(a.labels, b.labels);
+                    assert_eq!(a.eps, b.eps);
+                    assert_eq!(a.n_classes, b.n_classes);
+                }
+                (ResumeState::Approx(a), ResumeState::Approx(b)) => {
+                    assert_eq!(a.gram, b.gram);
+                    assert_eq!(a.class_sums, b.class_sums);
+                    assert_eq!(a.counts, b.counts);
+                    assert_eq!(a.reservoir, b.reservoir);
+                    assert_eq!(a.reservoir_labels, b.reservoir_labels);
+                    assert_eq!((a.seen, a.eps), (b.seen, b.eps));
+                }
+                _ => panic!("kind changed across the round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn artifacts_without_resume_state_decode_to_none() {
+        let (x, labels) = toy();
+        let proj = crate::da::akda::Akda::new(Kernel::Rbf { rho: 0.3 })
+            .fit(&x, &labels, 2)
+            .unwrap();
+        let mut art = ModelArtifact::new();
+        encode_projection(&mut art, proj.as_ref()).unwrap();
+        assert!(decode_resume(&art).unwrap().is_none());
     }
 
     #[test]

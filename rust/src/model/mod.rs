@@ -26,18 +26,32 @@
 //!   published models into a running `ScoringService` through its
 //!   [`coordinator::BankHandle`](crate::coordinator::BankHandle).
 //!
+//! * [`update`] — the continual-learning engine (L5): `akda update`
+//!   decodes a published artifact, grows it with new observations — a
+//!   bordered-Cholesky extension for exact models
+//!   (`da::incremental`), an accumulator continuation or warm
+//!   landmark refresh for approximate ones — and returns the next
+//!   version to publish, with zero full refits. `registry::prune`
+//!   bounds the version history the loop produces.
+//!
 //! The CLI surface is `akda train` (fit → eval → publish), `akda models`
-//! (list/inspect) and `akda serve --model NAME[@VERSION]` (load and
-//! serve with zero training work). `tests/model_roundtrip.rs` pins the
-//! core guarantee: for every servable method, a published-then-loaded
-//! model scores the test set bit-for-bit identically to the freshly
-//! trained one, and corrupt artifacts fail with checksum errors instead
-//! of panics or silently wrong models.
+//! (list/inspect/diff/prune), `akda serve --model NAME[@VERSION]` (load
+//! and serve with zero training work; `--watch` hot-swaps new versions
+//! in), and `akda update NAME[@V] --data new.csv` (recursive learning →
+//! next version). `tests/model_roundtrip.rs` pins the persistence
+//! guarantee: for every servable method, a published-then-loaded model
+//! scores the test set bit-for-bit identically to the freshly trained
+//! one, and corrupt artifacts fail with checksum errors instead of
+//! panics or silently wrong models. `tests/continual.rs` pins the
+//! update guarantee: an incrementally grown model matches a from-scratch
+//! fit on the concatenated data to ≤1e-10 in projected scores.
 
 pub mod artifact;
 pub mod codec;
 pub mod registry;
+pub mod update;
 
 pub use artifact::ModelArtifact;
-pub use codec::{decode_bank, encode_bank};
-pub use registry::{HotReloader, ModelManifest, ModelRegistry, ModelVersion};
+pub use codec::{decode_bank, encode_bank, ResumeState};
+pub use registry::{HotReloader, ModelDiff, ModelManifest, ModelRegistry, ModelVersion};
+pub use update::{apply_update, UpdateOptions, UpdateReport};

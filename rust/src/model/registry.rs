@@ -70,11 +70,18 @@ pub struct ModelManifest {
     pub input_dim: usize,
     /// Wall-clock training seconds (fit + SVM bank).
     pub train_s: f64,
-    /// Train-time evaluation on the held-out test split.
+    /// Train-time evaluation on the held-out test split. By convention
+    /// `0.0` in BOTH fields means "no evaluation ran" (e.g. an `akda
+    /// update` against a dataset not in the registry) — [`ModelRegistry::diff`]
+    /// reports eval drift only when both sides carry a non-zero pair.
     pub map: f64,
     pub accuracy: f64,
     /// Publish time, seconds since the Unix epoch.
     pub created_unix: u64,
+    /// For versions produced by `akda update`: the `name@version` spec the
+    /// recursive update started from (provenance of the continual-learning
+    /// chain).
+    pub updated_from: Option<String>,
 }
 
 impl ModelManifest {
@@ -104,6 +111,9 @@ impl ModelManifest {
         kv("map", self.map.to_string());
         kv("accuracy", self.accuracy.to_string());
         kv("created_unix", self.created_unix.to_string());
+        if let Some(from) = &self.updated_from {
+            kv("updated_from", from.clone());
+        }
         s
     }
 
@@ -138,6 +148,7 @@ impl ModelManifest {
                 "map" => m.map = v.parse().with_context(ctx)?,
                 "accuracy" => m.accuracy = v.parse().with_context(ctx)?,
                 "created_unix" => m.created_unix = v.parse().with_context(ctx)?,
+                "updated_from" => m.updated_from = Some(v.to_string()),
                 _ => {} // forward compatibility
             }
         }
@@ -366,6 +377,165 @@ impl ModelRegistry {
         let _ = std::fs::remove_dir_all(&tmp);
         bail!("could not claim a version slot for model {name:?} after 64 attempts")
     }
+
+    /// Retention policy: delete old versions of `name`, keeping the newest
+    /// `keep_last` (≥ 1 — the latest version is never deletable) plus, if
+    /// given, the explicitly `protect`ed version — pass the version a
+    /// running service currently serves so a GC pass can never delete a
+    /// model out from under it. Returns the pruned version numbers.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use akda::model::{ModelArtifact, ModelManifest, ModelRegistry};
+    /// use akda::linalg::Mat;
+    ///
+    /// let root = std::env::temp_dir().join(format!("akda_prune_doc_{}", std::process::id()));
+    /// let _ = std::fs::remove_dir_all(&root);
+    /// let reg = ModelRegistry::open(&root);
+    /// let mut art = ModelArtifact::new();
+    /// art.push_tensor("t", Mat::zeros(1, 1));
+    /// for _ in 0..4 {
+    ///     reg.publish("demo", &art, &ModelManifest::default()).unwrap();
+    /// }
+    /// // keep the newest two, but protect v1 (say a service still serves it)
+    /// let pruned = reg.prune("demo", 2, Some(1)).unwrap();
+    /// assert_eq!(pruned, vec![2]);
+    /// assert_eq!(reg.versions("demo").unwrap(), vec![1, 3, 4]);
+    /// # let _ = std::fs::remove_dir_all(&root);
+    /// ```
+    pub fn prune(&self, name: &str, keep_last: usize, protect: Option<u32>) -> Result<Vec<u32>> {
+        validate_name(name)?;
+        ensure!(keep_last >= 1, "prune must keep at least one version");
+        let versions = self.versions(name)?;
+        if versions.len() <= keep_last {
+            return Ok(Vec::new());
+        }
+        let cut = versions.len() - keep_last;
+        let mut pruned = Vec::new();
+        for &v in &versions[..cut] {
+            if Some(v) == protect {
+                continue; // never delete the version a service still serves
+            }
+            let dir = self.root.join(name).join(v.to_string());
+            std::fs::remove_dir_all(&dir).with_context(|| format!("pruning {name}@{v}"))?;
+            pruned.push(v);
+        }
+        Ok(pruned)
+    }
+
+    /// Compare two published versions: manifest field changes, artifact
+    /// section drift (shapes + per-section checksums), and — when both
+    /// manifests carry a train-time evaluation — the accuracy/MAP drift.
+    /// Both artifacts are fully checksum-verified by the load.
+    pub fn diff(&self, spec_a: &str, spec_b: &str) -> Result<ModelDiff> {
+        let (entry_a, art_a) = self.load_artifact(spec_a)?;
+        let (entry_b, art_b) = self.load_artifact(spec_b)?;
+        let (ma, mb) = (&entry_a.manifest, &entry_b.manifest);
+        let mut fields = Vec::new();
+        let mut field = |k: &str, a: String, b: String| {
+            if a != b {
+                fields.push((k.to_string(), a, b));
+            }
+        };
+        field("method", ma.method.clone(), mb.method.clone());
+        field("dataset", ma.dataset.clone(), mb.dataset.clone());
+        field("condition", ma.condition.clone(), mb.condition.clone());
+        field("rho", ma.rho.to_string(), mb.rho.to_string());
+        field("c", ma.c.to_string(), mb.c.to_string());
+        field("h", ma.h.to_string(), mb.h.to_string());
+        field("m", ma.m.to_string(), mb.m.to_string());
+        field("n_classes", ma.n_classes.to_string(), mb.n_classes.to_string());
+        field("input_dim", ma.input_dim.to_string(), mb.input_dim.to_string());
+        field(
+            "updated_from",
+            ma.updated_from.clone().unwrap_or_default(),
+            mb.updated_from.clone().unwrap_or_default(),
+        );
+
+        // section inventory drift, keyed on the artifact checksums
+        let (da, db) = (art_a.section_digests(), art_b.section_digests());
+        let mut sections = Vec::new();
+        for (name, rows, cols, sum) in &da {
+            match db.iter().find(|(n, _, _, _)| n == name) {
+                None => sections.push(format!("- {name} ({rows}x{cols}) only in {}", entry_a.spec())),
+                Some((_, r2, c2, _)) if (rows, cols) != (r2, c2) => sections.push(format!(
+                    "~ {name} shape {rows}x{cols} -> {r2}x{c2}"
+                )),
+                Some((_, _, _, s2)) if sum != s2 => {
+                    sections.push(format!("~ {name} ({rows}x{cols}) payload changed"))
+                }
+                Some(_) => {}
+            }
+        }
+        for (name, rows, cols, _) in &db {
+            if !da.iter().any(|(n, _, _, _)| n == name) {
+                sections.push(format!("+ {name} ({rows}x{cols}) only in {}", entry_b.spec()));
+            }
+        }
+
+        // eval drift (manifests store 0.0 when no evaluation ran)
+        let evaluated = |m: &ModelManifest| m.accuracy > 0.0 || m.map > 0.0;
+        let (accuracy_drift, map_drift) = if evaluated(ma) && evaluated(mb) {
+            (Some(mb.accuracy - ma.accuracy), Some(mb.map - ma.map))
+        } else {
+            (None, None)
+        };
+        Ok(ModelDiff {
+            a: entry_a,
+            b: entry_b,
+            fields,
+            sections,
+            accuracy_drift,
+            map_drift,
+        })
+    }
+}
+
+/// Result of [`ModelRegistry::diff`] — render it with `{}` (`Display`).
+#[derive(Debug)]
+pub struct ModelDiff {
+    pub a: ModelVersion,
+    pub b: ModelVersion,
+    /// Manifest fields that changed: `(field, value in a, value in b)`.
+    pub fields: Vec<(String, String, String)>,
+    /// Human-readable artifact section drift lines.
+    pub sections: Vec<String>,
+    /// `accuracy(b) − accuracy(a)`, when both versions were evaluated.
+    pub accuracy_drift: Option<f64>,
+    /// `MAP(b) − MAP(a)`, when both versions were evaluated.
+    pub map_drift: Option<f64>,
+}
+
+impl std::fmt::Display for ModelDiff {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "diff {} -> {}", self.a.spec(), self.b.spec())?;
+        if self.fields.is_empty() {
+            writeln!(f, "  manifest: no field changes")?;
+        } else {
+            for (k, a, b) in &self.fields {
+                writeln!(f, "  manifest: {k}: {a:?} -> {b:?}")?;
+            }
+        }
+        if self.sections.is_empty() {
+            writeln!(f, "  sections: identical (names, shapes, checksums)")?;
+        } else {
+            for line in &self.sections {
+                writeln!(f, "  sections: {line}")?;
+            }
+        }
+        match (self.accuracy_drift, self.map_drift) {
+            (Some(da), Some(dm)) => writeln!(
+                f,
+                "  eval drift: accuracy {:+.2}% ({:.2}% -> {:.2}%), MAP {:+.2}%",
+                100.0 * da,
+                100.0 * self.a.manifest.accuracy,
+                100.0 * self.b.manifest.accuracy,
+                100.0 * dm
+            ),
+            _ => writeln!(f, "  eval drift: n/a (one side stores no evaluation)"),
+        }
+    }
 }
 
 fn validate_name(name: &str) -> Result<()> {
@@ -495,7 +665,7 @@ impl HotReloader {
             expected_input_dim
         );
         let new_bank = codec::decode_bank(&artifact)?;
-        bank.swap(Arc::new(new_bank));
+        bank.swap_versioned(Arc::new(new_bank), entry.version);
         eprintln!("model watch: hot-reloaded {}", entry.spec());
         Ok(true)
     }
@@ -562,14 +732,81 @@ mod tests {
             map: 0.97,
             accuracy: 0.95,
             created_unix: 1_760_000_000,
+            updated_from: Some("demo@2".into()),
         };
         let back = ModelManifest::from_text(&mf.to_text()).unwrap();
         assert_eq!(mf, back);
-        // no stream_block line when trained in memory
-        let mf2 = ModelManifest { stream_block: None, ..mf };
+        // no stream_block / updated_from lines when not applicable
+        let mf2 = ModelManifest { stream_block: None, updated_from: None, ..mf };
         let text = mf2.to_text();
         assert!(!text.contains("stream_block"));
-        assert_eq!(ModelManifest::from_text(&text).unwrap().stream_block, None);
+        assert!(!text.contains("updated_from"));
+        let back2 = ModelManifest::from_text(&text).unwrap();
+        assert_eq!(back2.stream_block, None);
+        assert_eq!(back2.updated_from, None);
+    }
+
+    #[test]
+    fn prune_keeps_latest_and_protected_versions() {
+        let root = tmpdir("prune");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        for i in 0..5 {
+            reg.publish("m", &tiny_artifact(i as f64), &mf).unwrap();
+        }
+        // keep_last 0 is rejected, nothing to prune when all fit
+        assert!(reg.prune("m", 0, None).is_err());
+        assert!(reg.prune("m", 5, None).unwrap().is_empty());
+        // keep newest 2, protect v2 (a service still serves it)
+        let pruned = reg.prune("m", 2, Some(2)).unwrap();
+        assert_eq!(pruned, vec![1, 3]);
+        assert_eq!(reg.versions("m").unwrap(), vec![2, 4, 5]);
+        // the latest version survives even keep_last = 1
+        let pruned = reg.prune("m", 1, None).unwrap();
+        assert_eq!(pruned, vec![2, 4]);
+        assert_eq!(reg.versions("m").unwrap(), vec![5]);
+        assert_eq!(reg.latest("m").unwrap().version, 5);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn diff_reports_manifest_section_and_eval_drift() {
+        let root = tmpdir("diff");
+        let reg = ModelRegistry::open(&root);
+        let mf1 = ModelManifest {
+            method: "akda".into(),
+            accuracy: 0.90,
+            map: 0.92,
+            ..Default::default()
+        };
+        reg.publish("m", &tiny_artifact(0.0), &mf1).unwrap();
+        let mut art2 = tiny_artifact(5.0); // same shape, different payload
+        art2.push_tensor("extra", Mat::zeros(2, 3));
+        let mf2 = ModelManifest {
+            method: "akda".into(),
+            accuracy: 0.95,
+            map: 0.97,
+            updated_from: Some("m@1".into()),
+            ..Default::default()
+        };
+        reg.publish("m", &art2, &mf2).unwrap();
+
+        let diff = reg.diff("m@1", "m@2").unwrap();
+        assert!(diff.fields.iter().any(|(k, _, _)| k == "updated_from"));
+        assert!(diff.sections.iter().any(|s| s.contains("t") && s.contains("payload")));
+        assert!(diff.sections.iter().any(|s| s.contains("extra")));
+        assert!((diff.accuracy_drift.unwrap() - 0.05).abs() < 1e-12);
+        let text = format!("{diff}");
+        assert!(text.contains("m@1 -> m@2"), "{text}");
+        assert!(text.contains("eval drift"), "{text}");
+
+        // identical versions diff clean
+        reg.publish("n", &tiny_artifact(1.0), &ModelManifest::default()).unwrap();
+        reg.publish("n", &tiny_artifact(1.0), &ModelManifest::default()).unwrap();
+        let diff = reg.diff("n@1", "n@2").unwrap();
+        assert!(diff.sections.is_empty());
+        assert!(diff.accuracy_drift.is_none(), "unevaluated manifests report no drift");
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -1,0 +1,717 @@
+//! `akda update` — grow a published model with new observations and
+//! republish it, with **zero full refits** (the paper's Sec. 7 recursive
+//! learning, run through the registry).
+//!
+//! Two update engines, dispatched on the artifact's resume kind
+//! ([`codec::ResumeState`]):
+//!
+//! * **Exact** (`akda`-trained kernel expansions): decode the persisted
+//!   Cholesky factor of K + εI, extend it by B bordered rows in O(N²·B)
+//!   (`da::incremental::IncrementalAkda::extend` — the factorization
+//!   itself is never redone), rebuild Θ from the updated class counts,
+//!   and re-solve K Ψ = Θ through the grown factor. The republished model
+//!   matches a from-scratch fit on the concatenated data to ≤1e-10 in
+//!   projected scores (`tests/continual.rs` pins it).
+//! * **Approximate** (`akda-nystrom` / `akda-rff`, dense or streamed):
+//!   continue the persisted m×m Gram accumulator G = ΦᵀΦ and the m×C
+//!   class sums over the new rows (`linalg::accumulate_tn` — bit-for-bit
+//!   the same aggregates a from-scratch pass over the concatenated stream
+//!   would produce), then re-solve the m×m system. With
+//!   [`UpdateOptions::refresh_landmarks`], the Nyström landmarks first
+//!   track the drift: the new data is reservoir-sampled
+//!   (`data::stream::reservoir_sample`), pooled with the persisted
+//!   labeled history reservoir, and k-means is re-run warm-started from
+//!   the current landmarks (`cluster::kmeans::kmeans_warm`); the
+//!   aggregates are then re-estimated in the refreshed feature basis from
+//!   the history reservoir (scaled per class), since the old basis's
+//!   sums no longer apply.
+//!
+//! Either way the one-vs-rest LSVM bank is retrained in the updated
+//! discriminant subspace (exact: on the full grown training set;
+//! approximate: on the labeled reservoir — a bounded uniform sample of
+//! the entire history including the new rows), and a fresh artifact with
+//! refreshed resume sections is returned for the registry to publish as
+//! the next version. A `serve --model NAME --watch` service hot-swaps it
+//! in without dropping a request (`model::registry::HotReloader`).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::ModelArtifact;
+use super::codec::{self, ApproxResume, ExactResume, ResumeState};
+use crate::approx::{FeatureMap, NystromMap};
+use crate::cluster::kmeans::kmeans_warm;
+use crate::coordinator::DetectorBank;
+use crate::da::akda_approx::ApproxProjection;
+use crate::da::akda_stream::{multiclass_rhs, BlockedProjection, MAX_STREAM_CLASSES};
+use crate::da::incremental::IncrementalAkda;
+use crate::da::{KernelProjection, Projection};
+use crate::data::stream::{
+    reservoir_sample, BlockSource, LabeledReservoir, MemBlockSource, DEFAULT_BLOCK_ROWS,
+};
+use crate::linalg::{accumulate_tn, chol, Mat};
+use crate::svm::{LinearSvm, LinearSvmConfig};
+
+/// Default labeled-reservoir budget persisted with approximate models —
+/// bounds the resume sections to cap×F floats regardless of how much data
+/// ever streamed through.
+pub const DEFAULT_RESERVOIR_CAP: usize = 512;
+
+/// Default seed for reservoir continuation / refresh sampling.
+pub const DEFAULT_UPDATE_SEED: u64 = 29;
+
+/// Knobs for [`apply_update`].
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateOptions {
+    /// Re-run warm-started k-means so the Nyström landmarks track the
+    /// drift (Nyström-approximate models only; rejected for RFF, whose
+    /// map is data-independent, and for exact models, which have no
+    /// landmarks).
+    pub refresh_landmarks: bool,
+    /// Lloyd iterations for the warm restart.
+    pub kmeans_iters: usize,
+    /// Seed for the reservoir continuation and refresh sampling.
+    pub seed: u64,
+    /// Labeled-reservoir budget carried in the republished resume state.
+    pub reservoir_cap: usize,
+}
+
+impl Default for UpdateOptions {
+    fn default() -> Self {
+        UpdateOptions {
+            refresh_landmarks: false,
+            kmeans_iters: 10,
+            seed: DEFAULT_UPDATE_SEED,
+            reservoir_cap: DEFAULT_RESERVOIR_CAP,
+        }
+    }
+}
+
+/// What an update did — the numbers `akda update` prints. The
+/// `full_refactorizations` field is structural documentation: neither
+/// engine has a refactorization path, so it is always 0.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateReport {
+    /// `exact-bordered`, `approx-accumulate`, or `approx-refresh`.
+    pub kind: &'static str,
+    /// Rows appended by this update.
+    pub appended: usize,
+    /// Training rows the updated model now represents.
+    pub total_rows: usize,
+    pub n_classes: usize,
+    /// Bordered Cholesky row/column growths performed (exact engine).
+    pub bordered_growths: usize,
+    /// Always 0 — the update engines cannot refactorize.
+    pub full_refactorizations: usize,
+    /// Whether the Nyström landmarks were warm-refreshed.
+    pub landmarks_refreshed: bool,
+}
+
+/// Grow the trained state inside `artifact` with the labelled rows
+/// `(x_new, y_new)` and return the updated servable bank, a fresh
+/// artifact (bank + refreshed resume sections) ready to publish, and a
+/// report of the work done.
+pub fn apply_update(
+    artifact: &ModelArtifact,
+    x_new: &Mat,
+    y_new: &[usize],
+    opts: &UpdateOptions,
+) -> Result<(DetectorBank, ModelArtifact, UpdateReport)> {
+    anyhow::ensure!(x_new.rows() > 0, "update needs at least one new observation");
+    anyhow::ensure!(
+        x_new.rows() == y_new.len(),
+        "update mismatch: {} rows vs {} labels",
+        x_new.rows(),
+        y_new.len()
+    );
+    let input_dim = codec::input_dim(artifact)?;
+    anyhow::ensure!(
+        x_new.cols() == input_dim,
+        "update data has {} features but the model expects {}",
+        x_new.cols(),
+        input_dim
+    );
+    for &l in y_new {
+        anyhow::ensure!(
+            l < MAX_STREAM_CLASSES,
+            "label {l} exceeds the class cap {MAX_STREAM_CLASSES} (corrupt row?)"
+        );
+    }
+    let resume = codec::decode_resume(artifact)?.with_context(|| {
+        "artifact carries no resume state — it can be served but not grown; \
+         republish it with `akda train` (which embeds resume sections for \
+         akda / akda-nystrom / akda-rff models) to enable `akda update`"
+            .to_string()
+    })?;
+    match resume {
+        ResumeState::Exact(r) => update_exact(artifact, r, x_new, y_new, opts),
+        ResumeState::Approx(r) => update_approx(artifact, r, x_new, y_new, opts),
+    }
+}
+
+/// Train the one-vs-rest LSVM bank over projected rows `z` — the single
+/// relabel + `LinearSvm::train` + `class<i>` naming loop shared by `akda
+/// train` (`fit_detector_bank`), both update engines, and the continual
+/// tests, so the bank an update retrains can never drift in config from
+/// the bank training built.
+pub fn train_svm_bank(z: &Mat, labels: &[usize], n_classes: usize) -> Vec<(String, LinearSvm)> {
+    (0..n_classes)
+        .map(|cls| {
+            let y: Vec<f64> = labels
+                .iter()
+                .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                .collect();
+            (format!("class{cls}"), LinearSvm::train(z, &y, LinearSvmConfig::default()))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Exact engine: bordered-Cholesky growth
+// ---------------------------------------------------------------------------
+
+fn update_exact(
+    artifact: &ModelArtifact,
+    r: ExactResume,
+    x_new: &Mat,
+    y_new: &[usize],
+    opts: &UpdateOptions,
+) -> Result<(DetectorBank, ModelArtifact, UpdateReport)> {
+    // the exact engine has no sampling knobs: reservoir_cap is unused (the
+    // full training set is retained) and a landmark refresh is meaningless
+    anyhow::ensure!(
+        !opts.refresh_landmarks,
+        "--refresh-landmarks applies to Nystrom-approximate models only; \
+         this is an exact kernel model (no landmarks)"
+    );
+    let proj = codec::decode_projection(artifact)?;
+    let kp = proj
+        .as_any()
+        .downcast_ref::<KernelProjection>()
+        .context("exact resume state requires a kernel-expansion projection")?;
+    anyhow::ensure!(
+        kp.center_against.is_none(),
+        "centered kernel projections (GDA family) cannot be grown by bordered rows"
+    );
+    let mut inc = IncrementalAkda::from_parts(
+        kp.kernel,
+        r.eps,
+        r.n_classes,
+        kp.x_train.clone(),
+        r.labels,
+        r.chol_l,
+    )?;
+    inc.extend(x_new, y_new)?;
+
+    // Θ rebuilt from the updated counts, Ψ re-solved through the grown
+    // factor — no refactorization anywhere on this path.
+    let projection = inc.to_projection()?;
+    let z = projection.project(inc.x_train());
+    let svms = train_svm_bank(&z, inc.labels(), inc.n_classes());
+    let bank = DetectorBank { projection: Box::new(projection), svms };
+
+    let method = artifact.meta_str("method").unwrap_or("akda").to_string();
+    let mut new_art = codec::encode_bank(&bank, &method)?;
+    codec::encode_resume(
+        &mut new_art,
+        &ResumeState::Exact(ExactResume {
+            chol_l: inc.chol_l().clone(),
+            labels: inc.labels().to_vec(),
+            eps: inc.eps(),
+            n_classes: inc.n_classes(),
+        }),
+    )?;
+    let report = UpdateReport {
+        kind: "exact-bordered",
+        appended: y_new.len(),
+        total_rows: inc.len(),
+        n_classes: inc.n_classes(),
+        bordered_growths: inc.growths(),
+        full_refactorizations: 0,
+        landmarks_refreshed: false,
+    };
+    Ok((bank, new_art, report))
+}
+
+// ---------------------------------------------------------------------------
+// Approximate engine: accumulator continuation / landmark refresh
+// ---------------------------------------------------------------------------
+
+/// Stack two row-compatible matrices vertically.
+fn vstack(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "vstack width mismatch");
+    let mut out = Mat::zeros(a.rows() + b.rows(), a.cols());
+    for r in 0..a.rows() {
+        out.row_mut(r).copy_from_slice(a.row(r));
+    }
+    for r in 0..b.rows() {
+        out.row_mut(a.rows() + r).copy_from_slice(b.row(r));
+    }
+    out
+}
+
+/// Per-class scaled aggregate estimates from the labeled history
+/// reservoir, in a (possibly refreshed) feature basis: G ≈ (seen/r)·ΦᵣᵀΦᵣ
+/// and S[:,c] ≈ (N_c/r_c)·Σ_{reservoir rows of class c} φ(x).
+fn estimate_aggregates(
+    map: &dyn FeatureMap,
+    rx: &Mat,
+    ry: &[usize],
+    counts: &[usize],
+    seen: usize,
+) -> Result<(Mat, Mat)> {
+    let phi = map.transform(rx);
+    let m = phi.cols();
+    let c = counts.len();
+    let mut per_class = vec![0usize; c];
+    for &l in ry {
+        anyhow::ensure!(l < c, "reservoir label {l} out of range 0..{c}");
+        per_class[l] += 1;
+    }
+    for (cls, (&have, &want)) in per_class.iter().zip(counts).enumerate() {
+        anyhow::ensure!(
+            have > 0 || want == 0,
+            "the history reservoir lost every row of class {cls} — raise the \
+             reservoir cap (--reservoir) before refreshing landmarks"
+        );
+    }
+    let scale_g = seen as f64 / rx.rows() as f64;
+    let gram = phi.matmul_tn(&phi).scale(scale_g);
+    let mut sums = Mat::zeros(m, c);
+    for r in 0..phi.rows() {
+        let cls = ry[r];
+        for i in 0..m {
+            sums[(i, cls)] += phi[(r, i)];
+        }
+    }
+    for cls in 0..c {
+        if per_class[cls] > 0 {
+            let s = counts[cls] as f64 / per_class[cls] as f64;
+            for i in 0..m {
+                sums[(i, cls)] *= s;
+            }
+        }
+    }
+    Ok((gram, sums))
+}
+
+fn update_approx(
+    artifact: &ModelArtifact,
+    r: ApproxResume,
+    x_new: &Mat,
+    y_new: &[usize],
+    opts: &UpdateOptions,
+) -> Result<(DetectorBank, ModelArtifact, UpdateReport)> {
+    let proj = codec::decode_projection(artifact)?;
+    let any = proj.as_any();
+    let (map, block_rows): (Arc<dyn FeatureMap>, Option<usize>) =
+        if let Some(p) = any.downcast_ref::<ApproxProjection>() {
+            (p.map.clone(), None)
+        } else if let Some(p) = any.downcast_ref::<BlockedProjection>() {
+            (p.map.clone(), Some(p.block_rows))
+        } else {
+            bail!("approx resume state requires an approx/blocked projection")
+        };
+
+    // continue the labeled history reservoir over the new rows
+    let mut reservoir = LabeledReservoir::from_parts(
+        &r.reservoir,
+        &r.reservoir_labels,
+        r.seen,
+        opts.reservoir_cap,
+        opts.seed,
+    )?;
+    {
+        let mut src = MemBlockSource::new(x_new, y_new, DEFAULT_BLOCK_ROWS);
+        src.reset()?;
+        while let Some(block) = src.next_block()? {
+            reservoir.absorb(&block);
+        }
+    }
+
+    // exact per-class counts (grow C if the update introduces new classes)
+    let mut counts = r.counts.clone();
+    for &l in y_new {
+        if l >= counts.len() {
+            counts.resize(l + 1, 0);
+        }
+        counts[l] += 1;
+    }
+    anyhow::ensure!(
+        counts.len() >= 2 && counts.iter().all(|&c| c > 0),
+        "updated class counts must cover every label in 0..C (counts {counts:?})"
+    );
+
+    let (map, gram, class_sums, refreshed): (Arc<dyn FeatureMap>, Mat, Mat, bool) =
+        if opts.refresh_landmarks {
+            let ny = map
+                .as_any()
+                .downcast_ref::<NystromMap>()
+                .context("--refresh-landmarks applies to Nyström maps only (the RFF map is data-independent)")?;
+            // Sec. 7 drift tracking: reservoir-sample the NEW data, pool it
+            // with the labeled history reservoir, and warm-start k-means
+            // from the current landmarks.
+            let cap = (4 * ny.landmarks.rows()).max(256);
+            let mut src = MemBlockSource::new(x_new, y_new, DEFAULT_BLOCK_ROWS);
+            let new_sample = reservoir_sample(&mut src, cap, opts.seed ^ 0x9E37)?;
+            let (hist_x, hist_y) = reservoir.snapshot()?;
+            let pool = vstack(&hist_x, &new_sample);
+            let centroids = kmeans_warm(&pool, &ny.landmarks, opts.kmeans_iters).centroids;
+            let new_map: Arc<dyn FeatureMap> =
+                Arc::new(NystromMap::from_landmarks(centroids, ny.kernel)?);
+            // the persisted aggregates live in the OLD feature basis —
+            // re-estimate them in the refreshed basis from the history
+            // reservoir (uniform over everything ever seen)
+            let (g, s) =
+                estimate_aggregates(new_map.as_ref(), &hist_x, &hist_y, &counts, reservoir.seen())?;
+            (new_map, g, s, true)
+        } else {
+            // same map ⇒ the persisted aggregates continue exactly: G via
+            // the order-preserving accumulator (bit-for-bit what a single
+            // pass over the concatenated stream would produce), S via the
+            // same per-row sequential additions.
+            let m = map.dim();
+            anyhow::ensure!(
+                r.gram.rows() == m,
+                "resume gram is {}x{} but the map has dimension {m}",
+                r.gram.rows(),
+                r.gram.cols()
+            );
+            let mut g = r.gram.clone();
+            let mut sums: Vec<Vec<f64>> = (0..counts.len())
+                .map(|c| {
+                    if c < r.class_sums.cols() {
+                        (0..m).map(|i| r.class_sums[(i, c)]).collect()
+                    } else {
+                        vec![0.0; m]
+                    }
+                })
+                .collect();
+            let mut src = MemBlockSource::new(x_new, y_new, DEFAULT_BLOCK_ROWS);
+            src.reset()?;
+            while let Some(block) = src.next_block()? {
+                let phi = map.transform(&block.x);
+                accumulate_tn(&mut g, &phi, &phi);
+                for (row, &l) in block.labels.iter().enumerate() {
+                    for (s, &v) in sums[l].iter_mut().zip(phi.row(row)) {
+                        *s += v;
+                    }
+                }
+            }
+            let s = Mat::from_fn(m, counts.len(), |i, j| sums[j][i]);
+            (map, g, s, false)
+        };
+
+    // re-solve the m×m system (the only factorization in this engine —
+    // m ≪ N by construction, this is the cheap part)
+    let mut sys = gram.clone();
+    sys.add_ridge(r.eps);
+    let chol_l = chol::cholesky(&sys, chol::DEFAULT_BLOCK)
+        .map_err(|e| anyhow::anyhow!("update m×m Cholesky failed: {e}"))?;
+    let rhs = multiclass_rhs(&class_sums, &counts);
+    let y = chol::solve_lower(&chol_l, &rhs);
+    let w = chol::solve_upper_from_lower(&chol_l, &y);
+
+    let projection: Box<dyn Projection> = match block_rows {
+        Some(b) => Box::new(BlockedProjection { map: map.clone(), w: w.clone(), block_rows: b }),
+        None => Box::new(ApproxProjection { map: map.clone(), w: w.clone() }),
+    };
+    // SVM bank from the labeled reservoir: a bounded uniform sample of the
+    // full history, new rows included — the full training set is gone.
+    // Every populated class must have survived the reservoir's Algorithm-R
+    // replacement, or its one-vs-rest SVM would train with zero positive
+    // examples and silently always score negative (the refresh arm gets
+    // the same guard from `estimate_aggregates`).
+    let (rx, ry) = reservoir.snapshot()?;
+    let mut in_reservoir = vec![0usize; counts.len()];
+    for &l in &ry {
+        anyhow::ensure!(l < counts.len(), "reservoir label {l} out of range 0..{}", counts.len());
+        in_reservoir[l] += 1;
+    }
+    for (cls, (&have, &want)) in in_reservoir.iter().zip(&counts).enumerate() {
+        anyhow::ensure!(
+            have > 0 || want == 0,
+            "the history reservoir lost every row of class {cls} — raise the \
+             reservoir cap (--reservoir) and re-run the update"
+        );
+    }
+    let z = projection.project(&rx);
+    let svms = train_svm_bank(&z, &ry, counts.len());
+    let bank = DetectorBank { projection, svms };
+
+    let method = artifact.meta_str("method").unwrap_or("akda-nystrom").to_string();
+    let mut new_art = codec::encode_bank(&bank, &method)?;
+    let total_rows: usize = counts.iter().sum();
+    codec::encode_resume(
+        &mut new_art,
+        &ResumeState::Approx(ApproxResume {
+            gram,
+            class_sums,
+            counts: counts.clone(),
+            reservoir: rx,
+            reservoir_labels: ry,
+            seen: reservoir.seen(),
+            eps: r.eps,
+        }),
+    )?;
+    let report = UpdateReport {
+        kind: if refreshed { "approx-refresh" } else { "approx-accumulate" },
+        appended: y_new.len(),
+        total_rows,
+        n_classes: counts.len(),
+        bordered_growths: 0,
+        full_refactorizations: 0,
+        landmarks_refreshed: refreshed,
+    };
+    Ok((bank, new_art, report))
+}
+
+// ---------------------------------------------------------------------------
+// Resume-state builders (used by `akda train` to embed the sections)
+// ---------------------------------------------------------------------------
+
+/// Approximate resume state from a dense training pass: the N×m feature
+/// matrix Φ, its pre-ridge Gram G = ΦᵀΦ (already computed — and cached —
+/// by `AkdaApprox::prepare`, so it is not recomputed here), the training
+/// labels, and the raw training rows (for the labeled reservoir). The
+/// aggregates are in the same row-sequential order as the tiled
+/// accumulator, so a later [`apply_update`] continues them bit-for-bit.
+pub fn approx_resume_from_phi(
+    phi: &Mat,
+    gram: &Mat,
+    x_train: &Mat,
+    labels: &[usize],
+    n_classes: usize,
+    eps: f64,
+    cap: usize,
+    seed: u64,
+) -> Result<ApproxResume> {
+    anyhow::ensure!(
+        phi.rows() == labels.len() && x_train.rows() == labels.len(),
+        "resume builder mismatch: {} features rows, {} data rows, {} labels",
+        phi.rows(),
+        x_train.rows(),
+        labels.len()
+    );
+    let m = phi.cols();
+    anyhow::ensure!(
+        gram.shape() == (m, m),
+        "resume builder mismatch: gram is {}x{} for m = {m}",
+        gram.rows(),
+        gram.cols()
+    );
+    let gram = gram.clone();
+    let mut counts = vec![0usize; n_classes];
+    let mut sums: Vec<Vec<f64>> = vec![vec![0.0; m]; n_classes];
+    for r in 0..phi.rows() {
+        let l = labels[r];
+        anyhow::ensure!(l < n_classes, "label {l} out of range 0..{n_classes}");
+        counts[l] += 1;
+        for (s, &v) in sums[l].iter_mut().zip(phi.row(r)) {
+            *s += v;
+        }
+    }
+    let class_sums = Mat::from_fn(m, n_classes, |i, j| sums[j][i]);
+    let mut src = MemBlockSource::new(x_train, labels, DEFAULT_BLOCK_ROWS);
+    let (reservoir, reservoir_labels, seen) =
+        crate::data::stream::reservoir_sample_labeled(&mut src, cap, seed)?;
+    Ok(ApproxResume { gram, class_sums, counts, reservoir, reservoir_labels, seen, eps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::da::akda::Akda;
+    use crate::da::akda_approx::AkdaApprox;
+    use crate::data::synthetic::{gaussian_classes, GaussianSpec};
+    use crate::kernels::Kernel;
+
+    fn toy(n_per: usize, c: usize, seed: u64) -> (Mat, Vec<usize>) {
+        gaussian_classes(&GaussianSpec {
+            n_classes: c,
+            n_per_class: vec![n_per; c],
+            dim: 5,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed,
+        })
+    }
+
+    fn exact_artifact(x: &Mat, labels: &[usize], c: usize) -> ModelArtifact {
+        let akda = Akda::new(Kernel::Rbf { rho: 0.4 });
+        let (proj, l) = akda.fit_with_factor(x, labels, c).unwrap();
+        let z = proj.project(x);
+        let svms = train_svm_bank(&z, labels, c);
+        let bank = DetectorBank { projection: Box::new(proj), svms };
+        let mut art = codec::encode_bank(&bank, "akda").unwrap();
+        codec::encode_resume(
+            &mut art,
+            &ResumeState::Exact(ExactResume {
+                chol_l: l,
+                labels: labels.to_vec(),
+                eps: akda.eps,
+                n_classes: c,
+            }),
+        )
+        .unwrap();
+        art
+    }
+
+    #[test]
+    fn exact_update_matches_from_scratch_fit() {
+        let (x, labels) = toy(10, 3, 1);
+        let (base_x, base_y) = (x.submatrix(0, 0, 18, x.cols()), &labels[..18]);
+        let art = exact_artifact(&base_x, base_y, 3);
+        let tail_x = x.submatrix(18, 0, x.rows() - 18, x.cols());
+        let (bank, new_art, report) =
+            apply_update(&art, &tail_x, &labels[18..], &UpdateOptions::default()).unwrap();
+        assert_eq!(report.kind, "exact-bordered");
+        assert_eq!(report.appended, 12);
+        assert_eq!(report.bordered_growths, 12);
+        assert_eq!(report.full_refactorizations, 0);
+        // projected scores match a from-scratch fit on the concatenation
+        use crate::da::DrMethod;
+        let scratch = Akda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 3).unwrap();
+        let (xt, _) = toy(6, 3, 9);
+        let gap = bank.projection.project(&xt).sub(&scratch.project(&xt)).max_abs();
+        assert!(gap < 1e-10, "update-vs-scratch projection gap {gap}");
+        // the republished artifact still carries (grown) resume state
+        match codec::decode_resume(&new_art).unwrap().unwrap() {
+            ResumeState::Exact(r) => {
+                assert_eq!(r.labels.len(), 30);
+                assert_eq!(r.chol_l.shape(), (30, 30));
+            }
+            other => panic!("wrong resume kind {:?}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn approx_update_continues_the_accumulator() {
+        let (x, labels) = toy(12, 2, 2);
+        let n0 = 16;
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 32);
+        let base_x = x.submatrix(0, 0, n0, x.cols());
+        let prep = cfg.prepare(&base_x).unwrap();
+        let proj = prep.fit(&labels[..n0], 2).unwrap();
+        let z = proj.project(&base_x);
+        let svms = train_svm_bank(&z, &labels[..n0], 2);
+        let bank = DetectorBank { projection: Box::new(proj), svms };
+        let mut art = codec::encode_bank(&bank, "akda-rff").unwrap();
+        let resume = approx_resume_from_phi(
+            &prep.phi, prep.gram(), &base_x, &labels[..n0], 2, cfg.eps, 64, 3,
+        )
+        .unwrap();
+        codec::encode_resume(&mut art, &ResumeState::Approx(resume)).unwrap();
+
+        let tail_x = x.submatrix(n0, 0, x.rows() - n0, x.cols());
+        let (bank2, _, report) =
+            apply_update(&art, &tail_x, &labels[n0..], &UpdateOptions::default()).unwrap();
+        assert_eq!(report.kind, "approx-accumulate");
+        assert_eq!(report.total_rows, 24);
+        // the continued solve equals a from-scratch streaming solve over
+        // the concatenated data with the same (data-independent) map
+        let mut src = MemBlockSource::new(&x, &labels, 7);
+        let ps = crate::da::akda_stream::PreparedStream::accumulate(
+            &cfg,
+            bank2
+                .projection
+                .as_any()
+                .downcast_ref::<ApproxProjection>()
+                .unwrap()
+                .map
+                .clone(),
+            &mut src,
+        )
+        .unwrap();
+        let w_scratch = ps.solve_w_multiclass().unwrap();
+        let w_cont = &bank2
+            .projection
+            .as_any()
+            .downcast_ref::<ApproxProjection>()
+            .unwrap()
+            .w;
+        assert!(
+            w_cont.sub(&w_scratch).max_abs() == 0.0,
+            "accumulator continuation must be bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn refresh_rejects_rff_and_refreshes_nystrom() {
+        let (x, labels) = toy(20, 2, 4);
+        let n0 = 30;
+        let base_x = x.submatrix(0, 0, n0, x.cols());
+        let tail_x = x.submatrix(n0, 0, x.rows() - n0, x.cols());
+        let opts = UpdateOptions { refresh_landmarks: true, ..Default::default() };
+
+        // RFF: refusal (data-independent map)
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 16);
+        let prep = cfg.prepare(&base_x).unwrap();
+        let proj = prep.fit(&labels[..n0], 2).unwrap();
+        let z = proj.project(&base_x);
+        let svms = train_svm_bank(&z, &labels[..n0], 2);
+        let bank = DetectorBank { projection: Box::new(proj), svms };
+        let mut art = codec::encode_bank(&bank, "akda-rff").unwrap();
+        let resume =
+            approx_resume_from_phi(&prep.phi, prep.gram(), &base_x, &labels[..n0], 2, cfg.eps, 64, 5)
+                .unwrap();
+        codec::encode_resume(&mut art, &ResumeState::Approx(resume)).unwrap();
+        assert!(apply_update(&art, &tail_x, &labels[n0..], &opts).is_err());
+
+        // Nyström: landmarks move, model still separates
+        let cfg = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, 8);
+        let prep = cfg.prepare(&base_x).unwrap();
+        let proj = prep.fit(&labels[..n0], 2).unwrap();
+        let old_landmarks = proj
+            .map
+            .as_any()
+            .downcast_ref::<NystromMap>()
+            .unwrap()
+            .landmarks
+            .clone();
+        let z = proj.project(&base_x);
+        let svms = train_svm_bank(&z, &labels[..n0], 2);
+        let bank = DetectorBank { projection: Box::new(proj), svms };
+        let mut art = codec::encode_bank(&bank, "akda-nystrom").unwrap();
+        let resume =
+            approx_resume_from_phi(&prep.phi, prep.gram(), &base_x, &labels[..n0], 2, cfg.eps, 64, 5)
+                .unwrap();
+        codec::encode_resume(&mut art, &ResumeState::Approx(resume)).unwrap();
+        let (bank2, _, report) = apply_update(&art, &tail_x, &labels[n0..], &opts).unwrap();
+        assert_eq!(report.kind, "approx-refresh");
+        assert!(report.landmarks_refreshed);
+        let new_landmarks = &bank2
+            .projection
+            .as_any()
+            .downcast_ref::<ApproxProjection>()
+            .unwrap()
+            .map
+            .as_any()
+            .downcast_ref::<NystromMap>()
+            .unwrap()
+            .landmarks;
+        assert_eq!(new_landmarks.rows(), old_landmarks.rows());
+        assert!(
+            new_landmarks.sub(&old_landmarks).max_abs() > 0.0,
+            "warm refresh should move at least one landmark"
+        );
+        // the refreshed bank still scores finitely
+        assert!(bank2.score(&x).is_finite());
+    }
+
+    #[test]
+    fn update_without_resume_state_is_rejected_with_guidance() {
+        let (x, labels) = toy(10, 2, 6);
+        use crate::da::DrMethod;
+        let proj = Akda::new(Kernel::Rbf { rho: 0.3 }).fit(&x, &labels, 2).unwrap();
+        let z = proj.project(&x);
+        let svms = train_svm_bank(&z, &labels, 2);
+        let bank = DetectorBank { projection: proj, svms };
+        let art = codec::encode_bank(&bank, "akda").unwrap();
+        let err = apply_update(&art, &x, &labels, &UpdateOptions::default())
+            .expect_err("no resume state must be an error");
+        assert!(format!("{err:#}").contains("resume"), "{err:#}");
+    }
+}

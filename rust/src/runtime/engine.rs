@@ -201,11 +201,7 @@ impl DrMethod for AkdaPjrt {
 
     fn fit(&self, x: &Mat, labels: &[usize], n_classes: usize)
         -> Result<Box<dyn Projection>> {
-        let theta = if n_classes == 2 {
-            core::theta_binary(labels)
-        } else {
-            core::theta(labels, n_classes)
-        };
+        let theta = core::theta_for(labels, n_classes);
         let psi = self.engine.fit(x, &theta, self.kernel).context("akda-pjrt fit")?;
         Ok(Box::new(PjrtProjection {
             engine: self.engine.clone(),

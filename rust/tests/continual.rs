@@ -1,0 +1,283 @@
+//! Integration: the online continual-learning loop (Sec. 7 recursive
+//! learning wired through the model registry).
+//!
+//! Pins the PR's two acceptance guarantees:
+//!
+//! 1. **Update equivalence** — growing a published model with
+//!    `model::update::apply_update` (bordered-Cholesky extension, zero
+//!    full refits) over any append granularity {1, 7, all-at-once}
+//!    matches a from-scratch AKDA fit on the concatenated data to
+//!    ≤ 1e-10 in projected scores.
+//! 2. **Live republish** — an updated version published to the registry
+//!    is hot-swapped into a running scoring service without dropping
+//!    requests, and the service then serves exactly the new version's
+//!    scores (and reports its version).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use akda::coordinator::{BankHandle, DetectorBank, ScoringService};
+use akda::da::akda::Akda;
+use akda::da::incremental::IncrementalAkda;
+use akda::da::DrMethod;
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::codec::{encode_resume, ExactResume};
+use akda::model::update::train_svm_bank;
+use akda::model::{
+    apply_update, encode_bank, HotReloader, ModelManifest, ModelRegistry, ResumeState,
+    UpdateOptions,
+};
+
+fn toy(n_per: usize, c: usize, seed: u64) -> (Mat, Vec<usize>) {
+    gaussian_classes(&GaussianSpec {
+        n_classes: c,
+        n_per_class: vec![n_per; c],
+        dim: 6,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    })
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("akda_continual_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Exact-AKDA bank + artifact with embedded resume state — the same shape
+/// `akda train --method akda` publishes.
+fn exact_artifact(
+    x: &Mat,
+    labels: &[usize],
+    n_classes: usize,
+) -> (DetectorBank, akda::model::ModelArtifact) {
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let (proj, chol_l) = akda_cfg.fit_with_factor(x, labels, n_classes).unwrap();
+    let z = proj.project(x);
+    let svms = train_svm_bank(&z, labels, n_classes);
+    let bank = DetectorBank { projection: Box::new(proj), svms };
+    let mut art = encode_bank(&bank, "akda").unwrap();
+    encode_resume(
+        &mut art,
+        &ResumeState::Exact(ExactResume {
+            chol_l,
+            labels: labels.to_vec(),
+            eps: akda_cfg.eps,
+            n_classes,
+        }),
+    )
+    .unwrap();
+    (bank, art)
+}
+
+/// Acceptance: incremental `extend` over rows {1, 7, all-at-once} matches
+/// a from-scratch AKDA fit on the concatenated data to ≤ 1e-10 in
+/// projected scores.
+#[test]
+fn extend_matches_from_scratch_fit_at_every_granularity() {
+    let (x, labels) = toy(15, 3, 1); // 45 rows total
+    let n0 = 30; // base model: 30 rows, the remaining 15 arrive later
+    let f = x.cols();
+    let base_x = x.submatrix(0, 0, n0, f);
+    let tail_x = x.submatrix(n0, 0, x.rows() - n0, f);
+    let tail_y = &labels[n0..];
+    let (xt, _) = toy(8, 3, 9);
+
+    // from-scratch comparator on the full concatenated data
+    let scratch = Akda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 3).unwrap();
+    let z_scratch = scratch.project(&xt);
+
+    for chunk in [1usize, 7, tail_x.rows()] {
+        let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+        let (_, chol_l) = akda_cfg.fit_with_factor(&base_x, &labels[..n0], 3).unwrap();
+        let mut inc = IncrementalAkda::from_parts(
+            akda_cfg.kernel,
+            akda_cfg.eps,
+            3,
+            base_x.clone(),
+            labels[..n0].to_vec(),
+            chol_l,
+        )
+        .unwrap();
+        let mut r0 = 0;
+        while r0 < tail_x.rows() {
+            let nr = chunk.min(tail_x.rows() - r0);
+            inc.extend(&tail_x.submatrix(r0, 0, nr, f), &tail_y[r0..r0 + nr]).unwrap();
+            r0 += nr;
+        }
+        assert_eq!(inc.len(), 45);
+        assert_eq!(inc.growths(), 15, "every appended row is one bordered growth");
+        let z_inc = inc.project(&xt).unwrap();
+        let gap = z_inc.sub(&z_scratch).max_abs();
+        assert!(
+            gap <= 1e-10,
+            "chunk={chunk}: projected scores differ from a from-scratch fit by {gap}"
+        );
+    }
+}
+
+/// Acceptance: `apply_update` on a published artifact — the CLI engine —
+/// performs bordered growth only and matches the from-scratch fit.
+#[test]
+fn apply_update_matches_from_scratch_and_keeps_the_chain_updatable() {
+    let (x, labels) = toy(12, 3, 2); // 36 rows
+    let f = x.cols();
+    let (_, art) = exact_artifact(&x.submatrix(0, 0, 24, f), &labels[..24], 3);
+
+    // first update: 6 rows
+    let (bank1, art1, rep1) = apply_update(
+        &art,
+        &x.submatrix(24, 0, 6, f),
+        &labels[24..30],
+        &UpdateOptions::default(),
+    )
+    .unwrap();
+    assert_eq!((rep1.kind, rep1.appended, rep1.bordered_growths), ("exact-bordered", 6, 6));
+    assert_eq!(rep1.full_refactorizations, 0);
+    // second update continues from the republished artifact: 6 more rows
+    let (bank2, art2, rep2) = apply_update(
+        &art1,
+        &x.submatrix(30, 0, 6, f),
+        &labels[30..],
+        &UpdateOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(rep2.total_rows, 36);
+    assert!(matches!(
+        akda::model::codec::decode_resume(&art2).unwrap(),
+        Some(ResumeState::Exact(_))
+    ));
+
+    let scratch = Akda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 3).unwrap();
+    let (xt, _) = toy(10, 3, 11);
+    let gap1 = bank1
+        .projection
+        .project(&xt)
+        .sub(&Akda::new(Kernel::Rbf { rho: 0.4 })
+            .fit(&x.submatrix(0, 0, 30, f), &labels[..30], 3)
+            .unwrap()
+            .project(&xt))
+        .max_abs();
+    let gap2 = bank2.projection.project(&xt).sub(&scratch.project(&xt)).max_abs();
+    assert!(gap1 <= 1e-10, "after update 1: gap {gap1}");
+    assert!(gap2 <= 1e-10, "after chained update 2: gap {gap2}");
+}
+
+/// Acceptance: registry update → hot-swap under live traffic serves the
+/// new version's scores without dropping a request.
+#[test]
+fn registry_update_hot_swaps_into_a_live_service() {
+    let (x, labels) = toy(12, 3, 3); // 36 rows
+    let f = x.cols();
+    let n0 = 27;
+    let root = tmpdir("update_swap");
+    let registry = ModelRegistry::open(&root);
+
+    // v1: train on the first 27 rows, publish with resume state
+    let (_, art) = exact_artifact(&x.submatrix(0, 0, n0, f), &labels[..n0], 3);
+    let manifest = ModelManifest {
+        method: "akda".into(),
+        n_classes: 3,
+        input_dim: f,
+        ..Default::default()
+    };
+    let e1 = registry.publish("cl", &art, &manifest).unwrap();
+    assert_eq!(e1.version, 1);
+
+    // serve v1 with a watcher, exactly like `akda serve --model cl --watch`
+    let (entry, loaded) = registry.load_bank("cl").unwrap();
+    let handle = BankHandle::new_versioned(Arc::new(loaded), entry.version);
+    assert_eq!(handle.served_version(), 1);
+    let svc = ScoringService::start_reloadable(
+        handle.clone(),
+        f,
+        16,
+        Duration::from_millis(2),
+    );
+    let client = svc.client();
+    let probe = x.row(0).to_vec();
+    let before = client.score(probe.clone()).unwrap();
+    let watcher = HotReloader::start(
+        registry.clone(),
+        "cl".into(),
+        handle.clone(),
+        entry.version,
+        f,
+        Duration::from_millis(10),
+    );
+
+    // `akda update cl --data ...`: grow with the held-out 9 rows, publish v2
+    let (_, artifact) = registry.load_artifact("cl").unwrap();
+    let (updated_bank, new_art, report) = apply_update(
+        &artifact,
+        &x.submatrix(n0, 0, x.rows() - n0, f),
+        &labels[n0..],
+        &UpdateOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(report.full_refactorizations, 0);
+    let mf2 = ModelManifest { updated_from: Some(e1.spec()), ..manifest.clone() };
+    let e2 = registry.publish("cl", &new_art, &mf2).unwrap();
+    assert_eq!(e2.version, 2);
+
+    // the watcher swaps v2 in (bounded wait), without dropping traffic
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while watcher.reloads() == 0 && std::time::Instant::now() < deadline {
+        let answered = client.score(probe.clone()).unwrap();
+        assert_eq!(answered.len(), 3, "requests must be answered across the swap");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(watcher.reloads() >= 1, "updated version never hot-swapped");
+    assert_eq!(handle.served_version(), 2, "handle must report the served version");
+
+    // the service now answers with exactly the updated bank's scores
+    let after = client.score(probe.clone()).unwrap();
+    let direct = updated_bank.score(&x.submatrix(0, 0, 1, f));
+    assert_eq!(after, direct.row(0).to_vec(), "served scores must be v2's");
+    assert_ne!(before, after, "the update must actually change the model");
+
+    // provenance is recorded and the diff reports the section drift
+    assert_eq!(
+        registry.latest("cl").unwrap().manifest.updated_from,
+        Some("cl@1".to_string())
+    );
+    let diff = registry.diff("cl@1", "cl@2").unwrap();
+    assert!(
+        diff.sections.iter().any(|s| s.contains("kernel.x_train")),
+        "grown training set must show up in the diff: {:?}",
+        diff.sections
+    );
+
+    // GC: prune keeps the served version even when asked to keep only 1
+    let pruned = registry
+        .prune("cl", 1, Some(handle.served_version()))
+        .unwrap();
+    assert_eq!(pruned, vec![1]);
+    assert_eq!(registry.versions("cl").unwrap(), vec![2]);
+
+    watcher.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The exact update engine refuses artifacts without resume state, and
+/// the error explains how to get one.
+#[test]
+fn update_requires_resume_state() {
+    let (x, labels) = toy(8, 2, 5);
+    let proj = Akda::new(Kernel::Rbf { rho: 0.4 }).fit(&x, &labels, 2).unwrap();
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, 2);
+    let bank = DetectorBank { projection: proj, svms };
+    let art = encode_bank(&bank, "akda").unwrap();
+    let err = apply_update(&art, &x, &labels, &UpdateOptions::default())
+        .expect_err("must refuse");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("resume") && msg.contains("akda train"), "{msg}");
+}
