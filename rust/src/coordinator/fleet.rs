@@ -1,0 +1,772 @@
+//! Multi-tenant fleet serving (L6): every model in a registry served by
+//! **one** process, plus the drop-directory auto-update daemon that keeps
+//! the fleet fresh.
+//!
+//! AKDA's cheap training (and the Sec. 7 recursive updates of
+//! `model::update`) only pay off at scale if one process can serve and
+//! refresh *many* trained models at once. This module is that step:
+//!
+//! * [`FleetService`] owns one versioned [`BankHandle`] per model *name*
+//!   loaded from a [`ModelRegistry`], routes incoming score requests by
+//!   model id over a **single shared [`WorkPool`]** (no per-tenant thread
+//!   explosion — ten tenants on a four-core box still run four scoring
+//!   threads), and runs **one** registry watcher that hot-swaps any
+//!   tenant's bank on publish without stalling the others.
+//! * [`UpdateDaemon`] watches a drop directory of labeled CSVs
+//!   (`NAME.csv` targets model `NAME`), applies
+//!   [`model::update::update_registry_model`](crate::model::update_registry_model)
+//!   — the exact engine behind `akda update` — and republishes; the fleet
+//!   watcher then picks the new version up. Together they close the loop
+//!   train → publish → serve-fleet → drop-data → auto-update → hot-swap
+//!   inside one process.
+//!
+//! # Request routing
+//!
+//! ```text
+//!  FleetClient::score("eth80", x)          one dispatcher thread
+//!        │                                        │
+//!        ▼                                        ▼
+//!  ┌───────────┐   micro-batch    ┌──────────────────────────────┐
+//!  │ mpsc queue│ ───────────────► │ group by model id            │
+//!  └───────────┘   (window/size)  │  "eth80"  → [r0, r2]         │
+//!                                 │  "mscorid"→ [r1]             │
+//!                                 │  "nope"   → protocol error   │
+//!                                 └──────────┬───────────────────┘
+//!                                            │ one job per tenant group
+//!                                            ▼
+//!                                 ┌──────────────────────────────┐
+//!                                 │ shared WorkPool (N threads)  │
+//!                                 │ handle.get().score(batch)    │──► replies
+//!                                 └──────────────────────────────┘
+//! ```
+//!
+//! Unknown model ids are answered with [`FleetError::UnknownModel`] —
+//! a *protocol* error on the reply channel, never a panic — and the
+//! request never reaches the pool. Each tenant group reads its
+//! [`BankHandle`] at dispatch time, so a hot swap lands at the next batch
+//! boundary of that tenant only.
+//!
+//! # GC safety
+//!
+//! The fleet drops a [`ServeMarker`] per tenant (a
+//! `<registry>/<name>/.served-<pid>-<seq>` lease holding the served
+//! version, re-pointed on every hot swap), so `akda models --prune` run
+//! from another process auto-protects every tenant's live version — no
+//! per-tenant `--protect` flags needed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{Context, Result};
+
+use super::jobs::WorkPool;
+use super::service::BankHandle;
+use crate::linalg::Mat;
+use crate::model::registry::HotReloader;
+use crate::model::{self, ModelRegistry, ServeMarker, UpdateOptions};
+
+// ---------------------------------------------------------------------------
+// Protocol errors
+// ---------------------------------------------------------------------------
+
+/// Protocol-level rejection of a fleet score request. These travel back
+/// over the reply channel — a bad request can never panic the service or
+/// poison another tenant's traffic.
+///
+/// ```
+/// use akda::coordinator::FleetError;
+///
+/// let err = FleetError::UnknownModel { model: "x".into(), known: vec!["a".into()] };
+/// assert_eq!(err.to_string(), "unknown model \"x\" (serving: a)");
+/// // it is a std error, so `?` lifts it into anyhow contexts
+/// let any: anyhow::Error = err.into();
+/// assert!(any.to_string().contains("unknown model"));
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// No tenant with this model id. Carries the known ids so a caller
+    /// (or a log reader) can spot typos immediately.
+    UnknownModel { model: String, known: Vec<String> },
+    /// The feature vector does not match the tenant's input width.
+    WrongDim { model: String, expected: usize, got: usize },
+    /// The fleet is shutting down (request or reply channel closed).
+    ServiceDown,
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::UnknownModel { model, known } => {
+                write!(f, "unknown model {model:?} (serving: {})", known.join(", "))
+            }
+            FleetError::WrongDim { model, expected, got } => {
+                write!(f, "model {model:?} expects {expected} features, got {got}")
+            }
+            FleetError::ServiceDown => write!(f, "fleet service is down"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+// ---------------------------------------------------------------------------
+// Requests and clients
+// ---------------------------------------------------------------------------
+
+/// One routed request: model id + features in, per-class scores (or a
+/// [`FleetError`]) out.
+pub struct FleetRequest {
+    pub model: String,
+    pub features: Vec<f64>,
+    pub reply: Sender<Result<Vec<f64>, FleetError>>,
+}
+
+/// Handle for submitting score requests to a [`FleetService`]. Cloneable
+/// and cheap; all clones feed the same dispatcher queue. Any live clone
+/// keeps the dispatcher's queue open — drop every client before dropping
+/// the service, or its `Drop` will wait on them (same contract as
+/// `ScoringService`).
+#[derive(Clone)]
+pub struct FleetClient {
+    tx: Sender<FleetRequest>,
+    dims: Arc<BTreeMap<String, usize>>,
+}
+
+impl FleetClient {
+    /// The model ids this fleet serves (the tenant set is fixed at
+    /// [`FleetService::start`]; hot swaps replace banks, not the set).
+    pub fn models(&self) -> Vec<String> {
+        self.dims.keys().cloned().collect()
+    }
+
+    /// Input width of one tenant (`None` for unknown ids).
+    pub fn input_dim(&self, model: &str) -> Option<usize> {
+        self.dims.get(model).copied()
+    }
+
+    /// Score one observation against tenant `model`. Validation is the
+    /// dispatcher's job — the single protocol authority — so unknown ids
+    /// and wrong feature widths come back as [`FleetError`]s on the reply
+    /// channel and are counted in [`FleetStats::rejected`].
+    pub fn score(&self, model: &str, features: Vec<f64>) -> Result<Vec<f64>, FleetError> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(FleetRequest { model: model.to_string(), features, reply })
+            .map_err(|_| FleetError::ServiceDown)?;
+        rx.recv().map_err(|_| FleetError::ServiceDown)?
+    }
+}
+
+/// Aggregate fleet statistics (monitoring / tests).
+#[derive(Debug, Default, Clone)]
+pub struct FleetStats {
+    /// Requests accepted into tenant batches.
+    pub requests: usize,
+    /// Dispatch rounds (one round may score several tenants).
+    pub batches: usize,
+    /// Largest single dispatch round.
+    pub max_batch: usize,
+    /// Requests rejected with a protocol error by the dispatcher.
+    pub rejected: usize,
+    /// Accepted requests per model id.
+    pub per_tenant: BTreeMap<String, usize>,
+}
+
+/// Sleep up to `total`, waking within ~50ms of `stop` being set — keeps
+/// the `Drop` latency of the watcher/daemon threads bounded no matter how
+/// long their poll interval is. Crate-visible: `model::registry`'s
+/// `HotReloader` paces its polls with the same helper.
+pub(crate) fn sleep_until_stopped(stop: &AtomicBool, total: Duration) {
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::Relaxed) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(50)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fleet service
+// ---------------------------------------------------------------------------
+
+struct Tenant {
+    handle: BankHandle,
+    input_dim: usize,
+    marker: ServeMarker,
+}
+
+/// Knobs for [`FleetService::start`].
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOptions {
+    /// Threads in the shared scoring pool (shared across ALL tenants).
+    pub workers: usize,
+    /// Flush threshold of one dispatch round.
+    pub max_batch: usize,
+    /// Max time the first request of a round waits for company.
+    pub window: Duration,
+    /// Registry poll interval of the hot-swap watcher; `None` disables
+    /// watching (serve the versions loaded at start, forever).
+    pub watch: Option<Duration>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            workers: crate::util::threads::available().clamp(2, 16),
+            max_batch: 64,
+            window: Duration::from_millis(5),
+            watch: None,
+        }
+    }
+}
+
+/// One process serving every model name in a registry — see the module
+/// docs for the routing diagram. Construction loads the latest published
+/// version of each name; [`FleetService::client`] hands out routing
+/// handles; the optional watcher hot-swaps republished tenants in place.
+pub struct FleetService {
+    client: FleetClient,
+    tenants: Arc<BTreeMap<String, Tenant>>,
+    stats: Arc<Mutex<FleetStats>>,
+    stop: Arc<AtomicBool>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    watcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FleetService {
+    /// Load every model in `registry` (latest version each) and start the
+    /// dispatcher, the shared pool, and — when `opts.watch` is set — the
+    /// single multi-tenant hot-swap watcher. Fails if the registry is
+    /// empty or any artifact fails its checksum/decode.
+    pub fn start(registry: &ModelRegistry, opts: FleetOptions) -> Result<FleetService> {
+        let names = registry.models()?;
+        anyhow::ensure!(
+            !names.is_empty(),
+            "no models in {:?} — train some with `akda train` first",
+            registry.root()
+        );
+        let mut tenants = BTreeMap::new();
+        let mut dims = BTreeMap::new();
+        for name in &names {
+            let (entry, artifact) = registry.load_artifact(name)?;
+            let input_dim = model::codec::input_dim(&artifact)?;
+            let bank = model::codec::decode_bank(&artifact)
+                .with_context(|| format!("decoding tenant {}", entry.spec()))?;
+            let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
+            let marker = ServeMarker::publish(registry, name, entry.version)?;
+            dims.insert(name.clone(), input_dim);
+            tenants.insert(name.clone(), Tenant { handle, input_dim, marker });
+        }
+        let tenants = Arc::new(tenants);
+        let stats = Arc::new(Mutex::new(FleetStats::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = channel::<FleetRequest>();
+        let dispatcher = std::thread::Builder::new()
+            .name("akda-fleet-dispatch".into())
+            .spawn({
+                let tenants = tenants.clone();
+                let stats = stats.clone();
+                let pool = WorkPool::new(opts.workers);
+                let (max_batch, window) = (opts.max_batch.max(1), opts.window);
+                move || {
+                    loop {
+                        let first = match rx.recv() {
+                            Ok(r) => r,
+                            Err(_) => break,
+                        };
+                        let mut round = vec![first];
+                        let deadline = Instant::now() + window;
+                        while round.len() < max_batch {
+                            let left = deadline.saturating_duration_since(Instant::now());
+                            match rx.recv_timeout(left) {
+                                Ok(r) => round.push(r),
+                                Err(RecvTimeoutError::Timeout)
+                                | Err(RecvTimeoutError::Disconnected) => break,
+                            }
+                        }
+                        Self::dispatch_round(round, &tenants, &pool, &stats);
+                    }
+                    // pool dropped here: workers drain and join
+                }
+            })
+            .expect("spawn fleet dispatcher");
+
+        let watcher = opts.watch.map(|poll| {
+            let registry = registry.clone();
+            let tenants = tenants.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("akda-fleet-watch".into())
+                .spawn(move || Self::watch_loop(&registry, &tenants, &stop, poll))
+                .expect("spawn fleet watcher")
+        });
+
+        Ok(FleetService {
+            client: FleetClient { tx, dims: Arc::new(dims) },
+            tenants,
+            stats,
+            stop,
+            dispatcher: Some(dispatcher),
+            watcher,
+        })
+    }
+
+    /// One dispatch round: partition by model id (protocol-rejecting
+    /// unroutable requests) and submit one scoring job per tenant group
+    /// to the shared pool. The dispatcher never scores anything itself,
+    /// so a slow tenant cannot starve the routing of the others beyond
+    /// pool capacity.
+    fn dispatch_round(
+        round: Vec<FleetRequest>,
+        tenants: &BTreeMap<String, Tenant>,
+        pool: &WorkPool,
+        stats: &Mutex<FleetStats>,
+    ) {
+        let round_len = round.len();
+        let mut groups: BTreeMap<String, Vec<FleetRequest>> = BTreeMap::new();
+        let mut rejected = 0usize;
+        for req in round {
+            match tenants.get(&req.model) {
+                None => {
+                    rejected += 1;
+                    let known = tenants.keys().cloned().collect();
+                    let err = FleetError::UnknownModel { model: req.model.clone(), known };
+                    let _ = req.reply.send(Err(err));
+                }
+                Some(t) if req.features.len() != t.input_dim => {
+                    rejected += 1;
+                    let err = FleetError::WrongDim {
+                        model: req.model.clone(),
+                        expected: t.input_dim,
+                        got: req.features.len(),
+                    };
+                    let _ = req.reply.send(Err(err));
+                }
+                Some(_) => groups.entry(req.model.clone()).or_default().push(req),
+            }
+        }
+        {
+            let mut s = stats.lock().expect("fleet stats poisoned");
+            s.batches += 1;
+            s.max_batch = s.max_batch.max(round_len);
+            s.rejected += rejected;
+            for (name, group) in &groups {
+                s.requests += group.len();
+                *s.per_tenant.entry(name.clone()).or_default() += group.len();
+            }
+        }
+        for (name, group) in groups {
+            let tenant = &tenants[&name];
+            // the handle is read inside the job, at score time: a hot swap
+            // between dispatch and execution is picked up, not raced
+            let handle = tenant.handle.clone();
+            let dim = tenant.input_dim;
+            let _ = pool.submit(move || {
+                let x = Mat::from_fn(group.len(), dim, |r, c| group[r].features[c]);
+                let scores = handle.get().score(&x);
+                for (r, req) in group.into_iter().enumerate() {
+                    let _ = req.reply.send(Ok(scores.row(r).to_vec()));
+                }
+            });
+        }
+    }
+
+    /// The single registry watcher: one `HotReloader::poll_once` step per
+    /// tenant per cycle. Decode happens on this thread, never on the
+    /// dispatcher or the pool, so a tenant mid-swap does not stall the
+    /// scoring of the others; its serve marker is re-pointed after each
+    /// successful swap.
+    fn watch_loop(
+        registry: &ModelRegistry,
+        tenants: &BTreeMap<String, Tenant>,
+        stop: &AtomicBool,
+        poll: Duration,
+    ) {
+        let mut examined: BTreeMap<&str, (u32, Option<SystemTime>)> = tenants
+            .iter()
+            .map(|(n, t)| (n.as_str(), (t.handle.served_version(), None)))
+            .collect();
+        while !stop.load(Ordering::Relaxed) {
+            for (name, tenant) in tenants.iter() {
+                let ex = examined.get_mut(name.as_str()).expect("tenant examined state");
+                match HotReloader::poll_once(
+                    registry,
+                    name,
+                    &tenant.handle,
+                    tenant.input_dim,
+                    ex,
+                ) {
+                    Ok(true) => {
+                        let v = tenant.handle.served_version();
+                        if let Err(e) = tenant.marker.update(v) {
+                            eprintln!("fleet: serve-marker update for {name:?}: {e:#}");
+                        }
+                        eprintln!("fleet: hot-swapped tenant {name}@{v}");
+                    }
+                    Ok(false) => {}
+                    Err(e) => eprintln!("fleet: reload of tenant {name:?} failed: {e:#}"),
+                }
+            }
+            sleep_until_stopped(stop, poll);
+        }
+    }
+
+    pub fn client(&self) -> FleetClient {
+        self.client.clone()
+    }
+
+    /// Latest stats snapshot.
+    pub fn stats(&self) -> FleetStats {
+        self.stats.lock().expect("fleet stats poisoned").clone()
+    }
+
+    /// `(name, served registry version)` per tenant — what monitoring
+    /// prints and what the GC shield protects.
+    pub fn served_versions(&self) -> Vec<(String, u32)> {
+        self.tenants
+            .iter()
+            .map(|(n, t)| (n.clone(), t.handle.served_version()))
+            .collect()
+    }
+
+    /// The served version of one tenant (`None` for unknown ids).
+    pub fn served_version(&self, model: &str) -> Option<u32> {
+        self.tenants.get(model).map(|t| t.handle.served_version())
+    }
+
+    /// Total hot swaps across all tenants since start.
+    pub fn swaps(&self) -> usize {
+        self.tenants.values().map(|t| t.handle.generation()).sum()
+    }
+}
+
+impl Drop for FleetService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.watcher.take() {
+            let _ = w.join();
+        }
+        // closing our sender ends the dispatcher once outstanding client
+        // clones are gone (mirrors ScoringService::drop)
+        let (tx, _) = channel();
+        self.client = FleetClient { tx, dims: self.client.dims.clone() };
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // tenants (and their serve markers) drop here: leases released
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drop-directory auto-update daemon
+// ---------------------------------------------------------------------------
+
+/// What one daemon poll observed for one file.
+#[derive(Debug, Clone)]
+pub enum DropEvent {
+    /// `NAME.csv` settled, parsed, and the update published a new version
+    /// (the file is deleted afterwards). `accuracy` is the post-update
+    /// held-out accuracy when the model's dataset allows re-evaluation.
+    Updated { model: String, file: PathBuf, version: u32, accuracy: Option<f64> },
+    /// The file could not be consumed (malformed CSV, unknown model,
+    /// update failure); it was quarantined as `<file>.rejected` so it can
+    /// never wedge the polling loop.
+    Rejected { file: PathBuf, reason: String },
+    /// First sighting (or still changing): consumed only after its size
+    /// and mtime are stable across two consecutive polls, so a file still
+    /// being written is never half-read.
+    Waiting { file: PathBuf },
+}
+
+impl std::fmt::Display for DropEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DropEvent::Updated { model, file, version, accuracy } => {
+                write!(f, "updated {file:?} -> {model}@{version}")?;
+                if let Some(acc) = accuracy {
+                    write!(f, " (accuracy {:.2}%)", 100.0 * acc)?;
+                }
+                Ok(())
+            }
+            DropEvent::Rejected { file, reason } => {
+                write!(f, "rejected {file:?}: {reason}")
+            }
+            DropEvent::Waiting { file } => write!(f, "waiting for {file:?} to settle"),
+        }
+    }
+}
+
+/// The poll engine of the [`UpdateDaemon`], exposed separately so tests
+/// (and embedders) can drive polls synchronously.
+///
+/// Filename convention: `NAME.csv` targets model `NAME` (latest version)
+/// with `label,f1,f2,...` rows — exactly what `akda export` writes and
+/// `akda update --data` consumes. Non-CSV and dot-files are ignored.
+pub struct DropDirWatcher {
+    registry: ModelRegistry,
+    drop_dir: PathBuf,
+    opts: UpdateOptions,
+    /// `(len, mtime)` last observed per not-yet-settled file.
+    pending: BTreeMap<PathBuf, (u64, Option<SystemTime>)>,
+    /// Signatures of files already handled whose delete/quarantine failed
+    /// (e.g. an unwritable drop directory) — matching files are skipped,
+    /// never re-applied, so one update can never publish twice.
+    consumed: BTreeMap<PathBuf, (u64, Option<SystemTime>)>,
+}
+
+impl DropDirWatcher {
+    pub fn new(
+        registry: ModelRegistry,
+        drop_dir: impl Into<PathBuf>,
+        opts: UpdateOptions,
+    ) -> DropDirWatcher {
+        DropDirWatcher {
+            registry,
+            drop_dir: drop_dir.into(),
+            opts,
+            pending: BTreeMap::new(),
+            consumed: BTreeMap::new(),
+        }
+    }
+
+    /// One poll: scan the drop directory, settle-check every candidate,
+    /// consume the stable ones. A missing or unreadable drop directory
+    /// yields no events (the daemon keeps polling — the directory may
+    /// appear later).
+    pub fn poll(&mut self) -> Vec<DropEvent> {
+        let mut events = Vec::new();
+        let entries = match std::fs::read_dir(&self.drop_dir) {
+            Ok(e) => e,
+            Err(_) => return events,
+        };
+        let mut seen = Vec::new();
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let is_csv = path.extension().is_some_and(|e| e == "csv");
+            let visible = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| !n.starts_with('.'));
+            let is_file = entry.file_type().map(|t| t.is_file()).unwrap_or(false);
+            if !is_csv || !visible || !is_file {
+                continue;
+            }
+            let Ok(meta) = entry.metadata() else { continue };
+            let sig = (meta.len(), meta.modified().ok());
+            seen.push(path.clone());
+            match self.consumed.get(&path) {
+                // already handled but undeletable (read-only drop dir):
+                // skip for as long as the content is unchanged
+                Some(prev) if *prev == sig => continue,
+                Some(_) => {
+                    self.consumed.remove(&path);
+                }
+                None => {}
+            }
+            match self.pending.get(&path) {
+                Some(prev) if *prev == sig => {
+                    // two identical sightings: the writer is done
+                    self.pending.remove(&path);
+                    events.push(self.consume(&path, sig));
+                }
+                _ => {
+                    self.pending.insert(path.clone(), sig);
+                    events.push(DropEvent::Waiting { file: path });
+                }
+            }
+        }
+        // forget files that vanished between polls
+        self.pending.retain(|p, _| seen.contains(p));
+        self.consumed.retain(|p, _| seen.contains(p));
+        events
+    }
+
+    /// Consume one settled file: success deletes it, any failure —
+    /// including a *panic* anywhere in the parse/update path (e.g. NaN
+    /// features poisoning a comparison) — quarantines it as
+    /// `<file>.rejected` (best-effort delete if even the rename fails).
+    /// Whatever cleanup achieves, the file's signature is remembered as
+    /// consumed, so a file that cannot be removed is still never applied
+    /// twice, and no drop file can kill the polling thread.
+    fn consume(&mut self, path: &Path, sig: (u64, Option<SystemTime>)) -> DropEvent {
+        self.consumed.insert(path.to_path_buf(), sig);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.try_update(path)
+        }));
+        match outcome {
+            Ok(Ok(event)) => {
+                let _ = std::fs::remove_file(path);
+                event
+            }
+            Ok(Err(e)) => self.quarantine(path, format!("{e:#}")),
+            Err(panic) => {
+                let what = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                self.quarantine(path, format!("update panicked: {what}"))
+            }
+        }
+    }
+
+    fn quarantine(&self, path: &Path, reason: String) -> DropEvent {
+        let mut quarantine = path.as_os_str().to_os_string();
+        quarantine.push(".rejected");
+        let quarantine = PathBuf::from(quarantine);
+        let _ = std::fs::remove_file(&quarantine);
+        if std::fs::rename(path, &quarantine).is_err() {
+            let _ = std::fs::remove_file(path);
+        }
+        DropEvent::Rejected { file: path.to_path_buf(), reason }
+    }
+
+    fn try_update(&self, path: &Path) -> Result<DropEvent> {
+        let model = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .context("drop file name is not valid UTF-8")?
+            .to_string();
+        let (x_new, y_new) = crate::data::csv::load_labeled(path)?;
+        let up = model::update_registry_model(&self.registry, &model, &x_new, &y_new, &self.opts)?;
+        Ok(DropEvent::Updated {
+            model,
+            file: path.to_path_buf(),
+            version: up.published.version,
+            accuracy: up.eval.map(|(acc, _)| acc),
+        })
+    }
+}
+
+/// The scheduled auto-update daemon (`akda daemon`): a thread around
+/// [`DropDirWatcher`] polling every `interval`. Updated/rejected events
+/// are logged to stderr; [`UpdateDaemon::updates`] / [`UpdateDaemon::rejects`]
+/// expose counters for monitoring and the smoke tests. Drop (or
+/// [`UpdateDaemon::stop`]) to halt.
+pub struct UpdateDaemon {
+    stop: Arc<AtomicBool>,
+    updates: Arc<AtomicUsize>,
+    rejects: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl UpdateDaemon {
+    pub fn start(
+        registry: ModelRegistry,
+        drop_dir: impl Into<PathBuf>,
+        interval: Duration,
+        opts: UpdateOptions,
+    ) -> UpdateDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let updates = Arc::new(AtomicUsize::new(0));
+        let rejects = Arc::new(AtomicUsize::new(0));
+        let (stop2, updates2, rejects2) = (stop.clone(), updates.clone(), rejects.clone());
+        let mut watcher = DropDirWatcher::new(registry, drop_dir, opts);
+        let handle = std::thread::Builder::new()
+            .name("akda-update-daemon".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    for event in watcher.poll() {
+                        match &event {
+                            DropEvent::Updated { .. } => {
+                                updates2.fetch_add(1, Ordering::SeqCst);
+                                eprintln!("daemon: {event}");
+                            }
+                            DropEvent::Rejected { .. } => {
+                                rejects2.fetch_add(1, Ordering::SeqCst);
+                                eprintln!("daemon: {event}");
+                            }
+                            // settle-waits are normal operation, not news
+                            DropEvent::Waiting { .. } => {}
+                        }
+                    }
+                    sleep_until_stopped(&stop2, interval);
+                }
+            })
+            .expect("spawn update daemon");
+        UpdateDaemon { stop, updates, rejects, handle: Some(handle) }
+    }
+
+    /// Updates published since start.
+    pub fn updates(&self) -> usize {
+        self.updates.load(Ordering::SeqCst)
+    }
+
+    /// Files quarantined since start.
+    pub fn rejects(&self) -> usize {
+        self.rejects.load(Ordering::SeqCst)
+    }
+
+    /// Whether the polling thread is still running. Per-file panics are
+    /// contained (see [`DropDirWatcher`]), so this going false means
+    /// something unexpected killed the thread — a foreground supervisor
+    /// (`akda daemon`) should exit loudly rather than sleep forever.
+    pub fn is_alive(&self) -> bool {
+        self.handle.as_ref().map(|h| !h.is_finished()).unwrap_or(false)
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for UpdateDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_error_display_names_the_protocol() {
+        let e = FleetError::UnknownModel {
+            model: "nope".into(),
+            known: vec!["a".into(), "b".into()],
+        };
+        assert_eq!(format!("{e}"), "unknown model \"nope\" (serving: a, b)");
+        let e = FleetError::WrongDim { model: "a".into(), expected: 6, got: 5 };
+        assert!(format!("{e}").contains("expects 6 features, got 5"));
+        assert_eq!(format!("{}", FleetError::ServiceDown), "fleet service is down");
+    }
+
+    #[test]
+    fn drop_watcher_ignores_non_csv_and_missing_dir() {
+        let dir = std::env::temp_dir().join(format!("akda_dropdir_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let registry = ModelRegistry::open(dir.join("registry"));
+        // missing drop dir: no events, no error
+        let opts = UpdateOptions::default();
+        let mut w = DropDirWatcher::new(registry.clone(), dir.join("drop"), opts);
+        assert!(w.poll().is_empty());
+        // non-CSV and dot-files are invisible
+        std::fs::create_dir_all(dir.join("drop")).unwrap();
+        std::fs::write(dir.join("drop").join("notes.txt"), "hi").unwrap();
+        std::fs::write(dir.join("drop").join(".hidden.csv"), "0,1.0").unwrap();
+        assert!(w.poll().is_empty());
+        // a real candidate first shows up as Waiting (settle check)
+        std::fs::write(dir.join("drop").join("m.csv"), "0,1.0\n").unwrap();
+        let events = w.poll();
+        assert!(
+            matches!(events.as_slice(), [DropEvent::Waiting { .. }]),
+            "{events:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

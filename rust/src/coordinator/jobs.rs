@@ -1,10 +1,13 @@
-//! Work-pool job scheduler for the per-class one-vs-rest training protocol.
+//! Work-pool job scheduler for the per-class one-vs-rest training protocol
+//! and the fleet's shared scoring pool.
 //!
 //! No tokio offline, so this is a small explicit scheduler: a bounded
 //! worker pool over std threads + channels, FIFO queue, per-job wall-clock
 //! metrics. The evaluation protocol submits one job per (class, method)
 //! pair; the PJRT server serializes artifact executions on its own thread,
-//! so CPU-native work overlaps accelerator work naturally.
+//! so CPU-native work overlaps accelerator work naturally. The fleet
+//! (`coordinator::fleet`) submits one job per tenant micro-batch, which is
+//! what keeps ten tenants from needing ten scoring threads.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -19,6 +22,23 @@ pub struct PoolMetrics {
     pub busy_s: f64,
 }
 
+/// A fixed-size pool of named worker threads draining one FIFO queue.
+///
+/// Jobs are closures; [`WorkPool::submit`] hands back a receiver for the
+/// job's result (drop it for fire-and-forget), [`WorkPool::map`] is the
+/// order-preserving convenience over `0..n`. Dropping the pool closes the
+/// queue and joins every worker.
+///
+/// ```
+/// use akda::coordinator::WorkPool;
+///
+/// let pool = WorkPool::new(4);
+/// // map preserves input order even though jobs finish out of order
+/// assert_eq!(pool.map(5, |i| i * i), vec![0, 1, 4, 9, 16]);
+/// // submit returns a receiver; the job runs on a pool thread
+/// let rx = pool.submit(|| "done");
+/// assert_eq!(rx.recv().unwrap(), "done");
+/// ```
 pub struct WorkPool {
     tx: Option<Sender<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,

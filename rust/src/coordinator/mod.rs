@@ -9,15 +9,21 @@
 //!   (`da::akda_stream::PreparedStream`) — and shares it across the C
 //!   per-class fits.
 //! * `service` — post-training scoring service with dynamic micro-batching.
+//! * `fleet` — multi-tenant serving (L6): every model in a registry served
+//!   by one process over a single shared worker pool, one watcher
+//!   hot-swapping republished tenants, plus the drop-directory auto-update
+//!   daemon (`akda daemon`).
 //! * `config` — reproducible run configuration (`EvalConfig`), including
 //!   the streaming tile height `stream_block`.
 
 pub mod config;
+pub mod fleet;
 pub mod jobs;
 pub mod protocol;
 pub mod service;
 
 pub use config::EvalConfig;
+pub use fleet::{FleetClient, FleetError, FleetOptions, FleetService, UpdateDaemon};
 pub use jobs::WorkPool;
 pub use protocol::{build_dr, evaluate_ovr, select_hyper, Hyper, MethodId};
 pub use service::{BankHandle, DetectorBank, ScoringService};

@@ -23,6 +23,21 @@ use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
 /// Method identifiers — the column set of Tables 2–7.
+///
+/// The CLI spelling and [`MethodId::name`] round-trip through
+/// [`MethodId::from_name`]:
+///
+/// ```
+/// use akda::coordinator::MethodId;
+///
+/// let id = MethodId::from_name("akda-nystrom").unwrap();
+/// assert_eq!(id.name(), "akda-nystrom");
+/// assert!(id.uses_landmarks()); // CV also searches the budget m for it
+/// assert!(MethodId::from_name("no-such-method").is_none());
+/// for id in MethodId::table_columns() {
+///     assert_eq!(MethodId::from_name(id.name()), Some(id));
+/// }
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MethodId {
     Pca,

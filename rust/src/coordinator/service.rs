@@ -23,6 +23,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::da::Projection;
+use crate::data::Split;
+use crate::eval::{average_precision, mean_average_precision};
 use crate::linalg::Mat;
 use crate::svm::LinearSvm;
 
@@ -51,12 +53,77 @@ impl DetectorBank {
     }
 }
 
+/// Argmax class of one observation's per-class scores — the single
+/// prediction rule shared by every consumer of a [`DetectorBank`] (the
+/// CLI's train-time evaluation, the serve demo, the fleet demo, and the
+/// daemon's re-evaluation), so their printed accuracies can be compared
+/// verbatim: tie-breaking is "last maximal class wins" everywhere
+/// (`Iterator::max_by` keeps the last of equal maxima).
+///
+/// ```
+/// assert_eq!(akda::coordinator::service::predict(&[0.1, 0.9, 0.4]), 1);
+/// assert_eq!(akda::coordinator::service::predict(&[0.5, 0.5]), 1); // tie: last wins
+/// ```
+pub fn predict(scores: &[f64]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(c, _)| c)
+        .unwrap()
+}
+
+/// Direct (service-less) test-split evaluation of a trained bank:
+/// `(multiclass accuracy, one-vs-rest MAP)`. `akda train` and `akda
+/// update` stamp these numbers into the published manifest; the serve
+/// demo reports the same accuracy through the scoring service, so the
+/// two paths cross-check each other (CI asserts the printed values are
+/// equal — scoring is bit-for-bit identical either way).
+pub fn eval_bank(bank: &DetectorBank, split: &Split) -> (f64, f64) {
+    let scores = bank.score(&split.x_test);
+    let n = split.x_test.rows();
+    let mut correct = 0usize;
+    for i in 0..n {
+        if predict(scores.row(i)) == split.y_test[i] {
+            correct += 1;
+        }
+    }
+    let accuracy = correct as f64 / n as f64;
+    let aps: Vec<f64> = (0..split.n_classes)
+        .map(|cls| {
+            let col = scores.col(cls);
+            let positive: Vec<bool> = split.y_test.iter().map(|&l| l == cls).collect();
+            average_precision(&col, &positive)
+        })
+        .collect();
+    (accuracy, mean_average_precision(&aps))
+}
+
 /// A swappable slot holding the currently-served detector bank.
 ///
 /// Cloning the handle shares the slot: `swap` on any clone is visible to
 /// every reader at its next `get`. The scoring loop calls `get` once per
 /// micro-batch, so a swap takes effect at the next batch boundary without
-/// interrupting the batch being scored.
+/// interrupting the batch being scored. The fleet keeps one versioned
+/// handle per tenant, which is what gives every tenant an independent
+/// hot-swap boundary and a GC identity.
+///
+/// ```
+/// use std::sync::Arc;
+/// use akda::coordinator::{BankHandle, DetectorBank};
+/// use akda::da::IdentityProjection;
+/// use akda::svm::LinearSvm;
+///
+/// let bank = Arc::new(DetectorBank {
+///     projection: Box::new(IdentityProjection::new(2)),
+///     svms: vec![("c0".into(), LinearSvm { w: vec![1.0, 0.0], b: 0.0 })],
+/// });
+/// let handle = BankHandle::new_versioned(bank.clone(), 1);
+/// assert_eq!(handle.served_version(), 1);
+/// // a hot swap advances the generation and the served version together
+/// handle.swap_versioned(bank, 2);
+/// assert_eq!((handle.generation(), handle.served_version()), (1, 2));
+/// ```
 #[derive(Clone)]
 pub struct BankHandle {
     slot: Arc<RwLock<Arc<DetectorBank>>>,

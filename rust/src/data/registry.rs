@@ -29,6 +29,22 @@ impl Condition {
             Condition::Ex100 => "100Ex",
         }
     }
+
+    /// Parse the spellings the CLI and the model manifests use.
+    ///
+    /// ```
+    /// use akda::data::Condition;
+    /// assert_eq!(Condition::parse("10").unwrap(), Condition::Ex10);
+    /// assert_eq!(Condition::parse("100Ex").unwrap(), Condition::Ex100);
+    /// assert!(Condition::parse("50").is_none());
+    /// ```
+    pub fn parse(s: &str) -> Option<Condition> {
+        match s {
+            "10" | "10Ex" | "ex10" => Some(Condition::Ex10),
+            "100" | "100Ex" | "ex100" => Some(Condition::Ex100),
+            _ => None,
+        }
+    }
 }
 
 /// One registry entry (≈ one row of Table 1, scaled).

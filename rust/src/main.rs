@@ -10,7 +10,11 @@
 //!   models                        list / inspect published models
 //!   serve --model NAME[@V]        load a published model and serve scores
 //!                                 (zero training work on this path)
+//!   serve --fleet                 serve EVERY model in the registry from one
+//!                                 process, routed by model id (L6)
 //!   serve --dataset NAME          train in process, then serve scores
+//!   daemon --drop-dir DIR         auto-update: apply NAME.csv drops to model
+//!                                 NAME and republish (fleet hot-swaps it)
 //!   check                         verify artifacts + PJRT round trip
 //!
 //! The model registry root is `--models-dir DIR`, else `$AKDA_MODELS`,
@@ -129,6 +133,7 @@ fn main() -> Result<()> {
         "export" => cmd_export(&args),
         "models" => cmd_models(&args),
         "serve" => cmd_serve(&args),
+        "daemon" => cmd_daemon(&args),
         "check" => cmd_check(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -181,8 +186,9 @@ fn print_help() {
                                             list published models, dump one version's\n\
                                             manifest + artifact sections, GC old\n\
                                             versions (newest K kept; latest never\n\
-                                            deleted, nor the --protect'ed version a\n\
-                                            running serve has pinned), or diff two\n\
+                                            deleted, nor the --protect'ed version,\n\
+                                            nor any version a live fleet/serve\n\
+                                            process has marked served), or diff two\n\
                                             versions' manifests, tensor checksums,\n\
                                             and eval accuracy\n\
            serve --model NAME[@V] [--models-dir DIR] [--watch [SECS]]\n\
@@ -190,10 +196,27 @@ fn print_help() {
                                             checksums, score — zero training work;\n\
                                             --watch hot-reloads newly published\n\
                                             versions under the running service\n\
+           serve --fleet [--models-dir DIR] [--watch [SECS]]\n\
+                                            multi-tenant: serve EVERY model in the\n\
+                                            registry from one process, requests\n\
+                                            routed by model id over one shared\n\
+                                            worker pool; unknown ids are protocol-\n\
+                                            rejected; --watch hot-swaps any tenant\n\
+                                            republished (e.g. by the daemon) without\n\
+                                            stalling the others\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
                  [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
                                             train a detector bank in process, then\n\
                                             serve it (no registry involved)\n\
+           daemon --drop-dir DIR [--registry DIR] [--interval SECS]\n\
+                  [--refresh-landmarks] [--reservoir CAP]\n\
+                                            scheduled auto-update: watch the drop\n\
+                                            directory for NAME.csv files of labeled\n\
+                                            rows, apply the Sec. 7 recursive update\n\
+                                            to model NAME, republish (a watching\n\
+                                            fleet hot-swaps the new version in);\n\
+                                            malformed/partial files are quarantined\n\
+                                            as *.rejected, never retried in a loop\n\
            check                            verify artifacts + PJRT round trip\n\n\
          ENV: AKDA_ARTIFACTS (default: ./artifacts)\n\
               AKDA_MODELS    (default: ./models)"
@@ -335,11 +358,7 @@ mod akda_toy {
 }
 
 fn parse_condition(s: &str) -> Result<Condition> {
-    match s {
-        "10" | "10Ex" | "ex10" => Ok(Condition::Ex10),
-        "100" | "100Ex" | "ex100" => Ok(Condition::Ex100),
-        other => bail!("unknown condition {other:?} (10|100)"),
-    }
+    Condition::parse(s).with_context(|| format!("unknown condition {s:?} (10|100)"))
 }
 
 /// Training request shared by `akda train` and the train-in-process arm of
@@ -512,43 +531,9 @@ fn fit_detector_bank(
     Ok((bank, t0.elapsed().as_secs_f64(), resume))
 }
 
-/// Argmax class of one observation's per-class scores — the single
-/// prediction rule shared by `eval_bank` and `drive_demo` (CI asserts
-/// their printed accuracies are equal, so tie-breaking must match).
-fn predict(scores: &[f64]) -> usize {
-    scores
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(c, _)| c)
-        .unwrap()
-}
-
-/// Direct (service-less) test-split evaluation of a trained bank:
-/// multiclass accuracy + one-vs-rest MAP. Used by `akda train` to stamp
-/// the manifest; `serve`'s demo reports the same accuracy through the
-/// scoring service, so the two paths cross-check each other.
-fn eval_bank(bank: &akda::coordinator::DetectorBank, split: &akda::data::Split) -> (f64, f64) {
-    use akda::eval::{average_precision, mean_average_precision};
-
-    let scores = bank.score(&split.x_test);
-    let n = split.x_test.rows();
-    let mut correct = 0usize;
-    for i in 0..n {
-        if predict(scores.row(i)) == split.y_test[i] {
-            correct += 1;
-        }
-    }
-    let accuracy = correct as f64 / n as f64;
-    let aps: Vec<f64> = (0..split.n_classes)
-        .map(|cls| {
-            let col = scores.col(cls);
-            let positive: Vec<bool> = split.y_test.iter().map(|&l| l == cls).collect();
-            average_precision(&col, &positive)
-        })
-        .collect();
-    (accuracy, mean_average_precision(&aps))
-}
+// `predict` and `eval_bank` live in `coordinator::service` (shared with
+// the update engine's re-evaluation and the fleet demo below).
+use akda::coordinator::service::{eval_bank, predict};
 
 /// Drive the demo load through the scoring service from a fixed-size pool
 /// of client workers, each walking a strided chunk of the test rows — the
@@ -667,7 +652,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// refresh for approximate ones), re-evaluate, and publish the next
 /// version. A running `serve --model NAME --watch` hot-swaps it in.
 fn cmd_update(rest: &[String]) -> Result<()> {
-    use akda::model::{ModelManifest, ModelRegistry, UpdateOptions};
+    use akda::model::{ModelRegistry, UpdateOptions};
 
     let Some(spec) = rest.first().filter(|s| !s.starts_with("--")) else {
         bail!("usage: akda update NAME[@VERSION] --data new.csv [--models-dir DIR] \
@@ -680,7 +665,6 @@ fn cmd_update(rest: &[String]) -> Result<()> {
     let (x_new, y_new) = akda::data::csv::load_labeled(std::path::Path::new(data))?;
 
     let registry = ModelRegistry::open(models_dir(&args));
-    let (entry, artifact) = registry.load_artifact(spec)?;
     let reservoir_cap = match args.get("reservoir") {
         Some(cap) => {
             let cap: usize = cap.parse().context("--reservoir CAP must be an integer")?;
@@ -695,15 +679,15 @@ fn cmd_update(rest: &[String]) -> Result<()> {
         ..Default::default()
     };
     eprintln!(
-        "updating {} with {} rows from {data:?} ({})",
-        entry.spec(),
+        "updating {spec} with {} rows from {data:?} ({})",
         x_new.rows(),
         if opts.refresh_landmarks { "landmark refresh on" } else { "no landmark refresh" },
     );
 
-    let t0 = std::time::Instant::now();
-    let (bank, new_artifact, report) = akda::model::apply_update(&artifact, &x_new, &y_new, &opts)?;
-    let update_s = t0.elapsed().as_secs_f64();
+    // the whole resolve → grow → re-eval → publish lifecycle is one
+    // library call, shared verbatim with the auto-update daemon
+    let up = akda::model::update_registry_model(&registry, spec, &x_new, &y_new, &opts)?;
+    let report = &up.report;
     eprintln!(
         "update [{}]: +{} rows -> {} total (C={}), bordered growths {}, \
          full refactorizations {} (structurally impossible), {:.2}s",
@@ -713,7 +697,7 @@ fn cmd_update(rest: &[String]) -> Result<()> {
         report.n_classes,
         report.bordered_growths,
         report.full_refactorizations,
-        update_s
+        up.update_s
     );
     if report.kind == "exact-bordered" && args.get("reservoir").is_some() {
         eprintln!(
@@ -721,54 +705,79 @@ fn cmd_update(rest: &[String]) -> Result<()> {
              training set is retained; reservoirs exist for approx models only)"
         );
     }
-
-    // re-evaluate on the held-out split the model was trained against
-    // (possible whenever the manifest names a registry dataset)
-    let mf = &entry.manifest;
-    let eval = akda::data::by_name(&mf.dataset)
-        .and_then(|dspec| parse_condition(&mf.condition).ok().map(|c| dspec.split(c)))
-        .filter(|split| split.x_test.cols() == x_new.cols());
-    let (accuracy, map) = match &eval {
-        Some(split) => {
-            let (accuracy, map) = eval_bank(&bank, split);
-            println!("update-eval: accuracy {:.2}%  MAP {:.2}%", 100.0 * accuracy, 100.0 * map);
-            (accuracy, map)
+    match up.eval {
+        Some((accuracy, map)) => {
+            println!("update-eval: accuracy {:.2}%  MAP {:.2}%", 100.0 * accuracy, 100.0 * map)
         }
-        None => {
-            eprintln!(
-                "update-eval skipped: dataset {:?} is not in the registry",
-                mf.dataset
-            );
-            (0.0, 0.0)
-        }
-    };
-
-    let manifest = ModelManifest {
-        method: mf.method.clone(),
-        dataset: mf.dataset.clone(),
-        condition: mf.condition.clone(),
-        rho: mf.rho,
-        c: mf.c,
-        h: mf.h,
-        m: mf.m,
-        stream_block: mf.stream_block,
-        n_classes: report.n_classes,
-        input_dim: mf.input_dim,
-        train_s: update_s,
-        map,
-        accuracy,
-        updated_from: Some(entry.spec()),
-        ..Default::default()
-    };
-    let published = registry.publish(&entry.name, &new_artifact, &manifest)?;
+        None => eprintln!(
+            "update-eval skipped: dataset {:?} is not in the registry",
+            up.from.manifest.dataset
+        ),
+    }
     println!(
         "published {} (updated from {}; a `serve --model {} --watch` service \
          hot-swaps it in)",
-        published.spec(),
-        entry.spec(),
-        published.name
+        up.published.spec(),
+        up.from.spec(),
+        up.published.name
     );
     Ok(())
+}
+
+/// `akda daemon` — the scheduled auto-update service: watch a drop
+/// directory for `NAME.csv` files of labeled rows, apply the Sec. 7
+/// recursive update to model `NAME`, and republish. A fleet (or a
+/// `serve --model NAME --watch` service) picks the new version up at its
+/// next poll, closing the train → publish → serve-fleet → drop-data →
+/// auto-update → hot-swap loop without any process restart.
+fn cmd_daemon(args: &Args) -> Result<()> {
+    use akda::coordinator::UpdateDaemon;
+    use akda::model::{ModelRegistry, UpdateOptions};
+    use std::time::Duration;
+
+    // --registry DIR is the documented spelling; --models-dir/$AKDA_MODELS
+    // keep working so every subcommand addresses the registry the same way
+    let root = args.get("registry").map(PathBuf::from).unwrap_or_else(|| models_dir(args));
+    let drop_dir = args
+        .get("drop-dir")
+        .context("akda daemon needs --drop-dir DIR (watched for NAME.csv update files)")?;
+    let interval: f64 = match args.get("interval") {
+        Some(v) => v.parse().context("--interval SECS must be a number")?,
+        None => 5.0,
+    };
+    anyhow::ensure!(interval > 0.0, "--interval SECS must be positive");
+    let reservoir_cap = match args.get("reservoir") {
+        Some(cap) => {
+            let cap: usize = cap.parse().context("--reservoir CAP must be an integer")?;
+            anyhow::ensure!(cap >= 1, "--reservoir CAP must be >= 1");
+            cap
+        }
+        None => UpdateOptions::default().reservoir_cap,
+    };
+    let opts = UpdateOptions {
+        refresh_landmarks: args.get("refresh-landmarks").is_some(),
+        reservoir_cap,
+        ..Default::default()
+    };
+    let registry = ModelRegistry::open(&root);
+    anyhow::ensure!(
+        !registry.models()?.is_empty(),
+        "no models in {root:?} — train some with `akda train` before starting the daemon"
+    );
+    std::fs::create_dir_all(drop_dir)
+        .with_context(|| format!("creating drop dir {drop_dir:?}"))?;
+    eprintln!(
+        "daemon: watching {drop_dir:?} every {interval}s — drop NAME.csv \
+         (label,f1,f2,... rows) to grow model NAME in {root:?}"
+    );
+    let daemon = UpdateDaemon::start(registry, drop_dir, Duration::from_secs_f64(interval), opts);
+    // supervise rather than sleep blindly: per-file panics are contained
+    // inside the watcher, so a dead thread is an unexpected failure the
+    // operator must see instead of a process that looks healthy forever
+    while daemon.is_alive() {
+        std::thread::sleep(Duration::from_secs(1));
+    }
+    bail!("daemon polling thread terminated unexpectedly — check the log above")
 }
 
 /// `akda export` — dump registry-dataset rows as `label,f1,f2,...` CSV,
@@ -856,13 +865,31 @@ fn cmd_models(args: &Args) -> Result<()> {
         };
         anyhow::ensure!(!names.is_empty(), "no models in {:?}", registry.root());
         for name in names {
+            // every version a live fleet/serve process has marked with a
+            // serve lease is auto-protected inside prune — report the ones
+            // that actually survived the cut because of their lease
+            let before = registry.versions(&name)?;
+            let served = registry.served_versions(&name)?;
             let pruned = registry.prune(&name, keep, protect)?;
             if pruned.is_empty() {
-                println!("{name}: nothing to prune (<= {keep} versions)");
+                println!("{name}: nothing to prune");
             } else {
                 let specs: Vec<String> =
                     pruned.iter().map(|v| format!("{name}@{v}")).collect();
                 println!("{name}: pruned {} (kept the newest {keep})", specs.join(", "));
+            }
+            let shielded: Vec<String> = before
+                .iter()
+                .copied()
+                .take(before.len().saturating_sub(keep))
+                .filter(|v| served.contains(v) && !pruned.contains(v))
+                .map(|v| format!("v{v}"))
+                .collect();
+            if !shielded.is_empty() {
+                println!(
+                    "{name}: auto-protected served {} (live serve markers)",
+                    shielded.join(", ")
+                );
             }
         }
         return Ok(());
@@ -906,10 +933,139 @@ fn cmd_models(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--watch [SECS]` into a poll interval (bare flag = 2s).
+fn parse_watch(args: &Args) -> Result<Option<std::time::Duration>> {
+    match args.get("watch") {
+        Some(v) => {
+            let poll: f64 = if v == "true" { 2.0 } else { v.parse().context("--watch SECS")? };
+            anyhow::ensure!(poll > 0.0, "--watch SECS must be positive");
+            Ok(Some(std::time::Duration::from_secs_f64(poll)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `akda serve --fleet` — multi-tenant serving: every model in the
+/// registry behind one process, routed by model id over one shared
+/// worker pool (`coordinator::fleet::FleetService`). The demo drives
+/// each tenant's held-out split through the shared pool by id, proves
+/// unknown ids are protocol-rejected, and — with `--watch` — stays up
+/// so daemon-republished tenants hot-swap in live.
+fn cmd_serve_fleet(args: &Args) -> Result<()> {
+    use akda::coordinator::fleet::{FleetError, FleetOptions, FleetService};
+    use akda::model::ModelRegistry;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    let conflicts =
+        ["model", "method", "landmarks", "stream", "block-size", "cond", "pjrt", "dataset"];
+    for flag in conflicts {
+        anyhow::ensure!(
+            args.get(flag).is_none(),
+            "--{flag} conflicts with --fleet (the fleet serves every published \
+             model as stored)"
+        );
+    }
+    let registry = ModelRegistry::open(models_dir(args));
+    let watch = parse_watch(args)?;
+    let opts = FleetOptions { watch, ..Default::default() };
+    let svc = FleetService::start(&registry, opts)?;
+    let client = svc.client();
+    let served = svc.served_versions();
+    let roster: Vec<String> = served.iter().map(|(n, v)| format!("{n}@{v}")).collect();
+    eprintln!(
+        "fleet: serving {} tenants from {:?}: {}",
+        served.len(),
+        registry.root(),
+        roster.join(", ")
+    );
+    if let Some(poll) = watch {
+        eprintln!(
+            "fleet: watching for republished tenants every {:.1}s",
+            poll.as_secs_f64()
+        );
+    }
+
+    // demo traffic per tenant, all routed by model id through one pool
+    for (name, version) in &served {
+        let mf = registry.resolve(name)?.manifest;
+        let split = akda::data::by_name(&mf.dataset)
+            .and_then(|dspec| akda::data::Condition::parse(&mf.condition).map(|c| dspec.split(c)));
+        let Some(split) = split else {
+            eprintln!(
+                "fleet demo: {name}@{version} skipped (dataset {:?} is not in the registry)",
+                mf.dataset
+            );
+            continue;
+        };
+        let n = split.x_test.rows();
+        let workers = akda::util::threads::available().clamp(2, 8).min(n.max(1));
+        let correct = AtomicUsize::new(0);
+        std::thread::scope(|s| -> Result<()> {
+            let mut joins = Vec::new();
+            for w in 0..workers {
+                let client = client.clone();
+                let (split, correct, name) = (&split, &correct, name.as_str());
+                joins.push(s.spawn(move || -> Result<()> {
+                    let mut i = w;
+                    while i < n {
+                        let scores = client.score(name, split.x_test.row(i).to_vec())?;
+                        if predict(&scores) == split.y_test[i] {
+                            correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                        i += workers;
+                    }
+                    Ok(())
+                }));
+            }
+            for j in joins {
+                j.join().expect("fleet demo worker panicked")?;
+            }
+            Ok(())
+        })?;
+        println!(
+            "fleet demo: {name}@{version} accuracy {:.2}% over {n} requests",
+            100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64
+        );
+    }
+
+    // protocol check: an unknown id is rejected on the reply path — the
+    // service neither panics nor stops answering the real tenants
+    match client.score("no-such-model", vec![0.0]) {
+        Err(err @ FleetError::UnknownModel { .. }) => {
+            println!("fleet demo: unknown model rejected: {err}")
+        }
+        other => bail!("unknown model must be protocol-rejected, got {other:?}"),
+    }
+    let stats = svc.stats();
+    println!(
+        "fleet: {} requests in {} dispatch rounds (max round {}, rejected {})",
+        stats.requests, stats.batches, stats.max_batch, stats.rejected
+    );
+    match watch {
+        Some(_) => {
+            eprintln!(
+                "fleet demo complete; still serving {} tenants with hot reload — \
+                 Ctrl-C to stop",
+                served.len()
+            );
+            loop {
+                std::thread::sleep(Duration::from_secs(60));
+            }
+        }
+        None => Ok(()),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use akda::coordinator::{BankHandle, ScoringService};
     use akda::model::{HotReloader, ModelRegistry};
     use std::time::Duration;
+
+    // fleet path: every model in the registry behind one process
+    if args.get("fleet").is_some() {
+        return cmd_serve_fleet(args);
+    }
 
     // registry path: load a published model — zero training work (the
     // bank is decoded from checksummed tensors; no fit call anywhere)
@@ -960,23 +1116,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // versioned handle: monitoring (and in-process GC callers) can ask
         // which registry version is live; the watcher advances it on swap
         let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
-        let watcher = match args.get("watch") {
-            Some(v) => {
-                let poll: f64 =
-                    if v == "true" { 2.0 } else { v.parse().context("--watch SECS")? };
-                anyhow::ensure!(poll > 0.0, "--watch SECS must be positive");
-                eprintln!("watching {:?} for new versions every {poll}s", registry.root());
+        // GC shield: lease the served version so `akda models --prune` run
+        // from another process cannot delete it while this one serves it
+        // (released on exit; the watcher re-points it on every hot swap)
+        let mut marker =
+            Some(akda::model::ServeMarker::publish(&registry, &entry.name, entry.version)?);
+        let watcher = match parse_watch(args)? {
+            Some(poll) => {
+                eprintln!(
+                    "watching {:?} for new versions every {}s",
+                    registry.root(),
+                    poll.as_secs_f64()
+                );
                 Some(HotReloader::start(
                     registry.clone(),
                     entry.name.clone(),
                     handle.clone(),
                     entry.version,
                     input_dim,
-                    Duration::from_secs_f64(poll),
+                    poll,
+                    marker.take(),
                 ))
             }
             None => None,
         };
+        // without a watcher the lease lives (and dies) with this function
+        let _marker = marker;
         let svc = ScoringService::start_reloadable(
             handle,
             input_dim,

@@ -35,10 +35,15 @@
 //!   bounds the version history the loop produces.
 //!
 //! The CLI surface is `akda train` (fit → eval → publish), `akda models`
-//! (list/inspect/diff/prune), `akda serve --model NAME[@VERSION]` (load
-//! and serve with zero training work; `--watch` hot-swaps new versions
-//! in), and `akda update NAME[@V] --data new.csv` (recursive learning →
-//! next version). `tests/model_roundtrip.rs` pins the persistence
+//! (list/inspect/diff/prune — prune auto-protects any version a live
+//! serve process has marked with a [`registry::ServeMarker`] lease),
+//! `akda serve --model NAME[@VERSION]` (load and serve with zero
+//! training work; `--watch` hot-swaps new versions in), `akda update
+//! NAME[@V] --data new.csv` (recursive learning → next version), and —
+//! one layer up — `akda serve --fleet` / `akda daemon`
+//! (`coordinator::fleet`), which serve every model here from one process
+//! and apply drop-directory updates through the same
+//! [`update::update_registry_model`] path. `tests/model_roundtrip.rs` pins the persistence
 //! guarantee: for every servable method, a published-then-loaded model
 //! scores the test set bit-for-bit identically to the freshly trained
 //! one, and corrupt artifacts fail with checksum errors instead of
@@ -53,5 +58,9 @@ pub mod update;
 
 pub use artifact::ModelArtifact;
 pub use codec::{decode_bank, encode_bank, ResumeState};
-pub use registry::{HotReloader, ModelDiff, ModelManifest, ModelRegistry, ModelVersion};
-pub use update::{apply_update, UpdateOptions, UpdateReport};
+pub use registry::{
+    HotReloader, ModelDiff, ModelManifest, ModelRegistry, ModelVersion, ServeMarker,
+};
+pub use update::{
+    apply_update, update_registry_model, PublishedUpdate, UpdateOptions, UpdateReport,
+};

@@ -31,7 +31,7 @@
 //! accepts, so a bad publish cannot wedge a live endpoint.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -43,6 +43,11 @@ use crate::coordinator::{BankHandle, DetectorBank};
 
 /// Manifest file name inside a version directory.
 pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// File-name prefix of the serve markers ([`ServeMarker`]) a serving
+/// process drops inside `<root>/<name>/` so out-of-process GC
+/// ([`ModelRegistry::prune`]) can see which versions are live.
+pub const SERVE_MARKER_PREFIX: &str = ".served-";
 
 /// Plain-text metadata published next to every artifact. Everything here
 /// is informational (the binary artifact is self-contained); the manifest
@@ -378,11 +383,64 @@ impl ModelRegistry {
         bail!("could not claim a version slot for model {name:?} after 64 attempts")
     }
 
+    /// Versions of `name` that some process has marked as currently
+    /// served (its [`ServeMarker`] files), ascending and deduplicated.
+    /// [`ModelRegistry::prune`] auto-protects every version returned
+    /// here, so a fleet serving ten tenants does not need ten `--protect`
+    /// flags — each tenant's marker shields its own served version.
+    ///
+    /// Markers whose writer is provably dead (the pid embedded in the
+    /// file name no longer exists in `/proc` — serving CLIs usually exit
+    /// via Ctrl-C/SIGTERM, which skips the RAII cleanup) are
+    /// garbage-collected here instead of shielding old versions forever.
+    /// Where liveness cannot be established (no procfs, unparsable
+    /// name), the marker counts as live: the failure mode stays
+    /// over-protection, never deleting a served model.
+    pub fn served_versions(&self, name: &str) -> Result<Vec<u32>> {
+        let dir = self.root.join(name);
+        let mut versions = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(versions),
+            Err(e) => return Err(e).with_context(|| format!("reading model dir {dir:?}")),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if !entry.file_type()?.is_file() || !fname.starts_with(SERVE_MARKER_PREFIX) {
+                continue;
+            }
+            if let Some(pid) = marker_pid(&fname) {
+                if marker_writer_dead(pid) {
+                    // a lease whose holder is gone: collect the file and
+                    // skip it (best-effort — a failed delete just means
+                    // the next pass tries again)
+                    let _ = std::fs::remove_file(entry.path());
+                    continue;
+                }
+            }
+            // a marker we cannot parse is treated as absent (a crashed
+            // writer at worst under-protects its own version)
+            if let Ok(text) = std::fs::read_to_string(entry.path()) {
+                if let Ok(v) = text.trim().parse::<u32>() {
+                    versions.push(v);
+                }
+            }
+        }
+        versions.sort_unstable();
+        versions.dedup();
+        Ok(versions)
+    }
+
     /// Retention policy: delete old versions of `name`, keeping the newest
     /// `keep_last` (≥ 1 — the latest version is never deletable) plus, if
     /// given, the explicitly `protect`ed version — pass the version a
     /// running service currently serves so a GC pass can never delete a
-    /// model out from under it. Returns the pruned version numbers.
+    /// model out from under it. Every version some process has marked
+    /// live with a [`ServeMarker`] (see [`ModelRegistry::served_versions`])
+    /// is auto-protected the same way, so pruning a registry a fleet is
+    /// serving never deletes any tenant's served version. Returns the
+    /// pruned version numbers.
     ///
     /// # Examples
     ///
@@ -412,10 +470,12 @@ impl ModelRegistry {
             return Ok(Vec::new());
         }
         let cut = versions.len() - keep_last;
+        // union of the explicit shield and every live serve marker
+        let served = self.served_versions(name)?;
         let mut pruned = Vec::new();
         for &v in &versions[..cut] {
-            if Some(v) == protect {
-                continue; // never delete the version a service still serves
+            if Some(v) == protect || served.contains(&v) {
+                continue; // never delete a version a service still serves
             }
             let dir = self.root.join(name).join(v.to_string());
             std::fs::remove_dir_all(&dir).with_context(|| format!("pruning {name}@{v}"))?;
@@ -538,6 +598,24 @@ impl std::fmt::Display for ModelDiff {
     }
 }
 
+/// The writer pid embedded in a serve-marker file name
+/// (`.served-<pid>-<seq>`), if it parses.
+fn marker_pid(fname: &str) -> Option<u32> {
+    fname
+        .strip_prefix(SERVE_MARKER_PREFIX)?
+        .split('-')
+        .next()?
+        .parse()
+        .ok()
+}
+
+/// Whether a marker's writer is *provably* dead: procfs is available and
+/// has no entry for the pid. Without procfs (non-Linux) this returns
+/// false, so markers are conservatively treated as live.
+fn marker_writer_dead(pid: u32) -> bool {
+    Path::new("/proc").is_dir() && !Path::new(&format!("/proc/{pid}")).exists()
+}
+
 fn validate_name(name: &str) -> Result<()> {
     ensure!(!name.is_empty(), "model name must not be empty");
     ensure!(
@@ -546,6 +624,83 @@ fn validate_name(name: &str) -> Result<()> {
          name and the @-spec syntax)"
     );
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Serve markers (cross-process GC shield)
+// ---------------------------------------------------------------------------
+
+/// RAII "this version is live" lease: a serving process (the fleet, or a
+/// `serve --model` process) drops a `<root>/<name>/.served-<pid>-<seq>`
+/// file holding the version it serves (`<seq>` is a process-wide counter,
+/// so several services in one process never clobber each other's lease);
+/// [`ModelRegistry::prune`] auto-protects every marked version, so
+/// `akda models --prune` run from another process cannot delete a model
+/// out from under a live endpoint. The marker is rewritten on hot-swap
+/// ([`ServeMarker::update`]) and removed on drop.
+///
+/// A marker left behind by a killed or crashed process (RAII cleanup
+/// skipped) only ever *over*-protects — fail-safe in the direction that
+/// matters — and is garbage-collected by the next
+/// [`ModelRegistry::served_versions`] pass once its writer pid is
+/// provably gone (procfs check), so restart churn cannot accumulate
+/// shields forever.
+///
+/// ```
+/// use akda::model::{ModelArtifact, ModelManifest, ModelRegistry, ServeMarker};
+/// use akda::linalg::Mat;
+///
+/// let root = std::env::temp_dir().join(format!("akda_marker_doc_{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&root);
+/// let reg = ModelRegistry::open(&root);
+/// let mut art = ModelArtifact::new();
+/// art.push_tensor("t", Mat::zeros(1, 1));
+/// for _ in 0..3 {
+///     reg.publish("demo", &art, &ModelManifest::default()).unwrap();
+/// }
+/// let marker = ServeMarker::publish(&reg, "demo", 1).unwrap();
+/// // prune wants to keep only v3, but v1 is marked live
+/// assert_eq!(reg.prune("demo", 1, None).unwrap(), vec![2]);
+/// assert_eq!(reg.versions("demo").unwrap(), vec![1, 3]);
+/// drop(marker); // lease released: v1 is now collectable
+/// assert_eq!(reg.prune("demo", 1, None).unwrap(), vec![1]);
+/// # let _ = std::fs::remove_dir_all(&root);
+/// ```
+#[derive(Debug)]
+pub struct ServeMarker {
+    path: PathBuf,
+}
+
+impl ServeMarker {
+    /// Mark `name@version` as served by this process. The model directory
+    /// is created if needed (serving an about-to-be-published model is
+    /// not an error — the marker just protects nothing yet).
+    pub fn publish(registry: &ModelRegistry, name: &str, version: u32) -> Result<ServeMarker> {
+        // pid alone is not unique enough: one process may serve the same
+        // model through several services (two fleets, embedders, tests)
+        static MARKER_SEQ: AtomicU64 = AtomicU64::new(0);
+        validate_name(name)?;
+        let dir = registry.root().join(name);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating model dir {dir:?}"))?;
+        let seq = MARKER_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("{SERVE_MARKER_PREFIX}{}-{seq}", std::process::id()));
+        std::fs::write(&path, format!("{version}\n"))
+            .with_context(|| format!("writing serve marker {path:?}"))?;
+        Ok(ServeMarker { path })
+    }
+
+    /// Re-point the lease after a hot-swap: the old version becomes
+    /// collectable, the new one is shielded.
+    pub fn update(&self, version: u32) -> Result<()> {
+        std::fs::write(&self.path, format!("{version}\n"))
+            .with_context(|| format!("updating serve marker {:?}", self.path))
+    }
+}
+
+impl Drop for ServeMarker {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -567,7 +722,11 @@ impl HotReloader {
     /// `loaded_version` is what the service currently serves;
     /// `expected_input_dim` guards against swapping in a model the running
     /// clients cannot feed. Polls every `poll` (artifact decode happens on
-    /// the watcher thread, never blocking the scoring loop).
+    /// the watcher thread, never blocking the scoring loop). When the
+    /// serving process holds a [`ServeMarker`] lease, pass it here: the
+    /// watcher re-points it to every version it swaps in, keeping the GC
+    /// shield aligned with what is actually served; the lease is released
+    /// when the watcher stops.
     pub fn start(
         registry: ModelRegistry,
         name: String,
@@ -575,6 +734,7 @@ impl HotReloader {
         loaded_version: u32,
         expected_input_dim: usize,
         poll: Duration,
+        marker: Option<ServeMarker>,
     ) -> HotReloader {
         let stop = Arc::new(AtomicBool::new(false));
         let reloads = Arc::new(AtomicUsize::new(0));
@@ -598,14 +758,25 @@ impl HotReloader {
                     ) {
                         Ok(true) => {
                             reloads2.fetch_add(1, Ordering::SeqCst);
+                            if let Some(m) = &marker {
+                                if let Err(e) = m.update(bank.served_version()) {
+                                    eprintln!(
+                                        "model watch: serve-marker update for \
+                                         {name:?}: {e:#}"
+                                    );
+                                }
+                            }
                         }
                         Ok(false) => {}
                         Err(e) => {
                             eprintln!("model watch: reload of {name:?} failed: {e:#}");
                         }
                     }
-                    std::thread::sleep(poll);
+                    // interruptible pacing: stop()/Drop returns within
+                    // ~50ms even under a very long --watch interval
+                    crate::coordinator::fleet::sleep_until_stopped(&stop2, poll);
                 }
+                // `marker` (if any) drops here: lease released with the watch
             })
             .expect("spawn model watcher");
         HotReloader { stop, reloads, handle: Some(handle) }
@@ -616,8 +787,10 @@ impl HotReloader {
     /// *before* the load/decode attempt, so a version that fails to load
     /// or is rejected is examined (and logged) once, not re-read and
     /// re-checksummed on every poll; a republished artifact changes the
-    /// mtime and is picked up again.
-    fn poll_once(
+    /// mtime and is picked up again. Crate-visible because the fleet's
+    /// multi-tenant watcher (`coordinator::fleet`) runs this same step
+    /// once per tenant from a single thread.
+    pub(crate) fn poll_once(
         registry: &ModelRegistry,
         name: &str,
         bank: &BankHandle,
@@ -766,6 +939,35 @@ mod tests {
         assert_eq!(pruned, vec![2, 4]);
         assert_eq!(reg.versions("m").unwrap(), vec![5]);
         assert_eq!(reg.latest("m").unwrap().version, 5);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn prune_auto_protects_marked_served_versions() {
+        let root = tmpdir("marker");
+        let reg = ModelRegistry::open(&root);
+        let mf = ModelManifest::default();
+        for i in 0..4 {
+            reg.publish("m", &tiny_artifact(i as f64), &mf).unwrap();
+        }
+        // two processes' worth of markers on v1 and v2 (simulated: our pid
+        // plus a hand-written stale marker from a "crashed" fleet)
+        let marker = ServeMarker::publish(&reg, "m", 2).unwrap();
+        std::fs::write(root.join("m").join(".served-stale"), "1\n").unwrap();
+        assert_eq!(reg.served_versions("m").unwrap(), vec![1, 2]);
+        // keep_last 1 would delete v1..v3, but both marked versions survive
+        assert_eq!(reg.prune("m", 1, None).unwrap(), vec![3]);
+        assert_eq!(reg.versions("m").unwrap(), vec![1, 2, 4]);
+        // swap the lease to v4 and drop the stale marker: v1/v2 collectable
+        marker.update(4).unwrap();
+        std::fs::remove_file(root.join("m").join(".served-stale")).unwrap();
+        assert_eq!(reg.prune("m", 1, None).unwrap(), vec![1, 2]);
+        // dropping the lease removes the marker file
+        drop(marker);
+        assert!(reg.served_versions("m").unwrap().is_empty());
+        // an unparsable marker is ignored rather than an error
+        std::fs::write(root.join("m").join(".served-1"), "not a version").unwrap();
+        assert!(reg.served_versions("m").unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -40,6 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use super::artifact::ModelArtifact;
 use super::codec::{self, ApproxResume, ExactResume, ResumeState};
+use super::registry::{ModelManifest, ModelRegistry, ModelVersion};
 use crate::approx::{FeatureMap, NystromMap};
 use crate::cluster::kmeans::kmeans_warm;
 use crate::coordinator::DetectorBank;
@@ -148,6 +149,74 @@ pub fn apply_update(
         ResumeState::Exact(r) => update_exact(artifact, r, x_new, y_new, opts),
         ResumeState::Approx(r) => update_approx(artifact, r, x_new, y_new, opts),
     }
+}
+
+/// What [`update_registry_model`] did: the version chain, the engine
+/// report, and the post-update evaluation (when one could run).
+#[derive(Debug)]
+pub struct PublishedUpdate {
+    /// The version the update started from (`updated_from` provenance).
+    pub from: ModelVersion,
+    /// The freshly published version.
+    pub published: ModelVersion,
+    pub report: UpdateReport,
+    /// `(accuracy, MAP)` on the model's held-out split — `None` when the
+    /// manifest names a dataset outside the registry (the manifest then
+    /// stores the `0.0/0.0` "no evaluation" convention).
+    pub eval: Option<(f64, f64)>,
+    /// Wall-clock seconds of the update engine (excludes evaluation).
+    pub update_s: f64,
+}
+
+/// The whole `akda update` lifecycle as one library call: resolve and
+/// checksum-verify `spec`, grow the model with `(x_new, y_new)` via
+/// [`apply_update`], re-evaluate on the held-out split of the dataset the
+/// manifest names (when it is a registry dataset with matching feature
+/// width), and publish the result as the next version with
+/// `updated_from` provenance. Shared verbatim by `akda update` and the
+/// drop-directory auto-update daemon (`coordinator::fleet::UpdateDaemon`),
+/// so a daemon-triggered update can never drift in behavior from a manual
+/// one.
+pub fn update_registry_model(
+    registry: &ModelRegistry,
+    spec: &str,
+    x_new: &Mat,
+    y_new: &[usize],
+    opts: &UpdateOptions,
+) -> Result<PublishedUpdate> {
+    let (entry, artifact) = registry.load_artifact(spec)?;
+    let t0 = std::time::Instant::now();
+    let (bank, new_artifact, report) = apply_update(&artifact, x_new, y_new, opts)?;
+    let update_s = t0.elapsed().as_secs_f64();
+
+    // re-evaluate on the held-out split the model was trained against
+    // (possible whenever the manifest names a registry dataset)
+    let mf = &entry.manifest;
+    let eval = crate::data::by_name(&mf.dataset)
+        .and_then(|dspec| crate::data::Condition::parse(&mf.condition).map(|c| dspec.split(c)))
+        .filter(|split| split.x_test.cols() == x_new.cols())
+        .map(|split| crate::coordinator::service::eval_bank(&bank, &split));
+    let (accuracy, map) = eval.unwrap_or((0.0, 0.0));
+
+    let manifest = ModelManifest {
+        method: mf.method.clone(),
+        dataset: mf.dataset.clone(),
+        condition: mf.condition.clone(),
+        rho: mf.rho,
+        c: mf.c,
+        h: mf.h,
+        m: mf.m,
+        stream_block: mf.stream_block,
+        n_classes: report.n_classes,
+        input_dim: mf.input_dim,
+        train_s: update_s,
+        map,
+        accuracy,
+        updated_from: Some(entry.spec()),
+        ..Default::default()
+    };
+    let published = registry.publish(&entry.name, &new_artifact, &manifest)?;
+    Ok(PublishedUpdate { from: entry, published, report, eval, update_s })
 }
 
 /// Train the one-vs-rest LSVM bank over projected rows `z` — the single

@@ -211,6 +211,7 @@ fn registry_update_hot_swaps_into_a_live_service() {
         entry.version,
         f,
         Duration::from_millis(10),
+        None,
     );
 
     // `akda update cl --data ...`: grow with the held-out 9 rows, publish v2

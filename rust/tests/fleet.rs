@@ -1,0 +1,347 @@
+//! Integration: multi-tenant fleet serving + the drop-directory
+//! auto-update daemon (L6).
+//!
+//! Pins the PR's acceptance guarantees:
+//!
+//! 1. **Routing** — one `FleetService` serves ≥ 2 model names from one
+//!    registry over one shared pool, answering by model id; unknown ids
+//!    and wrong feature widths come back as protocol errors (never a
+//!    panic) and leave the real tenants undisturbed.
+//! 2. **Independent hot swaps** — republishing one tenant hot-swaps only
+//!    that tenant while live traffic to the others keeps being answered.
+//! 3. **GC shield** — a fleet's serve markers auto-protect every
+//!    tenant's served version from `Registry::prune`.
+//! 4. **Daemon hygiene** — the drop-dir watcher consumes settled
+//!    `NAME.csv` files into published updates, quarantines malformed
+//!    ones, and never half-reads a file still being written.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use akda::coordinator::fleet::{DropDirWatcher, DropEvent, FleetError};
+use akda::coordinator::{DetectorBank, FleetOptions, FleetService, UpdateDaemon};
+use akda::da::akda::Akda;
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::codec::{encode_resume, ExactResume};
+use akda::model::update::train_svm_bank;
+use akda::model::{
+    apply_update, encode_bank, ModelArtifact, ModelManifest, ModelRegistry, ResumeState,
+    UpdateOptions,
+};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("akda_fleet_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Exact-AKDA bank + artifact with embedded resume state — the same shape
+/// `akda train --method akda` publishes (updatable by the daemon).
+fn trained_artifact(
+    dim: usize,
+    n_classes: usize,
+    seed: u64,
+) -> (Mat, Vec<usize>, ModelArtifact) {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes,
+        n_per_class: vec![12; n_classes],
+        dim,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    });
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let (proj, chol_l) = akda_cfg.fit_with_factor(&x, &labels, n_classes).unwrap();
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, n_classes);
+    let bank = DetectorBank { projection: Box::new(proj), svms };
+    let mut art = encode_bank(&bank, "akda").unwrap();
+    encode_resume(
+        &mut art,
+        &ResumeState::Exact(ExactResume {
+            chol_l,
+            labels: labels.clone(),
+            eps: akda_cfg.eps,
+            n_classes,
+        }),
+    )
+    .unwrap();
+    (x, labels, art)
+}
+
+fn manifest(dim: usize, n_classes: usize) -> ModelManifest {
+    ModelManifest {
+        method: "akda".into(),
+        n_classes,
+        input_dim: dim,
+        ..Default::default()
+    }
+}
+
+/// Acceptance: one process, two tenants with different shapes, routed by
+/// id; unknown ids / wrong widths are protocol errors, and the serve
+/// markers shield the served versions from prune.
+#[test]
+fn fleet_routes_by_id_rejects_unknown_ids_and_shields_gc() {
+    let root = tmpdir("routing");
+    let registry = ModelRegistry::open(&root);
+    // tenant "aa": 6 features / 3 classes; tenant "bb": 5 features / 2
+    let (xa, _, art_a) = trained_artifact(6, 3, 1);
+    let (xb, _, art_b) = trained_artifact(5, 2, 2);
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+    registry.publish("bb", &art_b, &manifest(5, 2)).unwrap();
+
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let client = svc.client();
+    assert_eq!(client.models(), vec!["aa".to_string(), "bb".to_string()]);
+    assert_eq!(svc.served_versions(), vec![("aa".into(), 1), ("bb".into(), 1)]);
+
+    // routing: each tenant answers with ITS class count
+    let sa = client.score("aa", xa.row(0).to_vec()).unwrap();
+    let sb = client.score("bb", xb.row(0).to_vec()).unwrap();
+    assert_eq!((sa.len(), sb.len()), (3, 2));
+    assert!(sa.iter().chain(&sb).all(|s| s.is_finite()));
+
+    // protocol errors, not panics — and the service keeps answering after
+    match client.score("nope", vec![0.0; 6]) {
+        Err(FleetError::UnknownModel { model, known }) => {
+            assert_eq!(model, "nope");
+            assert_eq!(known, vec!["aa".to_string(), "bb".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    match client.score("bb", vec![0.0; 6]) {
+        Err(FleetError::WrongDim { expected, got, .. }) => {
+            assert_eq!((expected, got), (5, 6));
+        }
+        other => panic!("expected WrongDim, got {other:?}"),
+    }
+    assert_eq!(client.score("aa", xa.row(1).to_vec()).unwrap().len(), 3);
+
+    // concurrent mixed-tenant load drains through the one shared pool
+    std::thread::scope(|s| {
+        for i in 0..8 {
+            let client = client.clone();
+            let row_a = xa.row(i).to_vec();
+            let row_b = xb.row(i).to_vec();
+            s.spawn(move || {
+                assert_eq!(client.score("aa", row_a).unwrap().len(), 3);
+                assert_eq!(client.score("bb", row_b).unwrap().len(), 2);
+            });
+        }
+    });
+    let stats = svc.stats();
+    assert!(stats.requests >= 19, "stats: {stats:?}");
+    assert!(stats.per_tenant["aa"] >= 10 && stats.per_tenant["bb"] >= 9, "{stats:?}");
+    assert_eq!(stats.rejected, 2, "both protocol rejections are counted: {stats:?}");
+
+    // GC shield: "aa" publishes v2 but the fleet (no watcher) serves v1 —
+    // prune must auto-protect the marked served version
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+    assert_eq!(registry.served_versions("aa").unwrap(), vec![1]);
+    assert!(registry.prune("aa", 1, None).unwrap().is_empty());
+    assert_eq!(registry.versions("aa").unwrap(), vec![1, 2]);
+    drop(client); // all clients must go first: the dispatcher drains on close
+    drop(svc); // markers released with the fleet
+    assert_eq!(registry.served_versions("aa").unwrap(), Vec::<u32>::new());
+    assert_eq!(registry.prune("aa", 1, None).unwrap(), vec![1]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: a daemon-style republish of one tenant hot-swaps exactly
+/// that tenant while live traffic on the other keeps being answered.
+#[test]
+fn hot_swapping_one_tenant_does_not_block_the_others() {
+    let root = tmpdir("swap");
+    let registry = ModelRegistry::open(&root);
+    let (xa, _, art_a) = trained_artifact(6, 3, 3);
+    let (xb, _, art_b) = trained_artifact(6, 2, 4);
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+    registry.publish("bb", &art_b, &manifest(6, 2)).unwrap();
+
+    let svc = FleetService::start(
+        &registry,
+        FleetOptions { watch: Some(Duration::from_millis(10)), ..Default::default() },
+    )
+    .unwrap();
+    let client = svc.client();
+    let before = client.score("aa", xa.row(0).to_vec()).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let answered = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        // continuous live traffic on tenant "bb" for the whole swap window
+        for w in 0..2 {
+            let client = client.clone();
+            let (stop, answered, xb) = (&stop, &answered, &xb);
+            s.spawn(move || {
+                let mut i = w;
+                while !stop.load(Ordering::Relaxed) {
+                    let row = xb.row(i % xb.rows()).to_vec();
+                    let scores = client.score("bb", row).expect("bb must keep answering");
+                    assert_eq!(scores.len(), 2);
+                    answered.fetch_add(1, Ordering::Relaxed);
+                    i += 2;
+                }
+            });
+        }
+
+        // grow + republish tenant "aa" (what the daemon does on a drop)
+        let (x2, y2) = gaussian_classes(&GaussianSpec {
+            n_classes: 3,
+            n_per_class: vec![6; 3],
+            dim: 6,
+            class_sep: 2.5,
+            noise: 0.6,
+            modes_per_class: 1,
+            seed: 13,
+        });
+        let (_, artifact) = registry.load_artifact("aa").unwrap();
+        let (_, new_art, report) =
+            apply_update(&artifact, &x2, &y2, &UpdateOptions::default()).unwrap();
+        assert_eq!(report.kind, "exact-bordered");
+        registry.publish("aa", &new_art, &manifest(6, 3)).unwrap();
+
+        // bounded wait for the single watcher to swap tenant "aa" in
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while svc.served_version("aa") != Some(2)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    assert_eq!(svc.served_version("aa"), Some(2), "aa never hot-swapped");
+    assert_eq!(svc.served_version("bb"), Some(1), "bb must be untouched");
+    assert_eq!(svc.swaps(), 1);
+    assert!(answered.load(Ordering::Relaxed) > 0, "bb traffic must flow throughout");
+    // the swap changed what "aa" answers, and the marker followed it
+    let after = client.score("aa", xa.row(0).to_vec()).unwrap();
+    assert_ne!(before, after, "the republished model must actually serve");
+    assert_eq!(registry.served_versions("aa").unwrap(), vec![2]);
+    drop(client); // all clients must go first: the dispatcher drains on close
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: the drop-dir watcher ignores files until they settle,
+/// quarantines malformed / mistargeted ones, and publishes good ones.
+#[test]
+fn drop_watcher_settles_quarantines_and_updates() {
+    let root = tmpdir("dropdir");
+    let registry = ModelRegistry::open(root.join("registry"));
+    let drop_dir = root.join("drop");
+    std::fs::create_dir_all(&drop_dir).unwrap();
+    let (x, labels, art) = trained_artifact(6, 3, 5);
+    registry.publish("m", &art, &manifest(6, 3)).unwrap();
+    let mut watcher = DropDirWatcher::new(registry.clone(), &drop_dir, UpdateOptions::default());
+
+    // a drop targeting a model that does not exist: settle, then quarantine
+    std::fs::write(drop_dir.join("ghost.csv"), "0,1.0,2.0,3.0,4.0,5.0,6.0\n").unwrap();
+    assert!(matches!(watcher.poll().as_slice(), [DropEvent::Waiting { .. }]));
+    match watcher.poll().as_slice() {
+        [DropEvent::Rejected { file, reason }] => {
+            assert!(file.ends_with("ghost.csv"));
+            assert!(reason.contains("ghost"), "{reason}");
+        }
+        other => panic!("expected a rejection, got {other:?}"),
+    }
+    assert!(drop_dir.join("ghost.csv.rejected").exists());
+    assert!(!drop_dir.join("ghost.csv").exists());
+
+    // malformed rows: quarantined, the model is untouched
+    std::fs::write(drop_dir.join("m.csv"), "0,1.0,not-a-number\n").unwrap();
+    watcher.poll(); // settle sighting
+    assert!(matches!(watcher.poll().as_slice(), [DropEvent::Rejected { .. }]));
+    assert!(drop_dir.join("m.csv.rejected").exists());
+    assert_eq!(registry.latest("m").unwrap().version, 1);
+
+    // a file still being written is never consumed: every poll that sees
+    // a changed (size, mtime) starts the settle clock over
+    let rows = |r: std::ops::Range<usize>| -> String {
+        r.map(|i| {
+            let feats: Vec<String> = (0..6).map(|c| x[(i, c)].to_string()).collect();
+            format!("{},{}", labels[i], feats.join(","))
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+            + "\n"
+    };
+    std::fs::write(drop_dir.join("m.csv"), rows(0..6)).unwrap();
+    assert!(matches!(watcher.poll().as_slice(), [DropEvent::Waiting { .. }]));
+    // the writer appends more rows before the next poll
+    std::fs::write(drop_dir.join("m.csv"), rows(0..12)).unwrap();
+    assert!(
+        matches!(watcher.poll().as_slice(), [DropEvent::Waiting { .. }]),
+        "a changed file must restart the settle clock"
+    );
+    // now stable: consumed, updated, republished, file removed
+    match watcher.poll().as_slice() {
+        [DropEvent::Updated { model, version, .. }] => {
+            assert_eq!((model.as_str(), *version), ("m", 2));
+        }
+        other => panic!("expected an update, got {other:?}"),
+    }
+    assert!(!drop_dir.join("m.csv").exists());
+    let latest = registry.latest("m").unwrap();
+    assert_eq!(latest.version, 2);
+    assert_eq!(latest.manifest.updated_from, Some("m@1".to_string()));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The daemon thread end to end: drop a CSV, watch the registry grow —
+/// and a fleet watcher pick the new version up — without any manual step.
+#[test]
+fn daemon_publishes_and_the_fleet_hot_swaps() {
+    let root = tmpdir("daemon");
+    let registry = ModelRegistry::open(root.join("registry"));
+    let drop_dir = root.join("drop");
+    std::fs::create_dir_all(&drop_dir).unwrap();
+    let (_, _, art) = trained_artifact(6, 2, 6);
+    registry.publish("m", &art, &manifest(6, 2)).unwrap();
+
+    let svc = FleetService::start(
+        &registry,
+        FleetOptions { watch: Some(Duration::from_millis(10)), ..Default::default() },
+    )
+    .unwrap();
+    let daemon = UpdateDaemon::start(
+        registry.clone(),
+        &drop_dir,
+        Duration::from_millis(10),
+        UpdateOptions::default(),
+    );
+
+    // new labeled rows arrive as a drop file (same shape, fresh seed)
+    let (x2, y2) = gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![5; 2],
+        dim: 6,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed: 16,
+    });
+    akda::data::csv::save_labeled(&drop_dir.join("m.csv"), &x2, &y2).unwrap();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while (daemon.updates() == 0 || svc.served_version("m") != Some(2))
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(daemon.updates(), 1, "the daemon never published the drop");
+    assert_eq!(daemon.rejects(), 0);
+    assert_eq!(registry.latest("m").unwrap().version, 2);
+    assert_eq!(svc.served_version("m"), Some(2), "the fleet never swapped v2 in");
+    assert!(!drop_dir.join("m.csv").exists(), "consumed drops are removed");
+    drop(daemon);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}

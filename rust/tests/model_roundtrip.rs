@@ -228,6 +228,7 @@ fn hot_reload_swaps_a_newly_published_version_under_live_traffic() {
         entry.version,
         split.x_train.cols(),
         Duration::from_millis(10),
+        None,
     );
 
     // publish v2 with a visibly different detector bank (zeroed SVMs)
