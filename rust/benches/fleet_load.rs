@@ -1,0 +1,162 @@
+//! Closed-loop fleet serving load bench: sustained req/s and per-tenant
+//! latency percentiles through one shared `FleetService` — the serving
+//! companion to `speedup_tables` (which measures training).
+//!
+//! Two tenants with different shapes are trained in-process, published
+//! to a temp registry, and hammered by closed-loop clients for a fixed
+//! wall-clock window. Percentiles come straight from the fleet's own
+//! `akda_fleet_latency_seconds{tenant=...}` histograms, so the bench
+//! exercises the exact instruments operators see live.
+//!
+//! Env: AKDA_FAST=1 → 2 s of load (CI smoke; default 8 s)
+//!      AKDA_SERVE_SECS=S → explicit load window
+//!      AKDA_SERVE_WORKERS=N → closed-loop clients per tenant (default 4)
+//! Run: cargo bench --bench fleet_load
+//!
+//! Writes `BENCH_serve.json` (schema `akda-bench-serve/1`, validated in
+//! CI via `akda metrics --validate`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use akda::coordinator::{DetectorBank, FleetOptions, FleetService};
+use akda::da::akda::Akda;
+use akda::da::{DrMethod, Projection};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::update::train_svm_bank;
+use akda::model::{encode_bank, ModelArtifact, ModelManifest, ModelRegistry};
+use akda::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Train one tenant's detector bank; returns its data (request rows) and
+/// the publishable artifact.
+fn tenant(dim: usize, n_classes: usize, seed: u64) -> (Mat, ModelArtifact) {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes,
+        n_per_class: vec![16; n_classes],
+        dim,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    });
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let proj = akda_cfg.fit(&x, &labels, n_classes).expect("fit");
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, n_classes);
+    let bank = DetectorBank { projection: proj, svms };
+    let art = encode_bank(&bank, "akda").expect("encode");
+    (x, art)
+}
+
+fn main() {
+    let fast = std::env::var("AKDA_FAST").is_ok();
+    let secs: f64 = std::env::var("AKDA_SERVE_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 2.0 } else { 8.0 });
+    let workers: usize = std::env::var("AKDA_SERVE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    let root = std::env::temp_dir().join(format!("akda_fleet_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("tmp registry dir");
+    let registry = ModelRegistry::open(&root);
+    let mut rows: BTreeMap<String, Mat> = BTreeMap::new();
+    for (name, dim, classes, seed) in [("fa", 6usize, 3usize, 21u64), ("fb", 5, 2, 22)] {
+        let (x, art) = tenant(dim, classes, seed);
+        let mf = ModelManifest {
+            method: "akda".into(),
+            n_classes: classes,
+            input_dim: dim,
+            ..Default::default()
+        };
+        registry.publish(name, &art, &mf).expect("publish");
+        rows.insert(name.to_string(), x);
+    }
+
+    let svc = FleetService::start(&registry, FleetOptions::default()).expect("fleet start");
+    let client = svc.client();
+    eprintln!("fleet load: {} tenants, {workers} clients each, {secs}s window", rows.len());
+
+    let stop = AtomicBool::new(false);
+    let counts: BTreeMap<String, AtomicUsize> =
+        rows.keys().map(|n| (n.clone(), AtomicUsize::new(0))).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (name, x) in &rows {
+            for w in 0..workers {
+                let client = client.clone();
+                let (stop, counts) = (&stop, &counts);
+                s.spawn(move || {
+                    let mut i = w;
+                    while !stop.load(Ordering::Relaxed) {
+                        let row = x.row(i % x.rows()).to_vec();
+                        client.score(name, row).expect("score");
+                        counts[name].fetch_add(1, Ordering::Relaxed);
+                        i += 1;
+                    }
+                });
+            }
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let total_requests: usize = counts.values().map(|c| c.load(Ordering::Relaxed)).sum();
+    let tenants_json: Vec<Json> = rows
+        .keys()
+        .map(|name| {
+            let n = counts[name].load(Ordering::Relaxed);
+            let hist =
+                akda::obs::histogram_with("akda_fleet_latency_seconds", &[("tenant", name)]);
+            let rejected = akda::obs::counter_with(
+                "akda_fleet_rejects_total",
+                &[("kind", "wrong_dim"), ("tenant", name)],
+            )
+            .get();
+            let (p50_ms, p99_ms) = (hist.quantile(0.5) * 1e3, hist.quantile(0.99) * 1e3);
+            eprintln!(
+                "   {name}: {n} requests ({:.0} req/s), p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms",
+                n as f64 / elapsed
+            );
+            obj(vec![
+                ("model", Json::Str(name.clone())),
+                ("requests", Json::Num(n as f64)),
+                ("rejected", Json::Num(rejected as f64)),
+                ("req_per_s", Json::Num(n as f64 / elapsed)),
+                ("p50_ms", Json::Num(p50_ms)),
+                ("p99_ms", Json::Num(p99_ms)),
+            ])
+        })
+        .collect();
+    let total = obj(vec![
+        ("requests", Json::Num(total_requests as f64)),
+        ("req_per_s", Json::Num(total_requests as f64 / elapsed)),
+    ]);
+    let bench = obj(vec![
+        ("schema", Json::Str("akda-bench-serve/1".into())),
+        ("duration_s", Json::Num(elapsed)),
+        ("tenants", Json::Arr(tenants_json)),
+        ("total", total),
+    ]);
+    println!(
+        "fleet load: {total_requests} requests in {elapsed:.2}s ({:.0} req/s sustained)",
+        total_requests as f64 / elapsed
+    );
+    std::fs::write("BENCH_serve.json", format!("{bench}\n")).expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json");
+
+    drop(client); // all clients must go first: the dispatcher drains on close
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}

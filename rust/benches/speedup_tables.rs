@@ -5,10 +5,60 @@
 //!      cross100 sweep regenerates Table 7 but costs ~30+ min of KDA time)
 //!      AKDA_FAST=1 → subset (CI smoke)
 //! Run: cargo bench --bench speedup_tables
+//!
+//! Besides the console table and per-suite CSV, this writes
+//! `BENCH_train.json` (schema `akda-bench-train/1`, validated in CI via
+//! `akda metrics --validate`) — the machine-readable training benchmark.
+
+use std::collections::BTreeMap;
 
 use akda::coordinator::{evaluate_ovr, Hyper, MethodId, WorkPool};
 use akda::data::{cross_dataset_collection, med_datasets, Condition};
 use akda::eval::tables::{results_csv, speedup_table, DatasetRow};
+use akda::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// `BENCH_train.json` document: every (dataset, method) measurement,
+/// with speedups over exact KDA wherever the KDA column ran.
+fn bench_train_json(suite: &str, fast: bool, rows: &[DatasetRow]) -> Json {
+    let datasets: Vec<Json> = rows
+        .iter()
+        .map(|row| {
+            let kda = row.get("kda");
+            let methods: Vec<Json> = row
+                .results
+                .iter()
+                .map(|r| {
+                    let mut m = vec![
+                        ("method", Json::Str(r.method.clone())),
+                        ("map", Json::Num(r.map)),
+                        ("train_s", Json::Num(r.train_s)),
+                        ("test_s", Json::Num(r.test_s)),
+                    ];
+                    if let Some(kda) = kda {
+                        let (speedup_train, speedup_test) = r.speedup_over(kda);
+                        m.push(("speedup_train", Json::Num(speedup_train)));
+                        m.push(("speedup_test", Json::Num(speedup_test)));
+                    }
+                    obj(m)
+                })
+                .collect();
+            obj(vec![
+                ("name", Json::Str(row.dataset.clone())),
+                ("methods", Json::Arr(methods)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("akda-bench-train/1".into())),
+        ("suite", Json::Str(suite.into())),
+        ("fast", Json::Bool(fast)),
+        ("datasets", Json::Arr(datasets)),
+    ])
+}
 
 fn main() {
     let suite = std::env::var("AKDA_SUITE").unwrap_or_else(|_| "med".into());
@@ -55,4 +105,7 @@ fn main() {
     let out = format!("bench_results_speedup_{suite}.csv");
     std::fs::write(&out, results_csv(&rows)).expect("write csv");
     eprintln!("wrote {out}");
+    let bench = bench_train_json(&suite, fast, &rows);
+    std::fs::write("BENCH_train.json", format!("{bench}\n")).expect("write BENCH_train.json");
+    eprintln!("wrote BENCH_train.json");
 }

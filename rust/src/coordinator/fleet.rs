@@ -58,7 +58,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{Context, Result};
@@ -68,6 +68,7 @@ use super::service::BankHandle;
 use crate::linalg::Mat;
 use crate::model::registry::HotReloader;
 use crate::model::{self, ModelRegistry, ServeMarker, UpdateOptions};
+use crate::obs;
 
 // ---------------------------------------------------------------------------
 // Protocol errors
@@ -123,6 +124,9 @@ pub struct FleetRequest {
     pub model: String,
     pub features: Vec<f64>,
     pub reply: Sender<Result<Vec<f64>, FleetError>>,
+    /// Stamped by [`FleetClient::score`]; drives the per-tenant
+    /// end-to-end `akda_fleet_latency_seconds` histogram.
+    enqueued_at: Instant,
 }
 
 /// Handle for submitting score requests to a [`FleetService`]. Cloneable
@@ -134,6 +138,7 @@ pub struct FleetRequest {
 pub struct FleetClient {
     tx: Sender<FleetRequest>,
     dims: Arc<BTreeMap<String, usize>>,
+    queue_depth: Arc<obs::Gauge>,
 }
 
 impl FleetClient {
@@ -154,14 +159,23 @@ impl FleetClient {
     /// channel and are counted in [`FleetStats::rejected`].
     pub fn score(&self, model: &str, features: Vec<f64>) -> Result<Vec<f64>, FleetError> {
         let (reply, rx) = channel();
-        self.tx
-            .send(FleetRequest { model: model.to_string(), features, reply })
-            .map_err(|_| FleetError::ServiceDown)?;
+        let req = FleetRequest {
+            model: model.to_string(),
+            features,
+            reply,
+            enqueued_at: Instant::now(),
+        };
+        self.queue_depth.add(1.0);
+        self.tx.send(req).map_err(|_| {
+            self.queue_depth.add(-1.0);
+            FleetError::ServiceDown
+        })?;
         rx.recv().map_err(|_| FleetError::ServiceDown)?
     }
 }
 
-/// Aggregate fleet statistics (monitoring / tests).
+/// Aggregate fleet statistics (monitoring / tests). A point-in-time
+/// snapshot assembled from lock-free counters by [`FleetService::stats`].
 #[derive(Debug, Default, Clone)]
 pub struct FleetStats {
     /// Requests accepted into tenant batches.
@@ -174,6 +188,63 @@ pub struct FleetStats {
     pub rejected: usize,
     /// Accepted requests per model id.
     pub per_tenant: BTreeMap<String, usize>,
+}
+
+/// Per-tenant live counters: one atomic for the stats snapshot plus the
+/// cached global-registry handles, resolved once at fleet start so the
+/// dispatch path never touches the registry lock.
+struct TenantMetrics {
+    requests: AtomicUsize,
+    requests_total: Arc<obs::Counter>,
+    latency: Arc<obs::Histogram>,
+    rejects_wrong_dim: Arc<obs::Counter>,
+}
+
+impl TenantMetrics {
+    fn new(name: &str) -> TenantMetrics {
+        TenantMetrics {
+            requests: AtomicUsize::new(0),
+            requests_total: obs::counter_with("akda_fleet_requests_total", &[("tenant", name)]),
+            latency: obs::histogram_with("akda_fleet_latency_seconds", &[("tenant", name)]),
+            rejects_wrong_dim: obs::counter_with(
+                "akda_fleet_rejects_total",
+                &[("kind", "wrong_dim"), ("tenant", name)],
+            ),
+        }
+    }
+}
+
+/// All-atomic fleet telemetry. Replaces the old `Mutex<FleetStats>`: the
+/// dispatcher updates these with relaxed atomics, so `stats()` readers
+/// and metric scrapes never contend with scoring. The tenant set is
+/// fixed at start, so the map itself is immutable — no lock needed.
+struct FleetCounters {
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    max_batch: AtomicUsize,
+    rejected: AtomicUsize,
+    per_tenant: BTreeMap<String, TenantMetrics>,
+    rejects_unknown: Arc<obs::Counter>,
+    batch_size: Arc<obs::Histogram>,
+    queue_depth: Arc<obs::Gauge>,
+}
+
+impl FleetCounters {
+    fn new(per_tenant: BTreeMap<String, TenantMetrics>) -> FleetCounters {
+        FleetCounters {
+            requests: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            max_batch: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            per_tenant,
+            rejects_unknown: obs::counter_with(
+                "akda_fleet_rejects_total",
+                &[("kind", "unknown_model"), ("tenant", "(unknown)")],
+            ),
+            batch_size: obs::histogram("akda_fleet_batch_size"),
+            queue_depth: obs::gauge("akda_fleet_queue_depth"),
+        }
+    }
 }
 
 /// Sleep up to `total`, waking within ~50ms of `stop` being set — keeps
@@ -233,7 +304,7 @@ impl Default for FleetOptions {
 pub struct FleetService {
     client: FleetClient,
     tenants: Arc<BTreeMap<String, Tenant>>,
-    stats: Arc<Mutex<FleetStats>>,
+    counters: Arc<FleetCounters>,
     stop: Arc<AtomicBool>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     watcher: Option<std::thread::JoinHandle<()>>,
@@ -253,6 +324,7 @@ impl FleetService {
         );
         let mut tenants = BTreeMap::new();
         let mut dims = BTreeMap::new();
+        let mut per_tenant = BTreeMap::new();
         for name in &names {
             let (entry, artifact) = registry.load_artifact(name)?;
             let input_dim = model::codec::input_dim(&artifact)?;
@@ -261,10 +333,13 @@ impl FleetService {
             let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
             let marker = ServeMarker::publish(registry, name, entry.version)?;
             dims.insert(name.clone(), input_dim);
+            per_tenant.insert(name.clone(), TenantMetrics::new(name));
+            obs::gauge_with("akda_fleet_served_version", &[("model", name)])
+                .set(entry.version as f64);
             tenants.insert(name.clone(), Tenant { handle, input_dim, marker });
         }
         let tenants = Arc::new(tenants);
-        let stats = Arc::new(Mutex::new(FleetStats::default()));
+        let counters = Arc::new(FleetCounters::new(per_tenant));
         let stop = Arc::new(AtomicBool::new(false));
 
         let (tx, rx) = channel::<FleetRequest>();
@@ -272,7 +347,7 @@ impl FleetService {
             .name("akda-fleet-dispatch".into())
             .spawn({
                 let tenants = tenants.clone();
-                let stats = stats.clone();
+                let counters = counters.clone();
                 let pool = WorkPool::new(opts.workers);
                 let (max_batch, window) = (opts.max_batch.max(1), opts.window);
                 move || {
@@ -291,7 +366,7 @@ impl FleetService {
                                 | Err(RecvTimeoutError::Disconnected) => break,
                             }
                         }
-                        Self::dispatch_round(round, &tenants, &pool, &stats);
+                        Self::dispatch_round(round, &tenants, &pool, &counters);
                     }
                     // pool dropped here: workers drain and join
                 }
@@ -309,9 +384,13 @@ impl FleetService {
         });
 
         Ok(FleetService {
-            client: FleetClient { tx, dims: Arc::new(dims) },
+            client: FleetClient {
+                tx,
+                dims: Arc::new(dims),
+                queue_depth: counters.queue_depth.clone(),
+            },
             tenants,
-            stats,
+            counters,
             stop,
             dispatcher: Some(dispatcher),
             watcher,
@@ -327,21 +406,28 @@ impl FleetService {
         round: Vec<FleetRequest>,
         tenants: &BTreeMap<String, Tenant>,
         pool: &WorkPool,
-        stats: &Mutex<FleetStats>,
+        counters: &FleetCounters,
     ) {
         let round_len = round.len();
+        counters.queue_depth.add(-(round_len as f64));
+        counters.batch_size.record(round_len as f64);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.max_batch.fetch_max(round_len, Ordering::Relaxed);
         let mut groups: BTreeMap<String, Vec<FleetRequest>> = BTreeMap::new();
-        let mut rejected = 0usize;
         for req in round {
             match tenants.get(&req.model) {
                 None => {
-                    rejected += 1;
+                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    counters.rejects_unknown.inc();
                     let known = tenants.keys().cloned().collect();
                     let err = FleetError::UnknownModel { model: req.model.clone(), known };
                     let _ = req.reply.send(Err(err));
                 }
                 Some(t) if req.features.len() != t.input_dim => {
-                    rejected += 1;
+                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    if let Some(m) = counters.per_tenant.get(&req.model) {
+                        m.rejects_wrong_dim.inc();
+                    }
                     let err = FleetError::WrongDim {
                         model: req.model.clone(),
                         expected: t.input_dim,
@@ -352,17 +438,13 @@ impl FleetService {
                 Some(_) => groups.entry(req.model.clone()).or_default().push(req),
             }
         }
-        {
-            let mut s = stats.lock().expect("fleet stats poisoned");
-            s.batches += 1;
-            s.max_batch = s.max_batch.max(round_len);
-            s.rejected += rejected;
-            for (name, group) in &groups {
-                s.requests += group.len();
-                *s.per_tenant.entry(name.clone()).or_default() += group.len();
-            }
-        }
         for (name, group) in groups {
+            counters.requests.fetch_add(group.len(), Ordering::Relaxed);
+            // every routed name has a TenantMetrics entry (same fixed set)
+            let metrics = &counters.per_tenant[&name];
+            metrics.requests.fetch_add(group.len(), Ordering::Relaxed);
+            metrics.requests_total.add(group.len() as u64);
+            let latency = metrics.latency.clone();
             let tenant = &tenants[&name];
             // the handle is read inside the job, at score time: a hot swap
             // between dispatch and execution is picked up, not raced
@@ -373,6 +455,7 @@ impl FleetService {
                 let scores = handle.get().score(&x);
                 for (r, req) in group.into_iter().enumerate() {
                     let _ = req.reply.send(Ok(scores.row(r).to_vec()));
+                    latency.record(req.enqueued_at.elapsed().as_secs_f64());
                 }
             });
         }
@@ -396,6 +479,7 @@ impl FleetService {
         while !stop.load(Ordering::Relaxed) {
             for (name, tenant) in tenants.iter() {
                 let ex = examined.get_mut(name.as_str()).expect("tenant examined state");
+                let old = ex.0;
                 match HotReloader::poll_once(
                     registry,
                     name,
@@ -408,7 +492,15 @@ impl FleetService {
                         if let Err(e) = tenant.marker.update(v) {
                             eprintln!("fleet: serve-marker update for {name:?}: {e:#}");
                         }
-                        eprintln!("fleet: hot-swapped tenant {name}@{v}");
+                        let (from, to) = (old.to_string(), v.to_string());
+                        obs::counter_with(
+                            "akda_fleet_swaps_total",
+                            &[("from", &from), ("model", name), ("to", &to)],
+                        )
+                        .inc();
+                        obs::gauge_with("akda_fleet_served_version", &[("model", name)])
+                            .set(v as f64);
+                        eprintln!("fleet: hot-swapped tenant {name}@{v} (from v{old})");
                     }
                     Ok(false) => {}
                     Err(e) => eprintln!("fleet: reload of tenant {name:?} failed: {e:#}"),
@@ -422,9 +514,22 @@ impl FleetService {
         self.client.clone()
     }
 
-    /// Latest stats snapshot.
+    /// Latest stats snapshot, assembled from the lock-free counters —
+    /// reading it never contends with the dispatch path. Every tenant
+    /// appears in `per_tenant` (zero if it has seen no traffic).
     pub fn stats(&self) -> FleetStats {
-        self.stats.lock().expect("fleet stats poisoned").clone()
+        let c = &self.counters;
+        FleetStats {
+            requests: c.requests.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            max_batch: c.max_batch.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            per_tenant: c
+                .per_tenant
+                .iter()
+                .map(|(n, m)| (n.clone(), m.requests.load(Ordering::Relaxed)))
+                .collect(),
+        }
     }
 
     /// `(name, served registry version)` per tenant — what monitoring
@@ -456,7 +561,11 @@ impl Drop for FleetService {
         // closing our sender ends the dispatcher once outstanding client
         // clones are gone (mirrors ScoringService::drop)
         let (tx, _) = channel();
-        self.client = FleetClient { tx, dims: self.client.dims.clone() };
+        self.client = FleetClient {
+            tx,
+            dims: self.client.dims.clone(),
+            queue_depth: self.client.queue_depth.clone(),
+        };
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
@@ -519,6 +628,10 @@ pub struct DropDirWatcher {
     /// (e.g. an unwritable drop directory) — matching files are skipped,
     /// never re-applied, so one update can never publish twice.
     consumed: BTreeMap<PathBuf, (u64, Option<SystemTime>)>,
+    /// Cached obs handles, resolved once at construction.
+    drops_seen: Arc<obs::Counter>,
+    drops_settled: Arc<obs::Counter>,
+    update_seconds: Arc<obs::Histogram>,
 }
 
 impl DropDirWatcher {
@@ -533,6 +646,9 @@ impl DropDirWatcher {
             opts,
             pending: BTreeMap::new(),
             consumed: BTreeMap::new(),
+            drops_seen: obs::counter("akda_daemon_drops_seen_total"),
+            drops_settled: obs::counter("akda_daemon_drops_settled_total"),
+            update_seconds: obs::histogram("akda_daemon_update_seconds"),
         }
     }
 
@@ -577,6 +693,9 @@ impl DropDirWatcher {
                     events.push(self.consume(&path, sig));
                 }
                 _ => {
+                    if !self.pending.contains_key(&path) {
+                        self.drops_seen.inc();
+                    }
                     self.pending.insert(path.clone(), sig);
                     events.push(DropEvent::Waiting { file: path });
                 }
@@ -597,9 +716,12 @@ impl DropDirWatcher {
     /// twice, and no drop file can kill the polling thread.
     fn consume(&mut self, path: &Path, sig: (u64, Option<SystemTime>)) -> DropEvent {
         self.consumed.insert(path.to_path_buf(), sig);
+        self.drops_settled.inc();
+        let t0 = Instant::now();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.try_update(path)
         }));
+        self.update_seconds.record(t0.elapsed().as_secs_f64());
         match outcome {
             Ok(Ok(event)) => {
                 let _ = std::fs::remove_file(path);
@@ -617,15 +739,41 @@ impl DropDirWatcher {
         }
     }
 
+    /// Quarantine `path` as `<file>.rejected` and record *why* in a
+    /// `<file>.rejected.reason` sidecar plus the
+    /// `akda_daemon_rejects_total{kind=...}` counter — a rejected drop
+    /// is diagnosable without rerunning the daemon.
     fn quarantine(&self, path: &Path, reason: String) -> DropEvent {
         let mut quarantine = path.as_os_str().to_os_string();
         quarantine.push(".rejected");
         let quarantine = PathBuf::from(quarantine);
+        let mut reason_file = quarantine.clone().into_os_string();
+        reason_file.push(".reason");
         let _ = std::fs::remove_file(&quarantine);
+        let _ = std::fs::write(PathBuf::from(reason_file), format!("{reason}\n"));
         if std::fs::rename(path, &quarantine).is_err() {
             let _ = std::fs::remove_file(path);
         }
+        obs::counter_with("akda_daemon_rejects_total", &[("kind", Self::reject_kind(&reason))])
+            .inc();
         DropEvent::Rejected { file: path.to_path_buf(), reason }
+    }
+
+    /// Bounded-cardinality classification of a quarantine reason for the
+    /// `kind` metric label (full text goes in the `.reason` sidecar).
+    fn reject_kind(reason: &str) -> &'static str {
+        let r = reason.to_ascii_lowercase();
+        if r.contains("panic") {
+            "panic"
+        } else if r.contains("unknown model") || r.contains("no versions") {
+            "unknown_model"
+        } else if r.contains("utf-8") {
+            "bad_name"
+        } else if r.contains("csv") || r.contains("parse") || r.contains("label") {
+            "bad_csv"
+        } else {
+            "update_failed"
+        }
     }
 
     fn try_update(&self, path: &Path) -> Result<DropEvent> {
@@ -672,11 +820,15 @@ impl UpdateDaemon {
         let handle = std::thread::Builder::new()
             .name("akda-update-daemon".into())
             .spawn(move || {
+                let heartbeat = obs::gauge("akda_daemon_heartbeat_unix");
+                let updates_total = obs::counter("akda_daemon_updates_total");
                 while !stop2.load(Ordering::Relaxed) {
+                    heartbeat.set(obs::unix_now() as f64);
                     for event in watcher.poll() {
                         match &event {
                             DropEvent::Updated { .. } => {
                                 updates2.fetch_add(1, Ordering::SeqCst);
+                                updates_total.inc();
                                 eprintln!("daemon: {event}");
                             }
                             DropEvent::Rejected { .. } => {

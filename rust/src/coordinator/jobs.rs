@@ -13,6 +13,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Aggregate scheduler metrics.
@@ -51,10 +53,14 @@ impl WorkPool {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Mutex::new(PoolMetrics::default()));
+        let jobs_total = obs::counter("akda_pool_jobs_total");
+        let busy_total = obs::gauge("akda_pool_busy_seconds_total");
         let workers = (0..n)
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
                 let metrics = metrics.clone();
+                let jobs_total = jobs_total.clone();
+                let busy_total = busy_total.clone();
                 std::thread::Builder::new()
                     .name(format!("akda-worker-{i}"))
                     .spawn(move || loop {
@@ -67,6 +73,8 @@ impl WorkPool {
                                 let t0 = Instant::now();
                                 job();
                                 let dt = t0.elapsed().as_secs_f64();
+                                jobs_total.inc();
+                                busy_total.add(dt);
                                 let mut m = metrics.lock().unwrap();
                                 m.jobs_run += 1;
                                 m.busy_s += dt;

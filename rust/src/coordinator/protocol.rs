@@ -6,7 +6,6 @@
 //! time is excluded from the reported training time, as in the paper.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -282,7 +281,7 @@ pub fn evaluate_ovr(
                 // tile, then stack all C one-vs-rest solves into one m×C W
                 // so a single tiled pass over train (and test) serves every
                 // class — the dense arm's Φ-cache equivalent at O(B·m)
-                let t0 = Instant::now();
+                let span = crate::obs::span("train");
                 let mut src = crate::data::stream::MemBlockSource::new(
                     &split.x_train,
                     &split.y_train,
@@ -299,25 +298,25 @@ pub fn evaluate_ovr(
                     &split.x_train,
                     block_rows,
                 );
-                shared_train_s = t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
+                shared_train_s = span.finish();
+                let span = crate::obs::span("test");
                 let z_test = da::akda_stream::project_blocked(
                     prep.map.as_ref(),
                     &w_all,
                     &split.x_test,
                     block_rows,
                 );
-                shared_test_s = t0.elapsed().as_secs_f64();
+                shared_test_s = span.finish();
                 peak_f64 = Some(prep.stats.peak_resident_f64());
                 Some(Arc::new(SharedApprox::Stream { z_train, z_test }))
             }
             None => {
-                let t0 = Instant::now();
+                let span = crate::obs::span("train");
                 let prep = approx_config(id, hp, eps).prepare(&split.x_train)?;
-                shared_train_s = t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
+                shared_train_s = span.finish();
+                let span = crate::obs::span("test");
                 let phi_test = prep.map.transform(&split.x_test);
-                shared_test_s = t0.elapsed().as_secs_f64();
+                shared_test_s = span.finish();
                 Some(Arc::new(SharedApprox::Dense { prep, phi_test }))
             }
         },

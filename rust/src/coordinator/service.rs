@@ -252,6 +252,8 @@ impl ScoringService {
             .name("akda-scoring".into())
             .spawn(move || {
                 let mut stats = ServiceStats::default();
+                let requests_total = crate::obs::counter("akda_serve_requests_total");
+                let rounds_total = crate::obs::counter("akda_serve_rounds_total");
                 loop {
                     // block for the first request of a batch
                     let first = match rx.recv() {
@@ -277,6 +279,8 @@ impl ScoringService {
                     stats.requests += batch.len();
                     stats.batches += 1;
                     stats.max_batch = stats.max_batch.max(batch.len());
+                    requests_total.add(batch.len() as u64);
+                    rounds_total.inc();
                     let _ = stats_tx.send(stats.clone());
                     for (r, req) in batch.into_iter().enumerate() {
                         let row = scores.row(r).to_vec();

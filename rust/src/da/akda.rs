@@ -64,7 +64,10 @@ impl Akda {
         n_classes: usize,
     ) -> Result<(Mat, Mat)> {
         // Step 1-2: Θ (binary analytic fast path, Sec. 4.4)
-        let theta = core::theta_for(labels, n_classes);
+        let theta = {
+            let _phase = crate::obs::span("nzep");
+            core::theta_for(labels, n_classes)
+        };
         // Step 3: K
         let mut k = gram(x, self.kernel);
         k.add_ridge(self.eps);
@@ -78,6 +81,7 @@ impl Akda {
         -> Result<(Mat, Mat)> {
         // Step 4: K Ψ = Θ via Cholesky + two triangular solves
         let (theta, l) = self.theta_and_factor(x, labels, n_classes)?;
+        let _phase = crate::obs::span("solve");
         let psi = chol::solve_upper_from_lower(&l, &chol::solve_lower(&l, &theta));
         Ok((psi, theta))
     }
@@ -96,7 +100,10 @@ impl Akda {
         n_classes: usize,
     ) -> Result<(KernelProjection, Mat)> {
         let (theta, l) = self.theta_and_factor(x, labels, n_classes)?;
-        let psi = chol::solve_upper_from_lower(&l, &chol::solve_lower(&l, &theta));
+        let psi = {
+            let _phase = crate::obs::span("solve");
+            chol::solve_upper_from_lower(&l, &chol::solve_lower(&l, &theta))
+        };
         let proj = KernelProjection {
             x_train: x.clone(),
             psi,

@@ -102,6 +102,11 @@ pub struct TiledAccumulator {
     class_sums: Vec<Vec<f64>>,
     counts: Vec<usize>,
     stats: StreamStats,
+    /// Cached global-registry handles (`akda_train_tiles_total`,
+    /// `akda_train_rows_total`) so `absorb` never touches the registry
+    /// lock on the per-tile path.
+    tiles_total: std::sync::Arc<crate::obs::Counter>,
+    rows_total: std::sync::Arc<crate::obs::Counter>,
 }
 
 impl TiledAccumulator {
@@ -111,6 +116,8 @@ impl TiledAccumulator {
             class_sums: Vec::new(),
             counts: Vec::new(),
             stats: StreamStats { m, ..StreamStats::default() },
+            tiles_total: crate::obs::counter("akda_train_tiles_total"),
+            rows_total: crate::obs::counter("akda_train_rows_total"),
         }
     }
 
@@ -139,6 +146,8 @@ impl TiledAccumulator {
         self.stats.rows += phi.rows();
         self.stats.blocks += 1;
         self.stats.peak_block_rows = self.stats.peak_block_rows.max(phi.rows());
+        self.tiles_total.inc();
+        self.rows_total.add(phi.rows() as u64);
         Ok(())
     }
 
@@ -200,6 +209,8 @@ impl AkdaApprox {
             let cap = DEFAULT_SAMPLE_CAP.max(4 * self.m);
             prep.stats.map_fit_resident_f64 =
                 cap.min(prep.stats.rows) * prep.stats.n_features;
+            crate::obs::gauge("akda_train_peak_f64")
+                .set_max(prep.stats.peak_resident_f64() as f64);
         }
         Ok(prep)
     }
@@ -241,7 +252,7 @@ impl PreparedStream {
             let phi = map.transform(&block.x);
             acc.absorb(&phi, &block.labels)?;
         }
-        let TiledAccumulator { mut g, class_sums, counts, mut stats } = acc;
+        let TiledAccumulator { mut g, class_sums, counts, mut stats, .. } = acc;
         anyhow::ensure!(stats.rows > 0, "cannot train on an empty stream");
         anyhow::ensure!(
             counts.len() >= 2 && counts.iter().all(|&c| c > 0),
@@ -254,6 +265,7 @@ impl PreparedStream {
         let (m, c) = (stats.m, counts.len());
         stats.n_classes = c;
         let class_sums = Mat::from_fn(m, c, |i, j| class_sums[j][i]);
+        crate::obs::gauge("akda_train_peak_f64").set_max(stats.peak_resident_f64() as f64);
         Ok(PreparedStream { map, gram, chol_l, class_sums, counts, stats })
     }
 

@@ -60,6 +60,7 @@ impl Kernel {
 /// Gram matrix K[i,j] = k(x_i, x_j) of the rows of `x`, threaded over row
 /// stripes and exploiting symmetry (only the upper triangle is computed).
 pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
+    let _phase = crate::obs::span("gram");
     let n = x.rows();
     let mut k = Mat::zeros(n, n);
     // For RBF, precompute squared norms once: d2 = ni + nj - 2 x_i·x_j.

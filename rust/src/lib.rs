@@ -15,6 +15,9 @@
 //! * `model`: trained-model artifact subsystem — versioned, checksummed
 //!   `.akda` persistence, a directory-backed registry, and hot-reload so
 //!   `akda serve --model` never retrains.
+//! * `obs`: dependency-free observability — counters/gauges/histograms
+//!   behind a global registry, phase spans, Prometheus + JSONL
+//!   snapshots, and the `BENCH_*.json` schema validators.
 //!
 //! See `DESIGN.md` for the systems inventory and the experiment index.
 
@@ -27,6 +30,7 @@ pub mod eval;
 pub mod kernels;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod svm;
 pub mod util;

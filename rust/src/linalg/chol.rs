@@ -59,6 +59,7 @@ fn chol_unblocked(a: &Mat) -> Result<Mat, CholError> {
 /// Blocked right-looking Cholesky: returns lower-triangular `L`, `A = L Lᵀ`.
 pub fn cholesky(a: &Mat, block: usize) -> Result<Mat, CholError> {
     assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+    let _phase = crate::obs::span("chol");
     let n = a.rows();
     let b = block.max(8).min(n.max(1));
     let mut work = a.clone();

@@ -15,7 +15,13 @@
 //!   serve --dataset NAME          train in process, then serve scores
 //!   daemon --drop-dir DIR         auto-update: apply NAME.csv drops to model
 //!                                 NAME and republish (fleet hot-swaps it)
+//!   metrics                       snapshot the observability registry
+//!                                 (Prometheus or JSON), or validate emitted
+//!                                 metrics/bench files against their schemas
 //!   check                         verify artifacts + PJRT round trip
+//!
+//! `eval`, `serve`, and `daemon` accept `--metrics-out FILE` to append
+//! periodic `akda-metrics/1` JSONL snapshots while they run.
 //!
 //! The model registry root is `--models-dir DIR`, else `$AKDA_MODELS`,
 //! else `./models` (layout: `<dir>/<name>/<version>/{model.akda,MANIFEST}`).
@@ -134,6 +140,7 @@ fn main() -> Result<()> {
         "models" => cmd_models(&args),
         "serve" => cmd_serve(&args),
         "daemon" => cmd_daemon(&args),
+        "metrics" => cmd_metrics(&args),
         "check" => cmd_check(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -217,7 +224,25 @@ fn print_help() {
                                             fleet hot-swaps the new version in);\n\
                                             malformed/partial files are quarantined\n\
                                             as *.rejected, never retried in a loop\n\
+           metrics [--format prometheus|json]\n\
+                   [--from FILE] [--validate FILE [--require k1,k2]]\n\
+                                            observability: run a tiny in-process\n\
+                                            workload and print the metrics registry\n\
+                                            snapshot (default Prometheus text, --format\n\
+                                            json for the akda-metrics/1 document);\n\
+                                            --from re-prints the last snapshot of a\n\
+                                            --metrics-out JSONL file; --validate checks\n\
+                                            a metrics JSONL or BENCH_*.json artifact\n\
+                                            against its schema (--require additionally\n\
+                                            asserts the named metrics are nonzero and\n\
+                                            heartbeats fresh)\n\
            check                            verify artifacts + PJRT round trip\n\n\
+         FLAGS shared by eval/serve/daemon:\n\
+           --metrics-out FILE [--metrics-interval SECS]\n\
+                                            append akda-metrics/1 JSONL snapshots of\n\
+                                            the live metrics registry every SECS\n\
+                                            (default 2) plus one final snapshot on\n\
+                                            shutdown\n\n\
          ENV: AKDA_ARTIFACTS (default: ./artifacts)\n\
               AKDA_MODELS    (default: ./models)"
     );
@@ -255,6 +280,9 @@ fn suite_of(name: &str) -> Result<(Vec<DatasetSpec>, Condition, &'static str)> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let suite = args.get("suite").unwrap_or("cross10");
     let (datasets, cond, title) = suite_of(suite)?;
+    // held for the whole run; the drop at the end appends a final snapshot
+    // that covers every phase span the evaluation recorded
+    let _metrics = parse_metrics_out(args)?;
     let mut cfg = match args.get("config") {
         Some(path) => EvalConfig::from_file(std::path::Path::new(path))?,
         None => EvalConfig::default(),
@@ -421,7 +449,7 @@ fn fit_detector_bank(
     use akda::model::ResumeState;
 
     let split = &ts.split;
-    let t0 = std::time::Instant::now();
+    let train_span = akda::obs::span("train");
     let mut resume: Option<ResumeState> = None;
     let proj: Box<dyn akda::da::Projection> = match (ts.hp.stream_block, ts.id) {
         (Some(block_rows), MethodId::AkdaNystrom | MethodId::AkdaRff) => {
@@ -528,7 +556,7 @@ fn fit_detector_bank(
     let svms =
         akda::model::update::train_svm_bank(&z, &split.y_train, split.n_classes);
     let bank = Arc::new(DetectorBank { projection: proj, svms });
-    Ok((bank, t0.elapsed().as_secs_f64(), resume))
+    Ok((bank, train_span.finish(), resume))
 }
 
 // `predict` and `eval_bank` live in `coordinator::service` (shared with
@@ -734,6 +762,8 @@ fn cmd_daemon(args: &Args) -> Result<()> {
     use akda::coordinator::UpdateDaemon;
     use akda::model::{ModelRegistry, UpdateOptions};
     use std::time::Duration;
+
+    let _metrics = parse_metrics_out(args)?;
 
     // --registry DIR is the documented spelling; --models-dir/$AKDA_MODELS
     // keep working so every subcommand addresses the registry the same way
@@ -945,6 +975,30 @@ fn parse_watch(args: &Args) -> Result<Option<std::time::Duration>> {
     }
 }
 
+/// `--metrics-out FILE [--metrics-interval SECS]` — start the background
+/// JSONL metrics writer for the long-running subcommands. The returned
+/// writer must be held for the life of the command: it appends one
+/// snapshot immediately, one per interval, and a final one on drop.
+fn parse_metrics_out(args: &Args) -> Result<Option<akda::obs::MetricsWriter>> {
+    let Some(path) = args.get("metrics-out") else {
+        anyhow::ensure!(
+            args.get("metrics-interval").is_none(),
+            "--metrics-interval only makes sense with --metrics-out FILE"
+        );
+        return Ok(None);
+    };
+    let period: f64 = match args.get("metrics-interval") {
+        Some(v) => v.parse().context("--metrics-interval SECS must be a number")?,
+        None => 2.0,
+    };
+    anyhow::ensure!(period > 0.0, "--metrics-interval SECS must be positive");
+    let writer = akda::obs::MetricsWriter::start(
+        std::path::Path::new(path),
+        std::time::Duration::from_secs_f64(period),
+    );
+    Ok(Some(writer))
+}
+
 /// `akda serve --fleet` — multi-tenant serving: every model in the
 /// registry behind one process, routed by model id over one shared
 /// worker pool (`coordinator::fleet::FleetService`). The demo drives
@@ -1061,6 +1115,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use akda::coordinator::{BankHandle, ScoringService};
     use akda::model::{HotReloader, ModelRegistry};
     use std::time::Duration;
+
+    let _metrics = parse_metrics_out(args)?;
 
     // fleet path: every model in the registry behind one process
     if args.get("fleet").is_some() {
@@ -1182,6 +1238,85 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Duration::from_millis(5),
     );
     drive_demo(&svc, &ts.split)
+}
+
+/// Last non-empty line of a `--metrics-out` JSONL file, parsed.
+fn last_snapshot(path: &str) -> Result<akda::util::json::Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let last = text
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .with_context(|| format!("{path:?} contains no snapshots"))?;
+    akda::util::json::parse(last).with_context(|| format!("parsing the last snapshot in {path:?}"))
+}
+
+/// `akda metrics` — print an `obs` registry snapshot, or validate files
+/// previously emitted through `--metrics-out` and the bench emitters.
+///
+/// The default mode runs a tiny in-process training workload first so a
+/// fresh process has live instruments to render; `--from FILE` instead
+/// re-prints the most recent snapshot a long-running service appended.
+/// Both surfaces — this command and the `--metrics-out` JSONL — render
+/// the same [`akda::obs::Snapshot`], so names and labels always agree.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use akda::obs;
+
+    // --validate FILE [--require k1,k2]: the CI entry point — schema
+    // check, optionally asserting named metrics are nonzero (and
+    // heartbeats fresh) in the file's last snapshot
+    if let Some(path) = args.get("validate") {
+        let summary = obs::validate::validate_file(std::path::Path::new(path))?;
+        if let Some(csv) = args.get("require") {
+            let keys: Vec<&str> = csv.split(',').map(str::trim).filter(|k| !k.is_empty()).collect();
+            anyhow::ensure!(!keys.is_empty(), "--require needs at least one metric name");
+            let doc = last_snapshot(path)?;
+            obs::validate::require_nonzero(&doc, &keys)
+                .with_context(|| format!("--require failed on the last snapshot in {path:?}"))?;
+            println!("{summary}; required nonzero: {}", keys.join(", "));
+        } else {
+            println!("{summary}");
+        }
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.get("require").is_none(),
+        "--require only makes sense with --validate FILE"
+    );
+
+    // --from FILE: re-print what a running service last wrote
+    if let Some(path) = args.get("from") {
+        let doc = last_snapshot(path)?;
+        obs::validate::validate_metrics_line(&doc)?;
+        println!("{doc}");
+        return Ok(());
+    }
+
+    // default: exercise the training path so the snapshot shows live
+    // phase spans, then render this process's registry
+    use akda::da::{DrMethod, Projection};
+    use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes: 2,
+        n_per_class: vec![24, 24],
+        dim: 8,
+        class_sep: 2.0,
+        noise: 0.5,
+        modes_per_class: 1,
+        seed: 7,
+    });
+    let mut watch = akda::util::timer::Stopwatch::new();
+    let hp = Hyper { rho: 0.2, c: 1.0, h: 2, ..Default::default() };
+    let dr = akda::coordinator::protocol::akda_config(hp, 1e-3);
+    let proj = watch.train(|| dr.fit(&x, &labels, 2))?;
+    let _scores = watch.test(|| proj.project(&x));
+    let snap = obs::global().snapshot();
+    match args.get("format").unwrap_or("prometheus") {
+        "json" => println!("{}", snap.to_json(obs::unix_now())),
+        "prometheus" | "prom" => print!("{}", snap.to_prometheus()),
+        other => bail!("unknown --format {other:?} (expected prometheus or json)"),
+    }
+    Ok(())
 }
 
 fn cmd_check() -> Result<()> {

@@ -371,7 +371,10 @@ impl ModelRegistry {
         let mut version = self.versions(name)?.last().copied().unwrap_or(0) + 1;
         for _ in 0..64 {
             match publish_attempt(version) {
-                Ok(Some(entry)) => return Ok(entry),
+                Ok(Some(entry)) => {
+                    crate::obs::counter("akda_registry_publishes_total").inc();
+                    return Ok(entry);
+                }
                 Ok(None) => version += 1,
                 Err(e) => {
                     let _ = std::fs::remove_dir_all(&tmp);
@@ -473,14 +476,18 @@ impl ModelRegistry {
         // union of the explicit shield and every live serve marker
         let served = self.served_versions(name)?;
         let mut pruned = Vec::new();
+        let mut shielded = 0u64;
         for &v in &versions[..cut] {
             if Some(v) == protect || served.contains(&v) {
+                shielded += 1;
                 continue; // never delete a version a service still serves
             }
             let dir = self.root.join(name).join(v.to_string());
             std::fs::remove_dir_all(&dir).with_context(|| format!("pruning {name}@{v}"))?;
             pruned.push(v);
         }
+        crate::obs::counter("akda_registry_prunes_total").add(pruned.len() as u64);
+        crate::obs::counter("akda_registry_shielded_total").add(shielded);
         Ok(pruned)
     }
 

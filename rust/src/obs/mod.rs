@@ -1,0 +1,61 @@
+//! L7 observability: a dependency-free metrics subsystem.
+//!
+//! * `metrics` — sharded atomic [`Counter`]s, f64 [`Gauge`]s,
+//!   log-bucketed [`Histogram`]s with p50/p90/p99 estimation, all
+//!   behind a process-global [`MetricsRegistry`].
+//! * `span` — RAII phase timers with nested paths (`train/gram`,
+//!   `train/chol`, ...) recording into `akda_phase_seconds`.
+//! * `snapshot` — render the registry to Prometheus text exposition or
+//!   to `akda-metrics/1` JSON (the CLI's `akda metrics` output).
+//! * `writer` — the `--metrics-out FILE` periodic JSONL appender.
+//! * `validate` — schema checks for the emitted JSONL and the
+//!   `BENCH_train.json` / `BENCH_serve.json` bench artifacts.
+//!
+//! Design rule: the hot path never takes a lock. Call sites resolve an
+//! instrument handle once (a `Mutex`-guarded `BTreeMap` lookup), cache
+//! the returned `Arc`, and record through relaxed atomics afterwards.
+//! An instrument that is never snapshotted costs one `fetch_add` per
+//! event.
+
+pub mod metrics;
+pub mod snapshot;
+pub mod span;
+pub mod validate;
+pub mod writer;
+
+use std::sync::Arc;
+
+pub use metrics::{global, Counter, Gauge, Histogram, Instrument, Key, MetricsRegistry};
+pub use snapshot::{unix_now, Snapshot, Value, METRICS_SCHEMA};
+pub use span::{span, Span};
+pub use writer::MetricsWriter;
+
+/// Global label-free counter handle.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name, &[])
+}
+
+/// Global labelled counter handle.
+pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    global().counter(name, labels)
+}
+
+/// Global label-free gauge handle.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name, &[])
+}
+
+/// Global labelled gauge handle.
+pub fn gauge_with(name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+    global().gauge(name, labels)
+}
+
+/// Global label-free histogram handle.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    global().histogram(name, &[])
+}
+
+/// Global labelled histogram handle.
+pub fn histogram_with(name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+    global().histogram(name, labels)
+}

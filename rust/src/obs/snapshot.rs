@@ -1,0 +1,197 @@
+//! Point-in-time registry snapshots, rendered two ways: Prometheus text
+//! exposition format (histograms as `summary` families with
+//! p50/p90/p99 quantile labels) and the crate's `util::json` value tree
+//! under the stable `akda-metrics/1` schema.
+//!
+//! Both renderings use the same instrument identity string,
+//! `name{label="value",...}`, so a metric found in one surface can be
+//! looked up verbatim in the other.
+
+use std::collections::BTreeMap;
+
+use super::metrics::{Instrument, Key, MetricsRegistry};
+use crate::util::json::Json;
+
+/// Version tag stamped on every JSON snapshot line.
+pub const METRICS_SCHEMA: &str = "akda-metrics/1";
+
+/// One rendered instrument value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Counter(u64),
+    Gauge(f64),
+    /// Histogram digest: count, sum, and estimated quantiles.
+    Summary { count: u64, sum: f64, p50: f64, p90: f64, p99: f64 },
+}
+
+/// A consistent-enough copy of every instrument at one moment.
+/// (Individual reads are atomic; the set is collected under the
+/// registry lock, values are read racily afterwards.)
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub entries: Vec<(Key, Value)>,
+}
+
+impl MetricsRegistry {
+    /// Capture every registered instrument's current value.
+    pub fn snapshot(&self) -> Snapshot {
+        let entries = self
+            .instruments()
+            .into_iter()
+            .map(|(key, ins)| {
+                let value = match ins {
+                    Instrument::Counter(c) => Value::Counter(c.get()),
+                    Instrument::Gauge(g) => Value::Gauge(g.get()),
+                    Instrument::Histogram(h) => Value::Summary {
+                        count: h.count(),
+                        sum: h.sum(),
+                        p50: h.quantile(0.50),
+                        p90: h.quantile(0.90),
+                        p99: h.quantile(0.99),
+                    },
+                };
+                (key, value)
+            })
+            .collect();
+        Snapshot { entries }
+    }
+}
+
+impl Snapshot {
+    /// Prometheus text exposition format. Counters and gauges render as
+    /// their native types; histograms render as `summary` families
+    /// (quantile labels + `_sum`/`_count`) to keep the output compact.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = "";
+        for (key, value) in &self.entries {
+            if key.name != last_name {
+                let kind = match value {
+                    Value::Counter(_) => "counter",
+                    Value::Gauge(_) => "gauge",
+                    Value::Summary { .. } => "summary",
+                };
+                out.push_str(&format!("# TYPE {} {kind}\n", key.name));
+                last_name = &key.name;
+            }
+            match value {
+                Value::Counter(n) => out.push_str(&format!("{} {n}\n", key.render())),
+                Value::Gauge(v) => out.push_str(&format!("{} {v}\n", key.render())),
+                Value::Summary { count, sum, p50, p90, p99 } => {
+                    for (q, v) in [("0.5", p50), ("0.9", p90), ("0.99", p99)] {
+                        out.push_str(&format!("{} {v}\n", render_with(key, &[("quantile", q)])));
+                    }
+                    out.push_str(&format!("{}_sum{} {sum}\n", key.name, label_block(key)));
+                    out.push_str(&format!("{}_count{} {count}\n", key.name, label_block(key)));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot under the `akda-metrics/1` schema:
+    ///
+    /// ```text
+    /// {"schema": "akda-metrics/1", "unix_time": <secs>,
+    ///  "counters":  {"<name{labels}>": <u64>, ...},
+    ///  "gauges":    {"<name{labels}>": <f64>, ...},
+    ///  "summaries": {"<name{labels}>": {"count":..., "sum":...,
+    ///                                   "p50":..., "p90":..., "p99":...}}}
+    /// ```
+    pub fn to_json(&self, unix_time: u64) -> Json {
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut summaries = BTreeMap::new();
+        for (key, value) in &self.entries {
+            let id = key.render();
+            match value {
+                Value::Counter(n) => {
+                    counters.insert(id, Json::Num(*n as f64));
+                }
+                Value::Gauge(v) => {
+                    gauges.insert(id, Json::Num(*v));
+                }
+                Value::Summary { count, sum, p50, p90, p99 } => {
+                    let mut m = BTreeMap::new();
+                    m.insert("count".to_string(), Json::Num(*count as f64));
+                    m.insert("sum".to_string(), Json::Num(*sum));
+                    m.insert("p50".to_string(), Json::Num(*p50));
+                    m.insert("p90".to_string(), Json::Num(*p90));
+                    m.insert("p99".to_string(), Json::Num(*p99));
+                    summaries.insert(id, Json::Obj(m));
+                }
+            }
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(METRICS_SCHEMA.to_string()));
+        root.insert("unix_time".to_string(), Json::Num(unix_time as f64));
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("summaries".to_string(), Json::Obj(summaries));
+        Json::Obj(root)
+    }
+}
+
+/// `{k="v",...}` for a key's own labels, or the empty string.
+fn label_block(key: &Key) -> String {
+    if key.labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = key.labels.iter().map(|(k, v)| format!("{k}={v:?}")).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Render `key` with `extra` label pairs appended (for quantile labels).
+fn render_with(key: &Key, extra: &[(&str, &str)]) -> String {
+    let mut inner: Vec<String> = key.labels.iter().map(|(k, v)| format!("{k}={v:?}")).collect();
+    inner.extend(extra.iter().map(|(k, v)| format!("{k}={v:?}")));
+    format!("{}{{{}}}", key.name, inner.join(","))
+}
+
+/// Seconds since the Unix epoch (0 if the clock is before 1970).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.counter("demo_total", &[("tenant", "aa")]).add(3);
+        reg.gauge("demo_depth", &[]).set(1.5);
+        let h = reg.histogram("demo_seconds", &[("path", "train")]);
+        h.record(0.002);
+        h.record(0.004);
+        reg
+    }
+
+    #[test]
+    fn prometheus_renders_all_types() {
+        let text = demo_registry().snapshot().to_prometheus();
+        assert!(text.contains("# TYPE demo_total counter"), "{text}");
+        assert!(text.contains("demo_total{tenant=\"aa\"} 3"), "{text}");
+        assert!(text.contains("# TYPE demo_depth gauge"), "{text}");
+        assert!(text.contains("demo_depth 1.5"), "{text}");
+        assert!(text.contains("# TYPE demo_seconds summary"), "{text}");
+        assert!(text.contains("demo_seconds{path=\"train\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("demo_seconds_count{path=\"train\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let line = demo_registry().snapshot().to_json(1234).to_string();
+        let back = crate::util::json::parse(&line).unwrap();
+        assert_eq!(back.req("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+        assert_eq!(back.req("unix_time").unwrap().as_usize(), Some(1234));
+        let counters = back.req("counters").unwrap();
+        assert_eq!(counters.get("demo_total{tenant=\"aa\"}").unwrap().as_usize(), Some(3));
+        let s = back.req("summaries").unwrap().get("demo_seconds{path=\"train\"}").unwrap();
+        assert_eq!(s.req("count").unwrap().as_usize(), Some(2));
+        assert!(s.get("p99").is_some());
+    }
+}

@@ -1,0 +1,90 @@
+//! RAII phase spans: nested wall-clock timers that record into the
+//! global `akda_phase_seconds{path=...}` histogram family.
+//!
+//! Spans nest per thread: opening `span("train")` and then
+//! `span("gram")` inside it records the inner timing under the path
+//! `train/gram`, giving the paper's ϑ breakdown (Gram, Cholesky, NZEP,
+//! solve) for free wherever the outer phase is already wrapped.
+//!
+//! The elapsed time is captured *before* the histogram record happens,
+//! so the cost of recording is never attributed to the phase itself.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+thread_local! {
+    static PATH: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// An open phase timer. Closes (and records) on [`Span::finish`] or drop.
+#[derive(Debug)]
+pub struct Span {
+    start: Option<Instant>,
+}
+
+/// Open a phase span named `name`, nested under any span already open on
+/// this thread.
+pub fn span(name: &'static str) -> Span {
+    PATH.with(|p| p.borrow_mut().push(name));
+    Span { start: Some(Instant::now()) }
+}
+
+impl Span {
+    /// Close the span, record its duration, and return the elapsed
+    /// seconds — so callers that also need the number (e.g. the ϑ/φ
+    /// tables) measure exactly once.
+    pub fn finish(mut self) -> f64 {
+        self.close()
+    }
+
+    fn close(&mut self) -> f64 {
+        let Some(t0) = self.start.take() else {
+            return 0.0;
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        let path = PATH.with(|p| {
+            let mut stack = p.borrow_mut();
+            let joined = stack.join("/");
+            stack.pop();
+            joined
+        });
+        super::metrics::global()
+            .histogram("akda_phase_seconds", &[("path", &path)])
+            .record(secs);
+        secs
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_build_paths() {
+        let outer = span("t_outer");
+        {
+            let inner = span("t_inner");
+            assert!(inner.finish() >= 0.0);
+        }
+        let secs = outer.finish();
+        assert!(secs >= 0.0);
+        let reg = super::super::metrics::global();
+        let keys: Vec<String> = reg.instruments().into_iter().map(|(k, _)| k.render()).collect();
+        assert!(keys.iter().any(|k| k.contains("t_outer/t_inner")), "{keys:?}");
+    }
+
+    #[test]
+    fn span_records_once_even_with_finish() {
+        let h = super::super::metrics::global()
+            .histogram("akda_phase_seconds", &[("path", "t_once")]);
+        let before = h.count();
+        span("t_once").finish();
+        assert_eq!(h.count(), before + 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Schema validators for the files this crate emits: `--metrics-out`
+//! JSONL (`akda-metrics/1`), `BENCH_train.json` (`akda-bench-train/1`)
+//! and `BENCH_serve.json` (`akda-bench-serve/1`). CI runs these via
+//! `akda metrics --validate FILE` so a schema drift fails the build
+//! instead of silently breaking downstream dashboards.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Validate `path` against whichever schema its `"schema"` tag claims.
+/// Returns a one-line human summary of what was checked.
+pub fn validate_file(path: &std::path::Path) -> Result<String> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    ensure!(!text.trim().is_empty(), "{path:?} is empty");
+    // whole-file JSON → bench document; line-delimited → metrics JSONL
+    if let Ok(doc) = parse(text.trim()) {
+        if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
+            match schema {
+                "akda-bench-train/1" => return validate_bench_train(&doc),
+                "akda-bench-serve/1" => return validate_bench_serve(&doc),
+                "akda-metrics/1" => {
+                    validate_metrics_line(&doc)?;
+                    return Ok("akda-metrics/1: 1 snapshot ok".to_string());
+                }
+                other => bail!("unknown schema {other:?} in {path:?}"),
+            }
+        }
+        bail!("{path:?} has no \"schema\" key");
+    }
+    let mut n = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = parse(line).with_context(|| format!("{path:?} line {}", i + 1))?;
+        let schema = doc.req("schema")?.as_str().context("schema is not a string")?;
+        ensure!(schema == "akda-metrics/1", "line {}: unexpected schema {schema:?}", i + 1);
+        validate_metrics_line(&doc).with_context(|| format!("{path:?} line {}", i + 1))?;
+        n += 1;
+    }
+    ensure!(n > 0, "{path:?} contains no snapshots");
+    Ok(format!("akda-metrics/1: {n} snapshots ok"))
+}
+
+/// Check one `akda-metrics/1` snapshot object.
+pub fn validate_metrics_line(doc: &Json) -> Result<()> {
+    doc.req("unix_time")?.as_usize().context("unix_time is not an integer")?;
+    for section in ["counters", "gauges", "summaries"] {
+        let Json::Obj(map) = doc.req(section)? else {
+            bail!("{section} is not an object");
+        };
+        if section == "summaries" {
+            for (k, v) in map {
+                for field in ["count", "sum", "p50", "p90", "p99"] {
+                    ensure!(
+                        matches!(v.get(field), Some(Json::Num(_))),
+                        "summary {k:?} missing numeric {field:?}"
+                    );
+                }
+            }
+        } else {
+            for (k, v) in map {
+                ensure!(matches!(v, Json::Num(_)), "{section} entry {k:?} is not a number");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Assert that the metric named by each `key` is present and nonzero in
+/// the snapshot `doc` (counters/gauges: value > 0; summaries: count > 0).
+/// A key matches if an instrument id equals it or starts with `key{`.
+/// Heartbeat gauges (name contains "heartbeat") must additionally be
+/// within 600 s of the snapshot's own `unix_time` — i.e. fresh.
+pub fn require_nonzero(doc: &Json, keys: &[&str]) -> Result<()> {
+    let unix_time = doc.req("unix_time")?.as_usize().unwrap_or(0) as f64;
+    for key in keys {
+        let mut found = false;
+        for section in ["counters", "gauges", "summaries"] {
+            let Some(Json::Obj(map)) = doc.get(section) else { continue };
+            for (id, v) in map {
+                if id != key && !id.starts_with(&format!("{key}{{")) {
+                    continue;
+                }
+                let value = match v {
+                    Json::Num(n) => *n,
+                    obj => match obj.get("count") {
+                        Some(Json::Num(n)) => *n,
+                        _ => 0.0,
+                    },
+                };
+                ensure!(value > 0.0, "metric {id:?} is zero");
+                if key.contains("heartbeat") {
+                    ensure!(
+                        (unix_time - value).abs() <= 600.0,
+                        "heartbeat {id:?} is stale: {value} vs snapshot time {unix_time}"
+                    );
+                }
+                found = true;
+            }
+        }
+        ensure!(found, "required metric {key:?} not found in snapshot");
+    }
+    Ok(())
+}
+
+fn num(doc: &Json, key: &str) -> Result<f64> {
+    match doc.req(key)? {
+        Json::Num(n) => Ok(*n),
+        other => bail!("{key:?} is not a number: {other:?}"),
+    }
+}
+
+fn validate_bench_train(doc: &Json) -> Result<String> {
+    doc.req("suite")?.as_str().context("suite is not a string")?;
+    ensure!(matches!(doc.req("fast")?, Json::Bool(_)), "fast is not a bool");
+    let datasets = doc.req("datasets")?.as_arr().context("datasets is not an array")?;
+    ensure!(!datasets.is_empty(), "datasets is empty");
+    let mut methods = 0usize;
+    for ds in datasets {
+        let name = ds.req("name")?.as_str().context("dataset name")?.to_string();
+        let rows = ds.req("methods")?.as_arr().context("methods is not an array")?;
+        ensure!(!rows.is_empty(), "dataset {name:?} has no methods");
+        for m in rows {
+            m.req("method")?.as_str().context("method name")?;
+            for field in ["map", "train_s", "test_s"] {
+                num(m, field).with_context(|| format!("dataset {name:?}"))?;
+            }
+            methods += 1;
+        }
+    }
+    Ok(format!("akda-bench-train/1: {} datasets, {methods} method rows ok", datasets.len()))
+}
+
+fn validate_bench_serve(doc: &Json) -> Result<String> {
+    num(doc, "duration_s")?;
+    let tenants = doc.req("tenants")?.as_arr().context("tenants is not an array")?;
+    ensure!(!tenants.is_empty(), "tenants is empty");
+    for t in tenants {
+        t.req("model")?.as_str().context("tenant model")?;
+        for field in ["requests", "rejected", "req_per_s", "p50_ms", "p99_ms"] {
+            num(t, field)?;
+        }
+    }
+    let total = doc.req("total")?;
+    num(total, "requests")?;
+    num(total, "req_per_s")?;
+    Ok(format!("akda-bench-serve/1: {} tenants ok", tenants.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_line_validates() {
+        let line = r#"{"schema":"akda-metrics/1","unix_time":100,
+            "counters":{"a_total":3},"gauges":{"g":1.5},
+            "summaries":{"s{path=\"x\"}":{"count":2,"sum":0.1,"p50":0.05,"p90":0.05,"p99":0.05}}}"#;
+        let doc = parse(line).unwrap();
+        validate_metrics_line(&doc).unwrap();
+        require_nonzero(&doc, &["a_total", "g", "s"]).unwrap();
+        assert!(require_nonzero(&doc, &["missing_total"]).is_err());
+    }
+
+    #[test]
+    fn stale_heartbeat_rejected() {
+        let line = r#"{"schema":"akda-metrics/1","unix_time":10000,
+            "counters":{},"gauges":{"x_heartbeat_unix":100},"summaries":{}}"#;
+        let doc = parse(line).unwrap();
+        assert!(require_nonzero(&doc, &["x_heartbeat_unix"]).is_err());
+    }
+
+    #[test]
+    fn bench_schemas_validate() {
+        let train = r#"{"schema":"akda-bench-train/1","suite":"small","fast":true,
+            "datasets":[{"name":"iris","methods":[
+              {"method":"AKDA","map":0.9,"train_s":0.1,"test_s":0.01,
+               "speedup_train":10.0,"speedup_test":5.0}]}]}"#;
+        validate_bench_train(&parse(train).unwrap()).unwrap();
+        let serve = r#"{"schema":"akda-bench-serve/1","duration_s":2.0,
+            "tenants":[{"model":"aa","requests":100,"rejected":0,"req_per_s":50.0,
+                        "p50_ms":1.0,"p99_ms":2.0}],
+            "total":{"requests":100,"req_per_s":50.0}}"#;
+        validate_bench_serve(&parse(serve).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = std::env::temp_dir().join(format!("akda_val_{}.json", std::process::id()));
+        std::fs::write(&path, "{\"schema\":\"nope/9\"}").unwrap();
+        assert!(validate_file(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,102 @@
+//! Background JSONL metrics writer: the `--metrics-out FILE` flag.
+//!
+//! A `MetricsWriter` appends one `akda-metrics/1` JSON line (see
+//! [`super::snapshot`]) immediately on start, then every `period`, then
+//! once more on shutdown — so even a short-lived process leaves at
+//! least two observable snapshots behind.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::metrics::global;
+use super::snapshot::unix_now;
+
+/// Handle to the writer thread; flushes a final snapshot on drop.
+#[derive(Debug)]
+pub struct MetricsWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsWriter {
+    /// Start appending periodic snapshots of the global registry to
+    /// `path`. Write errors are reported once on stderr, not fatal —
+    /// telemetry must never take down the service it observes.
+    pub fn start(path: &Path, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let path: PathBuf = path.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            let mut warned = false;
+            append_snapshot(&path, &mut warned);
+            while !stop2.load(Ordering::Relaxed) {
+                // sleep in short slices so shutdown is prompt
+                let mut left = period;
+                while left > Duration::ZERO && !stop2.load(Ordering::Relaxed) {
+                    let step = left.min(Duration::from_millis(50));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                append_snapshot(&path, &mut warned);
+            }
+            append_snapshot(&path, &mut warned);
+        });
+        Self { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for MetricsWriter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Append one snapshot line to `path` (best-effort).
+fn append_snapshot(path: &Path, warned: &mut bool) {
+    let line = global().snapshot().to_json(unix_now()).to_string();
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        if !*warned {
+            eprintln!("metrics: cannot write {path:?}: {e}");
+            *warned = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_appends_parsable_lines() {
+        let path =
+            std::env::temp_dir().join(format!("akda_obs_writer_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        global().counter("writer_test_total", &[]).inc();
+        {
+            let _w = MetricsWriter::start(&path, Duration::from_secs(60));
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "want >=2 snapshots, got {}", lines.len());
+        for line in &lines {
+            let j = crate::util::json::parse(line).unwrap();
+            assert_eq!(j.req("schema").unwrap().as_str(), Some("akda-metrics/1"));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

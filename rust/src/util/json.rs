@@ -1,6 +1,8 @@
-//! Minimal JSON parser (no serde offline) — just enough for the artifact
-//! manifest emitted by `python/compile/aot.py` (objects, arrays, strings,
-//! numbers, bools, null; UTF-8 escapes for ASCII content).
+//! Minimal JSON parser and writer (no serde offline) — just enough for
+//! the artifact manifest emitted by `python/compile/aot.py` (objects,
+//! arrays, strings, numbers, bools, null; UTF-8 escapes for ASCII
+//! content) and for the compact documents the `obs` layer emits
+//! (metrics snapshots, `BENCH_*.json`).
 
 use std::collections::BTreeMap;
 
@@ -48,6 +50,59 @@ impl Json {
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).with_context(|| format!("missing key {key:?}"))
     }
+}
+
+/// Compact (no-whitespace) JSON writer. Object keys keep `BTreeMap`
+/// order, so output is deterministic. `f64` uses Rust's shortest
+/// round-trip formatting; non-finite numbers render as `null` (JSON has
+/// no NaN/Inf).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 pub fn parse(s: &str) -> Result<Json> {
@@ -245,6 +300,15 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let doc = parse(r#"{"a":[1,2.5,null,true],"b":{"c":"x\"y\n"},"d":-0.125}"#).unwrap();
+        let text = doc.to_string();
+        assert_eq!(parse(&text).unwrap(), doc);
+        assert_eq!(text, r#"{"a":[1,2.5,null,true],"b":{"c":"x\"y\n"},"d":-0.125}"#);
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! Wall-clock timing helpers used by the evaluation harness (the paper's
 //! ϑ (training time) and φ (testing time) measurements, Sec. 6.3.1).
+//!
+//! `Stopwatch` is the single source of truth for both surfaces: each
+//! `train`/`test` closure runs inside an [`crate::obs::span`], whose
+//! one elapsed measurement feeds the accumulated `train_s`/`test_s`
+//! fields (the ϑ/φ tables) *and* the `akda_phase_seconds` histogram
+//! (`train`, `test`, and any nested `train/gram`-style sub-phases) —
+//! no double timing.
 
 use std::time::Instant;
+
+use crate::obs;
 
 /// Time a closure, returning (result, seconds).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -23,14 +32,16 @@ impl Stopwatch {
     }
 
     pub fn train<T>(&mut self, f: impl FnOnce() -> T) -> T {
-        let (out, s) = timed(f);
-        self.train_s += s;
+        let span = obs::span("train");
+        let out = f();
+        self.train_s += span.finish();
         out
     }
 
     pub fn test<T>(&mut self, f: impl FnOnce() -> T) -> T {
-        let (out, s) = timed(f);
-        self.test_s += s;
+        let span = obs::span("test");
+        let out = f();
+        self.test_s += span.finish();
         out
     }
 }
@@ -57,5 +68,14 @@ mod tests {
         w.test(|| ());
         assert!(w.train_s >= 0.009);
         assert!(w.test_s < 0.01);
+    }
+
+    #[test]
+    fn stopwatch_feeds_phase_histogram() {
+        let h = obs::histogram_with("akda_phase_seconds", &[("path", "train")]);
+        let before = h.count();
+        let mut w = Stopwatch::new();
+        w.train(|| ());
+        assert_eq!(h.count(), before + 1);
     }
 }

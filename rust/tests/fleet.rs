@@ -254,6 +254,9 @@ fn drop_watcher_settles_quarantines_and_updates() {
     }
     assert!(drop_dir.join("ghost.csv.rejected").exists());
     assert!(!drop_dir.join("ghost.csv").exists());
+    // the reason sidecar makes the rejection diagnosable post-hoc
+    let sidecar = std::fs::read_to_string(drop_dir.join("ghost.csv.rejected.reason")).unwrap();
+    assert!(sidecar.contains("ghost"), "sidecar must carry the reason: {sidecar}");
 
     // malformed rows: quarantined, the model is untouched
     std::fs::write(drop_dir.join("m.csv"), "0,1.0,not-a-number\n").unwrap();

@@ -1,0 +1,198 @@
+//! Integration: the L7 observability layer.
+//!
+//! Pins the PR's acceptance guarantees:
+//!
+//! 1. **Quantile accuracy** — log-bucketed histogram estimates stay
+//!    within the documented half-bucket error of exact percentiles on a
+//!    known distribution.
+//! 2. **Concurrency** — counters are exact and gauges monotone under a
+//!    multi-thread hammer (the fleet dispatch path records through the
+//!    same relaxed atomics).
+//! 3. **Per-tenant attribution** — a mixed-tenant fleet load lands in
+//!    the right `{tenant=...}` instruments: requests, latency samples,
+//!    and protocol rejects are never cross-charged.
+//! 4. **Surface agreement** — one registry snapshot renders to both
+//!    Prometheus text and `akda-metrics/1` JSON, and the JSON document
+//!    round-trips the parser and the schema validator.
+
+use akda::coordinator::{DetectorBank, FleetOptions, FleetService};
+use akda::da::akda::Akda;
+use akda::da::{DrMethod, Projection};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::model::update::train_svm_bank;
+use akda::model::{encode_bank, ModelManifest, ModelRegistry};
+use akda::obs;
+use akda::obs::validate::{require_nonzero, validate_metrics_line};
+
+#[test]
+fn histogram_quantiles_track_exact_percentiles() {
+    let h = obs::Histogram::new();
+    // linear ramp 1..=1000 ms — the exact q-quantile is ~q seconds
+    for i in 1..=1000 {
+        h.record(i as f64 * 1e-3);
+    }
+    for (q, exact) in [(0.5, 0.5), (0.9, 0.9), (0.99, 0.99)] {
+        let est = h.quantile(q);
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.15, "q{q}: estimate {est} vs exact {exact} (rel err {rel:.3})");
+    }
+    assert_eq!(h.count(), 1000);
+    assert!((h.sum() - 500.5).abs() / 500.5 < 1e-3, "sum {}", h.sum());
+
+    // a point mass lands every estimate in the same bucket
+    let point = obs::Histogram::new();
+    for _ in 0..100 {
+        point.record(0.020);
+    }
+    for q in [0.5, 0.9, 0.99] {
+        let rel = (point.quantile(q) - 0.020).abs() / 0.020;
+        assert!(rel < 0.15, "point mass q{q} off by {rel:.3}");
+    }
+}
+
+#[test]
+fn counters_and_gauges_are_exact_under_concurrent_hammer() {
+    let c = obs::Counter::new();
+    let g = obs::Gauge::new();
+    let peak = obs::Gauge::new();
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (c, g, peak) = (&c, &g, &peak);
+            s.spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    g.add(1.0);
+                    peak.set_max((t * PER_THREAD + i) as f64);
+                }
+            });
+        }
+    });
+    assert_eq!(c.get(), THREADS * PER_THREAD);
+    assert_eq!(g.get(), (THREADS * PER_THREAD) as f64);
+    assert_eq!(peak.get(), (THREADS * PER_THREAD - 1) as f64, "set_max keeps the maximum");
+}
+
+/// Exact-AKDA bank artifact, publishable and servable (no resume state —
+/// the fleet only needs the bank).
+fn tenant_artifact(
+    dim: usize,
+    n_classes: usize,
+    seed: u64,
+) -> (akda::linalg::Mat, akda::model::ModelArtifact) {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes,
+        n_per_class: vec![12; n_classes],
+        dim,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    });
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let proj = akda_cfg.fit(&x, &labels, n_classes).unwrap();
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, n_classes);
+    let bank = DetectorBank { projection: proj, svms };
+    let art = encode_bank(&bank, "akda").unwrap();
+    (x, art)
+}
+
+#[test]
+fn fleet_load_attributes_metrics_to_the_right_tenant() {
+    let root = std::env::temp_dir().join(format!("akda_obs_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let registry = ModelRegistry::open(&root);
+    // unique tenant names: the obs registry is process-global, so these
+    // instruments must belong to this test alone
+    let (xa, art_a) = tenant_artifact(6, 3, 31);
+    let (xb, art_b) = tenant_artifact(5, 2, 32);
+    let mf = |dim, n_classes| ModelManifest {
+        method: "akda".into(),
+        n_classes,
+        input_dim: dim,
+        ..Default::default()
+    };
+    registry.publish("obs-aa", &art_a, &mf(6, 3)).unwrap();
+    registry.publish("obs-bb", &art_b, &mf(5, 2)).unwrap();
+
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let client = svc.client();
+    // mixed concurrent load: 12 requests per tenant across 4 threads
+    std::thread::scope(|s| {
+        for w in 0..4 {
+            let client = client.clone();
+            let (xa, xb) = (&xa, &xb);
+            s.spawn(move || {
+                for i in 0..3 {
+                    let row = xa.row((w * 3 + i) % xa.rows()).to_vec();
+                    assert_eq!(client.score("obs-aa", row).unwrap().len(), 3);
+                    let row = xb.row((w * 3 + i) % xb.rows()).to_vec();
+                    assert_eq!(client.score("obs-bb", row).unwrap().len(), 2);
+                }
+            });
+        }
+    });
+    // one wrong-width request against obs-bb only
+    assert!(client.score("obs-bb", vec![0.0; 6]).is_err());
+
+    let requests = |t| obs::counter_with("akda_fleet_requests_total", &[("tenant", t)]).get();
+    let latency = |t| obs::histogram_with("akda_fleet_latency_seconds", &[("tenant", t)]);
+    let rejects = |t| {
+        obs::counter_with("akda_fleet_rejects_total", &[("kind", "wrong_dim"), ("tenant", t)])
+            .get()
+    };
+    assert_eq!(requests("obs-aa"), 12);
+    assert_eq!(requests("obs-bb"), 12, "the reject must not count as a request");
+    assert_eq!(latency("obs-aa").count(), 12);
+    assert_eq!(latency("obs-bb").count(), 12);
+    assert!(latency("obs-aa").quantile(0.99) > 0.0);
+    assert_eq!(rejects("obs-bb"), 1);
+    assert_eq!(rejects("obs-aa"), 0, "the reject must charge the offending tenant only");
+    let version = |t| obs::gauge_with("akda_fleet_served_version", &[("model", t)]).get();
+    assert_eq!((version("obs-aa"), version("obs-bb")), (1.0, 1.0));
+    // the stats() snapshot is assembled from the same atomics
+    let stats = svc.stats();
+    assert_eq!(stats.per_tenant["obs-aa"], 12);
+    assert_eq!(stats.per_tenant["obs-bb"], 12);
+    assert_eq!(stats.rejected, 1);
+
+    drop(client); // all clients must go first: the dispatcher drains on close
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn snapshot_round_trips_between_prometheus_and_json() {
+    // a local registry keeps this test independent of the global one
+    let reg = obs::MetricsRegistry::new();
+    reg.counter("rt_requests_total", &[("tenant", "t1")]).add(7);
+    reg.gauge("rt_queue_depth", &[]).set(3.0);
+    let h = reg.histogram("rt_latency_seconds", &[("tenant", "t1")]);
+    for _ in 0..50 {
+        h.record(0.010);
+    }
+
+    let snap = reg.snapshot();
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE rt_requests_total counter"), "{prom}");
+    assert!(prom.contains("rt_requests_total{tenant=\"t1\"} 7"), "{prom}");
+    assert!(prom.contains("rt_queue_depth 3"), "{prom}");
+    assert!(prom.contains("rt_latency_seconds{tenant=\"t1\",quantile=\"0.99\"}"), "{prom}");
+    assert!(prom.contains("rt_latency_seconds_count{tenant=\"t1\"} 50"), "{prom}");
+
+    let doc = akda::util::json::parse(&snap.to_json(1234).to_string()).unwrap();
+    validate_metrics_line(&doc).unwrap();
+    require_nonzero(&doc, &["rt_requests_total", "rt_queue_depth", "rt_latency_seconds"])
+        .unwrap();
+    // the same instrument ids appear on both surfaces with the same values
+    let counters = doc.get("counters").unwrap();
+    let c = counters.get("rt_requests_total{tenant=\"t1\"}").unwrap();
+    assert_eq!(c.as_usize(), Some(7));
+    let summary = doc.get("summaries").unwrap().get("rt_latency_seconds{tenant=\"t1\"}").unwrap();
+    assert_eq!(summary.get("count").unwrap().as_usize(), Some(50));
+    assert!((h.sum() - 0.5).abs() < 1e-6, "sum {}", h.sum());
+}
