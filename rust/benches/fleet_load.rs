@@ -8,18 +8,27 @@
 //! `akda_fleet_latency_seconds{tenant=...}` histograms, so the bench
 //! exercises the exact instruments operators see live.
 //!
+//! With `--connect HOST:PORT` (or `AKDA_CONNECT=HOST:PORT`) the bench
+//! instead drives an already-running `akda serve --fleet --listen` over
+//! TCP speaking akda-wire/1 — same closed-loop clients, same output
+//! schema, latencies measured client-side (so they include the wire) and
+//! `"transport": "tcp"` recorded in the document.
+//!
 //! Env: AKDA_FAST=1 → 2 s of load (CI smoke; default 8 s)
 //!      AKDA_SERVE_SECS=S → explicit load window
 //!      AKDA_SERVE_WORKERS=N → closed-loop clients per tenant (default 4)
-//! Run: cargo bench --bench fleet_load
+//!      AKDA_CONNECT=ADDR → drive a remote fleet instead of in-process
+//! Run: cargo bench --bench fleet_load [-- --connect HOST:PORT]
 //!
 //! Writes `BENCH_serve.json` (schema `akda-bench-serve/1`, validated in
 //! CI via `akda metrics --validate`).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use akda::coordinator::net::{NetClient, NetReply};
 use akda::coordinator::{DetectorBank, FleetOptions, FleetService};
 use akda::da::akda::Akda;
 use akda::da::{DrMethod, Projection};
@@ -29,6 +38,7 @@ use akda::linalg::Mat;
 use akda::model::update::train_svm_bank;
 use akda::model::{encode_bank, ModelArtifact, ModelManifest, ModelRegistry};
 use akda::util::json::Json;
+use akda::util::rng::Rng;
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
@@ -55,6 +65,127 @@ fn tenant(dim: usize, n_classes: usize, seed: u64) -> (Mat, ModelArtifact) {
     (x, art)
 }
 
+/// Nearest-rank quantile over an ascending-sorted latency sample.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// `--connect` mode: hammer a remote fleet over TCP. Request rows are
+/// synthetic (seeded, shaped by each tenant's advertised input dim), and
+/// latency percentiles are measured client-side per call — the served
+/// numbers therefore include framing + kernel + wire, which is exactly
+/// what a remote caller experiences.
+fn run_connect(addr: &str, secs: f64, workers: usize) {
+    let timeout = Duration::from_secs(30);
+    let mut probe = NetClient::connect(addr, timeout).expect("connect to fleet");
+    let roster = probe.models().expect("tenant roster");
+    assert!(!roster.is_empty(), "server at {addr} serves no models");
+    eprintln!(
+        "fleet load (tcp): {} tenants at {addr}, {workers} clients each, {secs}s window",
+        roster.len()
+    );
+
+    struct TenantLoad {
+        requests: AtomicUsize,
+        rejected: AtomicUsize,
+        latencies: Mutex<Vec<f64>>,
+    }
+    let stats: BTreeMap<String, TenantLoad> = roster
+        .iter()
+        .map(|m| {
+            let load = TenantLoad {
+                requests: AtomicUsize::new(0),
+                rejected: AtomicUsize::new(0),
+                latencies: Mutex::new(Vec::new()),
+            };
+            (m.name.clone(), load)
+        })
+        .collect();
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (t, m) in roster.iter().enumerate() {
+            for w in 0..workers {
+                let (stop, stats) = (&stop, &stats);
+                let (name, dim) = (m.name.clone(), m.input_dim as usize);
+                s.spawn(move || {
+                    let mut conn =
+                        NetClient::connect(addr, timeout).expect("connect load client");
+                    let mut rng = Rng::new(0xF1EE7 ^ ((t as u64) << 32) ^ w as u64);
+                    let mut lat = Vec::new();
+                    let tenant = &stats[&name];
+                    while !stop.load(Ordering::Relaxed) {
+                        let row: Vec<f64> = (0..dim).map(|_| rng.range(-1.0, 1.0)).collect();
+                        let sent = Instant::now();
+                        match conn.score(&name, &row).expect("score over tcp") {
+                            NetReply::Scores(_) => {
+                                tenant.requests.fetch_add(1, Ordering::Relaxed);
+                            }
+                            NetReply::Rejected { .. } => {
+                                tenant.rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        lat.push(sent.elapsed().as_secs_f64());
+                    }
+                    tenant.latencies.lock().expect("latency sink").extend(lat);
+                });
+            }
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let total_requests: usize =
+        stats.values().map(|t| t.requests.load(Ordering::Relaxed)).sum();
+    let tenants_json: Vec<Json> = roster
+        .iter()
+        .map(|m| {
+            let t = &stats[&m.name];
+            let n = t.requests.load(Ordering::Relaxed);
+            let rejected = t.rejected.load(Ordering::Relaxed);
+            let mut lat = t.latencies.lock().expect("latency sink").clone();
+            lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            let p50_ms = quantile_sorted(&lat, 0.5) * 1e3;
+            let p99_ms = quantile_sorted(&lat, 0.99) * 1e3;
+            eprintln!(
+                "   {}: {n} requests ({:.0} req/s), p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms",
+                m.name,
+                n as f64 / elapsed
+            );
+            obj(vec![
+                ("model", Json::Str(m.name.clone())),
+                ("requests", Json::Num(n as f64)),
+                ("rejected", Json::Num(rejected as f64)),
+                ("req_per_s", Json::Num(n as f64 / elapsed)),
+                ("p50_ms", Json::Num(p50_ms)),
+                ("p99_ms", Json::Num(p99_ms)),
+            ])
+        })
+        .collect();
+    let total = obj(vec![
+        ("requests", Json::Num(total_requests as f64)),
+        ("req_per_s", Json::Num(total_requests as f64 / elapsed)),
+    ]);
+    let bench = obj(vec![
+        ("schema", Json::Str("akda-bench-serve/1".into())),
+        ("transport", Json::Str("tcp".into())),
+        ("duration_s", Json::Num(elapsed)),
+        ("tenants", Json::Arr(tenants_json)),
+        ("total", total),
+    ]);
+    println!(
+        "fleet load (tcp): {total_requests} requests in {elapsed:.2}s ({:.0} req/s sustained)",
+        total_requests as f64 / elapsed
+    );
+    std::fs::write("BENCH_serve.json", format!("{bench}\n")).expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json");
+}
+
 fn main() {
     let fast = std::env::var("AKDA_FAST").is_ok();
     let secs: f64 = std::env::var("AKDA_SERVE_SECS")
@@ -65,6 +196,16 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let connect = argv
+        .windows(2)
+        .find(|w| w[0] == "--connect")
+        .map(|w| w[1].clone())
+        .or_else(|| std::env::var("AKDA_CONNECT").ok());
+    if let Some(addr) = connect {
+        run_connect(&addr, secs, workers);
+        return;
+    }
 
     let root = std::env::temp_dir().join(format!("akda_fleet_bench_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
@@ -145,6 +286,7 @@ fn main() {
     ]);
     let bench = obj(vec![
         ("schema", Json::Str("akda-bench-serve/1".into())),
+        ("transport", Json::Str("in_process".into())),
         ("duration_s", Json::Num(elapsed)),
         ("tenants", Json::Arr(tenants_json)),
         ("total", total),

@@ -58,7 +58,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{Context, Result};
@@ -96,6 +96,10 @@ pub enum FleetError {
     WrongDim { model: String, expected: usize, got: usize },
     /// The fleet is shutting down (request or reply channel closed).
     ServiceDown,
+    /// An admission queue in front of the fleet (the TCP ingress of
+    /// `coordinator::net`) shed this request instead of buffering it
+    /// unboundedly; the caller should retry after the hinted delay.
+    OverCapacity { retry_after_ms: u32 },
 }
 
 impl std::fmt::Display for FleetError {
@@ -108,6 +112,9 @@ impl std::fmt::Display for FleetError {
                 write!(f, "model {model:?} expects {expected} features, got {got}")
             }
             FleetError::ServiceDown => write!(f, "fleet service is down"),
+            FleetError::OverCapacity { retry_after_ms } => {
+                write!(f, "fleet over capacity — retry after {retry_after_ms}ms")
+            }
         }
     }
 }
@@ -118,16 +125,28 @@ impl std::error::Error for FleetError {}
 // Requests and clients
 // ---------------------------------------------------------------------------
 
+/// How a [`FleetRequest`]'s outcome travels back to its origin: a
+/// call-once closure. `FleetClient::score` wraps a channel sender in one;
+/// the TCP edge (`coordinator::net`) wraps "encode a response frame onto
+/// this connection" — which is what lets one dispatcher serve both
+/// in-process and network callers without knowing the difference.
+type Replier = Box<dyn FnOnce(Result<Vec<f64>, FleetError>) + Send + 'static>;
+
 /// One routed request: model id + features in, per-class scores (or a
-/// [`FleetError`]) out.
+/// [`FleetError`]) delivered to `reply` — exactly once, always.
 pub struct FleetRequest {
-    pub model: String,
-    pub features: Vec<f64>,
-    pub reply: Sender<Result<Vec<f64>, FleetError>>,
-    /// Stamped by [`FleetClient::score`]; drives the per-tenant
-    /// end-to-end `akda_fleet_latency_seconds` histogram.
+    model: String,
+    features: Vec<f64>,
+    reply: Replier,
+    /// Stamped at submission; drives the per-tenant end-to-end
+    /// `akda_fleet_latency_seconds` histogram.
     enqueued_at: Instant,
 }
+
+/// The live tenant set, shared by the dispatcher, the watcher (which
+/// hot-swaps banks and onboards newly published names), and every
+/// [`FleetClient`] clone.
+type TenantMap = Arc<RwLock<BTreeMap<String, Arc<Tenant>>>>;
 
 /// Handle for submitting score requests to a [`FleetService`]. Cloneable
 /// and cheap; all clones feed the same dispatcher queue. Any live clone
@@ -137,39 +156,67 @@ pub struct FleetRequest {
 #[derive(Clone)]
 pub struct FleetClient {
     tx: Sender<FleetRequest>,
-    dims: Arc<BTreeMap<String, usize>>,
+    tenants: TenantMap,
     queue_depth: Arc<obs::Gauge>,
 }
 
 impl FleetClient {
-    /// The model ids this fleet serves (the tenant set is fixed at
-    /// [`FleetService::start`]; hot swaps replace banks, not the set).
+    /// The model ids this fleet currently serves. With a watcher running,
+    /// the set is dynamic: a NEW name published to the registry is
+    /// onboarded at the next poll, no restart.
     pub fn models(&self) -> Vec<String> {
-        self.dims.keys().cloned().collect()
+        self.tenants.read().expect("tenant map").keys().cloned().collect()
     }
 
     /// Input width of one tenant (`None` for unknown ids).
     pub fn input_dim(&self, model: &str) -> Option<usize> {
-        self.dims.get(model).copied()
+        self.tenants.read().expect("tenant map").get(model).map(|t| t.input_dim)
     }
 
-    /// Score one observation against tenant `model`. Validation is the
-    /// dispatcher's job — the single protocol authority — so unknown ids
-    /// and wrong feature widths come back as [`FleetError`]s on the reply
-    /// channel and are counted in [`FleetStats::rejected`].
-    pub fn score(&self, model: &str, features: Vec<f64>) -> Result<Vec<f64>, FleetError> {
-        let (reply, rx) = channel();
+    /// `(name, input dim, served registry version)` per tenant — what the
+    /// wire protocol's `ModelsResponse` reports, so hot swaps and
+    /// onboarding are observable over TCP.
+    pub fn roster(&self) -> Vec<(String, usize, u32)> {
+        self.tenants
+            .read()
+            .expect("tenant map")
+            .iter()
+            .map(|(n, t)| (n.clone(), t.input_dim, t.handle.served_version()))
+            .collect()
+    }
+
+    /// Enqueue one request without blocking on its result; `on_reply` is
+    /// called exactly once — from the scoring pool on success, from the
+    /// dispatcher on protocol rejection, or right here when the fleet is
+    /// already down. Validation is the dispatcher's job — the single
+    /// protocol authority — so unknown ids and wrong feature widths come
+    /// back as [`FleetError`]s and are counted in [`FleetStats::rejected`].
+    pub fn submit(
+        &self,
+        model: &str,
+        features: Vec<f64>,
+        on_reply: impl FnOnce(Result<Vec<f64>, FleetError>) + Send + 'static,
+    ) {
         let req = FleetRequest {
             model: model.to_string(),
             features,
-            reply,
+            reply: Box::new(on_reply),
             enqueued_at: Instant::now(),
         };
         self.queue_depth.add(1.0);
-        self.tx.send(req).map_err(|_| {
+        if let Err(send_err) = self.tx.send(req) {
             self.queue_depth.add(-1.0);
-            FleetError::ServiceDown
-        })?;
+            (send_err.0.reply)(Err(FleetError::ServiceDown));
+        }
+    }
+
+    /// Score one observation against tenant `model`, blocking for the
+    /// reply (the channel-based convenience over [`FleetClient::submit`]).
+    pub fn score(&self, model: &str, features: Vec<f64>) -> Result<Vec<f64>, FleetError> {
+        let (tx, rx) = channel();
+        self.submit(model, features, move |result| {
+            let _ = tx.send(result);
+        });
         rx.recv().map_err(|_| FleetError::ServiceDown)?
     }
 }
@@ -216,27 +263,26 @@ impl TenantMetrics {
 
 /// All-atomic fleet telemetry. Replaces the old `Mutex<FleetStats>`: the
 /// dispatcher updates these with relaxed atomics, so `stats()` readers
-/// and metric scrapes never contend with scoring. The tenant set is
-/// fixed at start, so the map itself is immutable — no lock needed.
+/// and metric scrapes never contend with scoring. Per-tenant counters
+/// live on the [`Tenant`] itself (the set is dynamic since the network
+/// edge landed — onboarded tenants bring their own instruments).
 struct FleetCounters {
     requests: AtomicUsize,
     batches: AtomicUsize,
     max_batch: AtomicUsize,
     rejected: AtomicUsize,
-    per_tenant: BTreeMap<String, TenantMetrics>,
     rejects_unknown: Arc<obs::Counter>,
     batch_size: Arc<obs::Histogram>,
     queue_depth: Arc<obs::Gauge>,
 }
 
 impl FleetCounters {
-    fn new(per_tenant: BTreeMap<String, TenantMetrics>) -> FleetCounters {
+    fn new() -> FleetCounters {
         FleetCounters {
             requests: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             max_batch: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
-            per_tenant,
             rejects_unknown: obs::counter_with(
                 "akda_fleet_rejects_total",
                 &[("kind", "unknown_model"), ("tenant", "(unknown)")],
@@ -269,7 +315,27 @@ pub(crate) fn sleep_until_stopped(stop: &AtomicBool, total: Duration) {
 struct Tenant {
     handle: BankHandle,
     input_dim: usize,
+    /// GC lease; released when the last `Arc<Tenant>` drops.
+    #[allow(dead_code)]
     marker: ServeMarker,
+    metrics: TenantMetrics,
+}
+
+impl Tenant {
+    /// Load one tenant from the registry's latest published version:
+    /// checksum-verified decode, serve-marker lease, obs gauges. Shared
+    /// by [`FleetService::start`] and the watcher's onboarding path.
+    fn load(registry: &ModelRegistry, name: &str) -> Result<Arc<Tenant>> {
+        let (entry, artifact) = registry.load_artifact(name)?;
+        let input_dim = model::codec::input_dim(&artifact)?;
+        let bank = model::codec::decode_bank(&artifact)
+            .with_context(|| format!("decoding tenant {}", entry.spec()))?;
+        let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
+        let marker = ServeMarker::publish(registry, name, entry.version)?;
+        obs::gauge_with("akda_fleet_served_version", &[("model", name)])
+            .set(entry.version as f64);
+        Ok(Arc::new(Tenant { handle, input_dim, marker, metrics: TenantMetrics::new(name) }))
+    }
 }
 
 /// Knobs for [`FleetService::start`].
@@ -303,7 +369,7 @@ impl Default for FleetOptions {
 /// handles; the optional watcher hot-swaps republished tenants in place.
 pub struct FleetService {
     client: FleetClient,
-    tenants: Arc<BTreeMap<String, Tenant>>,
+    tenants: TenantMap,
     counters: Arc<FleetCounters>,
     stop: Arc<AtomicBool>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
@@ -313,7 +379,9 @@ pub struct FleetService {
 impl FleetService {
     /// Load every model in `registry` (latest version each) and start the
     /// dispatcher, the shared pool, and — when `opts.watch` is set — the
-    /// single multi-tenant hot-swap watcher. Fails if the registry is
+    /// single multi-tenant watcher, which both hot-swaps republished
+    /// tenants AND onboards names newly published to the registry (a new
+    /// model joins the fleet without restart). Fails if the registry is
     /// empty or any artifact fails its checksum/decode.
     pub fn start(registry: &ModelRegistry, opts: FleetOptions) -> Result<FleetService> {
         let names = registry.models()?;
@@ -323,23 +391,11 @@ impl FleetService {
             registry.root()
         );
         let mut tenants = BTreeMap::new();
-        let mut dims = BTreeMap::new();
-        let mut per_tenant = BTreeMap::new();
         for name in &names {
-            let (entry, artifact) = registry.load_artifact(name)?;
-            let input_dim = model::codec::input_dim(&artifact)?;
-            let bank = model::codec::decode_bank(&artifact)
-                .with_context(|| format!("decoding tenant {}", entry.spec()))?;
-            let handle = BankHandle::new_versioned(Arc::new(bank), entry.version);
-            let marker = ServeMarker::publish(registry, name, entry.version)?;
-            dims.insert(name.clone(), input_dim);
-            per_tenant.insert(name.clone(), TenantMetrics::new(name));
-            obs::gauge_with("akda_fleet_served_version", &[("model", name)])
-                .set(entry.version as f64);
-            tenants.insert(name.clone(), Tenant { handle, input_dim, marker });
+            tenants.insert(name.clone(), Tenant::load(registry, name)?);
         }
-        let tenants = Arc::new(tenants);
-        let counters = Arc::new(FleetCounters::new(per_tenant));
+        let tenants: TenantMap = Arc::new(RwLock::new(tenants));
+        let counters = Arc::new(FleetCounters::new());
         let stop = Arc::new(AtomicBool::new(false));
 
         let (tx, rx) = channel::<FleetRequest>();
@@ -386,7 +442,7 @@ impl FleetService {
         Ok(FleetService {
             client: FleetClient {
                 tx,
-                dims: Arc::new(dims),
+                tenants: tenants.clone(),
                 queue_depth: counters.queue_depth.clone(),
             },
             tenants,
@@ -404,7 +460,7 @@ impl FleetService {
     /// pool capacity.
     fn dispatch_round(
         round: Vec<FleetRequest>,
-        tenants: &BTreeMap<String, Tenant>,
+        tenants: &TenantMap,
         pool: &WorkPool,
         counters: &FleetCounters,
     ) {
@@ -413,72 +469,94 @@ impl FleetService {
         counters.batch_size.record(round_len as f64);
         counters.batches.fetch_add(1, Ordering::Relaxed);
         counters.max_batch.fetch_max(round_len, Ordering::Relaxed);
-        let mut groups: BTreeMap<String, Vec<FleetRequest>> = BTreeMap::new();
-        for req in round {
-            match tenants.get(&req.model) {
-                None => {
-                    counters.rejected.fetch_add(1, Ordering::Relaxed);
-                    counters.rejects_unknown.inc();
-                    let known = tenants.keys().cloned().collect();
-                    let err = FleetError::UnknownModel { model: req.model.clone(), known };
-                    let _ = req.reply.send(Err(err));
-                }
-                Some(t) if req.features.len() != t.input_dim => {
-                    counters.rejected.fetch_add(1, Ordering::Relaxed);
-                    if let Some(m) = counters.per_tenant.get(&req.model) {
-                        m.rejects_wrong_dim.inc();
+        let mut groups: BTreeMap<String, (Arc<Tenant>, Vec<FleetRequest>)> = BTreeMap::new();
+        {
+            // hold the read lock for routing only — scoring runs on the
+            // pool with per-tenant Arcs, so an onboarding watcher blocks
+            // at most a round boundary, never a batch execution
+            let map = tenants.read().expect("tenant map");
+            for req in round {
+                match map.get(&req.model) {
+                    None => {
+                        counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        counters.rejects_unknown.inc();
+                        let known = map.keys().cloned().collect();
+                        let err = FleetError::UnknownModel { model: req.model.clone(), known };
+                        (req.reply)(Err(err));
                     }
-                    let err = FleetError::WrongDim {
-                        model: req.model.clone(),
-                        expected: t.input_dim,
-                        got: req.features.len(),
-                    };
-                    let _ = req.reply.send(Err(err));
+                    Some(t) if req.features.len() != t.input_dim => {
+                        counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        t.metrics.rejects_wrong_dim.inc();
+                        let err = FleetError::WrongDim {
+                            model: req.model.clone(),
+                            expected: t.input_dim,
+                            got: req.features.len(),
+                        };
+                        (req.reply)(Err(err));
+                    }
+                    Some(t) => {
+                        let (_, group) = groups
+                            .entry(req.model.clone())
+                            .or_insert_with(|| (t.clone(), Vec::new()));
+                        group.push(req);
+                    }
                 }
-                Some(_) => groups.entry(req.model.clone()).or_default().push(req),
             }
         }
-        for (name, group) in groups {
+        for (_, (tenant, group)) in groups {
             counters.requests.fetch_add(group.len(), Ordering::Relaxed);
-            // every routed name has a TenantMetrics entry (same fixed set)
-            let metrics = &counters.per_tenant[&name];
-            metrics.requests.fetch_add(group.len(), Ordering::Relaxed);
-            metrics.requests_total.add(group.len() as u64);
-            let latency = metrics.latency.clone();
-            let tenant = &tenants[&name];
+            tenant.metrics.requests.fetch_add(group.len(), Ordering::Relaxed);
+            tenant.metrics.requests_total.add(group.len() as u64);
             // the handle is read inside the job, at score time: a hot swap
             // between dispatch and execution is picked up, not raced
-            let handle = tenant.handle.clone();
-            let dim = tenant.input_dim;
             let _ = pool.submit(move || {
+                let dim = tenant.input_dim;
                 let x = Mat::from_fn(group.len(), dim, |r, c| group[r].features[c]);
-                let scores = handle.get().score(&x);
+                let scores = tenant.handle.get().score(&x);
                 for (r, req) in group.into_iter().enumerate() {
-                    let _ = req.reply.send(Ok(scores.row(r).to_vec()));
-                    latency.record(req.enqueued_at.elapsed().as_secs_f64());
+                    (req.reply)(Ok(scores.row(r).to_vec()));
+                    tenant.metrics.latency.record(req.enqueued_at.elapsed().as_secs_f64());
                 }
             });
         }
     }
 
-    /// The single registry watcher: one `HotReloader::poll_once` step per
-    /// tenant per cycle. Decode happens on this thread, never on the
-    /// dispatcher or the pool, so a tenant mid-swap does not stall the
-    /// scoring of the others; its serve marker is re-pointed after each
-    /// successful swap.
+    /// The single registry watcher, now with two duties per cycle:
+    ///
+    /// 1. **Hot swap** — one `HotReloader::poll_once` step per existing
+    ///    tenant. Decode happens on this thread, never on the dispatcher
+    ///    or the pool, so a tenant mid-swap does not stall the scoring of
+    ///    the others; its serve marker is re-pointed after each swap.
+    /// 2. **Onboarding** — any model *name* in the registry that is not a
+    ///    tenant yet is loaded and inserted, so a brand-new model joins a
+    ///    live fleet (and its TCP listener) without restart. A name whose
+    ///    artifact fails to load is retried next cycle (e.g. a publish
+    ///    mid-flight); tenants are never removed — like version
+    ///    downgrades, a vanished registry entry keeps serving from RAM.
     fn watch_loop(
         registry: &ModelRegistry,
-        tenants: &BTreeMap<String, Tenant>,
+        tenants: &TenantMap,
         stop: &AtomicBool,
         poll: Duration,
     ) {
-        let mut examined: BTreeMap<&str, (u32, Option<SystemTime>)> = tenants
+        let mut examined: BTreeMap<String, (u32, Option<SystemTime>)> = tenants
+            .read()
+            .expect("tenant map")
             .iter()
-            .map(|(n, t)| (n.as_str(), (t.handle.served_version(), None)))
+            .map(|(n, t)| (n.clone(), (t.handle.served_version(), None)))
             .collect();
         while !stop.load(Ordering::Relaxed) {
-            for (name, tenant) in tenants.iter() {
-                let ex = examined.get_mut(name.as_str()).expect("tenant examined state");
+            // snapshot the Arcs so poll_once (decode!) runs without the lock
+            let snapshot: Vec<(String, Arc<Tenant>)> = tenants
+                .read()
+                .expect("tenant map")
+                .iter()
+                .map(|(n, t)| (n.clone(), t.clone()))
+                .collect();
+            for (name, tenant) in &snapshot {
+                let ex = examined
+                    .entry(name.clone())
+                    .or_insert_with(|| (tenant.handle.served_version(), None));
                 let old = ex.0;
                 match HotReloader::poll_once(
                     registry,
@@ -506,6 +584,28 @@ impl FleetService {
                     Err(e) => eprintln!("fleet: reload of tenant {name:?} failed: {e:#}"),
                 }
             }
+            // discovery: registry names that are not tenants yet
+            if let Ok(names) = registry.models() {
+                for name in names {
+                    let known = tenants.read().expect("tenant map").contains_key(&name);
+                    if known {
+                        continue;
+                    }
+                    match Tenant::load(registry, &name) {
+                        Ok(tenant) => {
+                            let v = tenant.handle.served_version();
+                            examined.insert(name.clone(), (v, None));
+                            obs::counter_with("akda_fleet_onboards_total", &[("model", &name)])
+                                .inc();
+                            tenants.write().expect("tenant map").insert(name.clone(), tenant);
+                            eprintln!("fleet: onboarded tenant {name}@{v}");
+                        }
+                        Err(e) => {
+                            eprintln!("fleet: onboarding of tenant {name:?} failed: {e:#}")
+                        }
+                    }
+                }
+            }
             sleep_until_stopped(stop, poll);
         }
     }
@@ -524,10 +624,12 @@ impl FleetService {
             batches: c.batches.load(Ordering::Relaxed),
             max_batch: c.max_batch.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
-            per_tenant: c
-                .per_tenant
+            per_tenant: self
+                .tenants
+                .read()
+                .expect("tenant map")
                 .iter()
-                .map(|(n, m)| (n.clone(), m.requests.load(Ordering::Relaxed)))
+                .map(|(n, t)| (n.clone(), t.metrics.requests.load(Ordering::Relaxed)))
                 .collect(),
         }
     }
@@ -536,6 +638,8 @@ impl FleetService {
     /// prints and what the GC shield protects.
     pub fn served_versions(&self) -> Vec<(String, u32)> {
         self.tenants
+            .read()
+            .expect("tenant map")
             .iter()
             .map(|(n, t)| (n.clone(), t.handle.served_version()))
             .collect()
@@ -543,12 +647,21 @@ impl FleetService {
 
     /// The served version of one tenant (`None` for unknown ids).
     pub fn served_version(&self, model: &str) -> Option<u32> {
-        self.tenants.get(model).map(|t| t.handle.served_version())
+        self.tenants
+            .read()
+            .expect("tenant map")
+            .get(model)
+            .map(|t| t.handle.served_version())
     }
 
     /// Total hot swaps across all tenants since start.
     pub fn swaps(&self) -> usize {
-        self.tenants.values().map(|t| t.handle.generation()).sum()
+        self.tenants
+            .read()
+            .expect("tenant map")
+            .values()
+            .map(|t| t.handle.generation())
+            .sum()
     }
 }
 
@@ -563,13 +676,15 @@ impl Drop for FleetService {
         let (tx, _) = channel();
         self.client = FleetClient {
             tx,
-            dims: self.client.dims.clone(),
+            tenants: Arc::new(RwLock::new(BTreeMap::new())),
             queue_depth: self.client.queue_depth.clone(),
         };
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        // tenants (and their serve markers) drop here: leases released
+        // release the serve-marker leases deterministically, even if a
+        // stray client clone still holds the map Arc
+        self.tenants.write().expect("tenant map").clear();
     }
 }
 
@@ -896,6 +1011,8 @@ mod tests {
         let e = FleetError::WrongDim { model: "a".into(), expected: 6, got: 5 };
         assert!(format!("{e}").contains("expects 6 features, got 5"));
         assert_eq!(format!("{}", FleetError::ServiceDown), "fleet service is down");
+        let e = FleetError::OverCapacity { retry_after_ms: 50 };
+        assert_eq!(format!("{e}"), "fleet over capacity — retry after 50ms");
     }
 
     #[test]

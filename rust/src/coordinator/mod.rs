@@ -11,19 +11,28 @@
 //! * `service` — post-training scoring service with dynamic micro-batching.
 //! * `fleet` — multi-tenant serving (L6): every model in a registry served
 //!   by one process over a single shared worker pool, one watcher
-//!   hot-swapping republished tenants, plus the drop-directory auto-update
-//!   daemon (`akda daemon`).
+//!   hot-swapping republished tenants (and onboarding newly published
+//!   names), plus the drop-directory auto-update daemon (`akda daemon`).
+//! * `wire` — the `akda-wire/1` length-prefixed binary frame codec (L8):
+//!   checksummed score/models/error frames, dependency-free.
+//! * `net` — the TCP network edge (L8): `NetServer` multiplexes many
+//!   connections onto the fleet dispatcher through a bounded shed-oldest
+//!   ingress queue; `NetClient` is the matching in-crate client.
 //! * `config` — reproducible run configuration (`EvalConfig`), including
 //!   the streaming tile height `stream_block`.
 
 pub mod config;
 pub mod fleet;
 pub mod jobs;
+pub mod net;
 pub mod protocol;
 pub mod service;
+pub mod wire;
 
 pub use config::EvalConfig;
 pub use fleet::{FleetClient, FleetError, FleetOptions, FleetService, UpdateDaemon};
 pub use jobs::WorkPool;
+pub use net::{NetClient, NetOptions, NetServer};
 pub use protocol::{build_dr, evaluate_ovr, select_hyper, Hyper, MethodId};
 pub use service::{BankHandle, DetectorBank, ScoringService};
+pub use wire::{ErrorCode, Frame, WireModel};

@@ -1,0 +1,668 @@
+//! The network edge (L8): a dependency-free TCP server in front of the
+//! fleet, speaking the [`wire`](super::wire) `akda-wire/1` framing.
+//!
+//! `akda serve --fleet --listen ADDR` binds a [`NetServer`] over the
+//! in-process [`FleetClient`]; remote [`NetClient`]s then score any tenant
+//! by name, list the live roster, and observe hot swaps and onboarding —
+//! the registry watcher keeps working underneath, so a NEW model name
+//! published to the registry becomes scorable over an already-open
+//! listener without restart.
+//!
+//! # Connection pipeline
+//!
+//! ```text
+//!  accept thread ──► per-connection reader thread
+//!                         │ decode frame (checksummed)
+//!                         │   malformed → Error{BadFrame} + close
+//!                         │   ModelsRequest → answered inline (roster)
+//!                         ▼
+//!                 ┌─────────────────────┐  shed-oldest on overflow:
+//!                 │ bounded ingress     │  Error{OverCapacity,
+//!                 │ queue (server-wide) │        retry_after_ms}
+//!                 └─────────┬───────────┘
+//!                           ▼ pump thread (paced by max_inflight)
+//!                  FleetClient::submit ──► dispatcher micro-batcher
+//!                           │ reply closure
+//!                           ▼
+//!                 per-connection writer thread ──► TCP
+//! ```
+//!
+//! Three design rules keep one bad client from hurting the rest:
+//!
+//! * **Bounded buffering.** Requests wait in ONE server-wide queue of
+//!   fixed capacity. On overflow the *oldest* waiting request is shed
+//!   with a typed [`ErrorCode::OverCapacity`] frame carrying a
+//!   retry-after hint — freshest-first under overload, and a client
+//!   gets an answer, never a hang.
+//! * **Paced submission.** The pump keeps at most `max_inflight`
+//!   requests inside the fleet dispatcher, so a listener cannot flood
+//!   the shared scoring pool past what it can drain.
+//! * **Per-connection isolation.** Each connection has its own reader
+//!   and writer threads and a private reply channel; a malformed frame
+//!   is answered with `Error{BadFrame}` and closes *that* connection
+//!   only. Replies are routed by the `req_id` the client chose, so one
+//!   connection may pipeline many requests (replies can complete out of
+//!   order — the fleet batches per tenant).
+//!
+//! Everything is instrumented through the process-global [`obs`]
+//! registry: `akda_net_connections`, `akda_net_frames_total{type=..}`,
+//! `akda_net_errors_total{code=..}`, `akda_net_bytes_{in,out}_total`,
+//! `akda_net_sheds_total{reason=..}`, `akda_net_queue_depth`, and the
+//! per-frame `akda_net_frame_seconds` latency histogram. Queue and shed
+//! instruments carry a `listen` label (the bound address), so several
+//! servers in one process — e.g. concurrent integration tests — do not
+//! bleed into each other's readings.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::fleet::{FleetClient, FleetError};
+use super::wire::{self, ErrorCode, Frame, ReadError, WireModel};
+use crate::obs;
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`NetServer::start`].
+#[derive(Debug, Clone, Copy)]
+pub struct NetOptions {
+    /// Capacity of the server-wide ingress queue. An arriving request
+    /// that would overflow it sheds the OLDEST waiting request with an
+    /// [`ErrorCode::OverCapacity`] frame.
+    pub queue_cap: usize,
+    /// Max requests submitted into the fleet dispatcher at once.
+    pub max_inflight: usize,
+    /// Retry hint (milliseconds) carried by shed responses.
+    pub retry_after_ms: u32,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions { queue_cap: 1024, max_inflight: 256, retry_after_ms: 50 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ingress queue
+// ---------------------------------------------------------------------------
+
+/// One admitted score request waiting for a fleet slot.
+struct Pending {
+    req_id: u64,
+    model: String,
+    features: Vec<f64>,
+    /// The owning connection's writer channel.
+    reply_tx: Sender<Frame>,
+    received_at: Instant,
+}
+
+struct IngressState {
+    queue: VecDeque<Pending>,
+    inflight: usize,
+    stopped: bool,
+}
+
+/// The bounded server-wide admission queue (ingress) plus its pacing
+/// state. Readers push, the single pump thread pops; the condvar wakes
+/// the pump on new work AND on in-flight slots freeing up.
+struct Ingress {
+    state: Mutex<IngressState>,
+    cv: Condvar,
+}
+
+impl Ingress {
+    fn new() -> Ingress {
+        Ingress {
+            state: Mutex::new(IngressState {
+                queue: VecDeque::new(),
+                inflight: 0,
+                stopped: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+/// Obs handles resolved once at server start — the per-frame hot path
+/// never touches the registry lock. Error counters are the exception:
+/// they are resolved per occurrence (errors are not the hot path) so
+/// every [`ErrorCode`] gets its own labeled series lazily.
+struct NetMetrics {
+    connections: Arc<obs::Gauge>,
+    frames_score: Arc<obs::Counter>,
+    frames_models: Arc<obs::Counter>,
+    bytes_in: Arc<obs::Counter>,
+    bytes_out: Arc<obs::Counter>,
+    queue_depth: Arc<obs::Gauge>,
+    sheds_queue_full: Arc<obs::Counter>,
+    frame_seconds: Arc<obs::Histogram>,
+}
+
+impl NetMetrics {
+    fn new(listen: &str) -> NetMetrics {
+        NetMetrics {
+            connections: obs::gauge_with("akda_net_connections", &[("listen", listen)]),
+            frames_score: obs::counter_with(
+                "akda_net_frames_total",
+                &[("type", "score_request")],
+            ),
+            frames_models: obs::counter_with(
+                "akda_net_frames_total",
+                &[("type", "models_request")],
+            ),
+            bytes_in: obs::counter("akda_net_bytes_in_total"),
+            bytes_out: obs::counter("akda_net_bytes_out_total"),
+            queue_depth: obs::gauge_with("akda_net_queue_depth", &[("listen", listen)]),
+            sheds_queue_full: obs::counter_with(
+                "akda_net_sheds_total",
+                &[("listen", listen), ("reason", "queue_full")],
+            ),
+            frame_seconds: obs::histogram("akda_net_frame_seconds"),
+        }
+    }
+
+    fn error(code: ErrorCode) {
+        obs::counter_with("akda_net_errors_total", &[("code", code.name())]).inc();
+    }
+}
+
+/// Map a fleet rejection to its wire frame.
+fn error_frame(req_id: u64, err: &FleetError) -> Frame {
+    let (code, retry_after_ms) = match err {
+        FleetError::UnknownModel { .. } => (ErrorCode::UnknownModel, 0),
+        FleetError::WrongDim { .. } => (ErrorCode::WrongDim, 0),
+        FleetError::ServiceDown => (ErrorCode::ServiceDown, 0),
+        FleetError::OverCapacity { retry_after_ms } => {
+            (ErrorCode::OverCapacity, *retry_after_ms)
+        }
+    };
+    Frame::Error { req_id, code, retry_after_ms, message: err.to_string() }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// TCP front of a [`FleetService`](super::FleetService) — see the module
+/// docs for the pipeline. Bind with [`NetServer::start`]; dropping the
+/// server closes the listener and every connection and joins all its
+/// threads.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    ingress: Arc<Ingress>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    pump: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:4780"`; port 0 picks a free one —
+    /// read it back from [`NetServer::local_addr`]) and start serving
+    /// `client`'s fleet over it.
+    pub fn start(addr: &str, client: FleetClient, opts: NetOptions) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding wire listener on {addr}"))?;
+        let local_addr = listener.local_addr().context("listener local addr")?;
+        let listen_label = local_addr.to_string();
+        let metrics = Arc::new(NetMetrics::new(&listen_label));
+        let stop = Arc::new(AtomicBool::new(false));
+        let ingress = Arc::new(Ingress::new());
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let pump = std::thread::Builder::new()
+            .name("akda-net-pump".into())
+            .spawn({
+                let ingress = ingress.clone();
+                let client = client.clone();
+                let metrics = metrics.clone();
+                let max_inflight = opts.max_inflight.max(1);
+                move || Self::pump_loop(&ingress, &client, &metrics, max_inflight)
+            })
+            .expect("spawn net pump");
+
+        let accept = std::thread::Builder::new()
+            .name("akda-net-accept".into())
+            .spawn({
+                let stop = stop.clone();
+                let ingress = ingress.clone();
+                let conns = conns.clone();
+                let threads = threads.clone();
+                let metrics = metrics.clone();
+                let queue_cap = opts.queue_cap.max(1);
+                let retry_after_ms = opts.retry_after_ms;
+                move || {
+                    let next_conn = AtomicU64::new(0);
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let conn_id = next_conn.fetch_add(1, Ordering::Relaxed);
+                        Self::spawn_connection(
+                            conn_id,
+                            stream,
+                            &client,
+                            &ingress,
+                            &conns,
+                            &threads,
+                            &metrics,
+                            queue_cap,
+                            retry_after_ms,
+                        );
+                    }
+                }
+            })
+            .expect("spawn net accept");
+
+        Ok(NetServer {
+            local_addr,
+            stop,
+            ingress,
+            conns,
+            threads,
+            accept: Some(accept),
+            pump: Some(pump),
+        })
+    }
+
+    /// The address actually bound (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Requests currently waiting in the ingress queue (tests/monitoring;
+    /// the live gauge is `akda_net_queue_depth{listen=..}`).
+    pub fn queue_depth(&self) -> usize {
+        self.ingress.state.lock().expect("ingress").queue.len()
+    }
+
+    /// The pump: moves admitted requests into the fleet, keeping at most
+    /// `max_inflight` outstanding so the listener cannot flood the
+    /// shared scoring pool. Reply closures route straight to the owning
+    /// connection's writer channel.
+    fn pump_loop(
+        ingress: &Arc<Ingress>,
+        client: &FleetClient,
+        metrics: &Arc<NetMetrics>,
+        max_inflight: usize,
+    ) {
+        loop {
+            let pending = {
+                let mut st = ingress.state.lock().expect("ingress");
+                loop {
+                    if st.stopped {
+                        return;
+                    }
+                    if !st.queue.is_empty() && st.inflight < max_inflight {
+                        break;
+                    }
+                    st = ingress.cv.wait(st).expect("ingress");
+                }
+                st.inflight += 1;
+                let p = st.queue.pop_front().expect("non-empty ingress queue");
+                metrics.queue_depth.set(st.queue.len() as f64);
+                p
+            };
+            let Pending { req_id, model, features, reply_tx, received_at } = pending;
+            let ingress = ingress.clone();
+            let metrics = metrics.clone();
+            client.submit(&model, features, move |result| {
+                let frame = match result {
+                    Ok(scores) => Frame::ScoreResponse { req_id, scores },
+                    Err(e) => {
+                        let f = error_frame(req_id, &e);
+                        if let Frame::Error { code, .. } = &f {
+                            NetMetrics::error(*code);
+                        }
+                        f
+                    }
+                };
+                let _ = reply_tx.send(frame);
+                metrics.frame_seconds.record(received_at.elapsed().as_secs_f64());
+                let mut st = ingress.state.lock().expect("ingress");
+                st.inflight -= 1;
+                ingress.cv.notify_all();
+            });
+        }
+    }
+
+    /// Admit one score request, shedding the OLDEST waiting request on
+    /// overflow — under sustained overload every client keeps getting
+    /// answers (typed, with a retry hint) and the freshest traffic wins.
+    fn admit(
+        ingress: &Ingress,
+        metrics: &NetMetrics,
+        queue_cap: usize,
+        retry_after_ms: u32,
+        pending: Pending,
+    ) {
+        let shed = {
+            let mut st = ingress.state.lock().expect("ingress");
+            if st.stopped {
+                let frame = error_frame(pending.req_id, &FleetError::ServiceDown);
+                let _ = pending.reply_tx.send(frame);
+                return;
+            }
+            let shed = if st.queue.len() >= queue_cap { st.queue.pop_front() } else { None };
+            st.queue.push_back(pending);
+            metrics.queue_depth.set(st.queue.len() as f64);
+            ingress.cv.notify_all();
+            shed
+        };
+        if let Some(old) = shed {
+            metrics.sheds_queue_full.inc();
+            NetMetrics::error(ErrorCode::OverCapacity);
+            let err = FleetError::OverCapacity { retry_after_ms };
+            let _ = old.reply_tx.send(error_frame(old.req_id, &err));
+        }
+    }
+
+    /// Start the reader + writer thread pair of one connection.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_connection(
+        conn_id: u64,
+        stream: TcpStream,
+        client: &FleetClient,
+        ingress: &Arc<Ingress>,
+        conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+        threads: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+        metrics: &Arc<NetMetrics>,
+        queue_cap: usize,
+        retry_after_ms: u32,
+    ) {
+        let _ = stream.set_nodelay(true);
+        let Ok(write_half) = stream.try_clone() else { return };
+        let Ok(registered) = stream.try_clone() else { return };
+        conns.lock().expect("conns").insert(conn_id, registered);
+        metrics.connections.add(1.0);
+
+        let (reply_tx, reply_rx) = channel::<Frame>();
+
+        let writer = std::thread::Builder::new()
+            .name(format!("akda-net-write-{conn_id}"))
+            .spawn({
+                let metrics = metrics.clone();
+                move || Self::writer_loop(write_half, reply_rx, &metrics)
+            })
+            .expect("spawn net writer");
+
+        let reader = std::thread::Builder::new()
+            .name(format!("akda-net-read-{conn_id}"))
+            .spawn({
+                let client = client.clone();
+                let ingress = ingress.clone();
+                let conns = conns.clone();
+                let metrics = metrics.clone();
+                move || {
+                    Self::reader_loop(
+                        stream,
+                        reply_tx,
+                        &client,
+                        &ingress,
+                        &metrics,
+                        queue_cap,
+                        retry_after_ms,
+                    );
+                    conns.lock().expect("conns").remove(&conn_id);
+                    metrics.connections.add(-1.0);
+                }
+            })
+            .expect("spawn net reader");
+
+        let mut ts = threads.lock().expect("threads");
+        ts.push(writer);
+        ts.push(reader);
+    }
+
+    /// Read frames until the peer closes, the transport dies, or a frame
+    /// fails to decode. A malformed frame gets a typed `Error{BadFrame}`
+    /// answer and closes this connection — once the framing is
+    /// untrustworthy there is no safe way to resynchronise the stream —
+    /// but never panics and never touches other connections.
+    fn reader_loop(
+        mut stream: TcpStream,
+        reply_tx: Sender<Frame>,
+        client: &FleetClient,
+        ingress: &Ingress,
+        metrics: &NetMetrics,
+        queue_cap: usize,
+        retry_after_ms: u32,
+    ) {
+        loop {
+            match wire::read_frame(&mut stream) {
+                Ok((frame, n)) => {
+                    metrics.bytes_in.add(n as u64);
+                    match frame {
+                        Frame::ScoreRequest { req_id, model, features } => {
+                            metrics.frames_score.inc();
+                            let pending = Pending {
+                                req_id,
+                                model,
+                                features,
+                                reply_tx: reply_tx.clone(),
+                                received_at: Instant::now(),
+                            };
+                            Self::admit(ingress, metrics, queue_cap, retry_after_ms, pending);
+                        }
+                        Frame::ModelsRequest { req_id } => {
+                            metrics.frames_models.inc();
+                            let models = client
+                                .roster()
+                                .into_iter()
+                                .map(|(name, dim, version)| WireModel {
+                                    name,
+                                    input_dim: dim as u32,
+                                    version,
+                                })
+                                .collect();
+                            let _ = reply_tx.send(Frame::ModelsResponse { req_id, models });
+                        }
+                        // response-type frames have no business arriving
+                        // at a server; protocol violation, close
+                        other => {
+                            NetMetrics::error(ErrorCode::BadFrame);
+                            let _ = reply_tx.send(Frame::Error {
+                                req_id: other.req_id(),
+                                code: ErrorCode::BadFrame,
+                                retry_after_ms: 0,
+                                message: "unexpected frame type from a client".to_string(),
+                            });
+                            break;
+                        }
+                    }
+                }
+                // clean close at a frame boundary, or mid-frame
+                // disconnect — either way the peer is gone
+                Err(ReadError::Eof) | Err(ReadError::Io(_)) => break,
+                Err(ReadError::Malformed(why)) => {
+                    NetMetrics::error(ErrorCode::BadFrame);
+                    let _ = reply_tx.send(Frame::Error {
+                        req_id: 0,
+                        code: ErrorCode::BadFrame,
+                        retry_after_ms: 0,
+                        message: why,
+                    });
+                    break;
+                }
+            }
+        }
+        // dropping reply_tx lets the writer drain outstanding replies
+        // (in-flight fleet work may still complete) and then exit
+    }
+
+    /// Serialize every reply for one connection. Write failures mean the
+    /// peer is gone: stop writing, let the channel drain into the void.
+    fn writer_loop(mut stream: TcpStream, rx: Receiver<Frame>, metrics: &NetMetrics) {
+        for frame in rx {
+            match wire::write_frame(&mut stream, &frame) {
+                Ok(n) => metrics.bytes_out.add(n as u64),
+                Err(_) => break,
+            }
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // stop the pump; still-queued requests are abandoned (their
+        // connections are about to be shut down anyway)
+        {
+            let mut st = self.ingress.state.lock().expect("ingress");
+            st.stopped = true;
+            st.queue.clear();
+            self.ingress.cv.notify_all();
+        }
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect_timeout(&self.local_addr, Duration::from_secs(1));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // shut every connection: readers see EOF/error and exit, writers
+        // drain and exit once the last reply sender drops
+        for (_, stream) in self.conns.lock().expect("conns").drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let threads: Vec<_> = std::mem::take(&mut *self.threads.lock().expect("threads"));
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The client
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`NetClient::score`] call: per-class scores, or the
+/// server's typed rejection (which is an *answer*, not a transport
+/// failure — transport failures are `Err` on the call itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetReply {
+    Scores(Vec<f64>),
+    Rejected { code: ErrorCode, retry_after_ms: u32, message: String },
+}
+
+/// Blocking `akda-wire/1` client over one TCP connection. Used by the
+/// integration tests, `akda client`, and the `--connect` mode of the
+/// `fleet_load` bench; doubles as the reference implementation of the
+/// protocol's client side.
+///
+/// One call at a time is the simple mode ([`NetClient::score`] /
+/// [`NetClient::models`]); the split [`NetClient::send_score`] +
+/// [`NetClient::recv`] surface pipelines many requests on one
+/// connection, matching replies back by `req_id`.
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to a [`NetServer`]. `read_timeout` bounds every blocking
+    /// receive, so a wedged server surfaces as an error, not a hang.
+    pub fn connect(addr: impl ToSocketAddrs, read_timeout: Duration) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connecting to akda wire server")?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .context("setting wire read timeout")?;
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one score request without waiting; returns its `req_id` for
+    /// matching the eventual reply (pipelining surface).
+    pub fn send_score(&mut self, model: &str, features: &[f64]) -> Result<u64> {
+        let req_id = self.fresh_id();
+        let frame = Frame::ScoreRequest {
+            req_id,
+            model: model.to_string(),
+            features: features.to_vec(),
+        };
+        wire::write_frame(&mut self.stream, &frame).context("sending score request")?;
+        Ok(req_id)
+    }
+
+    /// Receive the next frame from the server (any type, any `req_id`).
+    pub fn recv(&mut self) -> Result<Frame> {
+        match wire::read_frame(&mut self.stream) {
+            Ok((frame, _)) => Ok(frame),
+            Err(e) => Err(anyhow::anyhow!("receiving wire frame: {e}")),
+        }
+    }
+
+    /// Score `features` against tenant `model`, blocking for the answer.
+    pub fn score(&mut self, model: &str, features: &[f64]) -> Result<NetReply> {
+        let req_id = self.send_score(model, features)?;
+        loop {
+            match self.recv()? {
+                Frame::ScoreResponse { req_id: id, scores } if id == req_id => {
+                    return Ok(NetReply::Scores(scores));
+                }
+                Frame::Error { req_id: id, code, retry_after_ms, message }
+                    if id == req_id || id == 0 =>
+                {
+                    return Ok(NetReply::Rejected { code, retry_after_ms, message });
+                }
+                // a stale reply to an earlier pipelined request — skip
+                _ => continue,
+            }
+        }
+    }
+
+    /// The server's live tenant roster (name, input dim, served version).
+    pub fn models(&mut self) -> Result<Vec<WireModel>> {
+        let req_id = self.fresh_id();
+        wire::write_frame(&mut self.stream, &Frame::ModelsRequest { req_id })
+            .context("sending models request")?;
+        loop {
+            match self.recv()? {
+                Frame::ModelsResponse { req_id: id, models } if id == req_id => {
+                    return Ok(models);
+                }
+                Frame::Error { req_id: id, code, message, .. } if id == req_id => {
+                    anyhow::bail!("models request rejected: {code}: {message}");
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Write raw bytes onto the connection — the torture tests' and
+    /// `akda client --probe`'s way of sending garbage past the encoder.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        use std::io::Write;
+        self.stream.write_all(bytes).context("sending raw bytes")?;
+        Ok(())
+    }
+
+    /// Half-close the sending direction (the server sees a clean EOF).
+    pub fn shutdown_write(&mut self) -> Result<()> {
+        self.stream.shutdown(Shutdown::Write).context("shutting down write half")?;
+        Ok(())
+    }
+}

@@ -1,0 +1,599 @@
+//! `akda-wire/1` — the length-prefixed binary framing the network edge
+//! (`coordinator::net`) speaks over TCP.
+//!
+//! Every frame is a fixed 18-byte header followed by a typed body:
+//!
+//! ```text
+//!  offset  size  field
+//!  0       4     magic  b"AKDW"
+//!  4       1     protocol version (1)
+//!  5       1     frame type (see [`Frame`])
+//!  6       4     body length, u32 LE (<= MAX_BODY_LEN)
+//!  10      8     FNV-1a 64 checksum, u64 LE, over bytes 0..10 ++ body
+//!  18      len   body
+//! ```
+//!
+//! The checksum covers the *entire* frame except itself — header fields
+//! included — so any byte mutation anywhere (magic, type, a length made
+//! shorter or longer, one bit of one f64) is rejected with a typed
+//! [`DecodeError`], never decoded into a plausible-but-wrong frame. This
+//! mirrors the `.akda` artifact format's stance: corruption is a checksum
+//! error, not garbage data (same [`fnv1a64`] implementation).
+//!
+//! All integers and f64s are little-endian. Strings are u16-length-
+//! prefixed UTF-8. The codec is pure (`encode`/`decode` over byte
+//! slices); [`write_frame`]/[`read_frame`] are the blocking-I/O wrappers
+//! the server and [`NetClient`](crate::coordinator::net::NetClient) use.
+//!
+//! ```
+//! use akda::coordinator::wire::{decode, encode, Frame};
+//!
+//! let frame = Frame::ScoreRequest {
+//!     req_id: 7,
+//!     model: "eth80".into(),
+//!     features: vec![1.0, -2.5],
+//! };
+//! let bytes = encode(&frame);
+//! let (back, consumed) = decode(&bytes).unwrap();
+//! assert_eq!(back, frame);
+//! assert_eq!(consumed, bytes.len());
+//! // flip one bit anywhere: the frame is rejected, not misread
+//! let mut bad = bytes.clone();
+//! bad[20] ^= 0x01;
+//! assert!(decode(&bad).is_err());
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::model::artifact::fnv1a64;
+
+/// Frame magic: the first four bytes of every `akda-wire/1` frame.
+pub const MAGIC: [u8; 4] = *b"AKDW";
+/// Protocol version carried in byte 4 of the header.
+pub const VERSION: u8 = 1;
+/// Fixed header size (magic + version + type + body len + checksum).
+pub const HEADER_LEN: usize = 18;
+/// Hard cap on a frame body. A length prefix above this is a protocol
+/// violation answered (and rejected) immediately — a client cannot make
+/// the server buffer unbounded garbage by lying about the length.
+pub const MAX_BODY_LEN: u32 = 1 << 22; // 4 MiB
+
+const TYPE_SCORE_REQUEST: u8 = 1;
+const TYPE_SCORE_RESPONSE: u8 = 2;
+const TYPE_ERROR: u8 = 3;
+const TYPE_MODELS_REQUEST: u8 = 4;
+const TYPE_MODELS_RESPONSE: u8 = 5;
+
+/// Typed error codes carried in [`Frame::Error`] — the wire image of
+/// [`FleetError`](crate::coordinator::FleetError) plus the two codes only
+/// the network edge can produce (`OverCapacity`, `BadFrame`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// No tenant with the requested model id.
+    UnknownModel,
+    /// Feature vector width does not match the tenant's input dim.
+    WrongDim,
+    /// The fleet behind the listener is shutting down.
+    ServiceDown,
+    /// The ingress queue shed this request; retry after the hinted delay.
+    OverCapacity,
+    /// The bytes received were not a valid `akda-wire/1` frame.
+    BadFrame,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::UnknownModel => 1,
+            ErrorCode::WrongDim => 2,
+            ErrorCode::ServiceDown => 3,
+            ErrorCode::OverCapacity => 4,
+            ErrorCode::BadFrame => 5,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        Some(match b {
+            1 => ErrorCode::UnknownModel,
+            2 => ErrorCode::WrongDim,
+            3 => ErrorCode::ServiceDown,
+            4 => ErrorCode::OverCapacity,
+            5 => ErrorCode::BadFrame,
+            _ => return None,
+        })
+    }
+
+    /// Stable lower-snake name, used as the `code` metrics label.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::UnknownModel => "unknown_model",
+            ErrorCode::WrongDim => "wrong_dim",
+            ErrorCode::ServiceDown => "service_down",
+            ErrorCode::OverCapacity => "over_capacity",
+            ErrorCode::BadFrame => "bad_frame",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One served tenant as reported by [`Frame::ModelsResponse`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireModel {
+    pub name: String,
+    pub input_dim: u32,
+    pub version: u32,
+}
+
+/// One `akda-wire/1` frame. Requests carry a client-chosen `req_id`
+/// echoed verbatim in the matching response, so one connection can keep
+/// many requests in flight (the fleet batches per tenant, so replies may
+/// complete out of order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Score `features` against tenant `model`.
+    ScoreRequest { req_id: u64, model: String, features: Vec<f64> },
+    /// Per-class scores for the matching request.
+    ScoreResponse { req_id: u64, scores: Vec<f64> },
+    /// Typed failure for the matching request (`req_id` 0 when the
+    /// request could not even be parsed). `retry_after_ms` is nonzero
+    /// only for [`ErrorCode::OverCapacity`].
+    Error { req_id: u64, code: ErrorCode, retry_after_ms: u32, message: String },
+    /// Ask for the served tenant roster.
+    ModelsRequest { req_id: u64 },
+    /// The roster: name, input dim, and served registry version per
+    /// tenant — how a client observes hot swaps and onboarding over TCP.
+    ModelsResponse { req_id: u64, models: Vec<WireModel> },
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::ScoreRequest { .. } => TYPE_SCORE_REQUEST,
+            Frame::ScoreResponse { .. } => TYPE_SCORE_RESPONSE,
+            Frame::Error { .. } => TYPE_ERROR,
+            Frame::ModelsRequest { .. } => TYPE_MODELS_REQUEST,
+            Frame::ModelsResponse { .. } => TYPE_MODELS_RESPONSE,
+        }
+    }
+
+    /// The request id this frame carries (every frame type has one).
+    pub fn req_id(&self) -> u64 {
+        match self {
+            Frame::ScoreRequest { req_id, .. }
+            | Frame::ScoreResponse { req_id, .. }
+            | Frame::Error { req_id, .. }
+            | Frame::ModelsRequest { req_id }
+            | Frame::ModelsResponse { req_id, .. } => *req_id,
+        }
+    }
+}
+
+/// Why a byte sequence failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Not enough bytes for a whole frame yet — on a live stream this
+    /// means "read more", on a fixed buffer it means "truncated".
+    /// `need` is the total frame size once the header is readable.
+    Incomplete { need: usize },
+    /// The bytes can never be a valid frame: bad magic, unknown version
+    /// or type, oversized length, checksum mismatch, malformed body.
+    Malformed(String),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Incomplete { need } => {
+                write!(f, "incomplete frame (need {need} bytes)")
+            }
+            DecodeError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    debug_assert!(bytes.len() <= u16::MAX as usize, "string too long for wire");
+    out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn encode_body(frame: &Frame) -> Vec<u8> {
+    let mut b = Vec::new();
+    match frame {
+        Frame::ScoreRequest { req_id, model, features } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+            put_str(&mut b, model);
+            b.extend_from_slice(&(features.len() as u32).to_le_bytes());
+            for v in features {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::ScoreResponse { req_id, scores } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+            b.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+            for v in scores {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Error { req_id, code, retry_after_ms, message } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+            b.push(code.as_u8());
+            b.extend_from_slice(&retry_after_ms.to_le_bytes());
+            put_str(&mut b, message);
+        }
+        Frame::ModelsRequest { req_id } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+        }
+        Frame::ModelsResponse { req_id, models } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+            b.extend_from_slice(&(models.len() as u32).to_le_bytes());
+            for m in models {
+                put_str(&mut b, &m.name);
+                b.extend_from_slice(&m.input_dim.to_le_bytes());
+                b.extend_from_slice(&m.version.to_le_bytes());
+            }
+        }
+    }
+    b
+}
+
+/// Encode one frame to its wire bytes (header + checksummed body).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let body = encode_body(frame);
+    debug_assert!(body.len() <= MAX_BODY_LEN as usize, "frame body over the wire cap");
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame.type_byte());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    // checksum over everything so far (magic, version, type, len) + body
+    let mut sum = fnv1a64(&out);
+    sum = fnv1a64_concat(sum, &body);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Continue an FNV-1a 64 hash over more bytes (the artifact module's
+/// `fnv1a64` hashes one slice; frames hash header and body separately).
+fn fnv1a64_concat(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Cursor over a frame body that fails loudly on any inconsistency.
+struct Body<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Body<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError::Malformed(format!(
+                "body ends early: wanted {n} bytes at offset {}, body is {} bytes",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>, DecodeError> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            DecodeError::Malformed("f64 count overflows".to_string())
+        })?)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn string(&mut self) -> Result<String, DecodeError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| DecodeError::Malformed("string is not UTF-8".to_string()))
+    }
+
+    fn finish(self) -> Result<(), DecodeError> {
+        if self.pos != self.buf.len() {
+            return Err(DecodeError::Malformed(format!(
+                "{} trailing bytes after the body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_body(frame_type: u8, body: &[u8]) -> Result<Frame, DecodeError> {
+    let mut b = Body { buf: body, pos: 0 };
+    let frame = match frame_type {
+        TYPE_SCORE_REQUEST => {
+            let req_id = b.u64()?;
+            let model = b.string()?;
+            let n = b.u32()? as usize;
+            Frame::ScoreRequest { req_id, model, features: b.f64s(n)? }
+        }
+        TYPE_SCORE_RESPONSE => {
+            let req_id = b.u64()?;
+            let n = b.u32()? as usize;
+            Frame::ScoreResponse { req_id, scores: b.f64s(n)? }
+        }
+        TYPE_ERROR => {
+            let req_id = b.u64()?;
+            let code = b.u8()?;
+            let code = ErrorCode::from_u8(code)
+                .ok_or_else(|| DecodeError::Malformed(format!("unknown error code {code}")))?;
+            let retry_after_ms = b.u32()?;
+            Frame::Error { req_id, code, retry_after_ms, message: b.string()? }
+        }
+        TYPE_MODELS_REQUEST => Frame::ModelsRequest { req_id: b.u64()? },
+        TYPE_MODELS_RESPONSE => {
+            let req_id = b.u64()?;
+            let n = b.u32()? as usize;
+            let mut models = Vec::new();
+            for _ in 0..n {
+                let name = b.string()?;
+                let input_dim = b.u32()?;
+                let version = b.u32()?;
+                models.push(WireModel { name, input_dim, version });
+            }
+            Frame::ModelsResponse { req_id, models }
+        }
+        other => return Err(DecodeError::Malformed(format!("unknown frame type {other}"))),
+    };
+    b.finish()?;
+    Ok(frame)
+}
+
+/// Decode exactly one frame from the front of `buf`. Returns the frame
+/// and the bytes consumed (trailing bytes belong to the next frame).
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), DecodeError> {
+    if buf.len() < HEADER_LEN {
+        return Err(DecodeError::Incomplete { need: HEADER_LEN });
+    }
+    if buf[0..4] != MAGIC {
+        return Err(DecodeError::Malformed(format!(
+            "bad magic {:02x?} (expected {:02x?} — not an akda-wire stream)",
+            &buf[0..4],
+            MAGIC
+        )));
+    }
+    if buf[4] != VERSION {
+        return Err(DecodeError::Malformed(format!(
+            "unsupported wire version {} (this side speaks {VERSION})",
+            buf[4]
+        )));
+    }
+    let frame_type = buf[5];
+    let body_len = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    if body_len > MAX_BODY_LEN {
+        return Err(DecodeError::Malformed(format!(
+            "oversized frame: body claims {body_len} bytes (cap {MAX_BODY_LEN})"
+        )));
+    }
+    let total = HEADER_LEN + body_len as usize;
+    if buf.len() < total {
+        return Err(DecodeError::Incomplete { need: total });
+    }
+    let stored = u64::from_le_bytes(buf[10..18].try_into().unwrap());
+    let mut sum = fnv1a64(&buf[0..10]);
+    sum = fnv1a64_concat(sum, &buf[HEADER_LEN..total]);
+    if stored != sum {
+        return Err(DecodeError::Malformed(format!(
+            "checksum mismatch: stored {stored:#018x}, computed {sum:#018x}"
+        )));
+    }
+    let frame = decode_body(frame_type, &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+// ---------------------------------------------------------------------------
+// Blocking I/O wrappers
+// ---------------------------------------------------------------------------
+
+/// Why [`read_frame`] stopped.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The peer closed the connection cleanly at a frame boundary.
+    Eof,
+    /// The connection died mid-frame (or another transport error).
+    Io(std::io::Error),
+    /// The header/body arrived but is not a valid frame.
+    Malformed(String),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Eof => write!(f, "connection closed"),
+            ReadError::Io(e) => write!(f, "transport error: {e}"),
+            ReadError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Write one frame; returns the bytes put on the wire.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<usize> {
+    let bytes = encode(frame);
+    w.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+/// Read exactly one frame. EOF before the first header byte is a clean
+/// close ([`ReadError::Eof`]); EOF anywhere later is a mid-frame
+/// disconnect ([`ReadError::Io`]). Returns the frame and its wire size.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize), ReadError> {
+    let mut header = [0u8; HEADER_LEN];
+    // first byte separately: EOF here is a clean close, not an error
+    match r.read(&mut header[..1]) {
+        Ok(0) => return Err(ReadError::Eof),
+        Ok(_) => {}
+        Err(e) => return Err(ReadError::Io(e)),
+    }
+    r.read_exact(&mut header[1..]).map_err(ReadError::Io)?;
+    // validate the header before trusting the length prefix
+    let body_len = match decode(&header) {
+        // header alone never completes a frame with a body; `need` is the
+        // full frame size, so the body is need - HEADER_LEN
+        Err(DecodeError::Incomplete { need }) => need - HEADER_LEN,
+        Err(DecodeError::Malformed(why)) => return Err(ReadError::Malformed(why)),
+        // a body-less frame could in principle complete here, but every
+        // frame type carries at least a req_id — treat it as malformed
+        Ok(_) => return Err(ReadError::Malformed("empty frame body".to_string())),
+    };
+    let mut bytes = Vec::with_capacity(HEADER_LEN + body_len);
+    bytes.extend_from_slice(&header);
+    bytes.resize(HEADER_LEN + body_len, 0);
+    r.read_exact(&mut bytes[HEADER_LEN..]).map_err(ReadError::Io)?;
+    match decode(&bytes) {
+        Ok((frame, n)) => Ok((frame, n)),
+        Err(e) => Err(ReadError::Malformed(e.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames() -> Vec<Frame> {
+        vec![
+            Frame::ScoreRequest { req_id: 1, model: "eth80".into(), features: vec![1.5, -2.0] },
+            Frame::ScoreRequest { req_id: 2, model: String::new(), features: vec![] },
+            Frame::ScoreResponse { req_id: 3, scores: vec![0.25; 7] },
+            Frame::Error {
+                req_id: 4,
+                code: ErrorCode::OverCapacity,
+                retry_after_ms: 50,
+                message: "shed".into(),
+            },
+            Frame::ModelsRequest { req_id: 5 },
+            Frame::ModelsResponse {
+                req_id: 6,
+                models: vec![WireModel { name: "aa".into(), input_dim: 6, version: 2 }],
+            },
+        ]
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        for frame in frames() {
+            let bytes = encode(&frame);
+            let (back, n) = decode(&bytes).unwrap();
+            assert_eq!(back, frame);
+            assert_eq!(n, bytes.len());
+        }
+    }
+
+    #[test]
+    fn streamed_frames_decode_one_at_a_time() {
+        let all: Vec<u8> = frames().iter().flat_map(encode).collect();
+        let mut pos = 0;
+        for frame in frames() {
+            let (back, n) = decode(&all[pos..]).unwrap();
+            assert_eq!(back, frame);
+            pos += n;
+        }
+        assert_eq!(pos, all.len());
+    }
+
+    #[test]
+    fn every_prefix_is_incomplete_never_ok() {
+        let bytes = encode(&frames()[0]);
+        for cut in 0..bytes.len() {
+            match decode(&bytes[..cut]) {
+                Err(DecodeError::Incomplete { .. }) => {}
+                other => panic!("prefix of {cut} bytes must be Incomplete, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_type_len_and_code_are_malformed() {
+        let good = encode(&frames()[0]);
+        let mutate = |at: usize, to: u8| {
+            let mut b = good.clone();
+            b[at] = to;
+            decode(&b)
+        };
+        assert!(matches!(mutate(0, b'X'), Err(DecodeError::Malformed(_))), "magic");
+        assert!(matches!(mutate(4, 9), Err(DecodeError::Malformed(_))), "version");
+        assert!(matches!(mutate(5, 99), Err(DecodeError::Malformed(_))), "type");
+        // oversized length prefix: rejected before any body is wanted
+        let mut big = good.clone();
+        big[6..10].copy_from_slice(&(MAX_BODY_LEN + 1).to_le_bytes());
+        match decode(&big) {
+            Err(DecodeError::Malformed(why)) => assert!(why.contains("oversized"), "{why}"),
+            other => panic!("oversized len must be Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_frame_distinguishes_clean_close_from_mid_frame_disconnect() {
+        let bytes = encode(&frames()[0]);
+        // clean close: empty stream
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty), Err(ReadError::Eof)));
+        // mid-frame disconnect: stream ends inside the body
+        let mut cut: &[u8] = &bytes[..bytes.len() - 3];
+        assert!(matches!(read_frame(&mut cut), Err(ReadError::Io(_))));
+        // whole frame: fine
+        let mut whole: &[u8] = &bytes;
+        let (frame, n) = read_frame(&mut whole).unwrap();
+        assert_eq!(frame, frames()[0]);
+        assert_eq!(n, bytes.len());
+    }
+
+    #[test]
+    fn error_code_round_trips_and_names_are_stable() {
+        for code in [
+            ErrorCode::UnknownModel,
+            ErrorCode::WrongDim,
+            ErrorCode::ServiceDown,
+            ErrorCode::OverCapacity,
+            ErrorCode::BadFrame,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::OverCapacity.name(), "over_capacity");
+    }
+}

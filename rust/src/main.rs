@@ -12,6 +12,11 @@
 //!                                 (zero training work on this path)
 //!   serve --fleet                 serve EVERY model in the registry from one
 //!                                 process, routed by model id (L6)
+//!   serve --fleet --listen ADDR   additionally expose the fleet over TCP
+//!                                 speaking akda-wire/1 (L8)
+//!   client --connect ADDR         remote akda-wire/1 client: list the roster,
+//!                                 score a tenant's held-out split, or probe
+//!                                 the server with a malformed frame
 //!   serve --dataset NAME          train in process, then serve scores
 //!   daemon --drop-dir DIR         auto-update: apply NAME.csv drops to model
 //!                                 NAME and republish (fleet hot-swaps it)
@@ -139,6 +144,7 @@ fn main() -> Result<()> {
         "export" => cmd_export(&args),
         "models" => cmd_models(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "daemon" => cmd_daemon(&args),
         "metrics" => cmd_metrics(&args),
         "check" => cmd_check(),
@@ -203,14 +209,27 @@ fn print_help() {
                                             checksums, score — zero training work;\n\
                                             --watch hot-reloads newly published\n\
                                             versions under the running service\n\
-           serve --fleet [--models-dir DIR] [--watch [SECS]]\n\
+           serve --fleet [--models-dir DIR] [--watch [SECS]] [--listen ADDR]\n\
                                             multi-tenant: serve EVERY model in the\n\
                                             registry from one process, requests\n\
                                             routed by model id over one shared\n\
                                             worker pool; unknown ids are protocol-\n\
                                             rejected; --watch hot-swaps any tenant\n\
-                                            republished (e.g. by the daemon) without\n\
-                                            stalling the others\n\
+                                            republished (e.g. by the daemon) AND\n\
+                                            onboards newly published names without\n\
+                                            restart; --listen HOST:PORT fronts the\n\
+                                            fleet with the akda-wire/1 TCP protocol\n\
+                                            (port 0 picks a free port, printed on\n\
+                                            stdout) and stays up serving it\n\
+           client --connect HOST:PORT [--model NAME [--dataset DS] [--cond 10|100]]\n\
+                  [--probe] [--timeout SECS]\n\
+                                            akda-wire/1 client: print the server's\n\
+                                            tenant roster; with --model, score that\n\
+                                            tenant's held-out split over TCP and\n\
+                                            report accuracy (bit-for-bit the served\n\
+                                            model's scores); --probe sends a\n\
+                                            deliberately malformed frame and expects\n\
+                                            a typed error answer\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
                  [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
                                             train a detector bank in process, then\n\
@@ -1007,6 +1026,7 @@ fn parse_metrics_out(args: &Args) -> Result<Option<akda::obs::MetricsWriter>> {
 /// so daemon-republished tenants hot-swap in live.
 fn cmd_serve_fleet(args: &Args) -> Result<()> {
     use akda::coordinator::fleet::{FleetError, FleetOptions, FleetService};
+    use akda::coordinator::net::{NetOptions, NetServer};
     use akda::model::ModelRegistry;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::time::Duration;
@@ -1039,6 +1059,16 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
             poll.as_secs_f64()
         );
     }
+    // the TCP edge starts before the demo traffic, so remote clients can
+    // connect as soon as the line below is printed
+    let net = match args.get("listen") {
+        Some(addr) => {
+            let server = NetServer::start(addr, svc.client(), NetOptions::default())?;
+            println!("fleet: listening on {} (akda-wire/1)", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
 
     // demo traffic per tenant, all routed by model id through one pool
     for (name, version) in &served {
@@ -1096,19 +1126,122 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
         "fleet: {} requests in {} dispatch rounds (max round {}, rejected {})",
         stats.requests, stats.batches, stats.max_batch, stats.rejected
     );
-    match watch {
-        Some(_) => {
-            eprintln!(
-                "fleet demo complete; still serving {} tenants with hot reload — \
-                 Ctrl-C to stop",
-                served.len()
-            );
-            loop {
-                std::thread::sleep(Duration::from_secs(60));
-            }
+    if watch.is_some() || net.is_some() {
+        eprintln!(
+            "fleet demo complete; still serving {} tenants{} — Ctrl-C to stop",
+            served.len(),
+            if net.is_some() { " (in-process and over TCP)" } else { " with hot reload" }
+        );
+        loop {
+            std::thread::sleep(Duration::from_secs(60));
         }
-        None => Ok(()),
     }
+    Ok(())
+}
+
+/// `akda client` — the remote side of `serve --fleet --listen`: connect
+/// over TCP speaking akda-wire/1, print the live tenant roster, and
+/// optionally score one tenant's held-out split (the scores cross the
+/// wire bit-for-bit, so the printed accuracy equals the train-time eval)
+/// or probe the server with a deliberately malformed frame.
+fn cmd_client(args: &Args) -> Result<()> {
+    use akda::coordinator::net::{NetClient, NetReply};
+    use akda::coordinator::wire::Frame;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    let addr = args.get("connect").context("akda client needs --connect HOST:PORT")?;
+    let timeout: f64 = match args.get("timeout") {
+        Some(v) => v.parse().context("--timeout SECS must be a number")?,
+        None => 30.0,
+    };
+    anyhow::ensure!(timeout > 0.0, "--timeout SECS must be positive");
+    let timeout = Duration::from_secs_f64(timeout);
+    let mut conn = NetClient::connect(addr, timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let roster = conn.models()?;
+    println!("client: {} tenants at {addr}:", roster.len());
+    for m in &roster {
+        println!("  {}@{} (input dim {})", m.name, m.version, m.input_dim);
+    }
+
+    if args.get("probe").is_some() {
+        // bytes that can never be a frame: the server must answer with a
+        // typed BadFrame error and close THIS connection, nothing else
+        conn.send_raw(b"NOT-AKDA-WIRE-AT-ALL-JUST-GARBAGE-BYTES.")?;
+        match conn.recv()? {
+            Frame::Error { code, message, .. } => {
+                println!("probe: typed error frame: {code} ({message})");
+                return Ok(());
+            }
+            other => bail!("probe expected an Error frame, got {other:?}"),
+        }
+    }
+
+    let Some(model) = args.get("model") else {
+        return Ok(());
+    };
+    let Some(tenant) = roster.iter().find(|m| m.name == model) else {
+        let names: Vec<&str> = roster.iter().map(|m| m.name.as_str()).collect();
+        bail!("model {model:?} is not served (roster: {})", names.join(", "));
+    };
+    // demo rows come from a registry dataset — by default the one named
+    // like the model (the `akda train` default naming)
+    let dataset = args.get("dataset").unwrap_or(model);
+    let dspec =
+        akda::data::by_name(dataset).with_context(|| format!("dataset {dataset:?}"))?;
+    let cond = parse_condition(args.get("cond").unwrap_or("100"))?;
+    let split = dspec.split(cond);
+    anyhow::ensure!(
+        split.x_test.cols() == tenant.input_dim as usize,
+        "dataset {dataset:?} has {} features but {}@{} expects {}",
+        split.x_test.cols(),
+        tenant.name,
+        tenant.version,
+        tenant.input_dim
+    );
+    let n = split.x_test.rows();
+    let workers = akda::util::threads::available().clamp(2, 8).min(n.max(1));
+    let correct = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut joins = Vec::new();
+        for w in 0..workers {
+            let (split, correct) = (&split, &correct);
+            joins.push(s.spawn(move || -> Result<()> {
+                let mut conn = NetClient::connect(addr, timeout)?;
+                let mut i = w;
+                while i < n {
+                    match conn.score(model, split.x_test.row(i))? {
+                        NetReply::Scores(scores) => {
+                            if predict(&scores) == split.y_test[i] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        NetReply::Rejected { code, message, .. } => {
+                            bail!("request rejected: {code}: {message}")
+                        }
+                    }
+                    i += workers;
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("client worker panicked")?;
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "client: {}@{} accuracy {:.2}% over {n} requests \
+         ({:.0} req/s, {workers} connections)",
+        tenant.name,
+        tenant.version,
+        100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64,
+        n as f64 / dt
+    );
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -1122,6 +1255,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("fleet").is_some() {
         return cmd_serve_fleet(args);
     }
+    anyhow::ensure!(
+        args.get("listen").is_none(),
+        "--listen requires --fleet (the akda-wire/1 protocol fronts the fleet)"
+    );
 
     // registry path: load a published model — zero training work (the
     // bank is decoded from checksummed tensors; no fit call anywhere)

@@ -1,0 +1,486 @@
+//! Integration: the TCP network edge (L8) — `NetServer` in front of a
+//! `FleetService`, speaking akda-wire/1.
+//!
+//! Pins the PR's acceptance guarantees:
+//!
+//! 1. **Protocol torture** — truncated frames, oversized length
+//!    prefixes, wrong magic, mid-frame disconnects, garbage bytes, and
+//!    interleaved pipelined requests are answered with typed error
+//!    frames or a clean close, never a panic, and never disturb other
+//!    connections or tenants.
+//! 2. **Bit-for-bit transport** — scores over TCP equal the in-process
+//!    `FleetClient` scores exactly (f64s cross the wire as LE bytes).
+//! 3. **Live fleet underneath** — a republished tenant hot-swaps
+//!    visibly over TCP while the other tenant's open connections keep
+//!    answering, and a NEW model name published to the registry becomes
+//!    scorable over the already-open listener without restart.
+//! 4. **Backpressure** — a tiny ingress queue sheds the oldest requests
+//!    with typed `OverCapacity` frames (never hangs), counts them in
+//!    `akda_net_sheds_total`, and the queue-depth gauge recovers to 0.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use akda::coordinator::net::{NetClient, NetOptions, NetReply, NetServer};
+use akda::coordinator::wire::{encode, ErrorCode, Frame, MAGIC, MAX_BODY_LEN, VERSION};
+use akda::coordinator::{DetectorBank, FleetOptions, FleetService};
+use akda::da::akda::Akda;
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::codec::{encode_resume, ExactResume};
+use akda::model::update::train_svm_bank;
+use akda::model::{encode_bank, ModelArtifact, ModelManifest, ModelRegistry, ResumeState};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("akda_net_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train one publishable exact-AKDA tenant (rows returned for requests) —
+/// the same shape `akda train --method akda` publishes.
+fn trained_artifact(dim: usize, n_classes: usize, seed: u64) -> (Mat, ModelArtifact) {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes,
+        n_per_class: vec![12; n_classes],
+        dim,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    });
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let (proj, chol_l) = akda_cfg.fit_with_factor(&x, &labels, n_classes).unwrap();
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, n_classes);
+    let bank = DetectorBank { projection: Box::new(proj), svms };
+    let mut art = encode_bank(&bank, "akda").unwrap();
+    encode_resume(
+        &mut art,
+        &ResumeState::Exact(ExactResume {
+            chol_l,
+            labels: labels.clone(),
+            eps: akda_cfg.eps,
+            n_classes,
+        }),
+    )
+    .unwrap();
+    (x, art)
+}
+
+fn manifest(dim: usize, n_classes: usize) -> ModelManifest {
+    ModelManifest {
+        method: "akda".into(),
+        n_classes,
+        input_dim: dim,
+        ..Default::default()
+    }
+}
+
+/// Registry with tenants `aa` (6 features / 3 classes) and `bb`
+/// (5 features / 2 classes), plus their request rows.
+fn two_tenant_registry(tag: &str, seed: u64) -> (PathBuf, ModelRegistry, Mat, Mat) {
+    let root = tmpdir(tag);
+    let registry = ModelRegistry::open(&root);
+    let (xa, art_a) = trained_artifact(6, 3, seed);
+    let (xb, art_b) = trained_artifact(5, 2, seed + 1);
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+    registry.publish("bb", &art_b, &manifest(5, 2)).unwrap();
+    (root, registry, xa, xb)
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    NetClient::connect(server.local_addr(), RECV_TIMEOUT).unwrap()
+}
+
+/// Acceptance: every malformed-input case is answered with a typed error
+/// frame or a clean close — zero panics — while a healthy connection on
+/// the same server keeps scoring undisturbed throughout.
+#[test]
+fn torture_malformed_input_never_panics_and_never_disturbs_others() {
+    let (root, registry, xa, _xb) = two_tenant_registry("torture", 31);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+
+    // the canary: a good connection opened BEFORE the torture, used
+    // between every case — the abuse must never reach it
+    let mut canary = connect(&server);
+    let canary_scores = match canary.score("aa", xa.row(0)).unwrap() {
+        NetReply::Scores(s) => s,
+        other => panic!("canary must score, got {other:?}"),
+    };
+    assert_eq!(canary_scores.len(), 3);
+
+    let assert_canary_alive = |canary: &mut NetClient| {
+        match canary.score("aa", xa.row(0)).unwrap() {
+            NetReply::Scores(s) => assert_eq!(s, canary_scores, "canary scores must not drift"),
+            other => panic!("canary must keep scoring, got {other:?}"),
+        }
+    };
+
+    // -- wrong magic: typed BadFrame answer, then the connection closes
+    let mut c = connect(&server);
+    c.send_raw(b"XXXXGARBAGE-NOT-A-FRAME-AT-ALL").unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { code: ErrorCode::BadFrame, req_id: 0, .. } => {}
+        other => panic!("wrong magic must get a typed BadFrame, got {other:?}"),
+    }
+    assert!(c.recv().is_err(), "the abused connection must be closed");
+    assert_canary_alive(&mut canary);
+
+    // -- oversized length prefix: rejected from the header alone (the
+    // server must never try to buffer the claimed body)
+    let mut c = connect(&server);
+    let mut header = Vec::new();
+    header.extend_from_slice(&MAGIC);
+    header.push(VERSION);
+    header.push(1); // ScoreRequest
+    header.extend_from_slice(&(MAX_BODY_LEN + 1).to_le_bytes());
+    header.extend_from_slice(&[0u8; 8]); // checksum junk — len is checked first
+    c.send_raw(&header).unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { code: ErrorCode::BadFrame, message, .. } => {
+            assert!(message.contains("oversized"), "{message}");
+        }
+        other => panic!("oversized len must get a typed BadFrame, got {other:?}"),
+    }
+    assert!(c.recv().is_err());
+    assert_canary_alive(&mut canary);
+
+    // -- corrupted body: one flipped bit fails the frame checksum
+    let mut c = connect(&server);
+    let mut bytes = encode(&Frame::ScoreRequest {
+        req_id: 9,
+        model: "aa".into(),
+        features: xa.row(0).to_vec(),
+    });
+    bytes[20] ^= 0x01;
+    c.send_raw(&bytes).unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { code: ErrorCode::BadFrame, message, .. } => {
+            assert!(message.contains("checksum"), "{message}");
+        }
+        other => panic!("a flipped bit must get a typed BadFrame, got {other:?}"),
+    }
+    assert_canary_alive(&mut canary);
+
+    // -- truncated frame + disconnect: the peer vanishes mid-frame; the
+    // server must just drop the connection (nothing to answer)
+    let mut c = connect(&server);
+    let bytes = encode(&Frame::ScoreRequest {
+        req_id: 10,
+        model: "aa".into(),
+        features: xa.row(1).to_vec(),
+    });
+    c.send_raw(&bytes[..10]).unwrap();
+    drop(c);
+    assert_canary_alive(&mut canary);
+
+    // -- clean half-close at a frame boundary: no reply, no error
+    let mut c = connect(&server);
+    c.shutdown_write().unwrap();
+    assert!(c.recv().is_err(), "server closes in response to EOF");
+    assert_canary_alive(&mut canary);
+
+    // -- a response-type frame sent TO the server: protocol violation
+    let mut c = connect(&server);
+    c.send_raw(&encode(&Frame::ScoreResponse { req_id: 4, scores: vec![1.0] })).unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { code: ErrorCode::BadFrame, req_id: 4, .. } => {}
+        other => panic!("a response frame at the server must be rejected, got {other:?}"),
+    }
+    assert_canary_alive(&mut canary);
+
+    // -- wire-level protocol errors are typed too: unknown model id and
+    // wrong feature width come back as error frames on a live connection
+    let mut c = connect(&server);
+    match c.score("nope", &[0.0; 6]).unwrap() {
+        NetReply::Rejected { code: ErrorCode::UnknownModel, message, .. } => {
+            assert!(message.contains("nope"), "{message}");
+        }
+        other => panic!("unknown model must be typed, got {other:?}"),
+    }
+    match c.score("aa", &[0.0; 4]).unwrap() {
+        NetReply::Rejected { code: ErrorCode::WrongDim, message, .. } => {
+            assert!(message.contains("expects 6"), "{message}");
+        }
+        other => panic!("wrong dim must be typed, got {other:?}"),
+    }
+    // ...and the SAME connection still scores afterwards
+    match c.score("aa", xa.row(2)).unwrap() {
+        NetReply::Scores(s) => assert_eq!(s.len(), 3),
+        other => panic!("connection must survive typed rejections, got {other:?}"),
+    }
+    assert_canary_alive(&mut canary);
+
+    drop(canary);
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: one connection pipelines interleaved requests for BOTH
+/// tenants without waiting; every reply is routed back by `req_id` and
+/// is bit-for-bit equal to the in-process `FleetClient` answer.
+#[test]
+fn interleaved_pipelined_requests_route_replies_by_req_id() {
+    let (root, registry, xa, xb) = two_tenant_registry("pipeline", 41);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let fleet = svc.client();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+
+    let mut c = connect(&server);
+    // expected answers from the in-process client, keyed by wire req_id
+    let mut expected = std::collections::BTreeMap::new();
+    for i in 0..6 {
+        let (model, row) = if i % 2 == 0 {
+            ("aa", xa.row(i))
+        } else {
+            ("bb", xb.row(i))
+        };
+        let id = c.send_score(model, row).unwrap();
+        expected.insert(id, fleet.score(model, row.to_vec()).unwrap());
+    }
+    // replies may arrive out of order (per-tenant batching) — collect all
+    for _ in 0..expected.len() {
+        match c.recv().unwrap() {
+            Frame::ScoreResponse { req_id, scores } => {
+                let want = expected.remove(&req_id).expect("unknown or duplicate req_id");
+                assert_eq!(scores, want, "TCP scores must be bit-for-bit in-process scores");
+            }
+            other => panic!("expected a ScoreResponse, got {other:?}"),
+        }
+    }
+    assert!(expected.is_empty(), "every pipelined request must be answered exactly once");
+
+    drop(c);
+    drop(server);
+    drop(fleet);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: end to end over a live fleet — two tenants scored by
+/// concurrent NetClients bit-for-bit against in-process scores; a
+/// republish hot-swaps one tenant visibly over TCP while the OTHER
+/// tenant's already-open connection keeps answering, unchanged.
+#[test]
+fn e2e_bitforbit_scores_and_hot_swap_over_open_connections() {
+    let (root, registry, xa, xb) = two_tenant_registry("e2e", 51);
+    let svc = FleetService::start(
+        &registry,
+        FleetOptions { watch: Some(Duration::from_millis(10)), ..Default::default() },
+    )
+    .unwrap();
+    let fleet = svc.client();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+
+    // the roster reports both tenants with their dims and versions
+    let mut c = connect(&server);
+    let roster = c.models().unwrap();
+    let summary: Vec<(String, u32, u32)> =
+        roster.iter().map(|m| (m.name.clone(), m.input_dim, m.version)).collect();
+    assert_eq!(summary, vec![("aa".into(), 6, 1), ("bb".into(), 5, 1)]);
+
+    // concurrent NetClients on both tenants: bit-for-bit vs in-process
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for w in 0..4 {
+            let (fleet, server, xa, xb) = (fleet.clone(), &server, &xa, &xb);
+            joins.push(s.spawn(move || {
+                let mut c = connect(server);
+                for i in 0..6 {
+                    let (model, x): (&str, &Mat) = if (w + i) % 2 == 0 {
+                        ("aa", xa)
+                    } else {
+                        ("bb", xb)
+                    };
+                    let row = x.row(i % x.rows());
+                    let want = fleet.score(model, row.to_vec()).unwrap();
+                    match c.score(model, row).unwrap() {
+                        NetReply::Scores(got) => assert_eq!(got, want),
+                        other => panic!("score failed: {other:?}"),
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+
+    // long-lived bb connection opened BEFORE the swap
+    let mut bb_conn = connect(&server);
+    let bb_before = match bb_conn.score("bb", xb.row(0)).unwrap() {
+        NetReply::Scores(s) => s,
+        other => panic!("bb must score, got {other:?}"),
+    };
+    let aa_before = match c.score("aa", xa.row(0)).unwrap() {
+        NetReply::Scores(s) => s,
+        other => panic!("aa must score, got {other:?}"),
+    };
+
+    // republish tenant "aa" (fresh fit, same shape) — the fleet watcher
+    // hot-swaps it; the swap must become visible over TCP
+    let (_, art_a2) = trained_artifact(6, 3, 99);
+    registry.publish("aa", &art_a2, &manifest(6, 3)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let roster = c.models().unwrap();
+        let aa_v = roster.iter().find(|m| m.name == "aa").unwrap().version;
+        if aa_v == 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "aa@2 never became visible over TCP");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the swapped tenant answers differently; the other tenant's open
+    // connection is untouched — same connection, same bits
+    let aa_after = match c.score("aa", xa.row(0)).unwrap() {
+        NetReply::Scores(s) => s,
+        other => panic!("aa must still score, got {other:?}"),
+    };
+    assert_ne!(aa_before, aa_after, "the republished model must actually serve");
+    let bb_after = match bb_conn.score("bb", xb.row(0)).unwrap() {
+        NetReply::Scores(s) => s,
+        other => panic!("bb's open connection must stay live, got {other:?}"),
+    };
+    assert_eq!(bb_before, bb_after, "the un-swapped tenant must be bit-for-bit stable");
+
+    drop(c);
+    drop(bb_conn);
+    drop(server);
+    drop(fleet);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: a NEW model name published to the registry is onboarded
+/// by the watcher and becomes scorable over the ALREADY-OPEN listener —
+/// and the already-open connection — without any restart.
+#[test]
+fn new_model_name_onboards_over_the_open_listener() {
+    let root = tmpdir("onboard");
+    let registry = ModelRegistry::open(&root);
+    let (xa, art_a) = trained_artifact(6, 3, 61);
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+
+    let svc = FleetService::start(
+        &registry,
+        FleetOptions { watch: Some(Duration::from_millis(10)), ..Default::default() },
+    )
+    .unwrap();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+
+    let mut c = connect(&server);
+    let names: Vec<String> = c.models().unwrap().into_iter().map(|m| m.name).collect();
+    assert_eq!(names, vec!["aa".to_string()]);
+    // an unknown name is (typed-)rejected before onboarding...
+    let (xz, art_z) = trained_artifact(4, 2, 62);
+    match c.score("zz", xz.row(0)).unwrap() {
+        NetReply::Rejected { code: ErrorCode::UnknownModel, .. } => {}
+        other => panic!("zz must be unknown before publish, got {other:?}"),
+    }
+
+    // ...then the NEW name appears in the registry and joins the fleet
+    registry.publish("zz", &art_z, &manifest(4, 2)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let names: Vec<String> = c.models().unwrap().into_iter().map(|m| m.name).collect();
+        if names == vec!["aa".to_string(), "zz".to_string()] {
+            break;
+        }
+        assert!(Instant::now() < deadline, "zz was never onboarded over TCP");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // scorable over the same connection that predates the publish
+    match c.score("zz", xz.row(0)).unwrap() {
+        NetReply::Scores(s) => assert_eq!(s.len(), 2),
+        other => panic!("onboarded tenant must score, got {other:?}"),
+    }
+    // the original tenant is undisturbed
+    match c.score("aa", xa.row(0)).unwrap() {
+        NetReply::Scores(s) => assert_eq!(s.len(), 3),
+        other => panic!("aa must keep scoring, got {other:?}"),
+    }
+
+    drop(c);
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: with a tiny ingress queue and paced submission, a burst
+/// of pipelined requests gets every excess request answered with a typed
+/// `OverCapacity` frame carrying the configured retry hint (no hangs),
+/// `akda_net_sheds_total` counts the sheds, and the queue-depth gauge
+/// recovers to 0 after the burst.
+#[test]
+fn backpressure_sheds_oldest_with_typed_retry_and_recovers() {
+    let root = tmpdir("shed");
+    let registry = ModelRegistry::open(&root);
+    let (xa, art_a) = trained_artifact(6, 3, 71);
+    registry.publish("aa", &art_a, &manifest(6, 3)).unwrap();
+
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    // queue of 2, one request in the fleet at a time, 7ms retry hint:
+    // the dispatcher's micro-batch window makes each submission take
+    // milliseconds while pipelined frames arrive in microseconds, so a
+    // 50-deep burst MUST overflow the queue deterministically
+    let opts = NetOptions { queue_cap: 2, max_inflight: 1, retry_after_ms: 7 };
+    let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
+    let listen = server.local_addr().to_string();
+
+    let burst = 50;
+    let mut c = connect(&server);
+    for i in 0..burst {
+        c.send_score("aa", xa.row(i % xa.rows())).unwrap();
+    }
+    // every request gets an answer: scores or a typed shed — never a hang
+    // (the canary for "hang" is the client's read timeout)
+    let (mut scored, mut shed) = (0usize, 0usize);
+    for _ in 0..burst {
+        match c.recv().unwrap() {
+            Frame::ScoreResponse { scores, .. } => {
+                assert_eq!(scores.len(), 3);
+                scored += 1;
+            }
+            Frame::Error { code: ErrorCode::OverCapacity, retry_after_ms, message, .. } => {
+                assert_eq!(retry_after_ms, 7, "the shed must carry the retry hint");
+                assert!(message.contains("retry"), "{message}");
+                shed += 1;
+            }
+            other => panic!("expected scores or OverCapacity, got {other:?}"),
+        }
+    }
+    assert_eq!(scored + shed, burst);
+    assert!(shed > 0, "a 50-deep burst against queue_cap=2 must shed");
+    assert!(scored > 0, "the surviving requests must still be scored");
+
+    // the sheds are counted, labeled by this listener
+    let sheds_total = akda::obs::counter_with(
+        "akda_net_sheds_total",
+        &[("listen", &listen), ("reason", "queue_full")],
+    )
+    .get();
+    assert_eq!(sheds_total as usize, shed, "every shed must be counted exactly once");
+
+    // and the queue drains: depth gauge back to 0 after the burst
+    let gauge = akda::obs::gauge_with("akda_net_queue_depth", &[("listen", &listen)]);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (server.queue_depth() > 0 || gauge.get() != 0.0) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.queue_depth(), 0, "the ingress queue must drain");
+    assert_eq!(gauge.get(), 0.0, "the queue-depth gauge must recover to 0");
+
+    drop(c);
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
