@@ -12,7 +12,11 @@
 //! instead drives an already-running `akda serve --fleet --listen` over
 //! TCP speaking akda-wire/1 — same closed-loop clients, same output
 //! schema, latencies measured client-side (so they include the wire) and
-//! `"transport": "tcp"` recorded in the document.
+//! `"transport": "tcp"` recorded in the document. Every TCP request is
+//! traced, so the server-timing echo yields a per-stage breakdown
+//! (`net/read` … `net/write`) recorded as a `stages` object and the
+//! schema bumps to `akda-bench-serve/2` (an old server without the echo
+//! degrades the document back to v1).
 //!
 //! Env: AKDA_FAST=1 → 2 s of load (CI smoke; default 8 s)
 //!      AKDA_SERVE_SECS=S → explicit load window
@@ -20,8 +24,8 @@
 //!      AKDA_CONNECT=ADDR → drive a remote fleet instead of in-process
 //! Run: cargo bench --bench fleet_load [-- --connect HOST:PORT]
 //!
-//! Writes `BENCH_serve.json` (schema `akda-bench-serve/1`, validated in
-//! CI via `akda metrics --validate`).
+//! Writes `BENCH_serve.json` (schema `akda-bench-serve/1`, or `/2` with
+//! the stage breakdown; validated in CI via `akda metrics --validate`).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -37,6 +41,8 @@ use akda::kernels::Kernel;
 use akda::linalg::Mat;
 use akda::model::update::train_svm_bank;
 use akda::model::{encode_bank, ModelArtifact, ModelManifest, ModelRegistry};
+use akda::obs::trace::stage_name;
+use akda::obs::TraceIdGen;
 use akda::util::json::Json;
 use akda::util::rng::Rng;
 
@@ -105,23 +111,30 @@ fn run_connect(addr: &str, secs: f64, workers: usize) {
             (m.name.clone(), load)
         })
         .collect();
+    // per-stage samples (seconds) aggregated from every traced response's
+    // server-timing echo, keyed by wire stage id
+    let stage_lat: Mutex<BTreeMap<u8, Vec<f64>>> = Mutex::new(BTreeMap::new());
     let stop = AtomicBool::new(false);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for (t, m) in roster.iter().enumerate() {
             for w in 0..workers {
-                let (stop, stats) = (&stop, &stats);
+                let (stop, stats, stage_lat) = (&stop, &stats, &stage_lat);
                 let (name, dim) = (m.name.clone(), m.input_dim as usize);
                 s.spawn(move || {
                     let mut conn =
                         NetClient::connect(addr, timeout).expect("connect load client");
                     let mut rng = Rng::new(0xF1EE7 ^ ((t as u64) << 32) ^ w as u64);
+                    let mut ids = TraceIdGen::new(0x7712_ACED ^ ((t as u64) << 32) ^ w as u64);
                     let mut lat = Vec::new();
+                    let mut stages: BTreeMap<u8, Vec<f64>> = BTreeMap::new();
                     let tenant = &stats[&name];
                     while !stop.load(Ordering::Relaxed) {
                         let row: Vec<f64> = (0..dim).map(|_| rng.range(-1.0, 1.0)).collect();
-                        let sent = Instant::now();
-                        match conn.score(&name, &row).expect("score over tcp") {
+                        let traced = conn
+                            .score_traced(&name, &row, ids.next_id())
+                            .expect("score over tcp");
+                        match traced.reply {
                             NetReply::Scores(_) => {
                                 tenant.requests.fetch_add(1, Ordering::Relaxed);
                             }
@@ -129,9 +142,16 @@ fn run_connect(addr: &str, secs: f64, workers: usize) {
                                 tenant.rejected.fetch_add(1, Ordering::Relaxed);
                             }
                         }
-                        lat.push(sent.elapsed().as_secs_f64());
+                        for &(id, nanos) in &traced.timings {
+                            stages.entry(id).or_default().push(nanos as f64 * 1e-9);
+                        }
+                        lat.push(traced.rtt.as_secs_f64());
                     }
                     tenant.latencies.lock().expect("latency sink").extend(lat);
+                    let mut sink = stage_lat.lock().expect("stage sink");
+                    for (id, sample) in stages {
+                        sink.entry(id).or_default().extend(sample);
+                    }
                 });
             }
         }
@@ -171,13 +191,48 @@ fn run_connect(addr: &str, secs: f64, workers: usize) {
         ("requests", Json::Num(total_requests as f64)),
         ("req_per_s", Json::Num(total_requests as f64 / elapsed)),
     ]);
-    let bench = obj(vec![
-        ("schema", Json::Str("akda-bench-serve/1".into())),
+
+    // where the server-side wall clock went, stage by stage
+    let stage_lat = stage_lat.into_inner().expect("stage sink");
+    let all_stage_s: f64 = stage_lat.values().flat_map(|v| v.iter()).sum();
+    let mut stages_map: BTreeMap<String, Json> = BTreeMap::new();
+    for (id, mut sample) in stage_lat {
+        sample.sort_by(|a, b| a.partial_cmp(b).expect("finite stage time"));
+        let sum: f64 = sample.iter().sum();
+        let (p50_ms, p99_ms) =
+            (quantile_sorted(&sample, 0.5) * 1e3, quantile_sorted(&sample, 0.99) * 1e3);
+        let share = if all_stage_s > 0.0 { sum / all_stage_s } else { 0.0 };
+        let name =
+            stage_name(id).map(str::to_string).unwrap_or_else(|| format!("stage/{id}"));
+        eprintln!(
+            "   stage {name:<18} p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms, share {:.1}%",
+            share * 100.0
+        );
+        stages_map.insert(
+            name,
+            obj(vec![
+                ("p50_ms", Json::Num(p50_ms)),
+                ("p99_ms", Json::Num(p99_ms)),
+                ("share", Json::Num(share)),
+            ]),
+        );
+    }
+
+    // a server without the timing echo leaves no stage samples — degrade
+    // the document to v1 rather than emit an invalid empty v2
+    let schema =
+        if stages_map.is_empty() { "akda-bench-serve/1" } else { "akda-bench-serve/2" };
+    let mut fields = vec![
+        ("schema", Json::Str(schema.into())),
         ("transport", Json::Str("tcp".into())),
         ("duration_s", Json::Num(elapsed)),
         ("tenants", Json::Arr(tenants_json)),
         ("total", total),
-    ]);
+    ];
+    if !stages_map.is_empty() {
+        fields.push(("stages", Json::Obj(stages_map)));
+    }
+    let bench = obj(fields);
     println!(
         "fleet load (tcp): {total_requests} requests in {elapsed:.2}s ({:.0} req/s sustained)",
         total_requests as f64 / elapsed

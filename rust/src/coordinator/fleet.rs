@@ -69,6 +69,7 @@ use crate::linalg::Mat;
 use crate::model::registry::HotReloader;
 use crate::model::{self, ModelRegistry, ServeMarker, UpdateOptions};
 use crate::obs;
+use crate::obs::trace::TraceStamps;
 
 // ---------------------------------------------------------------------------
 // Protocol errors
@@ -141,6 +142,11 @@ pub struct FleetRequest {
     /// Stamped at submission; drives the per-tenant end-to-end
     /// `akda_fleet_latency_seconds` histogram.
     enqueued_at: Instant,
+    /// Trace stamp cell of the request's origin (the TCP edge passes
+    /// one per request, in-process callers pass `None`): the scoring
+    /// job writes the `fleet/batch_wait` and `pool/score` stage
+    /// durations into it as the batch executes.
+    stamps: Option<Arc<TraceStamps>>,
 }
 
 /// The live tenant set, shared by the dispatcher, the watcher (which
@@ -197,11 +203,27 @@ impl FleetClient {
         features: Vec<f64>,
         on_reply: impl FnOnce(Result<Vec<f64>, FleetError>) + Send + 'static,
     ) {
+        self.submit_traced(model, features, None, on_reply);
+    }
+
+    /// [`FleetClient::submit`] with a trace stamp cell attached: the
+    /// dispatch path writes the request's `fleet/batch_wait` and
+    /// `pool/score` stage durations into `stamps` before the reply
+    /// fires, so the caller (the TCP edge) can assemble a full
+    /// [`TraceRecord`](crate::obs::trace::TraceRecord).
+    pub fn submit_traced(
+        &self,
+        model: &str,
+        features: Vec<f64>,
+        stamps: Option<Arc<TraceStamps>>,
+        on_reply: impl FnOnce(Result<Vec<f64>, FleetError>) + Send + 'static,
+    ) {
         let req = FleetRequest {
             model: model.to_string(),
             features,
             reply: Box::new(on_reply),
             enqueued_at: Instant::now(),
+            stamps,
         };
         self.queue_depth.add(1.0);
         if let Err(send_err) = self.tx.send(req) {
@@ -510,10 +532,24 @@ impl FleetService {
             // the handle is read inside the job, at score time: a hot swap
             // between dispatch and execution is picked up, not raced
             let _ = pool.submit(move || {
+                // batch_wait ends where compute begins: everything from
+                // submit (micro-batch window + pool queue) up to here
+                for req in &group {
+                    if let Some(stamps) = &req.stamps {
+                        stamps
+                            .batch_wait_nanos
+                            .store(req.enqueued_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                }
+                let compute_start = Instant::now();
                 let dim = tenant.input_dim;
                 let x = Mat::from_fn(group.len(), dim, |r, c| group[r].features[c]);
                 let scores = tenant.handle.get().score(&x);
+                let score_nanos = compute_start.elapsed().as_nanos() as u64;
                 for (r, req) in group.into_iter().enumerate() {
+                    if let Some(stamps) = &req.stamps {
+                        stamps.score_nanos.store(score_nanos, Ordering::Relaxed);
+                    }
                     (req.reply)(Ok(scores.row(r).to_vec()));
                     tenant.metrics.latency.record(req.enqueued_at.elapsed().as_secs_f64());
                 }
@@ -844,6 +880,10 @@ impl DropDirWatcher {
             }
             Ok(Err(e)) => self.quarantine(path, format!("{e:#}")),
             Err(panic) => {
+                // a panicking update is exactly the moment telemetry is
+                // most wanted and clean Drop paths are least trusted —
+                // flush a final snapshot to every --metrics-out target
+                obs::writer::flush_all();
                 let what = panic
                     .downcast_ref::<&str>()
                     .map(|s| s.to_string())

@@ -32,7 +32,7 @@ pub mod wire;
 pub use config::EvalConfig;
 pub use fleet::{FleetClient, FleetError, FleetOptions, FleetService, UpdateDaemon};
 pub use jobs::WorkPool;
-pub use net::{NetClient, NetOptions, NetServer};
+pub use net::{NetClient, NetOptions, NetServer, TracedReply};
 pub use protocol::{build_dr, evaluate_ovr, select_hyper, Hyper, MethodId};
 pub use service::{BankHandle, DetectorBank, ScoringService};
 pub use wire::{ErrorCode, Frame, WireModel};

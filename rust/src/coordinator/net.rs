@@ -52,6 +52,19 @@
 //! instruments carry a `listen` label (the bound address), so several
 //! servers in one process — e.g. concurrent integration tests — do not
 //! bleed into each other's readings.
+//!
+//! # Request tracing (L9)
+//!
+//! Every score request's residency is split into the five sequential
+//! stages of [`obs::trace`]: the reader measures `net/read`
+//! ([`wire::read_frame_timed`]) and mints a [`TraceStamps`] cell that
+//! rides the request into the fleet (`fleet/batch_wait`, `pool/score`);
+//! the pump measures `net/queue` when it pops the request; the writer
+//! measures `net/write`, echoes the server timings into a traced
+//! response, feeds the `akda_trace_stage_seconds{stage=..}` histograms,
+//! and offers the assembled [`TraceRecord`] to the server's optional
+//! [`TraceSink`] (`--trace-out`). Sheds are traced too — terminal at
+//! `net/queue`, with `shed=true`.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -65,13 +78,17 @@ use anyhow::{Context, Result};
 use super::fleet::{FleetClient, FleetError};
 use super::wire::{self, ErrorCode, Frame, ReadError, WireModel};
 use crate::obs;
+use crate::obs::trace::{
+    TraceRecord, TraceSink, TraceStamps, STAGES, STAGE_BATCH_WAIT, STAGE_NET_QUEUE,
+    STAGE_NET_READ, STAGE_NET_WRITE, STAGE_POOL_SCORE,
+};
 
 // ---------------------------------------------------------------------------
 // Options
 // ---------------------------------------------------------------------------
 
 /// Knobs for [`NetServer::start`].
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NetOptions {
     /// Capacity of the server-wide ingress queue. An arriving request
     /// that would overflow it sheds the OLDEST waiting request with an
@@ -81,11 +98,14 @@ pub struct NetOptions {
     pub max_inflight: usize,
     /// Retry hint (milliseconds) carried by shed responses.
     pub retry_after_ms: u32,
+    /// Per-request trace sink (`--trace-out`); `None` disables JSONL
+    /// emission (stage histograms and response echoes still work).
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for NetOptions {
     fn default() -> Self {
-        NetOptions { queue_cap: 1024, max_inflight: 256, retry_after_ms: 50 }
+        NetOptions { queue_cap: 1024, max_inflight: 256, retry_after_ms: 50, trace: None }
     }
 }
 
@@ -98,9 +118,43 @@ struct Pending {
     req_id: u64,
     model: String,
     features: Vec<f64>,
+    /// Client-minted trace id (0 = untraced).
+    trace: u64,
+    /// `net/read` duration measured by the reader (seconds).
+    read_s: f64,
+    /// Stamp cell the fleet writes `batch_wait`/`score` into.
+    stamps: Arc<TraceStamps>,
     /// The owning connection's writer channel.
-    reply_tx: Sender<Frame>,
+    reply_tx: Sender<Outbound>,
     received_at: Instant,
+}
+
+/// One frame on its way out of a connection, plus the trace context the
+/// writer needs to finish the record (`None` for roster/metrics answers
+/// and protocol errors that never entered the score pipeline).
+struct Outbound {
+    frame: Frame,
+    ctx: Option<Box<TraceCtx>>,
+}
+
+impl Outbound {
+    fn plain(frame: Frame) -> Outbound {
+        Outbound { frame, ctx: None }
+    }
+}
+
+/// Everything known about one score request when its reply leaves the
+/// fleet; the writer thread adds the final `net/write` stage, echoes
+/// the stages into a traced response, and emits record + histograms.
+struct TraceCtx {
+    trace: u64,
+    req_id: u64,
+    model: String,
+    read_s: f64,
+    queue_s: f64,
+    stamps: Arc<TraceStamps>,
+    /// When the fleet reply fired (start of `net/write`).
+    done_at: Instant,
 }
 
 struct IngressState {
@@ -142,15 +196,22 @@ struct NetMetrics {
     connections: Arc<obs::Gauge>,
     frames_score: Arc<obs::Counter>,
     frames_models: Arc<obs::Counter>,
+    frames_metrics: Arc<obs::Counter>,
     bytes_in: Arc<obs::Counter>,
     bytes_out: Arc<obs::Counter>,
     queue_depth: Arc<obs::Gauge>,
     sheds_queue_full: Arc<obs::Counter>,
     frame_seconds: Arc<obs::Histogram>,
+    /// `akda_trace_stage_seconds{stage=..}` in [`STAGES`] order — the
+    /// aggregate twin of the per-request trace records.
+    stage_seconds: [Arc<obs::Histogram>; 5],
+    /// The server's `--trace-out` sink, threaded here because this
+    /// bundle already reaches every pipeline hop that emits records.
+    trace_sink: Option<Arc<TraceSink>>,
 }
 
 impl NetMetrics {
-    fn new(listen: &str) -> NetMetrics {
+    fn new(listen: &str, trace_sink: Option<Arc<TraceSink>>) -> NetMetrics {
         NetMetrics {
             connections: obs::gauge_with("akda_net_connections", &[("listen", listen)]),
             frames_score: obs::counter_with(
@@ -161,6 +222,10 @@ impl NetMetrics {
                 "akda_net_frames_total",
                 &[("type", "models_request")],
             ),
+            frames_metrics: obs::counter_with(
+                "akda_net_frames_total",
+                &[("type", "metrics_request")],
+            ),
             bytes_in: obs::counter("akda_net_bytes_in_total"),
             bytes_out: obs::counter("akda_net_bytes_out_total"),
             queue_depth: obs::gauge_with("akda_net_queue_depth", &[("listen", listen)]),
@@ -169,6 +234,10 @@ impl NetMetrics {
                 &[("listen", listen), ("reason", "queue_full")],
             ),
             frame_seconds: obs::histogram("akda_net_frame_seconds"),
+            stage_seconds: std::array::from_fn(|i| {
+                obs::histogram_with("akda_trace_stage_seconds", &[("stage", STAGES[i].1)])
+            }),
+            trace_sink,
         }
     }
 
@@ -217,7 +286,7 @@ impl NetServer {
             .with_context(|| format!("binding wire listener on {addr}"))?;
         let local_addr = listener.local_addr().context("listener local addr")?;
         let listen_label = local_addr.to_string();
-        let metrics = Arc::new(NetMetrics::new(&listen_label));
+        let metrics = Arc::new(NetMetrics::new(&listen_label, opts.trace.clone()));
         let stop = Arc::new(AtomicBool::new(false));
         let ingress = Arc::new(Ingress::new());
         let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
@@ -318,12 +387,18 @@ impl NetServer {
                 metrics.queue_depth.set(st.queue.len() as f64);
                 p
             };
-            let Pending { req_id, model, features, reply_tx, received_at } = pending;
+            let Pending { req_id, model, features, trace, read_s, stamps, reply_tx, received_at } =
+                pending;
+            // net/queue ends here: the request leaves the ingress for
+            // the fleet in the next statement
+            let queue_s = received_at.elapsed().as_secs_f64();
             let ingress = ingress.clone();
             let metrics = metrics.clone();
-            client.submit(&model, features, move |result| {
+            let ctx_model = model.clone();
+            let ctx_stamps = stamps.clone();
+            client.submit_traced(&model, features, Some(stamps), move |result| {
                 let frame = match result {
-                    Ok(scores) => Frame::ScoreResponse { req_id, scores },
+                    Ok(scores) => Frame::ScoreResponse { req_id, scores, timings: Vec::new() },
                     Err(e) => {
                         let f = error_frame(req_id, &e);
                         if let Frame::Error { code, .. } = &f {
@@ -332,7 +407,16 @@ impl NetServer {
                         f
                     }
                 };
-                let _ = reply_tx.send(frame);
+                let ctx = TraceCtx {
+                    trace,
+                    req_id,
+                    model: ctx_model,
+                    read_s,
+                    queue_s,
+                    stamps: ctx_stamps,
+                    done_at: Instant::now(),
+                };
+                let _ = reply_tx.send(Outbound { frame, ctx: Some(Box::new(ctx)) });
                 metrics.frame_seconds.record(received_at.elapsed().as_secs_f64());
                 let mut st = ingress.state.lock().expect("ingress");
                 st.inflight -= 1;
@@ -355,7 +439,7 @@ impl NetServer {
             let mut st = ingress.state.lock().expect("ingress");
             if st.stopped {
                 let frame = error_frame(pending.req_id, &FleetError::ServiceDown);
-                let _ = pending.reply_tx.send(frame);
+                let _ = pending.reply_tx.send(Outbound::plain(frame));
                 return;
             }
             let shed = if st.queue.len() >= queue_cap { st.queue.pop_front() } else { None };
@@ -367,8 +451,22 @@ impl NetServer {
         if let Some(old) = shed {
             metrics.sheds_queue_full.inc();
             NetMetrics::error(ErrorCode::OverCapacity);
+            // a shed is a terminal net/queue trace: the request dies in
+            // the ingress, so its record has exactly two stages
+            let queue_s = old.received_at.elapsed().as_secs_f64();
+            metrics.stage_seconds[0].record(old.read_s);
+            metrics.stage_seconds[1].record(queue_s);
+            if let Some(sink) = &metrics.trace_sink {
+                sink.offer(&TraceRecord {
+                    trace: old.trace,
+                    req_id: old.req_id,
+                    model: old.model.clone(),
+                    shed: true,
+                    stages: vec![(STAGE_NET_READ, old.read_s), (STAGE_NET_QUEUE, queue_s)],
+                });
+            }
             let err = FleetError::OverCapacity { retry_after_ms };
-            let _ = old.reply_tx.send(error_frame(old.req_id, &err));
+            let _ = old.reply_tx.send(Outbound::plain(error_frame(old.req_id, &err)));
         }
     }
 
@@ -391,7 +489,7 @@ impl NetServer {
         conns.lock().expect("conns").insert(conn_id, registered);
         metrics.connections.add(1.0);
 
-        let (reply_tx, reply_rx) = channel::<Frame>();
+        let (reply_tx, reply_rx) = channel::<Outbound>();
 
         let writer = std::thread::Builder::new()
             .name(format!("akda-net-write-{conn_id}"))
@@ -436,7 +534,7 @@ impl NetServer {
     /// but never panics and never touches other connections.
     fn reader_loop(
         mut stream: TcpStream,
-        reply_tx: Sender<Frame>,
+        reply_tx: Sender<Outbound>,
         client: &FleetClient,
         ingress: &Ingress,
         metrics: &NetMetrics,
@@ -444,16 +542,19 @@ impl NetServer {
         retry_after_ms: u32,
     ) {
         loop {
-            match wire::read_frame(&mut stream) {
-                Ok((frame, n)) => {
+            match wire::read_frame_timed(&mut stream) {
+                Ok((frame, n, read_s)) => {
                     metrics.bytes_in.add(n as u64);
                     match frame {
-                        Frame::ScoreRequest { req_id, model, features } => {
+                        Frame::ScoreRequest { req_id, model, features, trace } => {
                             metrics.frames_score.inc();
                             let pending = Pending {
                                 req_id,
                                 model,
                                 features,
+                                trace,
+                                read_s,
+                                stamps: Arc::new(TraceStamps::default()),
                                 reply_tx: reply_tx.clone(),
                                 received_at: Instant::now(),
                             };
@@ -470,18 +571,32 @@ impl NetServer {
                                     version,
                                 })
                                 .collect();
-                            let _ = reply_tx.send(Frame::ModelsResponse { req_id, models });
+                            let _ = reply_tx
+                                .send(Outbound::plain(Frame::ModelsResponse { req_id, models }));
+                        }
+                        Frame::MetricsRequest { req_id } => {
+                            // answered inline like the roster: a metrics
+                            // scrape must work even when the score
+                            // pipeline is saturated
+                            metrics.frames_metrics.inc();
+                            let payload = obs::global()
+                                .snapshot()
+                                .to_json(obs::unix_now())
+                                .to_string()
+                                .into_bytes();
+                            let _ = reply_tx
+                                .send(Outbound::plain(Frame::MetricsResponse { req_id, payload }));
                         }
                         // response-type frames have no business arriving
                         // at a server; protocol violation, close
                         other => {
                             NetMetrics::error(ErrorCode::BadFrame);
-                            let _ = reply_tx.send(Frame::Error {
+                            let _ = reply_tx.send(Outbound::plain(Frame::Error {
                                 req_id: other.req_id(),
                                 code: ErrorCode::BadFrame,
                                 retry_after_ms: 0,
                                 message: "unexpected frame type from a client".to_string(),
-                            });
+                            }));
                             break;
                         }
                     }
@@ -491,12 +606,12 @@ impl NetServer {
                 Err(ReadError::Eof) | Err(ReadError::Io(_)) => break,
                 Err(ReadError::Malformed(why)) => {
                     NetMetrics::error(ErrorCode::BadFrame);
-                    let _ = reply_tx.send(Frame::Error {
+                    let _ = reply_tx.send(Outbound::plain(Frame::Error {
                         req_id: 0,
                         code: ErrorCode::BadFrame,
                         retry_after_ms: 0,
                         message: why,
-                    });
+                    }));
                     break;
                 }
             }
@@ -507,11 +622,61 @@ impl NetServer {
 
     /// Serialize every reply for one connection. Write failures mean the
     /// peer is gone: stop writing, let the channel drain into the void.
-    fn writer_loop(mut stream: TcpStream, rx: Receiver<Frame>, metrics: &NetMetrics) {
-        for frame in rx {
+    ///
+    /// This is also where a score request's trace completes: the echo's
+    /// `net/write` necessarily ends *before* serialization (a frame
+    /// cannot contain the duration of its own send), while the JSONL
+    /// record and the stage histograms — written after the syscall —
+    /// carry the full write duration.
+    fn writer_loop(mut stream: TcpStream, rx: Receiver<Outbound>, metrics: &NetMetrics) {
+        for Outbound { mut frame, ctx } in rx {
+            if let Some(ctx) = &ctx {
+                if ctx.trace != 0 {
+                    if let Frame::ScoreResponse { timings, .. } = &mut frame {
+                        let (batch_wait_s, score_s) = ctx.stamps.load();
+                        let nanos = |s: f64| (s * 1e9) as u64;
+                        *timings = vec![
+                            (STAGE_NET_READ, nanos(ctx.read_s)),
+                            (STAGE_NET_QUEUE, nanos(ctx.queue_s)),
+                            (STAGE_BATCH_WAIT, nanos(batch_wait_s)),
+                            (STAGE_POOL_SCORE, nanos(score_s)),
+                            (STAGE_NET_WRITE, ctx.done_at.elapsed().as_nanos() as u64),
+                        ];
+                    }
+                }
+            }
+            let scored = matches!(frame, Frame::ScoreResponse { .. });
             match wire::write_frame(&mut stream, &frame) {
                 Ok(n) => metrics.bytes_out.add(n as u64),
                 Err(_) => break,
+            }
+            if let Some(ctx) = ctx {
+                let write_s = ctx.done_at.elapsed().as_secs_f64();
+                let (batch_wait_s, score_s) = ctx.stamps.load();
+                let stages = [ctx.read_s, ctx.queue_s, batch_wait_s, score_s, write_s];
+                if scored {
+                    // rejections never reached the fleet; keep their
+                    // zero batch_wait/score out of the histograms
+                    for (h, s) in metrics.stage_seconds.iter().zip(stages) {
+                        h.record(s);
+                    }
+                }
+                if let Some(sink) = &metrics.trace_sink {
+                    let mut rec_stages =
+                        vec![(STAGE_NET_READ, ctx.read_s), (STAGE_NET_QUEUE, ctx.queue_s)];
+                    if scored {
+                        rec_stages.push((STAGE_BATCH_WAIT, batch_wait_s));
+                        rec_stages.push((STAGE_POOL_SCORE, score_s));
+                    }
+                    rec_stages.push((STAGE_NET_WRITE, write_s));
+                    sink.offer(&TraceRecord {
+                        trace: ctx.trace,
+                        req_id: ctx.req_id,
+                        model: ctx.model.clone(),
+                        shed: false,
+                        stages: rec_stages,
+                    });
+                }
             }
         }
         let _ = stream.shutdown(Shutdown::Both);
@@ -562,6 +727,16 @@ pub enum NetReply {
     Rejected { code: ErrorCode, retry_after_ms: u32, message: String },
 }
 
+/// A [`NetClient::score_traced`] outcome: the reply, the server-timing
+/// echo `(stage id, nanoseconds)` from the traced response, and the
+/// client-observed round-trip time.
+#[derive(Debug, Clone)]
+pub struct TracedReply {
+    pub reply: NetReply,
+    pub timings: Vec<(u8, u64)>,
+    pub rtt: Duration,
+}
+
 /// Blocking `akda-wire/1` client over one TCP connection. Used by the
 /// integration tests, `akda client`, and the `--connect` mode of the
 /// `fleet_load` bench; doubles as the reference implementation of the
@@ -597,11 +772,18 @@ impl NetClient {
     /// Send one score request without waiting; returns its `req_id` for
     /// matching the eventual reply (pipelining surface).
     pub fn send_score(&mut self, model: &str, features: &[f64]) -> Result<u64> {
+        self.send_score_traced(model, features, 0)
+    }
+
+    /// [`NetClient::send_score`] carrying a trace id (0 = untraced; mint
+    /// nonzero ids with [`TraceIdGen`](crate::obs::trace::TraceIdGen)).
+    pub fn send_score_traced(&mut self, model: &str, features: &[f64], trace: u64) -> Result<u64> {
         let req_id = self.fresh_id();
         let frame = Frame::ScoreRequest {
             req_id,
             model: model.to_string(),
             features: features.to_vec(),
+            trace,
         };
         wire::write_frame(&mut self.stream, &frame).context("sending score request")?;
         Ok(req_id)
@@ -617,18 +799,60 @@ impl NetClient {
 
     /// Score `features` against tenant `model`, blocking for the answer.
     pub fn score(&mut self, model: &str, features: &[f64]) -> Result<NetReply> {
-        let req_id = self.send_score(model, features)?;
+        Ok(self.score_traced(model, features, 0)?.reply)
+    }
+
+    /// Score with a trace id, blocking; returns the reply plus the
+    /// server-timing echo (empty for untraced requests and rejections)
+    /// and the client-observed round-trip time. The sum of the echoed
+    /// stage durations is ≤ `rtt` — the stages are sequential,
+    /// non-overlapping segments of the server-side residency.
+    pub fn score_traced(
+        &mut self,
+        model: &str,
+        features: &[f64],
+        trace: u64,
+    ) -> Result<TracedReply> {
+        let t0 = Instant::now();
+        let req_id = self.send_score_traced(model, features, trace)?;
         loop {
             match self.recv()? {
-                Frame::ScoreResponse { req_id: id, scores } if id == req_id => {
-                    return Ok(NetReply::Scores(scores));
+                Frame::ScoreResponse { req_id: id, scores, timings } if id == req_id => {
+                    return Ok(TracedReply {
+                        reply: NetReply::Scores(scores),
+                        timings,
+                        rtt: t0.elapsed(),
+                    });
                 }
                 Frame::Error { req_id: id, code, retry_after_ms, message }
                     if id == req_id || id == 0 =>
                 {
-                    return Ok(NetReply::Rejected { code, retry_after_ms, message });
+                    return Ok(TracedReply {
+                        reply: NetReply::Rejected { code, retry_after_ms, message },
+                        timings: Vec::new(),
+                        rtt: t0.elapsed(),
+                    });
                 }
                 // a stale reply to an earlier pipelined request — skip
+                _ => continue,
+            }
+        }
+    }
+
+    /// Scrape the server's `akda-metrics/1` JSON snapshot over the
+    /// existing socket (no separate HTTP port) — `akda client --metrics`.
+    pub fn metrics(&mut self) -> Result<String> {
+        let req_id = self.fresh_id();
+        wire::write_frame(&mut self.stream, &Frame::MetricsRequest { req_id })
+            .context("sending metrics request")?;
+        loop {
+            match self.recv()? {
+                Frame::MetricsResponse { req_id: id, payload } if id == req_id => {
+                    return String::from_utf8(payload).context("metrics payload is not UTF-8");
+                }
+                Frame::Error { req_id: id, code, message, .. } if id == req_id => {
+                    anyhow::bail!("metrics request rejected: {code}: {message}");
+                }
                 _ => continue,
             }
         }

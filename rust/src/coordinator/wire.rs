@@ -25,6 +25,16 @@
 //! slices); [`write_frame`]/[`read_frame`] are the blocking-I/O wrappers
 //! the server and [`NetClient`](crate::coordinator::net::NetClient) use.
 //!
+//! # Tracing extension (backward compatible)
+//!
+//! [`Frame::ScoreRequest`] may carry a trailing 64-bit trace id and
+//! [`Frame::ScoreResponse`] a trailing per-stage server-timing echo
+//! (see `obs::trace`). Both are encoded **only when present** (trace id
+//! nonzero / timings non-empty), so an untraced frame is byte-identical
+//! to the pre-extension wire format, and a pre-extension frame (no
+//! trailing field) still decodes — the decoder treats a missing tail as
+//! "untraced" rather than an error.
+//!
 //! ```
 //! use akda::coordinator::wire::{decode, encode, Frame};
 //!
@@ -32,6 +42,7 @@
 //!     req_id: 7,
 //!     model: "eth80".into(),
 //!     features: vec![1.0, -2.5],
+//!     trace: 0,
 //! };
 //! let bytes = encode(&frame);
 //! let (back, consumed) = decode(&bytes).unwrap();
@@ -63,6 +74,8 @@ const TYPE_SCORE_RESPONSE: u8 = 2;
 const TYPE_ERROR: u8 = 3;
 const TYPE_MODELS_REQUEST: u8 = 4;
 const TYPE_MODELS_RESPONSE: u8 = 5;
+const TYPE_METRICS_REQUEST: u8 = 6;
+const TYPE_METRICS_RESPONSE: u8 = 7;
 
 /// Typed error codes carried in [`Frame::Error`] — the wire image of
 /// [`FleetError`](crate::coordinator::FleetError) plus the two codes only
@@ -135,10 +148,17 @@ pub struct WireModel {
 /// complete out of order).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Score `features` against tenant `model`.
-    ScoreRequest { req_id: u64, model: String, features: Vec<f64> },
-    /// Per-class scores for the matching request.
-    ScoreResponse { req_id: u64, scores: Vec<f64> },
+    /// Score `features` against tenant `model`. `trace` is the 64-bit
+    /// distributed-tracing id minted by the client (`obs::trace`); 0
+    /// means "untraced" and is the only value that elides the field on
+    /// the wire, keeping untraced frames byte-identical to the
+    /// pre-extension format.
+    ScoreRequest { req_id: u64, model: String, features: Vec<f64>, trace: u64 },
+    /// Per-class scores for the matching request. `timings` is the
+    /// optional server-timing echo — `(stage id, nanoseconds)` pairs
+    /// (see `obs::trace` stage constants) — populated only for traced
+    /// requests; empty timings are elided on the wire.
+    ScoreResponse { req_id: u64, scores: Vec<f64>, timings: Vec<(u8, u64)> },
     /// Typed failure for the matching request (`req_id` 0 when the
     /// request could not even be parsed). `retry_after_ms` is nonzero
     /// only for [`ErrorCode::OverCapacity`].
@@ -148,6 +168,12 @@ pub enum Frame {
     /// The roster: name, input dim, and served registry version per
     /// tenant — how a client observes hot swaps and onboarding over TCP.
     ModelsResponse { req_id: u64, models: Vec<WireModel> },
+    /// Ask for the server's current `akda-metrics/1` snapshot — remote
+    /// scraping over the scoring socket, no separate HTTP port.
+    MetricsRequest { req_id: u64 },
+    /// The snapshot: UTF-8 `akda-metrics/1` JSON bytes (u32-length-
+    /// prefixed — a large registry can exceed the u16 string cap).
+    MetricsResponse { req_id: u64, payload: Vec<u8> },
 }
 
 impl Frame {
@@ -158,6 +184,8 @@ impl Frame {
             Frame::Error { .. } => TYPE_ERROR,
             Frame::ModelsRequest { .. } => TYPE_MODELS_REQUEST,
             Frame::ModelsResponse { .. } => TYPE_MODELS_RESPONSE,
+            Frame::MetricsRequest { .. } => TYPE_METRICS_REQUEST,
+            Frame::MetricsResponse { .. } => TYPE_METRICS_RESPONSE,
         }
     }
 
@@ -168,7 +196,9 @@ impl Frame {
             | Frame::ScoreResponse { req_id, .. }
             | Frame::Error { req_id, .. }
             | Frame::ModelsRequest { req_id }
-            | Frame::ModelsResponse { req_id, .. } => *req_id,
+            | Frame::ModelsResponse { req_id, .. }
+            | Frame::MetricsRequest { req_id }
+            | Frame::MetricsResponse { req_id, .. } => *req_id,
         }
     }
 }
@@ -212,19 +242,33 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 fn encode_body(frame: &Frame) -> Vec<u8> {
     let mut b = Vec::new();
     match frame {
-        Frame::ScoreRequest { req_id, model, features } => {
+        Frame::ScoreRequest { req_id, model, features, trace } => {
             b.extend_from_slice(&req_id.to_le_bytes());
             put_str(&mut b, model);
             b.extend_from_slice(&(features.len() as u32).to_le_bytes());
             for v in features {
                 b.extend_from_slice(&v.to_le_bytes());
             }
+            // trailing trace id, elided when 0: untraced frames stay
+            // byte-identical to the pre-extension format
+            if *trace != 0 {
+                b.extend_from_slice(&trace.to_le_bytes());
+            }
         }
-        Frame::ScoreResponse { req_id, scores } => {
+        Frame::ScoreResponse { req_id, scores, timings } => {
             b.extend_from_slice(&req_id.to_le_bytes());
             b.extend_from_slice(&(scores.len() as u32).to_le_bytes());
             for v in scores {
                 b.extend_from_slice(&v.to_le_bytes());
+            }
+            // trailing server-timing echo, elided when empty
+            if !timings.is_empty() {
+                debug_assert!(timings.len() <= u8::MAX as usize, "too many stages");
+                b.push(timings.len() as u8);
+                for (stage, nanos) in timings {
+                    b.push(*stage);
+                    b.extend_from_slice(&nanos.to_le_bytes());
+                }
             }
         }
         Frame::Error { req_id, code, retry_after_ms, message } => {
@@ -244,6 +288,14 @@ fn encode_body(frame: &Frame) -> Vec<u8> {
                 b.extend_from_slice(&m.input_dim.to_le_bytes());
                 b.extend_from_slice(&m.version.to_le_bytes());
             }
+        }
+        Frame::MetricsRequest { req_id } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+        }
+        Frame::MetricsResponse { req_id, payload } => {
+            b.extend_from_slice(&req_id.to_le_bytes());
+            b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            b.extend_from_slice(payload);
         }
     }
     b
@@ -330,6 +382,12 @@ impl<'a> Body<'a> {
             .map_err(|_| DecodeError::Malformed("string is not UTF-8".to_string()))
     }
 
+    /// Bytes left after the cursor — how the optional trailing tracing
+    /// fields are detected without breaking pre-extension frames.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn finish(self) -> Result<(), DecodeError> {
         if self.pos != self.buf.len() {
             return Err(DecodeError::Malformed(format!(
@@ -348,12 +406,46 @@ fn decode_body(frame_type: u8, body: &[u8]) -> Result<Frame, DecodeError> {
             let req_id = b.u64()?;
             let model = b.string()?;
             let n = b.u32()? as usize;
-            Frame::ScoreRequest { req_id, model, features: b.f64s(n)? }
+            let features = b.f64s(n)?;
+            // optional trailing trace id: a pre-extension frame ends
+            // here (trace 0); anything other than exactly 8 remaining
+            // bytes falls through to finish() and is rejected
+            let trace = if b.remaining() == 8 {
+                match b.u64()? {
+                    // present-but-zero is non-canonical: the encoder
+                    // elides a zero id, so re-encode would change bytes
+                    0 => {
+                        return Err(DecodeError::Malformed(
+                            "zero trace id must be elided".to_string(),
+                        ))
+                    }
+                    t => t,
+                }
+            } else {
+                0
+            };
+            Frame::ScoreRequest { req_id, model, features, trace }
         }
         TYPE_SCORE_RESPONSE => {
             let req_id = b.u64()?;
             let n = b.u32()? as usize;
-            Frame::ScoreResponse { req_id, scores: b.f64s(n)? }
+            let scores = b.f64s(n)?;
+            // optional trailing server-timing echo (count + 9B entries)
+            let mut timings = Vec::new();
+            if b.remaining() > 0 {
+                let k = b.u8()? as usize;
+                if k == 0 {
+                    // same canonicality rule as the trace id
+                    return Err(DecodeError::Malformed(
+                        "empty timing echo must be elided".to_string(),
+                    ));
+                }
+                for _ in 0..k {
+                    let stage = b.u8()?;
+                    timings.push((stage, b.u64()?));
+                }
+            }
+            Frame::ScoreResponse { req_id, scores, timings }
         }
         TYPE_ERROR => {
             let req_id = b.u64()?;
@@ -375,6 +467,12 @@ fn decode_body(frame_type: u8, body: &[u8]) -> Result<Frame, DecodeError> {
                 models.push(WireModel { name, input_dim, version });
             }
             Frame::ModelsResponse { req_id, models }
+        }
+        TYPE_METRICS_REQUEST => Frame::MetricsRequest { req_id: b.u64()? },
+        TYPE_METRICS_RESPONSE => {
+            let req_id = b.u64()?;
+            let n = b.u32()? as usize;
+            Frame::MetricsResponse { req_id, payload: b.take(n)?.to_vec() }
         }
         other => return Err(DecodeError::Malformed(format!("unknown frame type {other}"))),
     };
@@ -462,6 +560,15 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<usize> 
 /// close ([`ReadError::Eof`]); EOF anywhere later is a mid-frame
 /// disconnect ([`ReadError::Io`]). Returns the frame and its wire size.
 pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize), ReadError> {
+    read_frame_timed(r).map(|(frame, n, _)| (frame, n))
+}
+
+/// [`read_frame`] plus the transfer time: seconds from the first header
+/// byte arriving to the frame fully read and decoded — the `net/read`
+/// trace stage. The blocking wait *before* the first byte (connection
+/// idle between requests) is deliberately excluded, so the stage
+/// measures wire transfer + decode, not client think time.
+pub fn read_frame_timed(r: &mut impl Read) -> Result<(Frame, usize, f64), ReadError> {
     let mut header = [0u8; HEADER_LEN];
     // first byte separately: EOF here is a clean close, not an error
     match r.read(&mut header[..1]) {
@@ -469,6 +576,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize), ReadError> {
         Ok(_) => {}
         Err(e) => return Err(ReadError::Io(e)),
     }
+    let t0 = std::time::Instant::now();
     r.read_exact(&mut header[1..]).map_err(ReadError::Io)?;
     // validate the header before trusting the length prefix
     let body_len = match decode(&header) {
@@ -485,7 +593,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize), ReadError> {
     bytes.resize(HEADER_LEN + body_len, 0);
     r.read_exact(&mut bytes[HEADER_LEN..]).map_err(ReadError::Io)?;
     match decode(&bytes) {
-        Ok((frame, n)) => Ok((frame, n)),
+        Ok((frame, n)) => Ok((frame, n, t0.elapsed().as_secs_f64())),
         Err(e) => Err(ReadError::Malformed(e.to_string())),
     }
 }
@@ -496,9 +604,24 @@ mod tests {
 
     fn frames() -> Vec<Frame> {
         vec![
-            Frame::ScoreRequest { req_id: 1, model: "eth80".into(), features: vec![1.5, -2.0] },
-            Frame::ScoreRequest { req_id: 2, model: String::new(), features: vec![] },
-            Frame::ScoreResponse { req_id: 3, scores: vec![0.25; 7] },
+            Frame::ScoreRequest {
+                req_id: 1,
+                model: "eth80".into(),
+                features: vec![1.5, -2.0],
+                trace: 0,
+            },
+            Frame::ScoreRequest {
+                req_id: 2,
+                model: String::new(),
+                features: vec![],
+                trace: 0xDEAD_BEEF_0000_0001,
+            },
+            Frame::ScoreResponse { req_id: 3, scores: vec![0.25; 7], timings: vec![] },
+            Frame::ScoreResponse {
+                req_id: 9,
+                scores: vec![1.0],
+                timings: vec![(1, 1_000), (4, 750_000), (5, 12)],
+            },
             Frame::Error {
                 req_id: 4,
                 code: ErrorCode::OverCapacity,
@@ -510,6 +633,8 @@ mod tests {
                 req_id: 6,
                 models: vec![WireModel { name: "aa".into(), input_dim: 6, version: 2 }],
             },
+            Frame::MetricsRequest { req_id: 7 },
+            Frame::MetricsResponse { req_id: 8, payload: br#"{"schema":"x"}"#.to_vec() },
         ]
     }
 
@@ -580,6 +705,79 @@ mod tests {
         let (frame, n) = read_frame(&mut whole).unwrap();
         assert_eq!(frame, frames()[0]);
         assert_eq!(n, bytes.len());
+    }
+
+    #[test]
+    fn untraced_request_is_byte_identical_to_pre_extension_format() {
+        // hand-build the pre-extension (PR 7) body layout: req_id +
+        // u16-prefixed model + f64 count + raw f64s, no trailing field
+        let (req_id, model, features) = (42u64, "ten", vec![0.5, -1.25, 3.0]);
+        let mut body = Vec::new();
+        body.extend_from_slice(&req_id.to_le_bytes());
+        body.extend_from_slice(&(model.len() as u16).to_le_bytes());
+        body.extend_from_slice(model.as_bytes());
+        body.extend_from_slice(&(features.len() as u32).to_le_bytes());
+        for v in &features {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut old = Vec::new();
+        old.extend_from_slice(&MAGIC);
+        old.push(VERSION);
+        old.push(TYPE_SCORE_REQUEST);
+        old.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let mut sum = fnv1a64(&old);
+        sum = fnv1a64_concat(sum, &body);
+        old.extend_from_slice(&sum.to_le_bytes());
+        old.extend_from_slice(&body);
+
+        // the new encoder reproduces those exact bytes for trace = 0 ...
+        let frame =
+            Frame::ScoreRequest { req_id, model: model.into(), features, trace: 0 };
+        assert_eq!(encode(&frame), old, "untraced encoding must not change the wire");
+        // ... and the new decoder accepts the old bytes as trace = 0
+        let (back, n) = decode(&old).unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(n, old.len());
+    }
+
+    #[test]
+    fn traced_request_costs_exactly_eight_bytes() {
+        let untraced = Frame::ScoreRequest {
+            req_id: 1,
+            model: "m".into(),
+            features: vec![1.0],
+            trace: 0,
+        };
+        let traced = Frame::ScoreRequest {
+            req_id: 1,
+            model: "m".into(),
+            features: vec![1.0],
+            trace: u64::MAX,
+        };
+        assert_eq!(encode(&traced).len(), encode(&untraced).len() + 8);
+        let (back, _) = decode(&encode(&traced)).unwrap();
+        assert_eq!(back, traced, "trace id must survive bit-for-bit");
+    }
+
+    #[test]
+    fn non_canonical_trailing_fields_are_rejected() {
+        // a ScoreRequest whose trailing trace id is literally 0 must be
+        // rejected: re-encoding would elide it and change the bytes
+        let base = Frame::ScoreRequest {
+            req_id: 1,
+            model: "m".into(),
+            features: vec![2.0],
+            trace: 7,
+        };
+        let mut bytes = encode(&base);
+        let len = bytes.len();
+        bytes[len - 8..].fill(0); // zero the trace id in place
+        // fix the checksum so only the canonicality rule can reject it
+        let body_len = len - HEADER_LEN;
+        let mut sum = fnv1a64(&bytes[0..10]);
+        sum = fnv1a64_concat(sum, &bytes[HEADER_LEN..HEADER_LEN + body_len]);
+        bytes[10..18].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(DecodeError::Malformed(_))));
     }
 
     #[test]

@@ -38,6 +38,27 @@ use super::{DrMethod, KernelProjection, Projection};
 use crate::kernels::{gram, Kernel};
 use crate::linalg::{chol, Mat};
 
+/// Record the extreme diagonal entries (pivots) of a lower Cholesky
+/// factor into the training flight recorder — the conditioning facts
+/// of the regularized kernel system (`pivot_min` collapsing toward 0
+/// means K + εI is nearly singular despite the ridge). Shared with the
+/// continual-update paths, which factorize through other routes.
+pub(crate) fn record_pivots(l: &Mat) {
+    let n = l.rows().min(l.cols());
+    if n == 0 {
+        return;
+    }
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for i in 0..n {
+        let d = l[(i, i)];
+        min = min.min(d);
+        max = max.max(d);
+    }
+    crate::obs::flight::record("chol_pivot_min", min);
+    crate::obs::flight::record("chol_pivot_max", max);
+}
+
 /// AKDA configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct Akda {
@@ -69,10 +90,16 @@ impl Akda {
             core::theta_for(labels, n_classes)
         };
         // Step 3: K
+        let gram_start = std::time::Instant::now();
         let mut k = gram(x, self.kernel);
+        crate::obs::flight::record("phase_gram_s", gram_start.elapsed().as_secs_f64());
         k.add_ridge(self.eps);
+        crate::obs::flight::record("eps", self.eps);
+        let chol_start = std::time::Instant::now();
         let l = chol::cholesky(&k, self.block)
             .map_err(|e| anyhow::anyhow!("AKDA Cholesky failed: {e}"))?;
+        crate::obs::flight::record("phase_chol_s", chol_start.elapsed().as_secs_f64());
+        record_pivots(&l);
         Ok((theta, l))
     }
 

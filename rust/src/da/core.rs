@@ -80,6 +80,21 @@ pub fn core_eigenvectors(counts: &[usize]) -> Mat {
             xi[(r, k)] = eig.vectors[(r, k)];
         }
     }
+    // flight recorder: the NZEP eigenvalues are exactly 1 in theory
+    // (O_b is idempotent with rank C−1); their drift is a direct
+    // numerical-health readout of the eigensolve
+    if c > 1 {
+        let nzep = &eig.values[..c - 1];
+        crate::obs::flight::record("nzep_count", (c - 1) as f64);
+        crate::obs::flight::record(
+            "core_eig_min",
+            nzep.iter().copied().fold(f64::INFINITY, f64::min),
+        );
+        crate::obs::flight::record(
+            "core_eig_max",
+            nzep.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        );
+    }
     xi
 }
 

@@ -15,8 +15,16 @@
 //!   serve --fleet --listen ADDR   additionally expose the fleet over TCP
 //!                                 speaking akda-wire/1 (L8)
 //!   client --connect ADDR         remote akda-wire/1 client: list the roster,
-//!                                 score a tenant's held-out split, or probe
-//!                                 the server with a malformed frame
+//!                                 score a tenant's held-out split (--trace
+//!                                 prints the per-stage server-timing
+//!                                 breakdown next to the observed RTT;
+//!                                 --metrics scrapes the remote registry
+//!                                 snapshot), or probe the server with a
+//!                                 malformed frame
+//!   trace FILE                    analyze an akda-trace/1 JSONL file written
+//!                                 by `serve --fleet --listen ... --trace-out`:
+//!                                 top-k slowest requests, per-stage p50/p99,
+//!                                 stage-share attribution
 //!   serve --dataset NAME          train in process, then serve scores
 //!   daemon --drop-dir DIR         auto-update: apply NAME.csv drops to model
 //!                                 NAME and republish (fleet hot-swaps it)
@@ -135,6 +143,10 @@ fn main() -> Result<()> {
     if cmd == "update" {
         return cmd_update(&argv[1..]);
     }
+    // `trace` takes a positional FILE before its flags
+    if cmd == "trace" {
+        return cmd_trace(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "datasets" => cmd_datasets(),
@@ -210,6 +222,7 @@ fn print_help() {
                                             --watch hot-reloads newly published\n\
                                             versions under the running service\n\
            serve --fleet [--models-dir DIR] [--watch [SECS]] [--listen ADDR]\n\
+                 [--trace-out FILE [--trace-sample N] [--trace-slow-ms MS]]\n\
                                             multi-tenant: serve EVERY model in the\n\
                                             registry from one process, requests\n\
                                             routed by model id over one shared\n\
@@ -220,16 +233,33 @@ fn print_help() {
                                             restart; --listen HOST:PORT fronts the\n\
                                             fleet with the akda-wire/1 TCP protocol\n\
                                             (port 0 picks a free port, printed on\n\
-                                            stdout) and stays up serving it\n\
+                                            stdout) and stays up serving it;\n\
+                                            --trace-out appends one akda-trace/1\n\
+                                            JSONL record per sampled request (every\n\
+                                            Nth with --trace-sample, default all;\n\
+                                            --trace-slow-ms MS always records\n\
+                                            requests at/above MS — 0 records every\n\
+                                            request; sheds are always recorded)\n\
            client --connect HOST:PORT [--model NAME [--dataset DS] [--cond 10|100]]\n\
-                  [--probe] [--timeout SECS]\n\
+                  [--trace] [--metrics] [--probe] [--timeout SECS]\n\
                                             akda-wire/1 client: print the server's\n\
                                             tenant roster; with --model, score that\n\
                                             tenant's held-out split over TCP and\n\
                                             report accuracy (bit-for-bit the served\n\
-                                            model's scores); --probe sends a\n\
-                                            deliberately malformed frame and expects\n\
-                                            a typed error answer\n\
+                                            model's scores); --trace mints per-\n\
+                                            request trace ids and prints the\n\
+                                            server's per-stage timing breakdown\n\
+                                            next to the client-observed RTT;\n\
+                                            --metrics scrapes the server's\n\
+                                            akda-metrics/1 snapshot over the same\n\
+                                            socket; --probe sends a deliberately\n\
+                                            malformed frame and expects a typed\n\
+                                            error answer\n\
+           trace FILE [--top K]             analyze an akda-trace/1 JSONL file\n\
+                                            (a serve --trace-out artifact): per-\n\
+                                            stage p50/p99, stage-share attribution\n\
+                                            over all records and over the p99\n\
+                                            latency tail, top-K slowest requests\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
                  [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
                                             train a detector bank in process, then\n\
@@ -641,6 +671,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         ts.id.name()
     );
     let want_resume = args.get("no-resume").is_none();
+    // flight recorder on: the fit's numerical-health facts (Cholesky
+    // pivots, ridge ε, core-eigenvalue extremes, phase durations) land
+    // in the manifest as `health.*` keys below
+    akda::obs::flight::reset();
     let (bank, train_s, resume) = fit_detector_bank(&ts, want_resume)?;
     let (accuracy, map) = eval_bank(&bank, &ts.split);
     println!(
@@ -678,6 +712,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         train_s,
         map,
         accuracy,
+        health: akda::obs::flight::snapshot(),
         ..Default::default()
     };
     let name = args.get("name").unwrap_or(ts.dataset.as_str());
@@ -768,6 +803,29 @@ fn cmd_update(rest: &[String]) -> Result<()> {
         up.from.spec(),
         up.published.name
     );
+    Ok(())
+}
+
+/// `akda trace FILE` — offline analyzer for an `akda-trace/1` JSONL
+/// file (the `serve --fleet --listen ... --trace-out` artifact): count
+/// of records/sheds, per-stage p50/p99 with stage-share attribution over
+/// all records and over the p99 latency tail, and the top-K slowest
+/// requests each attributed to its dominant stage. The headline line —
+/// "p99 is 71% fleet/batch_wait" — is the tuning signal the whole trace
+/// pipeline exists to produce.
+fn cmd_trace(rest: &[String]) -> Result<()> {
+    let Some(path) = rest.first().filter(|s| !s.starts_with("--")) else {
+        bail!("usage: akda trace FILE [--top K]   (FILE is a --trace-out JSONL artifact)")
+    };
+    let args = Args::parse(&rest[1..])?;
+    let top: usize = match args.get("top") {
+        Some(v) => v.parse().context("--top K must be an integer")?,
+        None => 5,
+    };
+    anyhow::ensure!(top >= 1, "--top K must be >= 1");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let report = akda::obs::trace::analyze(&text, top)?;
+    print!("{report}");
     Ok(())
 }
 
@@ -1018,6 +1076,37 @@ fn parse_metrics_out(args: &Args) -> Result<Option<akda::obs::MetricsWriter>> {
     Ok(Some(writer))
 }
 
+/// `--trace-out FILE [--trace-sample N] [--trace-slow-ms MS]` — build the
+/// request-trace sink for the TCP edge. Sampling defaults to every
+/// request; an explicit `--trace-slow-ms` without `--trace-sample` turns
+/// sampling off, so the file holds only the slow log (plus sheds, which
+/// are always recorded while any policy is active).
+fn parse_trace_flags(args: &Args) -> Result<Option<Arc<akda::obs::TraceSink>>> {
+    let Some(path) = args.get("trace-out") else {
+        anyhow::ensure!(
+            args.get("trace-sample").is_none() && args.get("trace-slow-ms").is_none(),
+            "--trace-sample/--trace-slow-ms only make sense with --trace-out FILE"
+        );
+        return Ok(None);
+    };
+    let slow_ms: Option<f64> = match args.get("trace-slow-ms") {
+        Some(v) => {
+            let ms: f64 = v.parse().context("--trace-slow-ms MS must be a number")?;
+            anyhow::ensure!(ms >= 0.0, "--trace-slow-ms MS must be >= 0");
+            Some(ms)
+        }
+        None => None,
+    };
+    let sample: u64 = match args.get("trace-sample") {
+        Some(v) => v.parse().context("--trace-sample N must be an integer")?,
+        // slow-log-only when a threshold is given, else trace everything
+        None if slow_ms.is_some() => 0,
+        None => 1,
+    };
+    let sink = akda::obs::TraceSink::create(std::path::Path::new(path), sample, slow_ms)?;
+    Ok(Some(Arc::new(sink)))
+}
+
 /// `akda serve --fleet` — multi-tenant serving: every model in the
 /// registry behind one process, routed by model id over one shared
 /// worker pool (`coordinator::fleet::FleetService`). The demo drives
@@ -1061,10 +1150,19 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     }
     // the TCP edge starts before the demo traffic, so remote clients can
     // connect as soon as the line below is printed
+    let trace_sink = parse_trace_flags(args)?;
+    anyhow::ensure!(
+        trace_sink.is_none() || args.get("listen").is_some(),
+        "--trace-out traces the TCP edge: pass --listen ADDR with it"
+    );
     let net = match args.get("listen") {
         Some(addr) => {
-            let server = NetServer::start(addr, svc.client(), NetOptions::default())?;
+            let opts = NetOptions { trace: trace_sink.clone(), ..Default::default() };
+            let server = NetServer::start(addr, svc.client(), opts)?;
             println!("fleet: listening on {} (akda-wire/1)", server.local_addr());
+            if let Some(sink) = &trace_sink {
+                eprintln!("fleet: tracing requests to {:?} (akda-trace/1)", sink.path());
+            }
             Some(server)
         }
         None => None,
@@ -1165,6 +1263,15 @@ fn cmd_client(args: &Args) -> Result<()> {
         println!("  {}@{} (input dim {})", m.name, m.version, m.input_dim);
     }
 
+    // --metrics: scrape the server's registry snapshot over the same
+    // socket (MetricsRequest/MetricsResponse frames — no HTTP port)
+    if args.get("metrics").is_some() {
+        println!("{}", conn.metrics()?);
+        if args.get("model").is_none() && args.get("probe").is_none() {
+            return Ok(());
+        }
+    }
+
     if args.get("probe").is_some() {
         // bytes that can never be a frame: the server must answer with a
         // typed BadFrame error and close THIS connection, nothing else
@@ -1203,16 +1310,37 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n = split.x_test.rows();
     let workers = akda::util::threads::available().clamp(2, 8).min(n.max(1));
     let correct = AtomicUsize::new(0);
+    // --trace aggregator: (traced requests, summed RTT seconds, summed
+    // per-stage seconds from the server-timing echo, keyed by stage id)
+    let trace_on = args.get("trace").is_some();
+    let agg: std::sync::Mutex<(u64, f64, std::collections::BTreeMap<u8, f64>)> =
+        std::sync::Mutex::new((0, 0.0, std::collections::BTreeMap::new()));
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| -> Result<()> {
         let mut joins = Vec::new();
         for w in 0..workers {
-            let (split, correct) = (&split, &correct);
+            let (split, correct, agg) = (&split, &correct, &agg);
             joins.push(s.spawn(move || -> Result<()> {
                 let mut conn = NetClient::connect(addr, timeout)?;
+                // per-worker deterministic id stream: same invocation,
+                // same trace ids (the crate's reproducibility spine)
+                let mut ids = akda::obs::TraceIdGen::new(0x414B_4441 + w as u64);
                 let mut i = w;
                 while i < n {
-                    match conn.score(model, split.x_test.row(i))? {
+                    let reply = if trace_on {
+                        let traced =
+                            conn.score_traced(model, split.x_test.row(i), ids.next_id())?;
+                        let mut a = agg.lock().expect("trace aggregator poisoned");
+                        a.0 += 1;
+                        a.1 += traced.rtt.as_secs_f64();
+                        for &(id, nanos) in &traced.timings {
+                            *a.2.entry(id).or_insert(0.0) += nanos as f64 * 1e-9;
+                        }
+                        traced.reply
+                    } else {
+                        conn.score(model, split.x_test.row(i))?
+                    };
+                    match reply {
                         NetReply::Scores(scores) => {
                             if predict(&scores) == split.y_test[i] {
                                 correct.fetch_add(1, Ordering::Relaxed);
@@ -1241,6 +1369,30 @@ fn cmd_client(args: &Args) -> Result<()> {
         100.0 * correct.load(Ordering::Relaxed) as f64 / n as f64,
         n as f64 / dt
     );
+    if trace_on {
+        let (count, rtt_s, stage_s) = agg.into_inner().expect("trace aggregator poisoned");
+        anyhow::ensure!(count > 0, "--trace scored no requests");
+        let sum_s: f64 = stage_s.values().sum();
+        println!("client trace: mean server-side stage timing over {count} traced requests:");
+        // BTreeMap order == hop order (stage ids are hop-numbered)
+        for (&id, &secs) in &stage_s {
+            let name = akda::obs::trace::stage_name(id)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("stage/{id}"));
+            println!(
+                "  {name:<18} {:>9.3} ms  ({:>4.1}% of rtt)",
+                secs / count as f64 * 1e3,
+                100.0 * secs / rtt_s.max(f64::EPSILON)
+            );
+        }
+        println!(
+            "  stage sum {:.3} ms <= mean rtt {:.3} ms \
+             (server residency {:.1}%; the rest is wire + client stack)",
+            sum_s / count as f64 * 1e3,
+            rtt_s / count as f64 * 1e3,
+            100.0 * sum_s / rtt_s.max(f64::EPSILON)
+        );
+    }
     Ok(())
 }
 
@@ -1258,6 +1410,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     anyhow::ensure!(
         args.get("listen").is_none(),
         "--listen requires --fleet (the akda-wire/1 protocol fronts the fleet)"
+    );
+    anyhow::ensure!(
+        args.get("trace-out").is_none(),
+        "--trace-out requires --fleet --listen (request tracing fronts the TCP edge)"
     );
 
     // registry path: load a published model — zero training work (the

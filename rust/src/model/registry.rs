@@ -87,6 +87,14 @@ pub struct ModelManifest {
     /// recursive update started from (provenance of the continual-learning
     /// chain).
     pub updated_from: Option<String>,
+    /// Numerical-health facts captured by the training flight recorder
+    /// (`obs::flight`) during the fit/update that produced this version:
+    /// Cholesky pivot extremes, ε applied, NZEP eigenvalue extremes,
+    /// per-phase durations. Serialized as `health.<key> = <value>`
+    /// lines; `akda models --inspect` surfaces them and `models --diff`
+    /// flags deltas, so a republish that degrades conditioning is
+    /// visible before it serves.
+    pub health: std::collections::BTreeMap<String, f64>,
 }
 
 impl ModelManifest {
@@ -118,6 +126,9 @@ impl ModelManifest {
         kv("created_unix", self.created_unix.to_string());
         if let Some(from) = &self.updated_from {
             kv("updated_from", from.clone());
+        }
+        for (key, value) in &self.health {
+            kv(&format!("health.{key}"), value.to_string());
         }
         s
     }
@@ -154,7 +165,12 @@ impl ModelManifest {
                 "accuracy" => m.accuracy = v.parse().with_context(ctx)?,
                 "created_unix" => m.created_unix = v.parse().with_context(ctx)?,
                 "updated_from" => m.updated_from = Some(v.to_string()),
-                _ => {} // forward compatibility
+                _ => {
+                    if let Some(key) = k.strip_prefix("health.") {
+                        m.health.insert(key.to_string(), v.parse().with_context(ctx)?);
+                    }
+                    // other unknown keys: forward compatibility
+                }
             }
         }
         Ok(m)
@@ -519,6 +535,16 @@ impl ModelRegistry {
             ma.updated_from.clone().unwrap_or_default(),
             mb.updated_from.clone().unwrap_or_default(),
         );
+        // flight-recorder health keys: diff over the union so a key
+        // appearing or vanishing is reported, not just value changes
+        let health_keys: std::collections::BTreeSet<&String> =
+            ma.health.keys().chain(mb.health.keys()).collect();
+        for key in health_keys {
+            let render = |m: &ModelManifest| {
+                m.health.get(key.as_str()).map(|v| v.to_string()).unwrap_or_default()
+            };
+            field(&format!("health.{key}"), render(ma), render(mb));
+        }
 
         // section inventory drift, keyed on the artifact checksums
         let (da, db) = (art_a.section_digests(), art_b.section_digests());
@@ -913,17 +939,34 @@ mod tests {
             accuracy: 0.95,
             created_unix: 1_760_000_000,
             updated_from: Some("demo@2".into()),
+            health: [
+                ("chol_pivot_min".to_string(), 0.125),
+                ("chol_pivot_max".to_string(), 4.5),
+                ("eps".to_string(), 0.001),
+            ]
+            .into_iter()
+            .collect(),
         };
-        let back = ModelManifest::from_text(&mf.to_text()).unwrap();
+        let text = mf.to_text();
+        assert!(text.contains("health.chol_pivot_min = 0.125"), "{text}");
+        assert!(text.contains("health.eps = 0.001"), "{text}");
+        let back = ModelManifest::from_text(&text).unwrap();
         assert_eq!(mf, back);
-        // no stream_block / updated_from lines when not applicable
-        let mf2 = ModelManifest { stream_block: None, updated_from: None, ..mf };
+        // no stream_block / updated_from / health lines when not applicable
+        let mf2 = ModelManifest {
+            stream_block: None,
+            updated_from: None,
+            health: Default::default(),
+            ..mf
+        };
         let text = mf2.to_text();
         assert!(!text.contains("stream_block"));
         assert!(!text.contains("updated_from"));
+        assert!(!text.contains("health."));
         let back2 = ModelManifest::from_text(&text).unwrap();
         assert_eq!(back2.stream_block, None);
         assert_eq!(back2.updated_from, None);
+        assert!(back2.health.is_empty());
     }
 
     #[test]

@@ -185,9 +185,11 @@ pub fn update_registry_model(
     opts: &UpdateOptions,
 ) -> Result<PublishedUpdate> {
     let (entry, artifact) = registry.load_artifact(spec)?;
+    crate::obs::flight::reset();
     let t0 = std::time::Instant::now();
     let (bank, new_artifact, report) = apply_update(&artifact, x_new, y_new, opts)?;
     let update_s = t0.elapsed().as_secs_f64();
+    crate::obs::flight::record("phase_update_s", update_s);
 
     // re-evaluate on the held-out split the model was trained against
     // (possible whenever the manifest names a registry dataset)
@@ -213,6 +215,7 @@ pub fn update_registry_model(
         map,
         accuracy,
         updated_from: Some(entry.spec()),
+        health: crate::obs::flight::snapshot(),
         ..Default::default()
     };
     let published = registry.publish(&entry.name, &new_artifact, &manifest)?;
@@ -272,6 +275,8 @@ fn update_exact(
         r.chol_l,
     )?;
     inc.extend(x_new, y_new)?;
+    crate::obs::flight::record("eps", inc.eps());
+    crate::da::akda::record_pivots(inc.chol_l());
 
     // Θ rebuilt from the updated counts, Ψ re-solved through the grown
     // factor — no refactorization anywhere on this path.
@@ -476,8 +481,12 @@ fn update_approx(
     // m ≪ N by construction, this is the cheap part)
     let mut sys = gram.clone();
     sys.add_ridge(r.eps);
+    crate::obs::flight::record("eps", r.eps);
+    let chol_start = std::time::Instant::now();
     let chol_l = chol::cholesky(&sys, chol::DEFAULT_BLOCK)
         .map_err(|e| anyhow::anyhow!("update m×m Cholesky failed: {e}"))?;
+    crate::obs::flight::record("phase_chol_s", chol_start.elapsed().as_secs_f64());
+    crate::da::akda::record_pivots(&chol_l);
     let rhs = multiclass_rhs(&class_sums, &counts);
     let y = chol::solve_lower(&chol_l, &rhs);
     let w = chol::solve_upper_from_lower(&chol_l, &y);

@@ -1,0 +1,77 @@
+//! Training flight recorder: numerical-health facts captured while a
+//! model fits or updates.
+//!
+//! AKDA's speed claim rests on "very stable numerical algorithms" —
+//! this module records the facts that would reveal the opposite before
+//! accuracy does: the extreme Cholesky pivots (conditioning of the
+//! regularized kernel system), the ε ridge actually applied, the
+//! core-matrix NZEP count and eigenvalue extremes, and per-phase wall
+//! durations. Each fact lands twice:
+//!
+//! * as an `akda_train_health{key="..."}` gauge, scrapeable live;
+//! * in the global recorder map, which `akda train` / the update
+//!   daemon snapshot into `health.*` keys of the model MANIFEST —
+//!   `akda models --inspect` surfaces them and `models --diff` flags a
+//!   republish that degrades conditioning before it serves.
+//!
+//! The recorder is process-global and phase-scoped by convention:
+//! callers [`reset`] before a fit/update and [`snapshot`] right after.
+//! Concurrent training in one process (only tests do this) may
+//! interleave facts; consumers therefore assert key presence, not
+//! exact values.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+static RECORDER: Mutex<BTreeMap<String, f64>> = Mutex::new(BTreeMap::new());
+
+/// Record one health fact under `key`, overwriting any previous value,
+/// and mirror it to the `akda_train_health{key="..."}` gauge.
+pub fn record(key: &str, value: f64) {
+    super::gauge_with("akda_train_health", &[("key", key)]).set(value);
+    if let Ok(mut map) = RECORDER.lock() {
+        map.insert(key.to_string(), value);
+    }
+}
+
+/// Clear the recorder — call at the start of a fit/update so the
+/// following [`snapshot`] holds only facts from that run.
+pub fn reset() {
+    if let Ok(mut map) = RECORDER.lock() {
+        map.clear();
+    }
+}
+
+/// The facts recorded since the last [`reset`], keyed as they will
+/// appear in the manifest (without the `health.` prefix).
+pub fn snapshot() -> BTreeMap<String, f64> {
+    RECORDER.lock().map(|m| m.clone()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_reset_snapshot_cycle() {
+        reset();
+        record("chol_pivot_min", 0.25);
+        record("chol_pivot_max", 4.0);
+        record("chol_pivot_min", 0.125); // overwrite wins
+        let snap = snapshot();
+        assert_eq!(snap.get("chol_pivot_min"), Some(&0.125));
+        assert_eq!(snap.get("chol_pivot_max"), Some(&4.0));
+        reset();
+        // Concurrent tests may interleave records after our reset, but
+        // the keys we wrote must be gone.
+        let snap = snapshot();
+        assert_ne!(snap.get("chol_pivot_min"), Some(&0.125));
+    }
+
+    #[test]
+    fn record_mirrors_to_gauge() {
+        record("flight_test_gauge_key", 7.5);
+        let g = crate::obs::gauge_with("akda_train_health", &[("key", "flight_test_gauge_key")]);
+        assert_eq!(g.get(), 7.5);
+    }
+}

@@ -10,6 +10,13 @@
 //! * `writer` — the `--metrics-out FILE` periodic JSONL appender.
 //! * `validate` — schema checks for the emitted JSONL and the
 //!   `BENCH_train.json` / `BENCH_serve.json` bench artifacts.
+//! * `trace` — L9 per-request distributed tracing across the
+//!   `akda-wire/1` edge: stage stamps, the `akda-trace/1` JSONL sink,
+//!   and the `akda trace` analyzer.
+//! * `flight` — the training flight recorder: numerical-health facts
+//!   (Cholesky pivots, ε applied, NZEP eigenvalue extremes, phase
+//!   durations) captured during fit/update and persisted as `health.*`
+//!   manifest keys.
 //!
 //! Design rule: the hot path never takes a lock. Call sites resolve an
 //! instrument handle once (a `Mutex`-guarded `BTreeMap` lookup), cache
@@ -17,9 +24,11 @@
 //! An instrument that is never snapshotted costs one `fetch_add` per
 //! event.
 
+pub mod flight;
 pub mod metrics;
 pub mod snapshot;
 pub mod span;
+pub mod trace;
 pub mod validate;
 pub mod writer;
 
@@ -28,6 +37,7 @@ use std::sync::Arc;
 pub use metrics::{global, Counter, Gauge, Histogram, Instrument, Key, MetricsRegistry};
 pub use snapshot::{unix_now, Snapshot, Value, METRICS_SCHEMA};
 pub use span::{span, Span};
+pub use trace::{TraceIdGen, TraceRecord, TraceSink, TraceStamps, TRACE_SCHEMA};
 pub use writer::MetricsWriter;
 
 /// Global label-free counter handle.

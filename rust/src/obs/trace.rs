@@ -1,0 +1,552 @@
+//! Per-request distributed tracing across the `akda-wire/1` edge.
+//!
+//! A traced request carries a client-minted 64-bit id ([`TraceIdGen`])
+//! in its ScoreRequest frame; every hop stamps a monotonic stage
+//! duration into a [`TraceRecord`]:
+//!
+//! ```text
+//!  client ──► net/read ──► net/queue ──► fleet/batch_wait ──► pool/score ──► net/write ──► client
+//!             (socket      (ingress,     (dispatcher          (WorkPool      (serialize
+//!              transfer     incl. shed    micro-batch          batch          + send)
+//!              + decode)    decisions)    collection)          compute)
+//! ```
+//!
+//! The five stages are sequential, non-overlapping segments of the
+//! server-side residency, so their sum is always ≤ the client-observed
+//! RTT (the difference is the wire + client stack). Records are emitted
+//! as [`TRACE_SCHEMA`] JSONL by a sampling [`TraceSink`] (`--trace-out`
+//! on `akda serve`), and the same stage durations feed the
+//! `akda_trace_stage_seconds{stage=...}` histograms so the aggregate
+//! and per-request views share instrument identity. `akda trace FILE`
+//! runs [`analyze`] over a sink file: top-k slowest requests, per-stage
+//! p50/p99, and a stage-share attribution table ("p99 is 71%
+//! fleet/batch_wait").
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Schema tag carried on every trace JSONL line.
+pub const TRACE_SCHEMA: &str = "akda-trace/1";
+
+/// Stage id of `net/read` (socket transfer + frame decode) in the wire
+/// timing echo. Ids are stable wire vocabulary — never renumber.
+pub const STAGE_NET_READ: u8 = 1;
+/// Stage id of `net/queue` (ingress queue residency, incl. sheds).
+pub const STAGE_NET_QUEUE: u8 = 2;
+/// Stage id of `fleet/batch_wait` (dispatcher micro-batch collection).
+pub const STAGE_BATCH_WAIT: u8 = 3;
+/// Stage id of `pool/score` (WorkPool batch compute).
+pub const STAGE_POOL_SCORE: u8 = 4;
+/// Stage id of `net/write` (response serialize + send).
+pub const STAGE_NET_WRITE: u8 = 5;
+
+/// Every stage in hop order: `(wire id, name)`.
+pub const STAGES: [(u8, &str); 5] = [
+    (STAGE_NET_READ, "net/read"),
+    (STAGE_NET_QUEUE, "net/queue"),
+    (STAGE_BATCH_WAIT, "fleet/batch_wait"),
+    (STAGE_POOL_SCORE, "pool/score"),
+    (STAGE_NET_WRITE, "net/write"),
+];
+
+/// The stable name of a stage id, if known.
+pub fn stage_name(id: u8) -> Option<&'static str> {
+    STAGES.iter().find(|(i, _)| *i == id).map(|(_, n)| *n)
+}
+
+/// Mints non-zero 64-bit trace ids from the crate's seeded PRNG — the
+/// same reproducibility spine as everything else, so a test run mints
+/// the same id sequence every time. 0 is reserved as the wire's
+/// "untraced" sentinel and is never produced.
+#[derive(Debug)]
+pub struct TraceIdGen {
+    rng: Rng,
+}
+
+impl TraceIdGen {
+    pub fn new(seed: u64) -> Self {
+        TraceIdGen { rng: Rng::new(seed) }
+    }
+
+    /// The next trace id (never 0).
+    pub fn next_id(&mut self) -> u64 {
+        loop {
+            let id = self.rng.next_u64();
+            if id != 0 {
+                return id;
+            }
+        }
+    }
+}
+
+/// Cross-layer stamp cell riding a request from the network edge into
+/// the fleet dispatcher and WorkPool: the dispatcher cannot see the
+/// connection and the writer thread cannot see the batch, so both write
+/// their stage durations (nanoseconds, relaxed atomics) into this
+/// shared cell and the writer assembles the final [`TraceRecord`].
+#[derive(Debug, Default)]
+pub struct TraceStamps {
+    /// `fleet/batch_wait` duration in nanoseconds (enqueue at the
+    /// dispatcher → batch collected onto a WorkPool job).
+    pub batch_wait_nanos: AtomicU64,
+    /// `pool/score` duration in nanoseconds (the batch compute).
+    pub score_nanos: AtomicU64,
+}
+
+impl TraceStamps {
+    /// `(batch_wait, score)` in seconds.
+    pub fn load(&self) -> (f64, f64) {
+        (
+            self.batch_wait_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            self.score_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+/// One request's assembled trace: stage durations in hop order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// The client-minted trace id (nonzero for traced requests; sheds
+    /// and slow-log captures may record untraced requests as 0).
+    pub trace: u64,
+    pub req_id: u64,
+    pub model: String,
+    /// True when the ingress queue shed this request — such records are
+    /// terminal at `net/queue` (no later stages exist).
+    pub shed: bool,
+    /// `(stage id, seconds)` in hop order; sheds stop at `net/queue`.
+    pub stages: Vec<(u8, f64)>,
+}
+
+impl TraceRecord {
+    /// Sum of all stage durations, seconds — the server-side residency.
+    pub fn total_s(&self) -> f64 {
+        self.stages.iter().map(|(_, s)| s).sum()
+    }
+
+    /// The `akda-trace/1` JSON document for one JSONL line. Trace ids
+    /// are hex strings (a u64 does not survive JSON's f64 numbers).
+    pub fn to_json(&self, unix_time: u64) -> Json {
+        let mut stages = std::collections::BTreeMap::new();
+        for &(id, secs) in &self.stages {
+            let name = stage_name(id).map(str::to_string).unwrap_or_else(|| format!("stage/{id}"));
+            stages.insert(name, Json::Num(secs * 1e3));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+        doc.insert("unix_time".to_string(), Json::Num(unix_time as f64));
+        doc.insert("trace".to_string(), Json::Str(format!("{:016x}", self.trace)));
+        doc.insert("req_id".to_string(), Json::Num(self.req_id as f64));
+        doc.insert("model".to_string(), Json::Str(self.model.clone()));
+        doc.insert("shed".to_string(), Json::Bool(self.shed));
+        doc.insert("total_ms".to_string(), Json::Num(self.total_s() * 1e3));
+        doc.insert("stages".to_string(), Json::Obj(stages));
+        Json::Obj(doc)
+    }
+}
+
+/// Sampling JSONL sink for trace records — the `--trace-out FILE`
+/// target. Two independent capture policies, OR-ed together:
+///
+/// * **sampling** — every `sample`-th request is recorded (`sample` 1 =
+///   all, 0 = sampling off);
+/// * **slow log** — any request whose server residency is ≥ `slow_ms`
+///   is always recorded (`slow_ms` 0 therefore captures everything).
+///
+/// Sheds are always recorded when any policy is active: a shed is
+/// precisely the event an operator reads traces to understand.
+#[derive(Debug)]
+pub struct TraceSink {
+    path: PathBuf,
+    out: Mutex<std::fs::File>,
+    sample: u64,
+    slow_ms: Option<f64>,
+    seq: AtomicU64,
+    written: AtomicU64,
+}
+
+impl TraceSink {
+    /// Create (truncating) the sink file. `sample` records every Nth
+    /// request (0 disables sampling); `slow_ms` always records requests
+    /// at or above the threshold (`Some(0.0)` captures every request).
+    pub fn create(
+        path: impl Into<PathBuf>,
+        sample: u64,
+        slow_ms: Option<f64>,
+    ) -> Result<TraceSink> {
+        let path = path.into();
+        let out = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("creating trace sink {path:?}"))?;
+        Ok(TraceSink {
+            path,
+            out: Mutex::new(out),
+            sample,
+            slow_ms,
+            seq: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        })
+    }
+
+    /// The sink file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Offer one assembled record; the sink applies its policies and
+    /// appends a JSONL line when any of them captures it. Never fails —
+    /// a full disk loses trace lines, not requests.
+    pub fn offer(&self, rec: &TraceRecord) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let sampled = self.sample > 0 && seq % self.sample == 0;
+        let slow = self.slow_ms.is_some_and(|ms| rec.total_s() * 1e3 >= ms);
+        let captured = rec.shed && (self.sample > 0 || self.slow_ms.is_some());
+        if !(sampled || slow || captured) {
+            return;
+        }
+        let line = format!("{}\n", rec.to_json(super::unix_now()));
+        if let Ok(mut f) = self.out.lock() {
+            if f.write_all(line.as_bytes()).is_ok() {
+                self.written.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Records actually written so far (after sampling).
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analyzer (`akda trace FILE`)
+// ---------------------------------------------------------------------------
+
+/// One parsed trace line, as [`analyze`] consumes it.
+#[derive(Debug, Clone)]
+pub struct ParsedTrace {
+    pub trace: u64,
+    pub model: String,
+    pub shed: bool,
+    pub total_ms: f64,
+    /// `(stage name, milliseconds)`.
+    pub stages: Vec<(String, f64)>,
+}
+
+/// Aggregate view over a trace file — render with `{}` (`Display`).
+#[derive(Debug)]
+pub struct TraceReport {
+    pub records: usize,
+    pub sheds: usize,
+    /// Per stage, in hop order: `(name, p50 ms, p99 ms, share of all
+    /// stage time, share within the p99 tail)`.
+    pub stages: Vec<(String, f64, f64, f64, f64)>,
+    /// Slowest requests, descending: `(trace, model, total ms,
+    /// dominant stage, dominant share)`.
+    pub slowest: Vec<(u64, String, f64, String, f64)>,
+    /// Requests making up the p99 tail the attribution is computed on.
+    pub tail_len: usize,
+}
+
+impl TraceReport {
+    /// The headline attribution: the stage owning the largest share of
+    /// the p99 tail, e.g. `("fleet/batch_wait", 0.71)`.
+    pub fn dominant_tail_stage(&self) -> Option<(&str, f64)> {
+        self.stages
+            .iter()
+            .max_by(|a, b| a.4.total_cmp(&b.4))
+            .filter(|s| s.4 > 0.0)
+            .map(|s| (s.0.as_str(), s.4))
+    }
+}
+
+/// Nearest-rank quantile over an ascending-sorted sample.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Parse one `akda-trace/1` JSONL line.
+pub fn parse_line(line: &str) -> Result<ParsedTrace> {
+    let doc = json::parse(line).context("trace line is not JSON")?;
+    let schema = doc.req("schema")?.as_str().context("schema must be a string")?;
+    if schema != TRACE_SCHEMA {
+        bail!("unexpected schema {schema:?} (want {TRACE_SCHEMA})");
+    }
+    let trace_hex = doc.req("trace")?.as_str().context("trace must be a hex string")?;
+    let trace = u64::from_str_radix(trace_hex, 16)
+        .with_context(|| format!("bad trace id {trace_hex:?}"))?;
+    let model = doc.req("model")?.as_str().unwrap_or_default().to_string();
+    let shed = matches!(doc.req("shed")?, Json::Bool(true));
+    let total_ms = match doc.req("total_ms")? {
+        Json::Num(n) => *n,
+        _ => bail!("total_ms must be a number"),
+    };
+    let mut stages = Vec::new();
+    if let Json::Obj(map) = doc.req("stages")? {
+        for (name, v) in map {
+            match v {
+                Json::Num(ms) => stages.push((name.clone(), *ms)),
+                _ => bail!("stage {name:?} must be a number"),
+            }
+        }
+    } else {
+        bail!("stages must be an object");
+    }
+    Ok(ParsedTrace { trace, model, shed, total_ms, stages })
+}
+
+/// Analyze a whole `akda-trace/1` JSONL document: per-stage quantiles,
+/// stage-share attribution over the full set and over the p99 latency
+/// tail, and the top-`top_k` slowest requests.
+pub fn analyze(text: &str, top_k: usize) -> Result<TraceReport> {
+    let mut parsed = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        parsed.push(parse_line(line).with_context(|| format!("trace line {}", i + 1))?);
+    }
+    if parsed.is_empty() {
+        bail!("no trace records in input");
+    }
+    let sheds = parsed.iter().filter(|p| p.shed).count();
+
+    // p99 tail: everything at or above the p99 of total_ms
+    let mut totals: Vec<f64> = parsed.iter().map(|p| p.total_ms).collect();
+    totals.sort_by(|a, b| a.total_cmp(b));
+    let p99_total = quantile_sorted(&totals, 0.99);
+    let tail: Vec<&ParsedTrace> =
+        parsed.iter().filter(|p| p.total_ms >= p99_total).collect();
+
+    // stage rows in hop order first, then any unknown names (sorted)
+    let mut names: Vec<String> = STAGES
+        .iter()
+        .map(|(_, n)| n.to_string())
+        .filter(|n| parsed.iter().any(|p| p.stages.iter().any(|(s, _)| s == n)))
+        .collect();
+    let mut extra: Vec<String> = parsed
+        .iter()
+        .flat_map(|p| p.stages.iter().map(|(s, _)| s.clone()))
+        .filter(|s| !names.contains(s))
+        .collect();
+    extra.sort();
+    extra.dedup();
+    names.extend(extra);
+
+    let stage_ms = |p: &ParsedTrace, name: &str| -> f64 {
+        p.stages.iter().find(|(s, _)| s == name).map(|(_, ms)| *ms).unwrap_or(0.0)
+    };
+    let all_time: f64 = parsed.iter().map(|p| p.total_ms).sum();
+    let tail_time: f64 = tail.iter().map(|p| p.total_ms).sum();
+    let mut stages = Vec::new();
+    for name in &names {
+        let mut sample: Vec<f64> =
+            parsed.iter().map(|p| stage_ms(p, name)).collect();
+        sample.sort_by(|a, b| a.total_cmp(b));
+        let sum: f64 = sample.iter().sum();
+        let tail_sum: f64 = tail.iter().map(|p| stage_ms(p, name)).sum();
+        stages.push((
+            name.clone(),
+            quantile_sorted(&sample, 0.5),
+            quantile_sorted(&sample, 0.99),
+            if all_time > 0.0 { sum / all_time } else { 0.0 },
+            if tail_time > 0.0 { tail_sum / tail_time } else { 0.0 },
+        ));
+    }
+
+    let mut by_total: Vec<&ParsedTrace> = parsed.iter().collect();
+    by_total.sort_by(|a, b| b.total_ms.total_cmp(&a.total_ms));
+    let slowest = by_total
+        .iter()
+        .take(top_k)
+        .map(|p| {
+            let (dom, dom_ms) = p
+                .stages
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(s, ms)| (s.clone(), *ms))
+                .unwrap_or_default();
+            let share = if p.total_ms > 0.0 { dom_ms / p.total_ms } else { 0.0 };
+            (p.trace, p.model.clone(), p.total_ms, dom, share)
+        })
+        .collect();
+
+    Ok(TraceReport { records: parsed.len(), sheds, stages, slowest, tail_len: tail.len() })
+}
+
+impl std::fmt::Display for TraceReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{TRACE_SCHEMA}: {} records ({} shed)", self.records, self.sheds)?;
+        writeln!(
+            f,
+            "{:<18} {:>10} {:>10} {:>8} {:>10}",
+            "stage", "p50 ms", "p99 ms", "share", "share@tail"
+        )?;
+        for (name, p50, p99, share, tail) in &self.stages {
+            writeln!(
+                f,
+                "{name:<18} {p50:>10.3} {p99:>10.3} {:>7.1}% {:>9.1}%",
+                share * 100.0,
+                tail * 100.0
+            )?;
+        }
+        if !self.slowest.is_empty() {
+            writeln!(f, "top {} slowest:", self.slowest.len())?;
+            for (i, (trace, model, ms, dom, share)) in self.slowest.iter().enumerate() {
+                writeln!(
+                    f,
+                    "  {:>2}. {trace:016x} {model:<12} {ms:>9.3} ms  {:.0}% {dom}",
+                    i + 1,
+                    share * 100.0
+                )?;
+            }
+        }
+        if let Some((stage, share)) = self.dominant_tail_stage() {
+            writeln!(
+                f,
+                "p99 is {:.0}% {stage} (tail of {} request{})",
+                share * 100.0,
+                self.tail_len,
+                if self.tail_len == 1 { "" } else { "s" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace: u64, model: &str, shed: bool, stages: &[(u8, f64)]) -> TraceRecord {
+        TraceRecord {
+            trace,
+            req_id: trace & 0xFF,
+            model: model.to_string(),
+            shed,
+            stages: stages.to_vec(),
+        }
+    }
+
+    #[test]
+    fn record_round_trips_through_json_line() {
+        let r = rec(
+            0xDEAD_BEEF_1234_5678,
+            "ta",
+            false,
+            &[(STAGE_NET_READ, 0.001), (STAGE_POOL_SCORE, 0.004)],
+        );
+        let line = r.to_json(1_700_000_000).to_string();
+        let p = parse_line(&line).unwrap();
+        assert_eq!(p.trace, r.trace);
+        assert_eq!(p.model, "ta");
+        assert!(!p.shed);
+        assert!((p.total_ms - 5.0).abs() < 1e-9);
+        assert!(p.stages.iter().any(|(s, ms)| s == "net/read" && (*ms - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn sink_sampling_and_slow_log_policies() {
+        let dir = std::env::temp_dir().join(format!("akda_trace_sink_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // sample every 3rd: 9 offers -> 3 lines
+        let sink = TraceSink::create(dir.join("s3.jsonl"), 3, None).unwrap();
+        for i in 0..9u64 {
+            sink.offer(&rec(i + 1, "m", false, &[(STAGE_POOL_SCORE, 0.001)]));
+        }
+        assert_eq!(sink.written(), 3);
+
+        // slow_ms 0 captures everything even with sampling off
+        let sink = TraceSink::create(dir.join("slow0.jsonl"), 0, Some(0.0)).unwrap();
+        for i in 0..5u64 {
+            sink.offer(&rec(i + 1, "m", false, &[(STAGE_POOL_SCORE, 1e-6)]));
+        }
+        assert_eq!(sink.written(), 5);
+
+        // slow_ms 10: only the one slow request is captured
+        let sink = TraceSink::create(dir.join("slow10.jsonl"), 0, Some(10.0)).unwrap();
+        sink.offer(&rec(1, "m", false, &[(STAGE_POOL_SCORE, 0.001)]));
+        sink.offer(&rec(2, "m", false, &[(STAGE_POOL_SCORE, 0.020)]));
+        assert_eq!(sink.written(), 1);
+
+        // sheds are always captured while any policy is active
+        let sink = TraceSink::create(dir.join("shed.jsonl"), 1000, None).unwrap();
+        sink.offer(&rec(1, "m", false, &[(STAGE_POOL_SCORE, 0.001)])); // seq 0: sampled
+        sink.offer(&rec(2, "m", true, &[(STAGE_NET_QUEUE, 0.002)])); // shed: captured
+        sink.offer(&rec(3, "m", false, &[(STAGE_POOL_SCORE, 0.001)])); // dropped
+        assert_eq!(sink.written(), 2);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn analyzer_attributes_the_tail() {
+        // 20 fast requests dominated by score, one huge batch_wait outlier
+        let mut text = String::new();
+        for i in 0..20u64 {
+            let r = rec(
+                i + 1,
+                "ta",
+                false,
+                &[(STAGE_NET_READ, 0.0001), (STAGE_POOL_SCORE, 0.001)],
+            );
+            text.push_str(&r.to_json(0).to_string());
+            text.push('\n');
+        }
+        let outlier = rec(
+            99,
+            "tb",
+            false,
+            &[(STAGE_NET_READ, 0.0001), (STAGE_BATCH_WAIT, 0.080), (STAGE_POOL_SCORE, 0.002)],
+        );
+        text.push_str(&outlier.to_json(0).to_string());
+        text.push('\n');
+
+        let report = analyze(&text, 3).unwrap();
+        assert_eq!(report.records, 21);
+        assert_eq!(report.sheds, 0);
+        let (stage, share) = report.dominant_tail_stage().unwrap();
+        assert_eq!(stage, "fleet/batch_wait", "tail must be attributed to the outlier stage");
+        assert!(share > 0.9, "share {share}");
+        assert_eq!(report.slowest[0].0, 99, "slowest must be the outlier");
+        let rendered = format!("{report}");
+        assert!(rendered.contains("p99 is"), "{rendered}");
+        assert!(rendered.contains("fleet/batch_wait"), "{rendered}");
+    }
+
+    #[test]
+    fn id_gen_is_seeded_and_never_zero() {
+        let mut a = TraceIdGen::new(7);
+        let mut b = TraceIdGen::new(7);
+        for _ in 0..100 {
+            let id = a.next_id();
+            assert_eq!(id, b.next_id(), "same seed, same ids");
+            assert_ne!(id, 0);
+        }
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        assert_eq!(stage_name(STAGE_NET_READ), Some("net/read"));
+        assert_eq!(stage_name(STAGE_NET_WRITE), Some("net/write"));
+        assert_eq!(stage_name(99), None);
+    }
+}

@@ -1,6 +1,8 @@
 //! Schema validators for the files this crate emits: `--metrics-out`
 //! JSONL (`akda-metrics/1`), `BENCH_train.json` (`akda-bench-train/1`)
-//! and `BENCH_serve.json` (`akda-bench-serve/1`). CI runs these via
+//! and `BENCH_serve.json` (`akda-bench-serve/1`, or `/2` when the TCP
+//! bench recorded the per-stage timing breakdown from the server-timing
+//! echo — v2 requires a non-empty `stages` object). CI runs these via
 //! `akda metrics --validate FILE` so a schema drift fails the build
 //! instead of silently breaking downstream dashboards.
 
@@ -18,7 +20,9 @@ pub fn validate_file(path: &std::path::Path) -> Result<String> {
         if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
             match schema {
                 "akda-bench-train/1" => return validate_bench_train(&doc),
-                "akda-bench-serve/1" => return validate_bench_serve(&doc),
+                "akda-bench-serve/1" | "akda-bench-serve/2" => {
+                    return validate_bench_serve(&doc)
+                }
                 "akda-metrics/1" => {
                     validate_metrics_line(&doc)?;
                     return Ok("akda-metrics/1: 1 snapshot ok".to_string());
@@ -134,6 +138,8 @@ fn validate_bench_train(doc: &Json) -> Result<String> {
 }
 
 fn validate_bench_serve(doc: &Json) -> Result<String> {
+    let schema =
+        doc.req("schema")?.as_str().context("schema is not a string")?.to_string();
     num(doc, "duration_s")?;
     let tenants = doc.req("tenants")?.as_arr().context("tenants is not an array")?;
     ensure!(!tenants.is_empty(), "tenants is empty");
@@ -146,7 +152,27 @@ fn validate_bench_serve(doc: &Json) -> Result<String> {
     let total = doc.req("total")?;
     num(total, "requests")?;
     num(total, "req_per_s")?;
-    Ok(format!("akda-bench-serve/1: {} tenants ok", tenants.len()))
+    // v2 additionally carries the per-stage server-timing breakdown the
+    // TCP bench aggregated from traced responses — it must be non-empty
+    // (an empty echo means the bench should have emitted v1)
+    let mut n_stages = 0usize;
+    if schema == "akda-bench-serve/2" {
+        let Json::Obj(stages) = doc.req("stages")? else {
+            bail!("stages is not an object");
+        };
+        ensure!(!stages.is_empty(), "akda-bench-serve/2 requires a non-empty stages object");
+        for (name, s) in stages {
+            for field in ["p50_ms", "p99_ms", "share"] {
+                num(s, field).with_context(|| format!("stage {name:?}"))?;
+            }
+        }
+        n_stages = stages.len();
+    }
+    if n_stages > 0 {
+        Ok(format!("{schema}: {} tenants, {n_stages} stages ok", tenants.len()))
+    } else {
+        Ok(format!("{schema}: {} tenants ok", tenants.len()))
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +199,20 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_staleness_boundary_is_600s() {
+        // exactly at the 600 s freshness budget: still fresh
+        let fresh = r#"{"schema":"akda-metrics/1","unix_time":10600,
+            "counters":{},"gauges":{"x_heartbeat_unix":10000},"summaries":{}}"#;
+        require_nonzero(&parse(fresh).unwrap(), &["x_heartbeat_unix"]).unwrap();
+        // one second past the budget: stale, and the error says so
+        let stale = r#"{"schema":"akda-metrics/1","unix_time":10601,
+            "counters":{},"gauges":{"x_heartbeat_unix":10000},"summaries":{}}"#;
+        let err = require_nonzero(&parse(stale).unwrap(), &["x_heartbeat_unix"])
+            .expect_err("601 s old heartbeat must be rejected");
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+    }
+
+    #[test]
     fn bench_schemas_validate() {
         let train = r#"{"schema":"akda-bench-train/1","suite":"small","fast":true,
             "datasets":[{"name":"iris","methods":[
@@ -184,6 +224,31 @@ mod tests {
                         "p50_ms":1.0,"p99_ms":2.0}],
             "total":{"requests":100,"req_per_s":50.0}}"#;
         validate_bench_serve(&parse(serve).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn bench_serve_v2_requires_stages() {
+        let v2 = r#"{"schema":"akda-bench-serve/2","duration_s":2.0,
+            "tenants":[{"model":"aa","requests":100,"rejected":0,"req_per_s":50.0,
+                        "p50_ms":1.0,"p99_ms":2.0}],
+            "stages":{"net/read":{"p50_ms":0.01,"p99_ms":0.05,"share":0.1},
+                      "pool/score":{"p50_ms":0.4,"p99_ms":1.2,"share":0.9}},
+            "total":{"requests":100,"req_per_s":50.0}}"#;
+        let summary = validate_bench_serve(&parse(v2).unwrap()).unwrap();
+        assert!(summary.contains("2 stages"), "{summary}");
+
+        // v2 without stages — or with an empty stages object — is invalid
+        let missing = r#"{"schema":"akda-bench-serve/2","duration_s":2.0,
+            "tenants":[{"model":"aa","requests":1,"rejected":0,"req_per_s":1.0,
+                        "p50_ms":1.0,"p99_ms":2.0}],
+            "total":{"requests":1,"req_per_s":1.0}}"#;
+        assert!(validate_bench_serve(&parse(missing).unwrap()).is_err());
+        let empty = r#"{"schema":"akda-bench-serve/2","duration_s":2.0,
+            "tenants":[{"model":"aa","requests":1,"rejected":0,"req_per_s":1.0,
+                        "p50_ms":1.0,"p99_ms":2.0}],
+            "stages":{},
+            "total":{"requests":1,"req_per_s":1.0}}"#;
+        assert!(validate_bench_serve(&parse(empty).unwrap()).is_err());
     }
 
     #[test]

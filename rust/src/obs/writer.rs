@@ -3,20 +3,43 @@
 //! A `MetricsWriter` appends one `akda-metrics/1` JSON line (see
 //! [`super::snapshot`]) immediately on start, then every `period`, then
 //! once more on shutdown — so even a short-lived process leaves at
-//! least two observable snapshots behind.
+//! least two observable snapshots behind. The shutdown line only covers
+//! clean `Drop`; panic/abort paths that want a last observable state
+//! call [`flush_all`], which appends one snapshot to every writer
+//! target currently active in the process.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::metrics::global;
 use super::snapshot::unix_now;
 
+/// Targets of every live `MetricsWriter`, so [`flush_all`] can reach
+/// them from panic paths that never see the writer handles.
+static ACTIVE: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+
+/// Append one final snapshot to every active `--metrics-out` target —
+/// the best-effort flush for panic/abort paths (e.g. the update
+/// daemon's quarantine arm), where clean `Drop` never runs. A no-op
+/// when no writer is active; never fails, never panics.
+pub fn flush_all() {
+    let paths: Vec<PathBuf> = match ACTIVE.lock() {
+        Ok(v) => v.clone(),
+        Err(_) => return,
+    };
+    for path in paths {
+        let mut warned = true; // panic path: skip the stderr report
+        append_snapshot(&path, &mut warned);
+    }
+}
+
 /// Handle to the writer thread; flushes a final snapshot on drop.
 #[derive(Debug)]
 pub struct MetricsWriter {
+    path: PathBuf,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -29,6 +52,10 @@ impl MetricsWriter {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let path: PathBuf = path.to_path_buf();
+        if let Ok(mut active) = ACTIVE.lock() {
+            active.push(path.clone());
+        }
+        let registered = path.clone();
         let handle = std::thread::spawn(move || {
             let mut warned = false;
             append_snapshot(&path, &mut warned);
@@ -47,7 +74,7 @@ impl MetricsWriter {
             }
             append_snapshot(&path, &mut warned);
         });
-        Self { stop, handle: Some(handle) }
+        Self { path: registered, stop, handle: Some(handle) }
     }
 }
 
@@ -56,6 +83,11 @@ impl Drop for MetricsWriter {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+        if let Ok(mut active) = ACTIVE.lock() {
+            if let Some(i) = active.iter().position(|p| *p == self.path) {
+                active.remove(i);
+            }
         }
     }
 }
@@ -97,6 +129,32 @@ mod tests {
             let j = crate::util::json::parse(line).unwrap();
             assert_eq!(j.req("schema").unwrap().as_str(), Some("akda-metrics/1"));
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flush_all_reaches_active_writers_and_forgets_dropped_ones() {
+        let path =
+            std::env::temp_dir().join(format!("akda_obs_flushall_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let w = MetricsWriter::start(&path, Duration::from_secs(3600));
+        // wait for the initial line so the count below is stable
+        for _ in 0..200 {
+            if path.exists() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let count = |p: &Path| {
+            std::fs::read_to_string(p).map(|t| t.lines().count()).unwrap_or(0)
+        };
+        let before = count(&path);
+        flush_all();
+        assert_eq!(count(&path), before + 1, "flush_all must append one snapshot");
+        drop(w);
+        let settled = count(&path);
+        flush_all();
+        assert_eq!(count(&path), settled, "dropped writers must be forgotten");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -157,6 +157,7 @@ fn torture_malformed_input_never_panics_and_never_disturbs_others() {
         req_id: 9,
         model: "aa".into(),
         features: xa.row(0).to_vec(),
+        trace: 0,
     });
     bytes[20] ^= 0x01;
     c.send_raw(&bytes).unwrap();
@@ -175,6 +176,7 @@ fn torture_malformed_input_never_panics_and_never_disturbs_others() {
         req_id: 10,
         model: "aa".into(),
         features: xa.row(1).to_vec(),
+        trace: 0,
     });
     c.send_raw(&bytes[..10]).unwrap();
     drop(c);
@@ -188,7 +190,12 @@ fn torture_malformed_input_never_panics_and_never_disturbs_others() {
 
     // -- a response-type frame sent TO the server: protocol violation
     let mut c = connect(&server);
-    c.send_raw(&encode(&Frame::ScoreResponse { req_id: 4, scores: vec![1.0] })).unwrap();
+    c.send_raw(&encode(&Frame::ScoreResponse {
+        req_id: 4,
+        scores: vec![1.0],
+        timings: Vec::new(),
+    }))
+    .unwrap();
     match c.recv().unwrap() {
         Frame::Error { code: ErrorCode::BadFrame, req_id: 4, .. } => {}
         other => panic!("a response frame at the server must be rejected, got {other:?}"),
@@ -248,7 +255,7 @@ fn interleaved_pipelined_requests_route_replies_by_req_id() {
     // replies may arrive out of order (per-tenant batching) — collect all
     for _ in 0..expected.len() {
         match c.recv().unwrap() {
-            Frame::ScoreResponse { req_id, scores } => {
+            Frame::ScoreResponse { req_id, scores, .. } => {
                 let want = expected.remove(&req_id).expect("unknown or duplicate req_id");
                 assert_eq!(scores, want, "TCP scores must be bit-for-bit in-process scores");
             }
@@ -432,7 +439,7 @@ fn backpressure_sheds_oldest_with_typed_retry_and_recovers() {
     // the dispatcher's micro-batch window makes each submission take
     // milliseconds while pipelined frames arrive in microseconds, so a
     // 50-deep burst MUST overflow the queue deterministically
-    let opts = NetOptions { queue_cap: 2, max_inflight: 1, retry_after_ms: 7 };
+    let opts = NetOptions { queue_cap: 2, max_inflight: 1, retry_after_ms: 7, ..Default::default() };
     let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
     let listen = server.local_addr().to_string();
 

@@ -1,0 +1,326 @@
+//! Integration: end-to-end request tracing across the akda-wire edge
+//! (L9) — `NetServer` + `TraceSink` + the client-side echo.
+//!
+//! Pins the PR's acceptance guarantees:
+//!
+//! 1. **Identity** — client-minted trace ids survive the wire round
+//!    trip bit-for-bit into the server's `akda-trace/1` sink records.
+//! 2. **Physics** — the echoed per-stage durations are the five hop
+//!    stages in order, and their sum never exceeds the client-observed
+//!    RTT (the stages are sequential, non-overlapping segments of the
+//!    server-side residency).
+//! 3. **Policy** — `--trace-slow-ms 0` captures every request, while
+//!    `--trace-sample N` writes exactly every Nth record.
+//! 4. **Sheds** — an overloaded ingress writes a terminal `net/queue`
+//!    record with `shed=true` and exactly two stages, one per shed the
+//!    client observed.
+//! 5. **Compatibility** — pre-extension (untraced) ScoreRequest bytes
+//!    still decode and score bit-for-bit against the in-process fleet.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use akda::coordinator::net::{NetClient, NetOptions, NetReply, NetServer};
+use akda::coordinator::wire::{encode, ErrorCode, Frame};
+use akda::coordinator::{DetectorBank, FleetOptions, FleetService};
+use akda::da::akda::Akda;
+use akda::da::{DrMethod, Projection};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::update::train_svm_bank;
+use akda::model::{encode_bank, ModelArtifact, ModelManifest, ModelRegistry};
+use akda::obs::trace::{parse_line, STAGES};
+use akda::obs::{TraceIdGen, TraceSink};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("akda_trace_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Train one publishable tenant; returns its rows (for request payloads)
+/// and the artifact.
+fn tenant(dim: usize, n_classes: usize, seed: u64) -> (Mat, ModelArtifact) {
+    let (x, labels) = gaussian_classes(&GaussianSpec {
+        n_classes,
+        n_per_class: vec![14; n_classes],
+        dim,
+        class_sep: 2.5,
+        noise: 0.6,
+        modes_per_class: 1,
+        seed,
+    });
+    let akda_cfg = Akda::new(Kernel::Rbf { rho: 0.4 });
+    let proj = akda_cfg.fit(&x, &labels, n_classes).expect("fit");
+    let z = proj.project(&x);
+    let svms = train_svm_bank(&z, &labels, n_classes);
+    let bank = DetectorBank { projection: proj, svms };
+    let art = encode_bank(&bank, "akda").expect("encode");
+    (x, art)
+}
+
+/// Registry with one tenant `ta` (6 features / 3 classes) plus its rows.
+fn one_tenant_registry(tag: &str, seed: u64) -> (PathBuf, ModelRegistry, Mat) {
+    let root = tmpdir(tag);
+    let registry = ModelRegistry::open(&root);
+    let (x, art) = tenant(6, 3, seed);
+    let mf = ModelManifest {
+        method: "akda".into(),
+        n_classes: 3,
+        input_dim: 6,
+        ..Default::default()
+    };
+    registry.publish("ta", &art, &mf).unwrap();
+    (root, registry, x)
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    NetClient::connect(server.local_addr(), RECV_TIMEOUT).unwrap()
+}
+
+/// Read and parse every line of a sink file (skipping blanks).
+fn parsed_records(sink: &TraceSink) -> Vec<akda::obs::trace::ParsedTrace> {
+    let text = std::fs::read_to_string(sink.path()).unwrap();
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| parse_line(l).unwrap())
+        .collect()
+}
+
+/// Acceptance: trace ids minted on the client arrive in the sink's
+/// `akda-trace/1` records bit-for-bit, and every scored record carries
+/// all five hop stages.
+#[test]
+fn trace_ids_cross_the_wire_bit_for_bit_into_the_sink() {
+    let (root, registry, x) = one_tenant_registry("ids", 81);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let sink = Arc::new(TraceSink::create(root.join("trace.jsonl"), 1, None).unwrap());
+    let opts = NetOptions { trace: Some(sink.clone()), ..Default::default() };
+    let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
+    let mut c = connect(&server);
+
+    let mut ids = TraceIdGen::new(0xC0FF_EE01);
+    let mut minted = BTreeSet::new();
+    for i in 0..6 {
+        let id = ids.next_id();
+        minted.insert(id);
+        match c.score_traced("ta", x.row(i), id).unwrap().reply {
+            NetReply::Scores(s) => assert_eq!(s.len(), 3),
+            other => panic!("traced request must score, got {other:?}"),
+        }
+    }
+    // joining the server's threads flushes every pending sink offer
+    drop(c);
+    drop(server);
+
+    assert_eq!(sink.written(), 6, "sample=1 must capture every request");
+    let records = parsed_records(&sink);
+    let mut seen = BTreeSet::new();
+    for rec in &records {
+        assert!(!rec.shed);
+        assert_eq!(rec.model, "ta");
+        for (_, name) in STAGES {
+            assert!(
+                rec.stages.iter().any(|(s, _)| s == name),
+                "record is missing stage {name}: {rec:?}"
+            );
+        }
+        seen.insert(rec.trace);
+    }
+    assert_eq!(seen, minted, "trace ids must survive the wire bit-for-bit");
+
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: the server-timing echo lists the five stages in hop
+/// order and their sum is bounded by the client-observed RTT; an
+/// untraced request gets no echo.
+#[test]
+fn echoed_stage_sum_is_bounded_by_client_rtt() {
+    let (root, registry, x) = one_tenant_registry("rtt", 82);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+    let mut c = connect(&server);
+
+    let hop_order: Vec<u8> = STAGES.iter().map(|&(id, _)| id).collect();
+    let mut ids = TraceIdGen::new(7);
+    for i in 0..8 {
+        let traced = c.score_traced("ta", x.row(i % x.rows()), ids.next_id()).unwrap();
+        match &traced.reply {
+            NetReply::Scores(s) => assert_eq!(s.len(), 3),
+            other => panic!("traced request must score, got {other:?}"),
+        }
+        let order: Vec<u8> = traced.timings.iter().map(|&(id, _)| id).collect();
+        assert_eq!(order, hop_order, "echo must list the five stages in hop order");
+        let sum_s: f64 = traced.timings.iter().map(|&(_, ns)| ns as f64 * 1e-9).sum();
+        let rtt_s = traced.rtt.as_secs_f64();
+        assert!(
+            sum_s <= rtt_s,
+            "stage sum {sum_s} s must be <= client rtt {rtt_s} s"
+        );
+    }
+
+    // trace id 0 is the wire's "untraced" sentinel: no echo comes back
+    let bare = c.score_traced("ta", x.row(0), 0).unwrap();
+    assert!(matches!(bare.reply, NetReply::Scores(_)));
+    assert!(bare.timings.is_empty(), "untraced requests must not be echoed");
+
+    drop(c);
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: `--trace-sample 3` writes exactly every 3rd record;
+/// `--trace-slow-ms 0` (sampling off) captures every request.
+#[test]
+fn sink_policies_hold_over_the_wire() {
+    let (root, registry, x) = one_tenant_registry("policy", 83);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+
+    // sample every 3rd: 9 sequential requests -> records at seq 0, 3, 6
+    let s3 = Arc::new(TraceSink::create(root.join("s3.jsonl"), 3, None).unwrap());
+    {
+        let opts = NetOptions { trace: Some(s3.clone()), ..Default::default() };
+        let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
+        let mut c = connect(&server);
+        let mut ids = TraceIdGen::new(9);
+        for i in 0..9 {
+            let traced = c.score_traced("ta", x.row(i % x.rows()), ids.next_id()).unwrap();
+            assert!(matches!(traced.reply, NetReply::Scores(_)));
+        }
+        drop(c);
+    }
+    assert_eq!(s3.written(), 3, "sample=3 must write exactly every 3rd record");
+
+    // slow-ms 0 with sampling off: every request is "slow enough"
+    let slow0 = Arc::new(TraceSink::create(root.join("slow0.jsonl"), 0, Some(0.0)).unwrap());
+    {
+        let opts = NetOptions { trace: Some(slow0.clone()), ..Default::default() };
+        let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
+        let mut c = connect(&server);
+        let mut ids = TraceIdGen::new(10);
+        for i in 0..5 {
+            let traced = c.score_traced("ta", x.row(i % x.rows()), ids.next_id()).unwrap();
+            assert!(matches!(traced.reply, NetReply::Scores(_)));
+        }
+        drop(c);
+    }
+    assert_eq!(slow0.written(), 5, "slow-ms 0 must capture every request");
+
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: a shed request leaves a terminal `net/queue` record with
+/// `shed=true` and exactly the two ingress stages — one record per shed
+/// the client observed, and one record per request overall.
+#[test]
+fn sheds_leave_terminal_net_queue_records() {
+    let (root, registry, x) = one_tenant_registry("shed", 84);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let sink = Arc::new(TraceSink::create(root.join("shed.jsonl"), 1, None).unwrap());
+    let opts = NetOptions {
+        queue_cap: 2,
+        max_inflight: 1,
+        retry_after_ms: 7,
+        trace: Some(sink.clone()),
+        ..Default::default()
+    };
+    let server = NetServer::start("127.0.0.1:0", svc.client(), opts).unwrap();
+    let mut c = connect(&server);
+
+    // burst 50 traced requests down one pipelined connection: the tiny
+    // ingress (queue_cap 2, one in flight) must shed some of them
+    const BURST: usize = 50;
+    let mut ids = TraceIdGen::new(0x5EED_5EED);
+    for i in 0..BURST {
+        c.send_score_traced("ta", x.row(i % x.rows()), ids.next_id()).unwrap();
+    }
+    let (mut scored, mut shed) = (0usize, 0usize);
+    for _ in 0..BURST {
+        match c.recv().unwrap() {
+            Frame::ScoreResponse { .. } => scored += 1,
+            Frame::Error { code: ErrorCode::OverCapacity, retry_after_ms, .. } => {
+                assert_eq!(retry_after_ms, 7);
+                shed += 1;
+            }
+            other => panic!("expected scores or OverCapacity, got {other:?}"),
+        }
+    }
+    assert_eq!(scored + shed, BURST);
+    assert!(shed > 0, "a queue_cap=2 ingress must shed under a 50-deep burst");
+
+    drop(c);
+    drop(server);
+
+    assert_eq!(sink.written(), BURST as u64, "sample=1 must record every request");
+    let records = parsed_records(&sink);
+    let shed_recs: Vec<_> = records.iter().filter(|r| r.shed).collect();
+    assert_eq!(shed_recs.len(), shed, "one shed=true record per client-observed shed");
+    for rec in &shed_recs {
+        // the JSONL stages object is name-keyed, so parsed order is
+        // alphabetical — compare the sorted set
+        let mut names: Vec<&str> = rec.stages.iter().map(|(s, _)| s.as_str()).collect();
+        names.sort_unstable();
+        assert_eq!(
+            names,
+            vec!["net/queue", "net/read"],
+            "a shed is terminal at net/queue: {rec:?}"
+        );
+        assert_ne!(rec.trace, 0, "the shed record must keep the client's trace id");
+    }
+    for rec in records.iter().filter(|r| !r.shed) {
+        assert_eq!(rec.stages.len(), STAGES.len(), "scored records carry all stages");
+    }
+
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Acceptance: the exact byte sequence a pre-extension client sends (a
+/// ScoreRequest with no trailing trace id — pinned byte-identical to
+/// `encode(.. trace: 0)` by the wire codec's own tests) still decodes
+/// and scores bit-for-bit against the in-process fleet client.
+#[test]
+fn pre_extension_request_bytes_still_score_bit_for_bit() {
+    let (root, registry, x) = one_tenant_registry("compat", 85);
+    let svc = FleetService::start(&registry, FleetOptions::default()).unwrap();
+    let fleet = svc.client();
+    let server = NetServer::start("127.0.0.1:0", svc.client(), NetOptions::default()).unwrap();
+    let mut c = connect(&server);
+
+    for i in 0..4 {
+        let row = x.row(i);
+        let bytes = encode(&Frame::ScoreRequest {
+            req_id: 70 + i as u64,
+            model: "ta".to_string(),
+            features: row.to_vec(),
+            trace: 0,
+        });
+        c.send_raw(&bytes).unwrap();
+        match c.recv().unwrap() {
+            Frame::ScoreResponse { req_id, scores, timings } => {
+                assert_eq!(req_id, 70 + i as u64);
+                assert!(timings.is_empty(), "old-format requests must get no echo");
+                let want = fleet.score("ta", row.to_vec()).unwrap();
+                let got_bits: Vec<u64> = scores.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "scores must match bit-for-bit");
+            }
+            other => panic!("pre-extension request must score, got {other:?}"),
+        }
+    }
+
+    drop(c);
+    drop(server);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -47,16 +47,31 @@ fn rand_code(rng: &mut Rng) -> ErrorCode {
     ErrorCode::from_u8(1 + rng.below(5) as u8).expect("codes 1..=5 are all valid")
 }
 
+/// Random server-timing echo: `(stage id, nanos)` pairs, frequently
+/// empty — the canonical encoding elides an empty echo entirely, so the
+/// elided form must keep round-tripping too.
+fn rand_timings(rng: &mut Rng) -> Vec<(u8, u64)> {
+    let len = rng.below(6);
+    (0..len).map(|_| (1 + rng.below(5) as u8, rng.next_u64())).collect()
+}
+
 /// One random frame of a random type.
 fn rand_frame(rng: &mut Rng) -> Frame {
     let req_id = rng.next_u64();
-    match rng.below(5) {
+    match rng.below(7) {
         0 => Frame::ScoreRequest {
             req_id,
             model: rand_str(rng, 24),
             features: rand_f64s(rng, 48),
+            // 0 half the time: the untraced (trace-elided) form must
+            // keep round-tripping alongside the traced extension
+            trace: if rng.below(2) == 0 { 0 } else { rng.next_u64() | 1 },
         },
-        1 => Frame::ScoreResponse { req_id, scores: rand_f64s(rng, 16) },
+        1 => Frame::ScoreResponse {
+            req_id,
+            scores: rand_f64s(rng, 16),
+            timings: rand_timings(rng),
+        },
         2 => Frame::Error {
             req_id,
             code: rand_code(rng),
@@ -64,7 +79,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
             message: rand_str(rng, 120),
         },
         3 => Frame::ModelsRequest { req_id },
-        _ => Frame::ModelsResponse {
+        4 => Frame::ModelsResponse {
             req_id,
             models: (0..rng.below(6))
                 .map(|_| WireModel {
@@ -74,6 +89,11 @@ fn rand_frame(rng: &mut Rng) -> Frame {
                 })
                 .collect(),
         },
+        5 => Frame::MetricsRequest { req_id },
+        _ => Frame::MetricsResponse {
+            req_id,
+            payload: (0..rng.below(65)).map(|_| rng.next_u64() as u8).collect(),
+        },
     }
 }
 
@@ -82,7 +102,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
 #[test]
 fn random_frames_round_trip_bitforbit() {
     let mut rng = Rng::new(0x57_69_72_65_66_75_7a_7a); // "wirefuzz"
-    let mut seen_types = [false; 5];
+    let mut seen_types = [false; 7];
     for _ in 0..400 {
         let frame = rand_frame(&mut rng);
         seen_types[match &frame {
@@ -91,6 +111,8 @@ fn random_frames_round_trip_bitforbit() {
             Frame::Error { .. } => 2,
             Frame::ModelsRequest { .. } => 3,
             Frame::ModelsResponse { .. } => 4,
+            Frame::MetricsRequest { .. } => 5,
+            Frame::MetricsResponse { .. } => 6,
         }] = true;
         let bytes = encode(&frame);
         let (back, consumed) = decode(&bytes).expect("a frame we encoded must decode");
@@ -99,7 +121,7 @@ fn random_frames_round_trip_bitforbit() {
         // and re-encoding the decoded frame reproduces the exact bytes
         assert_eq!(encode(&back), bytes, "re-encode must be byte-identical");
     }
-    assert!(seen_types.iter().all(|&t| t), "400 draws must cover all 5 frame types");
+    assert!(seen_types.iter().all(|&t| t), "400 draws must cover all 7 frame types");
 }
 
 /// Acceptance: NaN payloads cross the wire byte-for-byte (scores can
@@ -109,14 +131,15 @@ fn nan_features_round_trip_bitforbit() {
     let frame = Frame::ScoreResponse {
         req_id: 7,
         scores: vec![f64::NAN, 1.0, f64::from_bits(0x7ff8_dead_beef_0001)],
+        timings: Vec::new(),
     };
     let bytes = encode(&frame);
     let (back, consumed) = decode(&bytes).expect("NaN frames must decode");
     assert_eq!(consumed, bytes.len());
     // Frame is PartialEq over f64, so compare through the bit patterns
-    match back {
-        Frame::ScoreResponse { req_id, scores } => {
-            assert_eq!(req_id, 7);
+    match &back {
+        Frame::ScoreResponse { req_id, scores, .. } => {
+            assert_eq!(*req_id, 7);
             let got: Vec<u64> = scores.iter().map(|v| v.to_bits()).collect();
             let want: Vec<u64> = match &frame {
                 Frame::ScoreResponse { scores, .. } => {
@@ -127,6 +150,32 @@ fn nan_features_round_trip_bitforbit() {
             assert_eq!(got, want, "NaN bit patterns must survive the wire");
         }
         other => panic!("expected a ScoreResponse back, got {other:?}"),
+    }
+    assert_eq!(encode(&back), bytes, "re-encode must be byte-identical");
+}
+
+/// Acceptance: the metrics-scrape frames (`akda client --metrics`)
+/// round-trip — the request is header-only plus its id, the response
+/// carries the opaque `akda-metrics/1` snapshot payload verbatim.
+#[test]
+fn metrics_frames_round_trip() {
+    let req = Frame::MetricsRequest { req_id: 41 };
+    let bytes = encode(&req);
+    let (back, n) = decode(&bytes).expect("MetricsRequest must decode");
+    assert_eq!(n, bytes.len());
+    assert_eq!(back, req);
+
+    let payload = br#"{"schema":"akda-metrics/1","counters":{}}"#.to_vec();
+    let resp = Frame::MetricsResponse { req_id: 42, payload: payload.clone() };
+    let bytes = encode(&resp);
+    let (back, n) = decode(&bytes).expect("MetricsResponse must decode");
+    assert_eq!(n, bytes.len());
+    match &back {
+        Frame::MetricsResponse { req_id, payload: got } => {
+            assert_eq!(*req_id, 42);
+            assert_eq!(*got, payload, "the snapshot payload must cross the wire verbatim");
+        }
+        other => panic!("expected a MetricsResponse back, got {other:?}"),
     }
     assert_eq!(encode(&back), bytes, "re-encode must be byte-identical");
 }
