@@ -4,48 +4,59 @@
 //! Env: AKDA_SUITE=med|cross10|cross100 (default med — Table 5; the full
 //!      cross100 sweep regenerates Table 7 but costs ~30+ min of KDA time)
 //!      AKDA_FAST=1 → subset (CI smoke)
+//!      AKDA_BACKENDS=scalar,parallel → rerun the suite once per linalg
+//!      backend (`--backend` kinds) with the per-class worker pool OFF,
+//!      so backend tile parallelism is the only concurrency dimension
+//!      being timed; emits schema akda-bench-train/2 (every method row
+//!      tagged with its backend) and a `BACKEND_GATE` line CI asserts on
 //! Run: cargo bench --bench speedup_tables
 //!
 //! Besides the console table and per-suite CSV, this writes
-//! `BENCH_train.json` (schema `akda-bench-train/1`, validated in CI via
-//! `akda metrics --validate`) — the machine-readable training benchmark.
+//! `BENCH_train.json` (schema `akda-bench-train/1`, or `/2` under a
+//! backend sweep; validated in CI via `akda metrics --validate`) — the
+//! machine-readable training benchmark.
 
 use std::collections::BTreeMap;
 
 use akda::coordinator::{evaluate_ovr, Hyper, MethodId, WorkPool};
-use akda::data::{cross_dataset_collection, med_datasets, Condition};
+use akda::data::{cross_dataset_collection, med_datasets, Condition, DatasetSpec};
 use akda::eval::tables::{results_csv, speedup_table, DatasetRow};
+use akda::eval::MethodResult;
+use akda::linalg::{backend, BackendKind};
 use akda::util::json::Json;
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
-/// `BENCH_train.json` document: every (dataset, method) measurement,
+/// One (dataset, method) measurement row; `backend` tags v2 documents.
+fn method_json(r: &MethodResult, kda: Option<&MethodResult>, backend: Option<&str>) -> Json {
+    let mut m = vec![
+        ("method", Json::Str(r.method.clone())),
+        ("map", Json::Num(r.map)),
+        ("train_s", Json::Num(r.train_s)),
+        ("test_s", Json::Num(r.test_s)),
+    ];
+    if let Some(b) = backend {
+        m.push(("backend", Json::Str(b.to_string())));
+    }
+    if let Some(kda) = kda {
+        let (speedup_train, speedup_test) = r.speedup_over(kda);
+        m.push(("speedup_train", Json::Num(speedup_train)));
+        m.push(("speedup_test", Json::Num(speedup_test)));
+    }
+    obj(m)
+}
+
+/// `BENCH_train.json` v1 document: every (dataset, method) measurement,
 /// with speedups over exact KDA wherever the KDA column ran.
 fn bench_train_json(suite: &str, fast: bool, rows: &[DatasetRow]) -> Json {
     let datasets: Vec<Json> = rows
         .iter()
         .map(|row| {
             let kda = row.get("kda");
-            let methods: Vec<Json> = row
-                .results
-                .iter()
-                .map(|r| {
-                    let mut m = vec![
-                        ("method", Json::Str(r.method.clone())),
-                        ("map", Json::Num(r.map)),
-                        ("train_s", Json::Num(r.train_s)),
-                        ("test_s", Json::Num(r.test_s)),
-                    ];
-                    if let Some(kda) = kda {
-                        let (speedup_train, speedup_test) = r.speedup_over(kda);
-                        m.push(("speedup_train", Json::Num(speedup_train)));
-                        m.push(("speedup_test", Json::Num(speedup_test)));
-                    }
-                    obj(m)
-                })
-                .collect();
+            let methods: Vec<Json> =
+                row.results.iter().map(|r| method_json(r, kda, None)).collect();
             obj(vec![
                 ("name", Json::Str(row.dataset.clone())),
                 ("methods", Json::Arr(methods)),
@@ -58,6 +69,69 @@ fn bench_train_json(suite: &str, fast: bool, rows: &[DatasetRow]) -> Json {
         ("fast", Json::Bool(fast)),
         ("datasets", Json::Arr(datasets)),
     ])
+}
+
+/// `BENCH_train.json` v2 document: the same suite measured once per
+/// linalg backend; each dataset's `methods` array concatenates the
+/// per-backend sweeps, every row tagged with its `backend`. Speedups
+/// stay within-backend (each sweep's own KDA column) so the KDA
+/// baseline and the method it normalizes share a backend.
+fn bench_train_json_v2(suite: &str, fast: bool, sweeps: &[(BackendKind, Vec<DatasetRow>)]) -> Json {
+    let (_, first) = &sweeps[0];
+    let datasets: Vec<Json> = first
+        .iter()
+        .map(|lead| {
+            let mut methods = Vec::new();
+            for (kind, rows) in sweeps {
+                let Some(row) = rows.iter().find(|r| r.dataset == lead.dataset) else {
+                    continue;
+                };
+                let kda = row.get("kda");
+                methods.extend(
+                    row.results.iter().map(|r| method_json(r, kda, Some(kind.name()))),
+                );
+            }
+            obj(vec![
+                ("name", Json::Str(lead.dataset.clone())),
+                ("methods", Json::Arr(methods)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("akda-bench-train/2".into())),
+        ("suite", Json::Str(suite.into())),
+        ("fast", Json::Bool(fast)),
+        ("datasets", Json::Arr(datasets)),
+    ])
+}
+
+/// The CI speedup gate: on the largest dataset of the sweep, compare
+/// akda training time under the scalar and parallel backends and print
+/// one greppable line. CI fails the build when the ratio drops below
+/// its floor — a regression in the parallel backend's scheduling would
+/// otherwise land silently (numerics are covered by backend_equiv.rs;
+/// this guards the speed that justifies the seam).
+fn print_backend_gate(
+    datasets: &[DatasetSpec],
+    cond: Condition,
+    sweeps: &[(BackendKind, Vec<DatasetRow>)],
+) {
+    let Some(largest) = datasets.iter().max_by_key(|d| d.n_classes * cond.per_class()) else {
+        return;
+    };
+    let train_s = |kind: BackendKind| -> Option<f64> {
+        let (_, rows) = sweeps.iter().find(|(k, _)| *k == kind)?;
+        let row = rows.iter().find(|r| r.dataset == largest.name)?;
+        Some(row.get("akda")?.train_s)
+    };
+    if let (Some(s), Some(p)) = (train_s(BackendKind::Scalar), train_s(BackendKind::Parallel)) {
+        let ratio = if p > 0.0 { s / p } else { f64::INFINITY };
+        println!(
+            "BACKEND_GATE dataset={} scalar_train_s={s:.4} parallel_train_s={p:.4} \
+             ratio={ratio:.3}",
+            largest.name
+        );
+    }
 }
 
 fn main() {
@@ -79,33 +153,75 @@ fn main() {
         methods = vec![MethodId::Kda, MethodId::Srkda, MethodId::Akda, MethodId::Ksda,
                        MethodId::Aksda];
     }
-    // per-class jobs run on the pool; ϑ_m sums per-job stopwatch times, so
-    // the ratios stay comparable (all methods see the same oversubscription)
-    let pool = WorkPool::new((akda::util::threads::available() / 2).max(1));
+    let backends: Vec<BackendKind> = match std::env::var("AKDA_BACKENDS") {
+        Ok(csv) => csv
+            .split(',')
+            .map(|s| {
+                BackendKind::from_name(s.trim()).unwrap_or_else(|| {
+                    panic!("AKDA_BACKENDS: unknown backend {s:?} (scalar|blocked|parallel|auto)")
+                })
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
     let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
 
-    let mut rows = Vec::new();
-    for spec in &datasets {
-        eprintln!("== {} [{}]", spec.name, cond.name());
-        let split = spec.split(cond);
-        let results = methods
-            .iter()
-            .map(|&id| {
-                let r = evaluate_ovr(&split, id, hp, 1e-3, None, Some(&pool)).expect("eval");
-                eprintln!(
-                    "   {:<8} train={:.3}s test={:.3}s",
-                    r.method, r.train_s, r.test_s
-                );
-                r
-            })
-            .collect();
-        rows.push(DatasetRow { dataset: spec.name.to_string(), results });
+    let run_suite = |pool: Option<&WorkPool>| -> Vec<DatasetRow> {
+        let mut rows = Vec::new();
+        for spec in &datasets {
+            eprintln!("== {} [{}]", spec.name, cond.name());
+            let split = spec.split(cond);
+            let results = methods
+                .iter()
+                .map(|&id| {
+                    let r = evaluate_ovr(&split, id, hp, 1e-3, None, pool).expect("eval");
+                    eprintln!(
+                        "   {:<8} train={:.3}s test={:.3}s",
+                        r.method, r.train_s, r.test_s
+                    );
+                    r
+                })
+                .collect();
+            rows.push(DatasetRow { dataset: spec.name.to_string(), results });
+        }
+        rows
+    };
+
+    if backends.is_empty() {
+        // per-class jobs run on the pool; ϑ_m sums per-job stopwatch times,
+        // so the ratios stay comparable (all methods see the same
+        // oversubscription)
+        let pool = WorkPool::new((akda::util::threads::available() / 2).max(1));
+        let rows = run_suite(Some(&pool));
+        println!("{}", speedup_table(&format!("train/test speedup over KDA — {tag}"), &rows));
+        let out = format!("bench_results_speedup_{suite}.csv");
+        std::fs::write(&out, results_csv(&rows)).expect("write csv");
+        eprintln!("wrote {out}");
+        let bench = bench_train_json(&suite, fast, &rows);
+        std::fs::write("BENCH_train.json", format!("{bench}\n"))
+            .expect("write BENCH_train.json");
+        eprintln!("wrote BENCH_train.json");
+        return;
     }
-    println!("{}", speedup_table(&format!("train/test speedup over KDA — {tag}"), &rows));
-    let out = format!("bench_results_speedup_{suite}.csv");
-    std::fs::write(&out, results_csv(&rows)).expect("write csv");
-    eprintln!("wrote {out}");
-    let bench = bench_train_json(&suite, fast, &rows);
+
+    // backend sweep: one full pass per backend, per-class pool OFF so the
+    // only parallelism in the timing is the backend's own tile fan-out
+    let mut sweeps: Vec<(BackendKind, Vec<DatasetRow>)> = Vec::new();
+    for &kind in &backends {
+        eprintln!("==== backend {} ====", kind.name());
+        backend::set_global(kind);
+        let rows = run_suite(None);
+        println!(
+            "{}",
+            speedup_table(
+                &format!("train/test speedup over KDA — {tag} [backend {}]", kind.name()),
+                &rows
+            )
+        );
+        sweeps.push((kind, rows));
+    }
+    let bench = bench_train_json_v2(&suite, fast, &sweeps);
     std::fs::write("BENCH_train.json", format!("{bench}\n")).expect("write BENCH_train.json");
-    eprintln!("wrote BENCH_train.json");
+    eprintln!("wrote BENCH_train.json (backend sweep: akda-bench-train/2)");
+    print_backend_gate(&datasets, cond, &sweeps);
 }

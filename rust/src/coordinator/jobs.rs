@@ -102,6 +102,52 @@ impl WorkPool {
         rrx
     }
 
+    /// Run a batch of *borrowing* jobs to completion on the pool — the
+    /// scoped-threadpool bridge the `linalg::backend::Parallel` backend
+    /// fans its tile jobs through. Blocks until every job has finished
+    /// (propagating the first panic, after draining the rest), which is
+    /// what makes handing non-`'static` closures to `'static` worker
+    /// threads sound: every borrow a job captures outlives its
+    /// execution.
+    ///
+    /// Must not be called from a worker of the *same* pool (a job
+    /// waiting on jobs behind it in the queue can starve a small pool);
+    /// the linalg backend keeps its own dedicated pool and submits only
+    /// leaf tile loops, so that situation cannot arise there.
+    pub fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        let (tx, rx) = channel::<std::thread::Result<()>>();
+        for job in jobs {
+            // SAFETY: the receive loop below blocks until all `n` jobs
+            // have signalled completion (the `catch_unwind` guarantees a
+            // signal even on panic), so the 'env borrows captured by
+            // `job` are live for as long as any worker can run it.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let tx = tx.clone();
+            let wrapped: Job = Box::new(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let _ = tx.send(out);
+            });
+            self.tx.as_ref().expect("pool alive").send(wrapped).expect("queue open");
+        }
+        drop(tx);
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            match rx.recv().expect("worker signals completion") {
+                Ok(()) => {}
+                Err(payload) => panic = Some(payload),
+            }
+        }
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
     /// Map a fallible-free closure over 0..n through the pool, preserving
     /// order. Results are collected as they finish.
     pub fn map<T: Send + 'static>(
@@ -160,6 +206,55 @@ mod tests {
         let pool = WorkPool::new(1);
         let rx = pool.submit(|| 7usize);
         assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn run_scoped_sees_borrowed_state() {
+        // jobs mutate disjoint stripes of a stack-local buffer — the
+        // exact usage pattern of the linalg Parallel backend
+        let pool = WorkPool::new(4);
+        let mut data = vec![0usize; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(8)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = ti * 8 + i;
+                    }
+                });
+                f
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(data, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_scoped_propagates_panics_after_draining() {
+        let pool = WorkPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        if i == 2 {
+                            panic!("job {i} failed");
+                        }
+                    });
+                    f
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // the pool survives and keeps serving jobs
+        assert_eq!(pool.map(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn run_scoped_empty_batch_is_a_noop() {
+        let pool = WorkPool::new(1);
+        pool.run_scoped(Vec::new());
     }
 
     #[test]

@@ -89,7 +89,12 @@ impl Akda {
             let _phase = crate::obs::span("nzep");
             core::theta_for(labels, n_classes)
         };
-        // Step 3: K
+        // Step 3: K — on the globally selected linalg backend; record
+        // which one so it lands in the MANIFEST health map
+        crate::obs::flight::record(
+            "backend",
+            crate::linalg::backend::global_kind().id() as f64,
+        );
         let gram_start = std::time::Instant::now();
         let mut k = gram(x, self.kernel);
         crate::obs::flight::record("phase_gram_s", gram_start.elapsed().as_secs_f64());

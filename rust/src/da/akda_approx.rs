@@ -118,6 +118,12 @@ impl AkdaApprox {
     /// the C binary fits, so each per-class fit costs only the RHS ΦᵀΘ
     /// plus two m×m triangular solves — not k-means + transform + m³/3.
     pub fn prepare(&self, x: &Mat) -> Result<PreparedFeatures> {
+        // Φ, ΦᵀΦ and the factorization all run on the globally selected
+        // linalg backend; record the choice for the MANIFEST health map
+        crate::obs::flight::record(
+            "backend",
+            crate::linalg::backend::global_kind().id() as f64,
+        );
         let map: Arc<dyn FeatureMap> = Arc::from(self.build_map(x)?);
         let phi = map.transform(x);
         let gram = phi.matmul_tn(&phi);

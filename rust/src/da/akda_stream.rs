@@ -201,6 +201,13 @@ impl AkdaApprox {
     /// assert_eq!(prep.stats.rows, 24);
     /// ```
     pub fn prepare_stream(&self, source: &mut dyn BlockSource) -> Result<PreparedStream> {
+        // the tiled ΦᵀΦ accumulation and the m×m factorization run on
+        // the globally selected linalg backend; record it for the
+        // MANIFEST health map
+        crate::obs::flight::record(
+            "backend",
+            crate::linalg::backend::global_kind().id() as f64,
+        );
         let map: Arc<dyn FeatureMap> = Arc::from(self.build_map_stream(source)?);
         let mut prep = PreparedStream::accumulate(self, map, source)?;
         if self.kind == ApproxKind::Nystrom {

@@ -9,8 +9,8 @@
 //! consume the same `Kernel` enum, so a method switches between exact,
 //! approximate, and streaming training without touching kernel choice.
 
+use crate::linalg::backend::{self, Backend};
 use crate::linalg::mat::{dot, Mat};
-use crate::util::threads;
 
 /// Mercer kernel choice (Sec. 6.3.1 uses the Gaussian RBF as base kernel;
 /// the toy example of Sec. 6.2 uses the linear kernel).
@@ -57,10 +57,21 @@ impl Kernel {
     }
 }
 
-/// Gram matrix K[i,j] = k(x_i, x_j) of the rows of `x`, threaded over row
-/// stripes and exploiting symmetry (only the upper triangle is computed).
+/// Gram matrix K[i,j] = k(x_i, x_j) of the rows of `x`, tiled over row
+/// stripes by the globally selected `linalg::backend` and exploiting
+/// symmetry (only the upper triangle is computed).
 pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
+    gram_with(x, kernel, backend::active(x.rows()))
+}
+
+/// [`gram`] on an explicit backend. Each entry is a single closed-form
+/// expression (one `dot` plus the kernel arithmetic), so every tile
+/// schedule — scalar, blocked, parallel, any pool size — produces
+/// identical bits; the sequential mirror step below never reads a
+/// partially written stripe because the backend joins all tiles first.
+pub fn gram_with(x: &Mat, kernel: Kernel, backend: &dyn Backend) -> Mat {
     let _phase = crate::obs::span("gram");
+    let _backend = crate::obs::span(backend.kind().name());
     let n = x.rows();
     let mut k = Mat::zeros(n, n);
     // For RBF, precompute squared norms once: d2 = ni + nj - 2 x_i·x_j.
@@ -68,29 +79,21 @@ pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
         Kernel::Rbf { .. } => (0..n).map(|i| dot(x.row(i), x.row(i))).collect(),
         _ => Vec::new(),
     };
-    let nthreads = threads::suggested(n);
-    let chunk = n.div_ceil(nthreads);
-    let stripes: Vec<&mut [f64]> = k.data_mut().chunks_mut(chunk * n).collect();
-    std::thread::scope(|s| {
-        for (ti, stripe) in stripes.into_iter().enumerate() {
-            let r0 = ti * chunk;
-            let sq = &sq;
-            s.spawn(move || {
-                for (dr, krow) in stripe.chunks_mut(n).enumerate() {
-                    let i = r0 + dr;
-                    let xi = x.row(i);
-                    for (j, kv) in krow.iter_mut().enumerate().skip(i) {
-                        *kv = match kernel {
-                            Kernel::Rbf { rho } => {
-                                let g = dot(xi, x.row(j));
-                                let d2 = (sq[i] + sq[j] - 2.0 * g).max(0.0);
-                                (-rho * d2).exp()
-                            }
-                            _ => kernel.eval(xi, x.row(j)),
-                        };
+    let sq = &sq;
+    backend.for_row_stripes(k.data_mut(), n, &|r0, stripe| {
+        for (dr, krow) in stripe.chunks_mut(n).enumerate() {
+            let i = r0 + dr;
+            let xi = x.row(i);
+            for (j, kv) in krow.iter_mut().enumerate().skip(i) {
+                *kv = match kernel {
+                    Kernel::Rbf { rho } => {
+                        let g = dot(xi, x.row(j));
+                        let d2 = (sq[i] + sq[j] - 2.0 * g).max(0.0);
+                        (-rho * d2).exp()
                     }
-                }
-            });
+                    _ => kernel.eval(xi, x.row(j)),
+                };
+            }
         }
     });
     // Mirror the computed upper triangle into the lower one for EVERY
@@ -104,24 +107,29 @@ pub fn gram(x: &Mat, kernel: Kernel) -> Mat {
     k
 }
 
-/// Cross kernel K[e,t] = k(test_e, train_t) (Eq. 11, batched over rows).
+/// Cross kernel K[e,t] = k(test_e, train_t) (Eq. 11, batched over rows)
+/// on the globally selected `linalg::backend`. This is the O(N·m) hot
+/// loop of `NystromMap::transform` (N test rows against m landmarks).
 pub fn cross_gram(x_test: &Mat, x_train: &Mat, kernel: Kernel) -> Mat {
+    cross_gram_with(x_test, x_train, kernel, backend::active(x_test.rows()))
+}
+
+/// [`cross_gram`] on an explicit backend; one `kernel.eval` per output
+/// element, so tile-schedule invariant like [`gram_with`].
+pub fn cross_gram_with(
+    x_test: &Mat,
+    x_train: &Mat,
+    kernel: Kernel,
+    backend: &dyn Backend,
+) -> Mat {
     let (ne, nt) = (x_test.rows(), x_train.rows());
     let mut k = Mat::zeros(ne, nt);
-    let nthreads = threads::suggested(ne);
-    let chunk = ne.div_ceil(nthreads);
-    let stripes: Vec<&mut [f64]> = k.data_mut().chunks_mut(chunk * nt).collect();
-    std::thread::scope(|s| {
-        for (ti, stripe) in stripes.into_iter().enumerate() {
-            let r0 = ti * chunk;
-            s.spawn(move || {
-                for (dr, krow) in stripe.chunks_mut(nt).enumerate() {
-                    let xe = x_test.row(r0 + dr);
-                    for (t, kv) in krow.iter_mut().enumerate() {
-                        *kv = kernel.eval(xe, x_train.row(t));
-                    }
-                }
-            });
+    backend.for_row_stripes(k.data_mut(), nt, &|r0, stripe| {
+        for (dr, krow) in stripe.chunks_mut(nt).enumerate() {
+            let xe = x_test.row(r0 + dr);
+            for (t, kv) in krow.iter_mut().enumerate() {
+                *kv = kernel.eval(xe, x_train.row(t));
+            }
         }
     });
     k

@@ -1,0 +1,398 @@
+//! L10: the backend seam — one scheduling layer under every dense hot
+//! path (Gram build, blocked Cholesky, tiled ΦᵀΦ accumulation, matmuls).
+//!
+//! The three backends execute the *same* floating-point program and
+//! differ only in how its row-tiles are scheduled:
+//!
+//! * [`Scalar`] — one tile, run on the calling thread (the reference
+//!   semantics: single-threaded, no tiling);
+//! * [`Blocked`] — fixed-height cache tiles, still the calling thread
+//!   (right-looking panel Cholesky with tile-level syrk/gemm updates
+//!   walks these tiles in ascending order);
+//! * [`Parallel`] — the *same* fixed tiles fanned across a
+//!   [`WorkPool`], one job per tile.
+//!
+//! **Determinism contract.** Every routed operation assigns each output
+//! element to exactly one tile and fixes the per-element reduction order
+//! (ascending k for dot products, ascending sample row for `A^T B`
+//! accumulation) independently of tile geometry, worker count, or job
+//! completion order. Consequently all three backends — and every
+//! WorkPool size — produce bit-for-bit identical results; the only
+//! thing a backend may change is wall-clock time. `rust/tests/
+//! backend_equiv.rs` locks the contract down over a size grid, and the
+//! `auto` policy below is therefore a pure performance choice, never a
+//! numerics choice. This is also what lets the PJRT/Pallas engine
+//! become "just another backend" later: anything behind this trait that
+//! honors the tile/reduction contract is observationally identical.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::coordinator::WorkPool;
+
+/// Which backend a caller (CLI `--backend`, `AKDA_BACKEND` env, or the
+/// auto policy) asked for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Scalar,
+    Blocked,
+    Parallel,
+    /// Pick per matrix size: Scalar for tiny, Blocked for mid,
+    /// Parallel for large (thresholds below). Safe because backends are
+    /// bit-for-bit equivalent — only speed is at stake.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(BackendKind::Scalar),
+            "blocked" => Some(BackendKind::Blocked),
+            "parallel" => Some(BackendKind::Parallel),
+            "auto" => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Blocked => "blocked",
+            BackendKind::Parallel => "parallel",
+            BackendKind::Auto => "auto",
+        }
+    }
+
+    /// Stable numeric id for the MANIFEST `health.backend` key (the
+    /// flight recorder stores f64 values only).
+    pub fn id(self) -> u8 {
+        match self {
+            BackendKind::Scalar => 0,
+            BackendKind::Blocked => 1,
+            BackendKind::Parallel => 2,
+            BackendKind::Auto => 3,
+        }
+    }
+
+    fn from_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(BackendKind::Scalar),
+            1 => Some(BackendKind::Blocked),
+            2 => Some(BackendKind::Parallel),
+            3 => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// The scheduling seam. `data` is a contiguous row-major buffer of
+/// `data.len() / row_len` rows; the backend partitions it into
+/// contiguous row-stripes and invokes `job(first_row, stripe)` exactly
+/// once per stripe, covering every row. Stripes are disjoint `&mut`
+/// slices, so jobs may run concurrently; `job` must not make any
+/// per-element arithmetic depend on the stripe boundaries (that is the
+/// determinism contract the equivalence harness enforces).
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Stripe height (in rows) this backend tiles an `rows`-row
+    /// operation into. Geometry depends only on `rows`, never on worker
+    /// count, so run-to-run schedules are reproducible.
+    fn stripe_rows(&self, rows: usize) -> usize;
+
+    /// Run `job` over the row-stripes of `data` (see trait docs).
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    );
+}
+
+/// Walk stripes in ascending order on the calling thread.
+fn serial_stripes(
+    data: &mut [f64],
+    row_len: usize,
+    stripe: usize,
+    job: &(dyn Fn(usize, &mut [f64]) + Sync),
+) {
+    if data.is_empty() || row_len == 0 {
+        return;
+    }
+    for (ti, chunk) in data.chunks_mut(stripe.max(1) * row_len).enumerate() {
+        job(ti * stripe.max(1), chunk);
+    }
+}
+
+/// Reference backend: the whole operation is one tile on the calling
+/// thread — exactly the single-threaded loop nest spelled out in the
+/// routed functions' documentation.
+pub struct Scalar;
+
+impl Backend for Scalar {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Scalar
+    }
+
+    fn stripe_rows(&self, rows: usize) -> usize {
+        rows.max(1)
+    }
+
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    ) {
+        serial_stripes(data, row_len, self.stripe_rows(data.len()), job);
+    }
+}
+
+/// Cache-blocked backend: fixed-height tiles walked in ascending order
+/// on the calling thread, keeping each tile's output rows (and the
+/// panel rows they read) hot in cache across the inner k-loop.
+pub struct Blocked {
+    pub tile: usize,
+}
+
+/// Tile height shared by `Blocked` and `Parallel`: small enough that a
+/// tile's output rows fit in L2 alongside the operands, large enough to
+/// amortize scheduling. Fixed (never derived from the worker count) so
+/// the tile geometry — and with it the schedule shape — is reproducible.
+pub const DEFAULT_TILE: usize = 32;
+
+impl Backend for Blocked {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Blocked
+    }
+
+    fn stripe_rows(&self, _rows: usize) -> usize {
+        self.tile.max(1)
+    }
+
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    ) {
+        serial_stripes(data, row_len, self.tile, job);
+    }
+}
+
+/// Parallel backend: the same fixed tiles as [`Blocked`], fanned across
+/// a [`WorkPool`] (one job per tile) and joined before returning. Tile
+/// geometry is a function of the matrix size alone, and no routed
+/// operation reduces across tiles, so results are byte-identical for
+/// every pool size — the concurrency hammer in `backend_equiv.rs`
+/// shrinks and grows the pool across 50 runs to prove it.
+pub struct Parallel {
+    pool: Arc<WorkPool>,
+    tile: usize,
+}
+
+impl Parallel {
+    /// Public so tests can pin a pool of their own (the hammer test
+    /// cycles pool sizes); production paths use [`Parallel::global`].
+    pub fn new(pool: Arc<WorkPool>) -> Self {
+        Parallel { pool, tile: DEFAULT_TILE }
+    }
+
+    /// The process-wide linalg pool, created on first use with one
+    /// worker per available core. Dedicated to leaf tile jobs (which
+    /// never re-enter the backend seam), so it cannot deadlock against
+    /// the protocol/fleet pools that may be calling into it.
+    pub fn global() -> &'static Parallel {
+        static GLOBAL: OnceLock<Parallel> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            Parallel::new(Arc::new(WorkPool::new(crate::util::threads::available())))
+        })
+    }
+}
+
+impl Backend for Parallel {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Parallel
+    }
+
+    fn stripe_rows(&self, _rows: usize) -> usize {
+        self.tile.max(1)
+    }
+
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    ) {
+        if data.is_empty() || row_len == 0 {
+            return;
+        }
+        let stripe = self.tile.max(1);
+        let rows = data.len() / row_len;
+        if rows <= stripe {
+            // single tile: skip the pool round-trip
+            job(0, data);
+            return;
+        }
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(stripe * row_len)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || job(ti * stripe, chunk));
+                f
+            })
+            .collect();
+        self.pool.run_scoped(jobs);
+    }
+}
+
+// --- global selection -----------------------------------------------------
+
+/// Auto policy: matrices with at least this many rows go parallel.
+pub const PARALLEL_MIN_ROWS: usize = 192;
+/// Auto policy: at least this many rows gets cache tiling.
+pub const BLOCKED_MIN_ROWS: usize = 48;
+
+const UNSET: u8 = u8::MAX;
+static GLOBAL_KIND: AtomicU8 = AtomicU8::new(UNSET);
+
+fn env_default() -> BackendKind {
+    static ENV: OnceLock<BackendKind> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("AKDA_BACKEND")
+            .ok()
+            .as_deref()
+            .and_then(BackendKind::from_name)
+            .unwrap_or(BackendKind::Auto)
+    })
+}
+
+/// Install the process-wide backend choice (CLI `--backend`). Until
+/// this is called, the `AKDA_BACKEND` env var (read once) or `auto`
+/// applies.
+pub fn set_global(kind: BackendKind) {
+    GLOBAL_KIND.store(kind.id(), Ordering::SeqCst);
+}
+
+/// The process-wide backend choice currently in force.
+pub fn global_kind() -> BackendKind {
+    match GLOBAL_KIND.load(Ordering::SeqCst) {
+        UNSET => env_default(),
+        id => BackendKind::from_id(id).unwrap_or(BackendKind::Auto),
+    }
+}
+
+/// Resolve a kind to a concrete backend for an `rows`-row operation.
+pub fn resolve(kind: BackendKind, rows: usize) -> &'static dyn Backend {
+    static SCALAR: Scalar = Scalar;
+    static BLOCKED: Blocked = Blocked { tile: DEFAULT_TILE };
+    match kind {
+        BackendKind::Scalar => &SCALAR,
+        BackendKind::Blocked => &BLOCKED,
+        BackendKind::Parallel => Parallel::global(),
+        BackendKind::Auto => {
+            if rows >= PARALLEL_MIN_ROWS {
+                Parallel::global()
+            } else if rows >= BLOCKED_MIN_ROWS {
+                &BLOCKED
+            } else {
+                &SCALAR
+            }
+        }
+    }
+}
+
+/// The backend the routed entry points (`gram`, `cholesky`,
+/// `accumulate_tn`, `matmul*`) use: the global kind, resolved against
+/// the operation's row count.
+pub fn active(rows: usize) -> &'static dyn Backend {
+    resolve(global_kind(), rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Blocked,
+            BackendKind::Parallel,
+            BackendKind::Auto,
+        ] {
+            assert_eq!(BackendKind::from_name(kind.name()), Some(kind));
+            assert_eq!(BackendKind::from_id(kind.id()), Some(kind));
+        }
+        assert_eq!(BackendKind::from_name("gpu"), None);
+    }
+
+    #[test]
+    fn auto_policy_scales_with_rows() {
+        assert_eq!(resolve(BackendKind::Auto, 8).kind(), BackendKind::Scalar);
+        assert_eq!(resolve(BackendKind::Auto, 64).kind(), BackendKind::Blocked);
+        assert_eq!(
+            resolve(BackendKind::Auto, 4096).kind(),
+            BackendKind::Parallel
+        );
+        // explicit kinds ignore the size
+        assert_eq!(resolve(BackendKind::Scalar, 4096).kind(), BackendKind::Scalar);
+        assert_eq!(resolve(BackendKind::Parallel, 1).kind(), BackendKind::Parallel);
+    }
+
+    #[test]
+    fn stripes_cover_every_row_exactly_once() {
+        let rows = 37usize;
+        let row_len = 5usize;
+        for backend in [
+            &Scalar as &dyn Backend,
+            &Blocked { tile: 4 },
+            Parallel::global(),
+        ] {
+            let mut data = vec![0.0_f64; rows * row_len];
+            backend.for_row_stripes(&mut data, row_len, &|r0, stripe| {
+                for (dr, row) in stripe.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + dr) as f64 + 1.0;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..row_len {
+                    assert_eq!(
+                        data[r * row_len + c],
+                        r as f64 + 1.0,
+                        "{:?} row {r} col {c}",
+                        backend.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let mut data: Vec<f64> = Vec::new();
+        for backend in [
+            &Scalar as &dyn Backend,
+            &Blocked { tile: 8 },
+            Parallel::global(),
+        ] {
+            backend.for_row_stripes(&mut data, 4, &|_, _| panic!("no stripes expected"));
+        }
+    }
+
+    #[test]
+    fn pinned_parallel_pool_is_usable() {
+        let par = Parallel::new(Arc::new(WorkPool::new(3)));
+        let mut data = vec![1.0_f64; 100 * 2];
+        par.for_row_stripes(&mut data, 2, &|_, stripe| {
+            for v in stripe.iter_mut() {
+                *v *= 2.0;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 2.0));
+    }
+}

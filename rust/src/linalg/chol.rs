@@ -3,6 +3,7 @@
 //! structure, Sec. 4.5: N^3/3 flops, the SYRK trailing update carries
 //! ~all of them).
 
+use super::backend::Backend;
 use super::mat::{dot, Mat};
 
 pub const DEFAULT_BLOCK: usize = 64;
@@ -57,9 +58,21 @@ fn chol_unblocked(a: &Mat) -> Result<Mat, CholError> {
 }
 
 /// Blocked right-looking Cholesky: returns lower-triangular `L`, `A = L Lᵀ`.
+/// Runs on the globally selected `linalg::backend`.
 pub fn cholesky(a: &Mat, block: usize) -> Result<Mat, CholError> {
+    cholesky_with(a, block, super::backend::active(a.rows()))
+}
+
+/// [`cholesky`] on an explicit backend. The floating-point program —
+/// and hence the factor, bit for bit — is fixed by `block` alone: the
+/// backend only schedules the panel-solve and trailing-SYRK tiles
+/// (every output element is a fixed-order chain regardless of tile
+/// geometry), so scalar/blocked/parallel agree exactly for a given
+/// `block`, and different `block` values differ by rounding only.
+pub fn cholesky_with(a: &Mat, block: usize, backend: &dyn Backend) -> Result<Mat, CholError> {
     assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
     let _phase = crate::obs::span("chol");
+    let _backend = crate::obs::span(backend.kind().name());
     let n = a.rows();
     let b = block.max(8).min(n.max(1));
     let mut work = a.clone();
@@ -77,10 +90,10 @@ pub fn cholesky(a: &Mat, block: usize) -> Result<Mat, CholError> {
             let m = n - e;
             // Panel: solve L_panel L_kkᵀ = A[e.., s..e]
             let apanel = work.submatrix(e, s, m, bs);
-            let panel = solve_tri_right_lt(&apanel, &lkk);
+            let panel = solve_tri_right_lt(&apanel, &lkk, backend);
             l.set_submatrix(e, s, &panel);
-            // Trailing SYRK: A[e.., e..] -= panel panelᵀ (threaded)
-            syrk_update(&mut work, e, &panel);
+            // Trailing SYRK: A[e.., e..] -= panel panelᵀ (tiled)
+            syrk_update(&mut work, e, &panel, backend);
         }
         s = e;
     }
@@ -88,46 +101,43 @@ pub fn cholesky(a: &Mat, block: usize) -> Result<Mat, CholError> {
 }
 
 /// Solve X L^T = A for X, with L lower-triangular (bs x bs), A (m x bs).
-fn solve_tri_right_lt(a: &Mat, l: &Mat) -> Mat {
-    let (m, bs) = a.shape();
+/// Rows of X are independent; the backend tiles them. Within a row the
+/// j/k loops run in the classic ascending order, so the per-element
+/// operation chain — and the bits — match the sequential solve.
+fn solve_tri_right_lt(a: &Mat, l: &Mat, backend: &dyn Backend) -> Mat {
+    let (_m, bs) = a.shape();
     let mut x = a.clone();
-    for j in 0..bs {
-        let d = l[(j, j)];
-        for r in 0..m {
-            let mut s = x[(r, j)];
-            for k in 0..j {
-                s -= x[(r, k)] * l[(j, k)];
+    backend.for_row_stripes(x.data_mut(), bs, &|_r0, stripe| {
+        for xrow in stripe.chunks_mut(bs) {
+            for j in 0..bs {
+                let d = l[(j, j)];
+                let mut s = xrow[j];
+                for k in 0..j {
+                    s -= xrow[k] * l[(j, k)];
+                }
+                xrow[j] = s / d;
             }
-            x[(r, j)] = s / d;
         }
-    }
-    let _ = m;
+    });
     x
 }
 
-/// work[e.., e..] -= panel panelᵀ, threaded over row stripes, using only
-/// the lower triangle (the factorization never reads the upper one).
-fn syrk_update(work: &mut Mat, e: usize, panel: &Mat) {
+/// work[e.., e..] -= panel panelᵀ, tiled over row stripes by the
+/// backend, using only the lower triangle (the factorization never
+/// reads the upper one). One `dot` + one subtraction per element, so
+/// every tile schedule produces identical bits.
+fn syrk_update(work: &mut Mat, e: usize, panel: &Mat, backend: &dyn Backend) {
     let n = work.cols();
-    let m = n - e;
-    let nthreads = crate::util::threads::suggested(m);
-    let chunk = m.div_ceil(nthreads);
     // split the trailing rows of `work` into disjoint mutable stripes
     let tail = &mut work.data_mut()[e * n..];
-    let stripes: Vec<&mut [f64]> = tail.chunks_mut(chunk * n).collect();
-    std::thread::scope(|s| {
-        for (ti, stripe) in stripes.into_iter().enumerate() {
-            let r0 = ti * chunk;
-            s.spawn(move || {
-                for (dr, wrow) in stripe.chunks_mut(n).enumerate() {
-                    let gi = r0 + dr; // row index within the trailing block
-                    let prow = panel.row(gi);
-                    // only columns e..=e+gi (lower triangle incl. diagonal)
-                    for c in 0..=gi {
-                        wrow[e + c] -= dot(prow, panel.row(c));
-                    }
-                }
-            });
+    backend.for_row_stripes(tail, n, &|r0, stripe| {
+        for (dr, wrow) in stripe.chunks_mut(n).enumerate() {
+            let gi = r0 + dr; // row index within the trailing block
+            let prow = panel.row(gi);
+            // only columns e..=e+gi (lower triangle incl. diagonal)
+            for c in 0..=gi {
+                wrow[e + c] -= dot(prow, panel.row(c));
+            }
         }
     });
 }
@@ -234,6 +244,22 @@ mod tests {
         let lb = cholesky(&a, 16).unwrap();
         let lu = chol_unblocked(&a).unwrap();
         assert!(lb.sub(&lu).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn backends_agree_bitwise_for_fixed_block() {
+        // the determinism contract at the unit level: for a given
+        // `block` the factor's bits are backend-invariant (the full
+        // grid lives in tests/backend_equiv.rs)
+        use crate::linalg::backend::{resolve, BackendKind};
+        let a = spd(100, 21);
+        for block in [8usize, 16, 64] {
+            let ls = cholesky_with(&a, block, resolve(BackendKind::Scalar, 100)).unwrap();
+            let lb = cholesky_with(&a, block, resolve(BackendKind::Blocked, 100)).unwrap();
+            let lp = cholesky_with(&a, block, resolve(BackendKind::Parallel, 100)).unwrap();
+            assert_eq!(ls, lb, "blocked differs from scalar at block={block}");
+            assert_eq!(ls, lp, "parallel differs from scalar at block={block}");
+        }
     }
 
     #[test]

@@ -237,29 +237,23 @@ impl Mat {
         out
     }
 
-    /// A * B^T — avoids materializing the transpose for gram-like products.
+    /// A * B^T — avoids materializing the transpose for gram-like
+    /// products. Each output element is one `dot`, so results are
+    /// identical under every `linalg::backend` tile schedule.
     pub fn matmul_nt(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "matmul_nt inner dim mismatch");
-        let (m, n, k) = (self.rows, b.rows, self.cols);
+        let (m, n) = (self.rows, b.rows);
         let mut out = Mat::zeros(m, n);
-        let nthreads = crate::util::threads::suggested(m);
+        let backend = super::backend::active(m);
         let a_ref = &*self;
-        let chunk = m.div_ceil(nthreads);
-        let out_rows: Vec<&mut [f64]> = out.data.chunks_mut(chunk * n).collect();
-        std::thread::scope(|s| {
-            for (ti, stripe) in out_rows.into_iter().enumerate() {
-                let r0 = ti * chunk;
-                s.spawn(move || {
-                    for (dr, orow) in stripe.chunks_mut(n).enumerate() {
-                        let arow = a_ref.row(r0 + dr);
-                        for (c, o) in orow.iter_mut().enumerate() {
-                            *o = dot(arow, b.row(c));
-                        }
-                    }
-                });
+        backend.for_row_stripes(&mut out.data, n, &|r0, stripe| {
+            for (dr, orow) in stripe.chunks_mut(n).enumerate() {
+                let arow = a_ref.row(r0 + dr);
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o = dot(arow, b.row(c));
+                }
             }
         });
-        let _ = k;
         out
     }
 
@@ -321,56 +315,79 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// acc += A^T * B without materializing A^T, as a sequence of row-by-row
 /// rank-1 updates (acc += a_rᵀ b_r for r = 0, 1, …).
 ///
-/// Because the update order is strictly row-sequential, accumulating the
-/// row-blocks of a partitioned A (and B) in order performs the exact same
+/// Because each element of acc receives its updates in strictly
+/// ascending sample-row order, accumulating the row-blocks of a
+/// partitioned A (and B) in order performs the exact same
 /// floating-point operations as one `matmul_tn` over the full matrices —
 /// no reassociation, so tiled out-of-core accumulation (`data::stream` /
 /// `da::akda_stream`) is bit-for-bit identical to the in-memory product
-/// for every block size.
+/// for every block size. Uses the globally selected `linalg::backend`.
 pub fn accumulate_tn(acc: &mut Mat, a: &Mat, b: &Mat) {
+    accumulate_tn_with(acc, a, b, super::backend::active(a.cols));
+}
+
+/// [`accumulate_tn`] on an explicit backend. The backend tiles the
+/// *output* rows of acc (columns of A); every tile replays the full
+/// ascending r-loop restricted to its own acc rows, so the per-element
+/// update chain — and hence the bits — is the same for every tile
+/// geometry. That per-element fixed-order reduction is what keeps the
+/// Parallel backend deterministic run-to-run.
+pub fn accumulate_tn_with(
+    acc: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    backend: &dyn super::backend::Backend,
+) {
     assert_eq!(a.rows, b.rows, "accumulate_tn inner dim mismatch");
     assert_eq!(acc.shape(), (a.cols, b.cols), "accumulate_tn acc shape mismatch");
-    for r in 0..a.rows {
-        let arow = a.row(r);
-        let brow = b.row(r);
-        for i in 0..a.cols {
-            let av = arow[i];
-            if av != 0.0 {
-                let orow = acc.row_mut(i);
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
+    let bc = b.cols;
+    backend.for_row_stripes(&mut acc.data, bc, &|i0, stripe| {
+        for r in 0..a.rows {
+            let arow = a.row(r);
+            let brow = b.row(r);
+            for (di, orow) in stripe.chunks_mut(bc).enumerate() {
+                let av = arow[i0 + di];
+                if av != 0.0 {
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
                 }
             }
         }
-    }
+    });
 }
 
-/// out = A * B, threaded over row stripes of A; inner kernel iterates the
-/// k-dimension outermost over B rows so B is streamed row-major.
+/// out = A * B on the globally selected `linalg::backend`; the inner
+/// kernel iterates the k-dimension outermost over B rows so B is
+/// streamed row-major.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    matmul_into_with(a, b, out, super::backend::active(a.rows));
+}
+
+/// [`matmul_into`] on an explicit backend. Each output row is an
+/// independent k-ascending accumulation, so every tile schedule yields
+/// identical bits.
+pub fn matmul_into_with(
+    a: &Mat,
+    b: &Mat,
+    out: &mut Mat,
+    backend: &dyn super::backend::Backend,
+) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     assert_eq!(out.shape(), (m, n));
-    let nthreads = crate::util::threads::suggested(m);
-    let chunk = m.div_ceil(nthreads);
-    let stripes: Vec<&mut [f64]> = out.data.chunks_mut(chunk * n).collect();
-    std::thread::scope(|s| {
-        for (ti, stripe) in stripes.into_iter().enumerate() {
-            let r0 = ti * chunk;
-            s.spawn(move || {
-                for (dr, orow) in stripe.chunks_mut(n).enumerate() {
-                    let arow = a.row(r0 + dr);
-                    orow.fill(0.0);
-                    for kk in 0..k {
-                        let av = arow[kk];
-                        if av != 0.0 {
-                            let brow = b.row(kk);
-                            for (o, &bv) in orow.iter_mut().zip(brow) {
-                                *o += av * bv;
-                            }
-                        }
+    backend.for_row_stripes(&mut out.data, n, &|r0, stripe| {
+        for (dr, orow) in stripe.chunks_mut(n).enumerate() {
+            let arow = a.row(r0 + dr);
+            orow.fill(0.0);
+            for kk in 0..k {
+                let av = arow[kk];
+                if av != 0.0 {
+                    let brow = b.row(kk);
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
                     }
                 }
-            });
+            }
         }
     });
 }

@@ -6,6 +6,9 @@
 //! the *large* N x N work on the accelerated path; this handles the small
 //! core-matrix algebra (O_b is C x C) and the entire baseline zoo.
 //!
+//! * `backend` — the L10 scheduling seam: `Scalar`/`Blocked`/`Parallel`
+//!   backends with bit-for-bit identical results (see its module docs
+//!   for the determinism contract) behind every hot path below;
 //! * `mat` — the row-major `Mat` type: blocked/threaded products
 //!   (`matmul`, `matmul_nt`, `matmul_tn`) and the order-preserving tiled
 //!   accumulator `accumulate_tn` that the out-of-core pipeline builds on;
@@ -15,14 +18,16 @@
 //!   eigenproblem, Nyström whitening);
 //! * `qr`, `svd` — orthogonalization and rank tools for the baselines.
 
+pub mod backend;
 pub mod chol;
 pub mod eig;
 pub mod mat;
 pub mod qr;
 pub mod svd;
 
-pub use chol::{cholesky, solve_lower, solve_upper_from_lower, spd_solve, CholError};
+pub use backend::{Backend, BackendKind};
+pub use chol::{cholesky, cholesky_with, solve_lower, solve_upper_from_lower, spd_solve, CholError};
 pub use eig::{jacobi_eig, sym_eig, sym_eig_desc, Eig};
-pub use mat::{accumulate_tn, dot, matmul_into, Mat};
+pub use mat::{accumulate_tn, accumulate_tn_with, dot, matmul_into, Mat};
 pub use qr::{gram_schmidt, qr_thin};
 pub use svd::{null_space, rank, svd, Svd};

@@ -133,6 +133,21 @@ fn parse_stream_flags(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// `--backend scalar|blocked|parallel|auto` → install the process-wide
+/// linalg backend (`linalg::backend`) for every dense hot path this
+/// invocation runs. Returns the kind in force (flag, else `AKDA_BACKEND`
+/// env, else `auto`) so `train` can record it in the model MANIFEST.
+fn parse_backend_flag(args: &Args) -> Result<akda::linalg::BackendKind> {
+    use akda::linalg::{backend, BackendKind};
+    if let Some(name) = args.get("backend") {
+        let kind = BackendKind::from_name(name).with_context(|| {
+            format!("unknown backend {name:?} (scalar|blocked|parallel|auto)")
+        })?;
+        backend::set_global(kind);
+    }
+    Ok(backend::global_kind())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -176,7 +191,7 @@ fn print_help() {
            datasets                         print the dataset registry (Table 1)\n\
            eval --suite med|cross10|cross100\n\
                 [--methods csv] [--landmarks M] [--stream] [--block-size B]\n\
-                [--cv] [--pjrt] [--config file] [--out dir]\n\
+                [--cv] [--pjrt] [--backend KIND] [--config file] [--out dir]\n\
                                             regenerate MAP + speedup tables (Tables 2-7);\n\
                                             methods include akda-nystrom|akda-rff (approx\n\
                                             subsystem, --landmarks sets the budget m);\n\
@@ -186,6 +201,7 @@ fn print_help() {
            train --dataset NAME [--method akda|aksda|akda-nystrom|akda-rff|...]\n\
                  [--cond 10|100] [--landmarks M] [--stream] [--block-size B]\n\
                  [--name MODEL] [--models-dir DIR] [--pjrt] [--no-resume]\n\
+                 [--backend KIND]\n\
                                             fit a detector bank, evaluate it on the\n\
                                             test split, and publish it as the next\n\
                                             version of MODEL (default: dataset name);\n\
@@ -193,7 +209,7 @@ fn print_help() {
                                             resume state so `akda update` can grow them\n\
                                             (--no-resume skips it, shrinking the artifact)\n\
            update NAME[@V] --data new.csv [--models-dir DIR]\n\
-                  [--refresh-landmarks] [--reservoir CAP]\n\
+                  [--refresh-landmarks] [--reservoir CAP] [--backend KIND]\n\
                                             Sec. 7 recursive learning: decode the published\n\
                                             model, grow it with the new rows — bordered-\n\
                                             Cholesky extension (exact) or accumulator\n\
@@ -262,6 +278,7 @@ fn print_help() {
                                             latency tail, top-K slowest requests\n\
            serve --dataset NAME [--method akda|akda-nystrom|akda-rff|...]\n\
                  [--landmarks M] [--stream] [--block-size B] [--pjrt]\n\
+                 [--backend KIND]\n\
                                             train a detector bank in process, then\n\
                                             serve it (no registry involved)\n\
            daemon --drop-dir DIR [--registry DIR] [--interval SECS]\n\
@@ -292,8 +309,19 @@ fn print_help() {
                                             the live metrics registry every SECS\n\
                                             (default 2) plus one final snapshot on\n\
                                             shutdown\n\n\
+         FLAGS shared by eval/train/update/serve --dataset:\n\
+           --backend scalar|blocked|parallel|auto\n\
+                                            linalg execution backend for the dense\n\
+                                            hot paths (Gram build, blocked Cholesky,\n\
+                                            streamed accumulation, matmuls); every\n\
+                                            choice is bit-for-bit equivalent — only\n\
+                                            wall-clock differs; auto (the default)\n\
+                                            picks per matrix size; recorded in the\n\
+                                            model MANIFEST (`backend` +\n\
+                                            `health.backend`)\n\n\
          ENV: AKDA_ARTIFACTS (default: ./artifacts)\n\
-              AKDA_MODELS    (default: ./models)"
+              AKDA_MODELS    (default: ./models)\n\
+              AKDA_BACKEND   (default: auto — same values as --backend)"
     );
 }
 
@@ -357,6 +385,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     if let Some(b) = parse_stream_flags(args)? {
         cfg.stream_block = Some(b);
     }
+    let backend = parse_backend_flag(args)?;
+    eprintln!("linalg backend: {}", backend.name());
     let engine = if args.get("pjrt").is_some()
         || methods.iter().any(|m| matches!(m, MethodId::AkdaPjrt | MethodId::AksdaPjrt))
     {
@@ -447,6 +477,7 @@ struct TrainSpec {
     id: MethodId,
     hp: Hyper,
     engine: Option<Arc<PjrtEngine>>,
+    backend: akda::linalg::BackendKind,
 }
 
 fn parse_train_spec(args: &Args) -> Result<TrainSpec> {
@@ -477,7 +508,8 @@ fn parse_train_spec(args: &Args) -> Result<TrainSpec> {
         hp.m = parse_landmarks(m)?;
     }
     hp.stream_block = parse_stream_flags(args)?;
-    Ok(TrainSpec { dataset, cond, split, id, hp, engine })
+    let backend = parse_backend_flag(args)?;
+    Ok(TrainSpec { dataset, cond, split, id, hp, engine, backend })
 }
 
 /// Fit the multiclass projection + one-vs-rest LSVM bank — the single
@@ -664,11 +696,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let ts = parse_train_spec(args)?;
     eprintln!(
-        "training detector bank on {} [{}] (C={}) with {}",
+        "training detector bank on {} [{}] (C={}) with {} (backend {})",
         ts.dataset,
         ts.cond.name(),
         ts.split.n_classes,
-        ts.id.name()
+        ts.id.name(),
+        ts.backend.name()
     );
     let want_resume = args.get("no-resume").is_none();
     // flight recorder on: the fit's numerical-health facts (Cholesky
@@ -712,6 +745,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         train_s,
         map,
         accuracy,
+        backend: ts.backend.name().to_string(),
         health: akda::obs::flight::snapshot(),
         ..Default::default()
     };
@@ -738,9 +772,10 @@ fn cmd_update(rest: &[String]) -> Result<()> {
 
     let Some(spec) = rest.first().filter(|s| !s.starts_with("--")) else {
         bail!("usage: akda update NAME[@VERSION] --data new.csv [--models-dir DIR] \
-               [--refresh-landmarks] [--reservoir CAP]")
+               [--refresh-landmarks] [--reservoir CAP] [--backend KIND]")
     };
     let args = Args::parse(&rest[1..])?;
+    parse_backend_flag(&args)?;
     let data = args
         .get("data")
         .context("akda update needs --data new.csv (label,f1,f2,... rows)")?;
@@ -1120,8 +1155,10 @@ fn cmd_serve_fleet(args: &Args) -> Result<()> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::time::Duration;
 
-    let conflicts =
-        ["model", "method", "landmarks", "stream", "block-size", "cond", "pjrt", "dataset"];
+    let conflicts = [
+        "model", "method", "landmarks", "stream", "block-size", "cond", "pjrt", "dataset",
+        "backend",
+    ];
     for flag in conflicts {
         anyhow::ensure!(
             args.get(flag).is_none(),
@@ -1421,7 +1458,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(spec) = args.get("model") {
         // the stored model carries its own hyper-parameters; reject the
         // training knobs instead of silently ignoring them
-        for flag in ["method", "landmarks", "stream", "block-size", "cond", "pjrt"] {
+        for flag in ["method", "landmarks", "stream", "block-size", "cond", "pjrt", "backend"] {
             anyhow::ensure!(
                 args.get(flag).is_none(),
                 "--{flag} configures training and conflicts with --model \

@@ -75,6 +75,12 @@ pub struct ModelManifest {
     pub input_dim: usize,
     /// Wall-clock training seconds (fit + SVM bank).
     pub train_s: f64,
+    /// Linalg backend kind the training run selected (`scalar` /
+    /// `blocked` / `parallel` / `auto`; see `linalg::backend`). Purely
+    /// informational — backends are bit-for-bit equivalent, so this
+    /// explains the `train_s` next to it, never the scores. Empty for
+    /// versions published before the backend seam existed.
+    pub backend: String,
     /// Train-time evaluation on the held-out test split. By convention
     /// `0.0` in BOTH fields means "no evaluation ran" (e.g. an `akda
     /// update` against a dataset not in the registry) — [`ModelRegistry::diff`]
@@ -121,6 +127,9 @@ impl ModelManifest {
         kv("n_classes", self.n_classes.to_string());
         kv("input_dim", self.input_dim.to_string());
         kv("train_s", self.train_s.to_string());
+        if !self.backend.is_empty() {
+            kv("backend", self.backend.clone());
+        }
         kv("map", self.map.to_string());
         kv("accuracy", self.accuracy.to_string());
         kv("created_unix", self.created_unix.to_string());
@@ -161,6 +170,7 @@ impl ModelManifest {
                 "n_classes" => m.n_classes = v.parse().with_context(ctx)?,
                 "input_dim" => m.input_dim = v.parse().with_context(ctx)?,
                 "train_s" => m.train_s = v.parse().with_context(ctx)?,
+                "backend" => m.backend = v.to_string(),
                 "map" => m.map = v.parse().with_context(ctx)?,
                 "accuracy" => m.accuracy = v.parse().with_context(ctx)?,
                 "created_unix" => m.created_unix = v.parse().with_context(ctx)?,
@@ -530,6 +540,7 @@ impl ModelRegistry {
         field("m", ma.m.to_string(), mb.m.to_string());
         field("n_classes", ma.n_classes.to_string(), mb.n_classes.to_string());
         field("input_dim", ma.input_dim.to_string(), mb.input_dim.to_string());
+        field("backend", ma.backend.clone(), mb.backend.clone());
         field(
             "updated_from",
             ma.updated_from.clone().unwrap_or_default(),
@@ -935,6 +946,7 @@ mod tests {
             n_classes: 8,
             input_dim: 64,
             train_s: 1.25,
+            backend: "parallel".into(),
             map: 0.97,
             accuracy: 0.95,
             created_unix: 1_760_000_000,
@@ -950,23 +962,28 @@ mod tests {
         let text = mf.to_text();
         assert!(text.contains("health.chol_pivot_min = 0.125"), "{text}");
         assert!(text.contains("health.eps = 0.001"), "{text}");
+        assert!(text.contains("backend = parallel"), "{text}");
         let back = ModelManifest::from_text(&text).unwrap();
         assert_eq!(mf, back);
-        // no stream_block / updated_from / health lines when not applicable
+        // no stream_block / updated_from / health / backend lines when
+        // not applicable
         let mf2 = ModelManifest {
             stream_block: None,
             updated_from: None,
             health: Default::default(),
+            backend: String::new(),
             ..mf
         };
         let text = mf2.to_text();
         assert!(!text.contains("stream_block"));
         assert!(!text.contains("updated_from"));
         assert!(!text.contains("health."));
+        assert!(!text.contains("backend"));
         let back2 = ModelManifest::from_text(&text).unwrap();
         assert_eq!(back2.stream_block, None);
         assert_eq!(back2.updated_from, None);
         assert!(back2.health.is_empty());
+        assert!(back2.backend.is_empty());
     }
 
     #[test]

@@ -186,6 +186,13 @@ pub fn update_registry_model(
 ) -> Result<PublishedUpdate> {
     let (entry, artifact) = registry.load_artifact(spec)?;
     crate::obs::flight::reset();
+    // `health.backend` for update-produced versions: the bordered /
+    // accumulator growth paths don't pass through the full-train entry
+    // points that normally record it
+    crate::obs::flight::record(
+        "backend",
+        crate::linalg::backend::global_kind().id() as f64,
+    );
     let t0 = std::time::Instant::now();
     let (bank, new_artifact, report) = apply_update(&artifact, x_new, y_new, opts)?;
     let update_s = t0.elapsed().as_secs_f64();
@@ -212,6 +219,9 @@ pub fn update_registry_model(
         n_classes: report.n_classes,
         input_dim: mf.input_dim,
         train_s: update_s,
+        // the backend THIS update ran under (not the parent version's):
+        // it explains the `train_s` above; scores are backend-invariant
+        backend: crate::linalg::backend::global_kind().name().to_string(),
         map,
         accuracy,
         updated_from: Some(entry.spec()),

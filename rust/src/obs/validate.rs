@@ -1,6 +1,8 @@
 //! Schema validators for the files this crate emits: `--metrics-out`
-//! JSONL (`akda-metrics/1`), `BENCH_train.json` (`akda-bench-train/1`)
-//! and `BENCH_serve.json` (`akda-bench-serve/1`, or `/2` when the TCP
+//! JSONL (`akda-metrics/1`), `BENCH_train.json` (`akda-bench-train/1`,
+//! or `/2` when the bench swept linalg backends — v2 requires a
+//! `backend` tag on every method row) and `BENCH_serve.json`
+//! (`akda-bench-serve/1`, or `/2` when the TCP
 //! bench recorded the per-stage timing breakdown from the server-timing
 //! echo — v2 requires a non-empty `stages` object). CI runs these via
 //! `akda metrics --validate FILE` so a schema drift fails the build
@@ -19,7 +21,9 @@ pub fn validate_file(path: &std::path::Path) -> Result<String> {
     if let Ok(doc) = parse(text.trim()) {
         if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
             match schema {
-                "akda-bench-train/1" => return validate_bench_train(&doc),
+                "akda-bench-train/1" | "akda-bench-train/2" => {
+                    return validate_bench_train(&doc)
+                }
                 "akda-bench-serve/1" | "akda-bench-serve/2" => {
                     return validate_bench_serve(&doc)
                 }
@@ -117,6 +121,8 @@ fn num(doc: &Json, key: &str) -> Result<f64> {
 }
 
 fn validate_bench_train(doc: &Json) -> Result<String> {
+    let schema =
+        doc.req("schema")?.as_str().context("schema is not a string")?.to_string();
     doc.req("suite")?.as_str().context("suite is not a string")?;
     ensure!(matches!(doc.req("fast")?, Json::Bool(_)), "fast is not a bool");
     let datasets = doc.req("datasets")?.as_arr().context("datasets is not an array")?;
@@ -131,10 +137,23 @@ fn validate_bench_train(doc: &Json) -> Result<String> {
             for field in ["map", "train_s", "test_s"] {
                 num(m, field).with_context(|| format!("dataset {name:?}"))?;
             }
+            // v2 rows carry the linalg backend dimension: every method
+            // row is tagged with the backend it was timed under
+            if schema == "akda-bench-train/2" {
+                let b = m
+                    .req("backend")
+                    .with_context(|| format!("dataset {name:?}: v2 row missing backend"))?
+                    .as_str()
+                    .context("backend is not a string")?;
+                ensure!(
+                    ["scalar", "blocked", "parallel", "auto"].contains(&b),
+                    "dataset {name:?}: unknown backend {b:?}"
+                );
+            }
             methods += 1;
         }
     }
-    Ok(format!("akda-bench-train/1: {} datasets, {methods} method rows ok", datasets.len()))
+    Ok(format!("{schema}: {} datasets, {methods} method rows ok", datasets.len()))
 }
 
 fn validate_bench_serve(doc: &Json) -> Result<String> {
@@ -224,6 +243,32 @@ mod tests {
                         "p50_ms":1.0,"p99_ms":2.0}],
             "total":{"requests":100,"req_per_s":50.0}}"#;
         validate_bench_serve(&parse(serve).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn bench_train_v2_requires_backend_tags() {
+        let v2 = r#"{"schema":"akda-bench-train/2","suite":"small","fast":true,
+            "datasets":[{"name":"iris","methods":[
+              {"method":"AKDA","backend":"scalar","map":0.9,"train_s":0.2,"test_s":0.01},
+              {"method":"AKDA","backend":"parallel","map":0.9,"train_s":0.05,"test_s":0.01}]}]}"#;
+        let summary = validate_bench_train(&parse(v2).unwrap()).unwrap();
+        assert!(summary.contains("akda-bench-train/2"), "{summary}");
+        assert!(summary.contains("2 method rows"), "{summary}");
+
+        // v2 without a backend tag — or with an unknown one — is invalid
+        let missing = r#"{"schema":"akda-bench-train/2","suite":"small","fast":true,
+            "datasets":[{"name":"iris","methods":[
+              {"method":"AKDA","map":0.9,"train_s":0.2,"test_s":0.01}]}]}"#;
+        assert!(validate_bench_train(&parse(missing).unwrap()).is_err());
+        let unknown = r#"{"schema":"akda-bench-train/2","suite":"small","fast":true,
+            "datasets":[{"name":"iris","methods":[
+              {"method":"AKDA","backend":"gpu","map":0.9,"train_s":0.2,"test_s":0.01}]}]}"#;
+        assert!(validate_bench_train(&parse(unknown).unwrap()).is_err());
+        // v1 rows never need the tag
+        let v1 = r#"{"schema":"akda-bench-train/1","suite":"small","fast":true,
+            "datasets":[{"name":"iris","methods":[
+              {"method":"AKDA","map":0.9,"train_s":0.2,"test_s":0.01}]}]}"#;
+        validate_bench_train(&parse(v1).unwrap()).unwrap();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 pub mod engine;
 pub mod manifest;
 pub mod server;
+pub mod xla;
 
 pub use engine::{AkdaPjrt, AksdaPjrt, PjrtEngine, PjrtProjection};
 pub use manifest::Manifest;

@@ -15,6 +15,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::manifest::Manifest;
+// The offline stand-in for the `xla` crate (see `runtime::xla`); the
+// code below is written against the real bindings' API surface.
+use super::xla;
 
 /// One tensor argument: f32 data + dims.
 #[derive(Debug, Clone)]

@@ -1,0 +1,340 @@
+//! The backend seam's lockdown suite (L10): `Scalar`, `Blocked`, and
+//! `Parallel` must be *observationally identical* — bit for bit — on
+//! every routed dense operation, over a grid of shapes, tile heights,
+//! kernels, and worker-pool sizes, including degenerate (1×1), non-
+//! square, and numerically hostile inputs. The `auto` policy and the
+//! `--backend` flag are pure performance choices only because this
+//! suite holds; see `linalg::backend` for the determinism contract.
+//!
+//! CI runs this suite once per `AKDA_BACKEND` value (scalar / blocked /
+//! parallel): the explicit-backend assertions are env-independent, and
+//! the env override steers every *globally routed* entry point the
+//! end-to-end test exercises, so all three lanes must stay green.
+
+use std::sync::Arc;
+
+use akda::coordinator::{build_dr, DetectorBank, Hyper, MethodId, WorkPool};
+use akda::da::{DrMethod, Projection};
+use akda::data::{by_name, Condition, Split};
+use akda::kernels::{cross_gram_with, gram_with, Kernel};
+use akda::linalg::backend::{self, Backend, BackendKind, Blocked, Parallel, Scalar};
+use akda::linalg::chol::{cholesky_with, CholError};
+use akda::linalg::mat::{accumulate_tn_with, matmul_into_with};
+use akda::linalg::Mat;
+use akda::model::{decode_bank, encode_bank, ModelArtifact};
+use akda::svm::{LinearSvm, LinearSvmConfig};
+use akda::util::rng::Rng;
+
+fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn spd(n: usize, seed: u64) -> Mat {
+    let a = randmat(n, n, seed);
+    let mut m = a.matmul_nt(&a).scale(1.0 / n.max(1) as f64);
+    m.add_ridge(1.0);
+    m
+}
+
+/// Every backend variant under test for an `n`-row operation: the
+/// scalar reference, cache tiles of height 1 / 7 / 64 / n (1 = maximal
+/// tiling, n = single tile — the degenerate geometries most likely to
+/// expose a schedule-dependent reduction), and the parallel backend on
+/// both the shared global pool and a small pinned pool.
+fn backends(n: usize, pinned: &Parallel) -> Vec<(String, Box<dyn Backend + '_>)> {
+    let mut v: Vec<(String, Box<dyn Backend + '_>)> = vec![
+        ("scalar".into(), Box::new(Scalar)),
+        ("blocked-1".into(), Box::new(Blocked { tile: 1 })),
+        ("blocked-7".into(), Box::new(Blocked { tile: 7 })),
+        ("blocked-64".into(), Box::new(Blocked { tile: 64 })),
+        (format!("blocked-{}", n.max(1)), Box::new(Blocked { tile: n.max(1) })),
+        ("parallel-pinned".into(), Box::new(PinnedRef(pinned))),
+    ];
+    v.push(("parallel-global".into(), Box::new(GlobalRef)));
+    v
+}
+
+/// Borrow-wrapper so a caller-owned pinned pool fits the same
+/// `Box<dyn Backend>` list as the owned variants.
+struct PinnedRef<'a>(&'a Parallel);
+
+impl Backend for PinnedRef<'_> {
+    fn kind(&self) -> BackendKind {
+        self.0.kind()
+    }
+    fn stripe_rows(&self, rows: usize) -> usize {
+        self.0.stripe_rows(rows)
+    }
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    ) {
+        self.0.for_row_stripes(data, row_len, job)
+    }
+}
+
+struct GlobalRef;
+
+impl Backend for GlobalRef {
+    fn kind(&self) -> BackendKind {
+        Parallel::global().kind()
+    }
+    fn stripe_rows(&self, rows: usize) -> usize {
+        Parallel::global().stripe_rows(rows)
+    }
+    fn for_row_stripes(
+        &self,
+        data: &mut [f64],
+        row_len: usize,
+        job: &(dyn Fn(usize, &mut [f64]) + Sync),
+    ) {
+        Parallel::global().for_row_stripes(data, row_len, job)
+    }
+}
+
+#[test]
+fn gram_is_bitwise_backend_invariant_for_every_kernel() {
+    let pinned = Parallel::new(Arc::new(WorkPool::new(3)));
+    for &(n, d) in &[(1usize, 3usize), (7, 5), (33, 8), (64, 4), (100, 16)] {
+        let x = randmat(n, d, 1000 + n as u64);
+        for kernel in [
+            Kernel::Linear,
+            Kernel::Rbf { rho: 0.35 },
+            Kernel::Poly { degree: 3, c: 0.5 },
+        ] {
+            let reference = gram_with(&x, kernel, &Scalar);
+            for (name, b) in backends(n, &pinned) {
+                assert_eq!(
+                    gram_with(&x, kernel, b.as_ref()),
+                    reference,
+                    "gram n={n} kernel={} backend={name}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_gram_is_bitwise_backend_invariant_including_non_square() {
+    let pinned = Parallel::new(Arc::new(WorkPool::new(2)));
+    for &(ne, nt, d) in &[(1usize, 17usize, 4usize), (40, 7, 6), (100, 33, 5), (65, 64, 3)] {
+        let xe = randmat(ne, d, 7 + ne as u64);
+        let xt = randmat(nt, d, 11 + nt as u64);
+        let kernel = Kernel::Rbf { rho: 0.2 };
+        let reference = cross_gram_with(&xe, &xt, kernel, &Scalar);
+        for (name, b) in backends(ne, &pinned) {
+            assert_eq!(
+                cross_gram_with(&xe, &xt, kernel, b.as_ref()),
+                reference,
+                "cross_gram {ne}x{nt} backend={name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn accumulate_tn_is_bitwise_backend_invariant_including_non_square() {
+    let pinned = Parallel::new(Arc::new(WorkPool::new(5)));
+    for &(rows, ca, cb) in &[(1usize, 1usize, 1usize), (23, 6, 4), (64, 100, 3), (100, 40, 40)] {
+        let a = randmat(rows, ca, 31 + rows as u64);
+        let b = randmat(rows, cb, 37 + rows as u64);
+        // seed the accumulator non-zero: += must agree too, not just =
+        let seed_acc = randmat(ca, cb, 41);
+        let mut reference = seed_acc.clone();
+        accumulate_tn_with(&mut reference, &a, &b, &Scalar);
+        for (name, bk) in backends(ca, &pinned) {
+            let mut acc = seed_acc.clone();
+            accumulate_tn_with(&mut acc, &a, &b, bk.as_ref());
+            assert_eq!(acc, reference, "accumulate_tn {rows}x{ca}x{cb} backend={name}");
+        }
+    }
+}
+
+#[test]
+fn matmul_into_is_bitwise_backend_invariant() {
+    let pinned = Parallel::new(Arc::new(WorkPool::new(4)));
+    for &(m, k, n) in &[(1usize, 7usize, 1usize), (17, 9, 23), (64, 64, 64), (100, 5, 33)] {
+        let a = randmat(m, k, 51 + m as u64);
+        let b = randmat(k, n, 53 + n as u64);
+        let mut reference = Mat::zeros(m, n);
+        matmul_into_with(&a, &b, &mut reference, &Scalar);
+        for (name, bk) in backends(m, &pinned) {
+            let mut out = Mat::zeros(m, n);
+            matmul_into_with(&a, &b, &mut out, bk.as_ref());
+            assert_eq!(out, reference, "matmul {m}x{k}x{n} backend={name}");
+        }
+    }
+}
+
+#[test]
+fn cholesky_is_bitwise_backend_invariant_per_block_and_close_across_blocks() {
+    let pinned = Parallel::new(Arc::new(WorkPool::new(3)));
+    for &n in &[5usize, 33, 64, 100] {
+        let a = spd(n, 61 + n as u64);
+        let blocks = [1usize, 7, 64, n];
+        let mut per_block: Vec<Mat> = Vec::new();
+        for &block in &blocks {
+            let reference = cholesky_with(&a, block, &Scalar).unwrap();
+            for (name, b) in backends(n, &pinned) {
+                let l = cholesky_with(&a, block, b.as_ref()).unwrap();
+                assert_eq!(l, reference, "chol n={n} block={block} backend={name}");
+            }
+            per_block.push(reference);
+        }
+        // across block sizes the panel split reassociates the trailing
+        // update, so only closeness is promised — and L L^T must still
+        // reconstruct A to the same accuracy
+        for (i, l) in per_block.iter().enumerate() {
+            let drift = l.sub(&per_block[0]).max_abs();
+            assert!(
+                drift <= 1e-12 * (1.0 + per_block[0].max_abs()),
+                "n={n}: blocks {} vs {} drift {drift}",
+                blocks[i],
+                blocks[0]
+            );
+            assert!(l.matmul_nt(l).sub(&a).max_abs() < 1e-9, "n={n} block={}", blocks[i]);
+        }
+    }
+}
+
+#[test]
+fn non_spd_pivot_error_is_identical_for_every_backend_and_block() {
+    // identity with one negative diagonal entry: the factorization is
+    // exact up to the bad pivot, so the pivot index is deterministic
+    // across blocks AND backends — everyone must report the same error
+    let pinned = Parallel::new(Arc::new(WorkPool::new(2)));
+    let n = 64;
+    let mut a = Mat::eye(n);
+    a[(41, 41)] = -1.0;
+    for block in [1usize, 7, 64, n] {
+        for (name, b) in backends(n, &pinned) {
+            match cholesky_with(&a, block, b.as_ref()) {
+                Err(CholError::NotPositiveDefinite(k)) => {
+                    assert_eq!(k, 41, "block={block} backend={name}")
+                }
+                other => panic!("block={block} backend={name}: expected error, got {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn near_singular_outcome_is_identical_across_backends_per_block() {
+    // rank-1 + tiny ridge: whether the factorization squeaks through or
+    // dies (and at which pivot) is decided by rounding — but for a fixed
+    // block the decision must be the same on every backend, because they
+    // run the same floating-point program
+    let pinned = Parallel::new(Arc::new(WorkPool::new(3)));
+    let n = 40;
+    let v = randmat(n, 1, 71);
+    let mut a = v.matmul_nt(&v);
+    a.add_ridge(1e-13);
+    for block in [1usize, 8, n] {
+        let reference = cholesky_with(&a, block, &Scalar);
+        for (name, b) in backends(n, &pinned) {
+            let got = cholesky_with(&a, block, b.as_ref());
+            match (&reference, &got) {
+                (Ok(lr), Ok(lg)) => {
+                    assert_eq!(lg, lr, "block={block} backend={name}")
+                }
+                (Err(er), Err(eg)) => {
+                    assert_eq!(eg, er, "block={block} backend={name}")
+                }
+                _ => panic!(
+                    "block={block} backend={name}: scalar says {:?}, got {:?}",
+                    reference.as_ref().map(|_| "Ok"),
+                    got.as_ref().map(|_| "Ok")
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_hammer_is_byte_identical_across_50_runs_and_pool_sizes() {
+    // run-to-run determinism under concurrency churn: 50 rounds, pool
+    // shrinking and growing between 1 and 8 workers, gram + cholesky
+    // every round — all bits must match round 0
+    let x = randmat(90, 12, 97);
+    let kernel = Kernel::Rbf { rho: 0.15 };
+    let mut first: Option<(Mat, Mat)> = None;
+    for i in 0..50usize {
+        let par = Parallel::new(Arc::new(WorkPool::new(1 + i % 8)));
+        let k = gram_with(&x, kernel, &par);
+        let mut a = k.clone();
+        a.add_ridge(1e-3);
+        let l = cholesky_with(&a, 16, &par).unwrap();
+        match &first {
+            None => first = Some((k, l)),
+            Some((k0, l0)) => {
+                assert_eq!(&k, k0, "gram drifted on round {i} (pool={})", 1 + i % 8);
+                assert_eq!(&l, l0, "chol drifted on round {i} (pool={})", 1 + i % 8);
+            }
+        }
+    }
+}
+
+// --- end to end through the model subsystem -------------------------------
+
+fn tiny_split() -> Split {
+    let mut d = by_name("mscorid").unwrap();
+    d.n_classes = 4;
+    d.test_per_class = 15;
+    d.split(Condition::Ex10)
+}
+
+/// The `akda train` shape: exact-AKDA projection + OvR LSVM bank, built
+/// under whatever `linalg::backend` is globally selected.
+fn train_bank(split: &Split) -> DetectorBank {
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
+    let projection: Box<dyn Projection> = build_dr(MethodId::Akda, hp, 1e-3, None)
+        .unwrap()
+        .expect("akda has a DR stage")
+        .fit(&split.x_train, &split.y_train, split.n_classes)
+        .unwrap();
+    let z = projection.project(&split.x_train);
+    let svms = (0..split.n_classes)
+        .map(|cls| {
+            let y: Vec<f64> = split
+                .y_train
+                .iter()
+                .map(|&l| if l == cls { 1.0 } else { -1.0 })
+                .collect();
+            (format!("class{cls}"), LinearSvm::train(&z, &y, LinearSvmConfig::default()))
+        })
+        .collect();
+    DetectorBank { projection, svms }
+}
+
+#[test]
+fn parallel_trained_model_scores_bitwise_like_scalar_through_save_load() {
+    // the whole training pipeline — gram, cholesky solve, projection,
+    // SVM bank — under --backend parallel vs --backend scalar, then
+    // through the artifact codec: every byte of behavior must match.
+    // (Safe to flip the global here even though tests share the process:
+    // the seam is bit-for-bit, so concurrent tests cannot observe it.)
+    let split = tiny_split();
+    backend::set_global(BackendKind::Scalar);
+    let scalar_bank = train_bank(&split);
+    let scalar_scores = scalar_bank.score(&split.x_test);
+
+    backend::set_global(BackendKind::Parallel);
+    let parallel_bank = train_bank(&split);
+    let parallel_scores = parallel_bank.score(&split.x_test);
+    backend::set_global(BackendKind::Auto);
+
+    assert_eq!(
+        parallel_scores, scalar_scores,
+        "parallel-trained bank must score bit-for-bit like scalar"
+    );
+
+    // save → load the parallel-trained bank, score again: still the
+    // scalar bits (the artifact carries no backend dependence at all)
+    let bytes = encode_bank(&parallel_bank, "akda").unwrap().to_bytes();
+    let loaded = decode_bank(&ModelArtifact::from_bytes(&bytes).unwrap()).unwrap();
+    assert_eq!(loaded.score(&split.x_test), scalar_scores);
+}
