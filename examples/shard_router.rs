@@ -1,0 +1,164 @@
+//! Shard-and-serve, end to end: train one model as K stride shards, merge
+//! the shard accumulators into a published model (bit-identical no matter
+//! the merge order), then front it with a FLEET OF FLEETS — two
+//! independent `FleetService` processes watching the same registry, with
+//! a round-robin router fanning scoring requests across them. Publishing
+//! the merged model hot-swaps BOTH fleets mid-traffic.
+//!
+//! This is the in-process mirror of the operational story: `akda train
+//! --shard i/k` on K machines, `akda merge --publish` on one, N × `akda
+//! serve --fleet --watch` behind a load balancer.
+//!
+//! Run: cargo run --release --example shard_router
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use akda::coordinator::fleet::{FleetOptions, FleetService};
+use akda::coordinator::protocol::approx_config;
+use akda::coordinator::{DetectorBank, Hyper, MethodId};
+use akda::da::akda_stream::{BlockedProjection, PreparedStream, TiledAccumulator};
+use akda::da::Projection;
+use akda::data::stream::{
+    reservoir_sample_labeled, BlockSource, MemBlockSource, StridedBlockSource,
+};
+use akda::data::{by_name, Condition};
+use akda::model::codec::ApproxResume;
+use akda::model::shard::basis_fingerprint;
+use akda::model::update::{train_svm_bank, DEFAULT_RESERVOIR_CAP, DEFAULT_UPDATE_SEED};
+use akda::model::{
+    encode_shard, ModelManifest, ModelRegistry, ShardPiece, ShardSet,
+};
+use akda::util::rng::shard_seed;
+
+const SHARDS: usize = 3;
+const BLOCK_ROWS: usize = 256;
+
+fn main() -> anyhow::Result<()> {
+    let spec = by_name("eth80").expect("dataset in registry");
+    let split = spec.split(Condition::Ex100);
+    let hp = Hyper { rho: 0.05, c: 1.0, h: 2, ..Default::default() };
+    let ap = approx_config(MethodId::AkdaNystrom, hp, 1e-3);
+
+    // ---- map side: K shard trains, each over its own stride of the
+    // stream (here in one process; operationally one per machine) -------
+    let mut full = MemBlockSource::new(&split.x_train, &split.y_train, BLOCK_ROWS);
+    let map: Arc<dyn akda::approx::FeatureMap> = Arc::from(ap.build_map_stream(&mut full)?);
+    let basis = basis_fingerprint(map.as_ref())?;
+    let mut set = ShardSet::new();
+    for index in 0..SHARDS {
+        let mut src = StridedBlockSource::new(
+            MemBlockSource::new(&split.x_train, &split.y_train, BLOCK_ROWS),
+            index,
+            SHARDS,
+        )?;
+        let mut acc = TiledAccumulator::new(map.dim());
+        src.reset()?;
+        while let Some(block) = src.next_block()? {
+            let phi = map.transform(&block.x);
+            acc.absorb(&phi, &block.labels)?;
+        }
+        let agg = acc.into_aggregates(split.n_classes)?;
+        let (reservoir, reservoir_labels, seen) = reservoir_sample_labeled(
+            &mut src,
+            DEFAULT_RESERVOIR_CAP,
+            shard_seed(DEFAULT_UPDATE_SEED, index, SHARDS),
+        )?;
+        let piece = ShardPiece {
+            index,
+            count: SHARDS,
+            basis,
+            block_rows: BLOCK_ROWS,
+            map: Arc::clone(&map),
+            resume: ApproxResume {
+                gram: agg.gram,
+                class_sums: agg.class_sums,
+                counts: agg.counts,
+                reservoir,
+                reservoir_labels,
+                seen,
+                eps: ap.eps,
+            },
+            meta: Default::default(),
+        };
+        // round-trip through the artifact codec, as the CLI would
+        let art = encode_shard(&piece)?;
+        set.insert(akda::model::decode_shard(&art)?)?;
+        println!("shard {index}/{SHARDS} accumulated");
+    }
+
+    // ---- reduce side: merge, factorize once, publish ------------------
+    let merged = set.finalize(DEFAULT_RESERVOIR_CAP)?;
+    let prep = PreparedStream::from_aggregates(
+        Arc::clone(&merged.map),
+        merged.aggregates,
+        merged.eps,
+        akda::linalg::chol::DEFAULT_BLOCK,
+    )?;
+    let w = prep.solve_w_multiclass()?;
+    let proj = BlockedProjection { map: Arc::clone(&prep.map), w, block_rows: BLOCK_ROWS };
+    let z = proj.project(&split.x_train);
+    let svms = train_svm_bank(&z, &split.y_train, split.n_classes);
+    let bank = Arc::new(DetectorBank { projection: Box::new(proj), svms });
+
+    let dir = std::env::temp_dir().join(format!("akda-shard-router-{}", std::process::id()));
+    let registry = ModelRegistry::open(&dir);
+    let artifact = akda::model::encode_bank(&bank, "akda-nystrom")?;
+    let manifest = ModelManifest {
+        method: "akda-nystrom".into(),
+        dataset: "eth80".into(),
+        n_classes: split.n_classes,
+        input_dim: split.x_train.cols(),
+        ..Default::default()
+    };
+    let entry = registry.publish("eth80", &artifact, &manifest)?;
+    println!("published {} from {SHARDS} merged shards", entry.spec());
+
+    // ---- fleet of fleets: two serving processes, one registry ---------
+    let opts = || FleetOptions { watch: Some(Duration::from_millis(50)), ..Default::default() };
+    let fleet_a = FleetService::start(&ModelRegistry::open(&dir), opts())?;
+    let fleet_b = FleetService::start(&ModelRegistry::open(&dir), opts())?;
+    let clients = [fleet_a.client(), fleet_b.client()];
+
+    // round-robin router: request i → fleet i mod 2
+    let mut correct = 0usize;
+    for i in 0..split.x_test.rows() {
+        let scores = clients[i % clients.len()]
+            .score("eth80", split.x_test.row(i).to_vec())
+            .map_err(|e| anyhow::anyhow!("route {i}: {e}"))?;
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite score"))
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        if pred == split.y_test[i] {
+            correct += 1;
+        }
+    }
+    println!(
+        "routed {} requests across {} fleets: accuracy {:.2}% (A served {}, B served {})",
+        split.x_test.rows(),
+        clients.len(),
+        100.0 * correct as f64 / split.x_test.rows() as f64,
+        fleet_a.stats().requests,
+        fleet_b.stats().requests,
+    );
+
+    // republish (a new version) and watch both fleets hot-swap it
+    let v2 = registry.publish("eth80", &artifact, &manifest)?;
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let a = fleet_a.served_versions();
+        let b = fleet_b.served_versions();
+        let caught_up = |v: &[(String, u32)]| v.iter().any(|(_, ver)| *ver == v2.version);
+        if caught_up(&a) && caught_up(&b) {
+            println!("both fleets hot-swapped to v{} without restart", v2.version);
+            break;
+        }
+        anyhow::ensure!(std::time::Instant::now() < deadline, "fleets never swapped");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

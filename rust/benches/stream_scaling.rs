@@ -3,13 +3,17 @@
 //! peak O(B·m + m²)) as N grows — time, accumulator residency, and the
 //! solve equivalence gap.
 //!
-//! Three variants per N:
-//!   mem   — `AkdaApprox::prepare` + `PreparedFeatures::fit` (dense Φ)
-//!   tile  — `PreparedStream::accumulate` with the *same* feature map over
-//!           an in-memory block source: isolates the tiling itself; the
-//!           acceptance gate requires its solution within 1e-10 of mem
-//!   csv   — fully out-of-core `prepare_stream` from a CSV on disk
-//!           (reservoir-sampled landmarks, file never loaded whole)
+//! Variants per N:
+//!   mem     — `AkdaApprox::prepare` + `PreparedFeatures::fit` (dense Φ)
+//!   tile    — `PreparedStream::accumulate` with the *same* feature map over
+//!             an in-memory block source: isolates the tiling itself; the
+//!             acceptance gate requires its solution within 1e-10 of mem
+//!   shard-k — the stream split into k ∈ {1,2,4} stride shards, each
+//!             accumulated into its own `TiledAccumulator`, then merged
+//!             (`TiledAccumulator::merge`) and factorized; the timed region
+//!             includes the merge, and every k must hit the same 1e-10 gate
+//!   csv     — fully out-of-core `prepare_stream` from a CSV on disk
+//!             (reservoir-sampled landmarks, file never loaded whole)
 //!
 //! Residency columns are the exact f64 counts the two paths keep live
 //! during accumulation (`StreamStats::{dense,peak}_resident_f64`) — the
@@ -18,15 +22,23 @@
 //! Env: AKDA_STREAM_MAX_N (default 8192), AKDA_LANDMARKS (default 64),
 //!      AKDA_BLOCK (default 512)
 //! Run: cargo bench --bench stream_scaling
+//!
+//! Emits `BENCH_train.json` (`akda-bench-train/1`) with one dataset entry
+//! per N and one method row per variant, so the sharded-training perf
+//! trajectory is machine-readable (`akda metrics --validate BENCH_train.json`).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use akda::da::akda_approx::AkdaApprox;
-use akda::da::akda_stream::PreparedStream;
-use akda::data::stream::{CsvBlockSource, MemBlockSource};
+use akda::da::akda_stream::{PreparedStream, TiledAccumulator};
+use akda::data::stream::{BlockSource, CsvBlockSource, MemBlockSource, StridedBlockSource};
 use akda::data::synthetic::{gaussian_classes, GaussianSpec};
 use akda::kernels::Kernel;
 use akda::linalg::Mat;
+use akda::util::json::Json;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
 
 fn problem(n: usize, dim: usize, seed: u64) -> (Mat, Vec<usize>) {
     gaussian_classes(&GaussianSpec {
@@ -48,6 +60,19 @@ fn mb(f64s: usize) -> f64 {
     f64s as f64 * 8.0 / 1e6
 }
 
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn method_row(method: &str, train_s: f64) -> Json {
+    obj(vec![
+        ("method", Json::Str(method.to_string())),
+        ("map", Json::Num(0.0)),
+        ("train_s", Json::Num(train_s)),
+        ("test_s", Json::Num(0.0)),
+    ])
+}
+
 fn main() {
     let dim = 32;
     let max_n = env_usize("AKDA_STREAM_MAX_N", 8192);
@@ -57,8 +82,9 @@ fn main() {
 
     println!("# stream scaling bench (binary, F={dim}, m={m}, B={block})");
     println!(
-        "{:>7} {:>9} {:>9} {:>9} {:>10} {:>10} {:>12}",
-        "N", "mem_s", "tile_s", "csv_s", "mem_MB", "tile_MB", "gap"
+        "{:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10} {:>12}",
+        "N", "mem_s", "tile_s", "shard1_s", "shard2_s", "shard4_s", "csv_s", "mem_MB", "tile_MB",
+        "gap"
     );
 
     let csv_dir = std::env::temp_dir().join("akda_stream_bench");
@@ -72,6 +98,7 @@ fn main() {
     }
     let mut worst_gap = 0.0_f64;
     let mut last_ratio = 1.0_f64;
+    let mut datasets = Vec::new();
     for &n in &sizes {
         let (x, labels) = problem(n, dim, n as u64);
         let cfg = AkdaApprox::nystrom(kernel, m);
@@ -92,6 +119,50 @@ fn main() {
         let gap = w_tile.sub(&w_mem).max_abs();
         worst_gap = worst_gap.max(gap);
 
+        // sharded: split the stream into k stride shards, accumulate each
+        // into its own TiledAccumulator, then merge — the distributed map
+        // side in one process; merge time is inside the timed region
+        let mut t_shard = Vec::with_capacity(SHARD_COUNTS.len());
+        for &k in &SHARD_COUNTS {
+            let t0 = Instant::now();
+            let mut merged: Option<TiledAccumulator> = None;
+            for index in 0..k {
+                let mut src = StridedBlockSource::new(
+                    MemBlockSource::new(&x, &labels, block),
+                    index,
+                    k,
+                )
+                .expect("stride source");
+                let mut acc = TiledAccumulator::new(prep.map.dim());
+                src.reset().expect("reset");
+                while let Some(b) = src.next_block().expect("next block") {
+                    let phi = prep.map.transform(&b.x);
+                    acc.absorb(&phi, &b.labels).expect("absorb");
+                }
+                merged = Some(match merged {
+                    None => acc,
+                    Some(mut left) => {
+                        left.merge(&acc).expect("shard merge");
+                        left
+                    }
+                });
+            }
+            let agg = merged.expect("k >= 1").into_aggregates(2).expect("aggregates");
+            let ps_k = PreparedStream::from_aggregates(
+                prep.map.clone(),
+                agg,
+                cfg.eps,
+                akda::linalg::chol::DEFAULT_BLOCK,
+            )
+            .expect("merged factorize");
+            let w_k = ps_k.solve_w_class(0).expect("merged solve");
+            t_shard.push(t0.elapsed().as_secs_f64());
+            // every shard count must land on the same solution as mem:
+            // the accumulator merge is exact elementwise addition
+            let gap_k = w_k.sub(&w_mem).max_abs();
+            worst_gap = worst_gap.max(gap_k);
+        }
+
         // fully out-of-core: stream the CSV from disk, landmarks from a
         // reservoir sample — N ≫ RAM shape (only correctness-checked
         // above; landmarks differ from the in-memory fit by design)
@@ -107,16 +178,41 @@ fn main() {
 
         last_ratio = mb(ps.stats.dense_resident_f64()) / mb(ps.stats.peak_resident_f64());
         println!(
-            "{:>7} {:>9.4} {:>9.4} {:>9.4} {:>10.2} {:>10.2} {:>12.3e}",
+            "{:>7} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>10.2} {:>10.2} {:>12.3e}",
             n,
             t_mem,
             t_tile,
+            t_shard[0],
+            t_shard[1],
+            t_shard[2],
             t_csv,
             mb(ps.stats.dense_resident_f64()),
             mb(ps.stats.peak_resident_f64()),
             gap,
         );
+
+        let mut methods = vec![
+            method_row("mem", t_mem),
+            method_row("tile", t_tile),
+            method_row("csv", t_csv),
+        ];
+        for (i, &k) in SHARD_COUNTS.iter().enumerate() {
+            methods.push(method_row(&format!("shard-k{k}"), t_shard[i]));
+        }
+        datasets.push(obj(vec![
+            ("name", Json::Str(format!("stream-n{n}"))),
+            ("methods", Json::Arr(methods)),
+        ]));
     }
+
+    let bench = obj(vec![
+        ("schema", Json::Str("akda-bench-train/1".to_string())),
+        ("suite", Json::Str("stream-scaling".to_string())),
+        ("fast", Json::Bool(max_n <= 2048)),
+        ("datasets", Json::Arr(datasets)),
+    ]);
+    std::fs::write("BENCH_train.json", format!("{bench}\n")).expect("write BENCH_train.json");
+    println!("# wrote BENCH_train.json ({} sizes, shard counts {SHARD_COUNTS:?})", sizes.len());
 
     println!(
         "# worst tiling gap {worst_gap:.3e} (target <= 1e-10); residency ratio at \

@@ -51,6 +51,71 @@ pub const DEFAULT_SAMPLE_CAP: usize = 2048;
 /// every-class-nonempty check could reject it.
 pub const MAX_STREAM_CLASSES: usize = 65_536;
 
+/// Why two pieces of sharded training state refused to merge. Every
+/// compatibility violation is reported through this enum — the merge
+/// paths never panic on foreign state, because shard artifacts cross
+/// process (and machine) boundaries and a bad pairing must surface as an
+/// actionable error, not a crash.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MergeError {
+    /// Feature dimensionalities m differ (different landmark budgets).
+    DimMismatch { left: usize, right: usize },
+    /// Declared class counts C differ (different datasets/label spaces).
+    ClassMismatch { left: usize, right: usize },
+    /// Ridge ε differs bit-for-bit — the merged Gram would be factorized
+    /// under a ridge that matches neither shard.
+    EpsMismatch { left: f64, right: f64 },
+    /// Landmark-basis fingerprints differ: the shards accumulated Φ in
+    /// different feature bases, so their Grams are not summable.
+    BasisMismatch { left: u64, right: u64 },
+    /// Two shards claim the same stride index of one train.
+    DuplicateShard { index: usize },
+    /// Shards declare different total shard counts k.
+    ShardCountMismatch { left: usize, right: usize },
+    /// A shard's stride index is outside `0..count`.
+    IndexOutOfRange { index: usize, count: usize },
+    /// Finalize was asked to produce a model from an incomplete shard set.
+    Incomplete { have: usize, want: usize },
+    /// No shards at all.
+    Empty,
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MergeError::DimMismatch { left, right } => {
+                write!(f, "shard merge: feature dims differ (m {left} vs {right})")
+            }
+            MergeError::ClassMismatch { left, right } => {
+                write!(f, "shard merge: class counts differ (C {left} vs {right})")
+            }
+            MergeError::EpsMismatch { left, right } => {
+                write!(f, "shard merge: ridge eps differs ({left} vs {right})")
+            }
+            MergeError::BasisMismatch { left, right } => write!(
+                f,
+                "shard merge: landmark bases differ (fingerprint {left:016x} vs {right:016x}) — \
+                 shards must share one feature map"
+            ),
+            MergeError::DuplicateShard { index } => {
+                write!(f, "shard merge: shard {index} supplied twice")
+            }
+            MergeError::ShardCountMismatch { left, right } => {
+                write!(f, "shard merge: shard counts differ (k {left} vs {right})")
+            }
+            MergeError::IndexOutOfRange { index, count } => {
+                write!(f, "shard merge: shard index {index} out of range for {count} shards")
+            }
+            MergeError::Incomplete { have, want } => {
+                write!(f, "shard merge: only {have} of {want} shards present")
+            }
+            MergeError::Empty => write!(f, "shard merge: no shards supplied"),
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
 /// Accumulation-pass bookkeeping: what flowed through and what stayed
 /// resident — the numbers the eval tables report as peak resident tiles.
 #[derive(Debug, Clone, Copy, Default)]
@@ -154,6 +219,81 @@ impl TiledAccumulator {
     pub fn stats(&self) -> StreamStats {
         self.stats
     }
+
+    /// Merge another accumulator into this one. The streaming state is a
+    /// pure sum — G, the class sums, and the counts all add elementwise —
+    /// so two accumulators fed disjoint row sets combine into exactly the
+    /// state one accumulator over the union would have reached (up to
+    /// f64 addition order; the shard pipeline folds in a canonical order
+    /// to make even the bits reproducible). Both sides must share the
+    /// feature dimensionality m; the class axis grows to cover both.
+    pub fn merge(&mut self, other: &TiledAccumulator) -> Result<(), MergeError> {
+        if self.g.rows() != other.g.rows() {
+            return Err(MergeError::DimMismatch {
+                left: self.g.rows(),
+                right: other.g.rows(),
+            });
+        }
+        self.g.add_assign(&other.g);
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+            self.class_sums.resize(other.counts.len(), vec![0.0; self.g.rows()]);
+        }
+        for (cls, sums) in other.class_sums.iter().enumerate() {
+            self.counts[cls] += other.counts[cls];
+            for (s, &v) in self.class_sums[cls].iter_mut().zip(sums) {
+                *s += v;
+            }
+        }
+        self.stats.rows += other.stats.rows;
+        self.stats.blocks += other.stats.blocks;
+        self.stats.peak_block_rows = self.stats.peak_block_rows.max(other.stats.peak_block_rows);
+        self.stats.n_features = self.stats.n_features.max(other.stats.n_features);
+        self.stats.map_fit_resident_f64 =
+            self.stats.map_fit_resident_f64.max(other.stats.map_fit_resident_f64);
+        crate::obs::counter("akda_shard_merges_total").inc();
+        Ok(())
+    }
+
+    /// Tear the accumulator down into its raw aggregates — the per-shard
+    /// persistence path. Unlike [`PreparedStream::accumulate`] this does
+    /// NOT require every class to be populated (a stride shard may
+    /// legitimately miss a rare class; only the *merged* state must cover
+    /// them all) and performs no factorization. `n_classes` pads the
+    /// class axis out to the dataset's declared C so every shard of one
+    /// train carries identically-shaped class sums.
+    pub fn into_aggregates(self, n_classes: usize) -> Result<StreamAggregates> {
+        let TiledAccumulator { g, class_sums, counts, mut stats, .. } = self;
+        anyhow::ensure!(stats.rows > 0, "cannot aggregate an empty stream");
+        anyhow::ensure!(
+            counts.len() <= n_classes,
+            "stream contains label {} but only {} classes were declared",
+            counts.len() - 1,
+            n_classes
+        );
+        let m = g.rows();
+        let mut padded = counts;
+        padded.resize(n_classes, 0);
+        let class_sums = Mat::from_fn(m, n_classes, |i, j| {
+            if j < class_sums.len() { class_sums[j][i] } else { 0.0 }
+        });
+        stats.n_classes = n_classes;
+        Ok(StreamAggregates { gram: g, class_sums, counts: padded, stats })
+    }
+}
+
+/// Raw label-independent training state torn out of a
+/// [`TiledAccumulator`]: the pre-ridge m×m Gram, the m×C class sums, and
+/// the per-class counts. This is the unit that shard artifacts persist
+/// and [`PreparedStream::from_aggregates`] resurrects after a merge.
+pub struct StreamAggregates {
+    /// Pre-ridge m×m Gram accumulator G = ΦᵀΦ.
+    pub gram: Mat,
+    /// m×C class sums S = ΦᵀR (zero columns for classes the shard missed).
+    pub class_sums: Mat,
+    /// Per-class row counts, padded to the declared C.
+    pub counts: Vec<usize>,
+    pub stats: StreamStats,
 }
 
 impl AkdaApprox {
@@ -273,6 +413,48 @@ impl PreparedStream {
         stats.n_classes = c;
         let class_sums = Mat::from_fn(m, c, |i, j| class_sums[j][i]);
         crate::obs::gauge("akda_train_peak_f64").set_max(stats.peak_resident_f64() as f64);
+        Ok(PreparedStream { map, gram, chol_l, class_sums, counts, stats })
+    }
+
+    /// Resurrect a prepared stream from already-merged aggregates: ridge
+    /// + factorize the summed Gram and wire the class sums back up. This
+    /// is `akda merge`'s path from k shard artifacts to a servable model
+    /// — the exact same ridge/Cholesky code the unsharded
+    /// [`PreparedStream::accumulate`] runs, so a single-shard (k = 1)
+    /// round trip reproduces the unsharded fit bit for bit.
+    pub fn from_aggregates(
+        map: Arc<dyn FeatureMap>,
+        agg: StreamAggregates,
+        eps: f64,
+        block: usize,
+    ) -> Result<PreparedStream> {
+        let StreamAggregates { gram, class_sums, counts, mut stats } = agg;
+        let m = map.dim();
+        anyhow::ensure!(
+            gram.shape() == (m, m),
+            "aggregate gram is {}x{} but the map has dimension {m}",
+            gram.rows(),
+            gram.cols()
+        );
+        anyhow::ensure!(
+            class_sums.shape() == (m, counts.len()),
+            "aggregate class sums are {}x{} for m = {m}, C = {}",
+            class_sums.rows(),
+            class_sums.cols(),
+            counts.len()
+        );
+        anyhow::ensure!(stats.rows > 0, "cannot fit from empty aggregates");
+        anyhow::ensure!(
+            counts.len() >= 2 && counts.iter().all(|&c| c > 0),
+            "merged aggregates must cover at least two classes, every label in 0..C \
+             (counts {counts:?})"
+        );
+        let mut g = gram.clone();
+        g.add_ridge(eps);
+        let chol_l = chol::cholesky(&g, block)
+            .map_err(|e| anyhow::anyhow!("merged-aggregate Cholesky failed: {e}"))?;
+        stats.m = m;
+        stats.n_classes = counts.len();
         Ok(PreparedStream { map, gram, chol_l, class_sums, counts, stats })
     }
 
@@ -575,6 +757,123 @@ mod tests {
         // cap (2048) exceeds N, so the whole 60-row stream was sampled
         assert_eq!(ps.stats.map_fit_resident_f64, 60 * x.cols());
         assert!(ps.stats.peak_resident_f64() >= ps.stats.map_fit_resident_f64);
+    }
+
+    /// Stride-sharded accumulators merged back together must equal one
+    /// accumulator over the whole stream — and the merge must commute
+    /// bitwise (f64 `+` is commutative even though it is not associative).
+    #[test]
+    fn sharded_accumulators_merge_to_the_single_pass_state() {
+        use crate::data::stream::StridedBlockSource;
+        let (x, labels) = toy(21, 3, 10);
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.5 }, 16);
+        let mut full_src = MemBlockSource::new(&x, &labels, 4);
+        let map: Arc<dyn FeatureMap> = Arc::from(cfg.build_map_stream(&mut full_src).unwrap());
+
+        let absorb_all = |src: &mut dyn BlockSource| -> TiledAccumulator {
+            let mut acc = TiledAccumulator::new(map.dim());
+            src.reset().unwrap();
+            while let Some(block) = src.next_block().unwrap() {
+                let phi = map.transform(&block.x);
+                acc.absorb(&phi, &block.labels).unwrap();
+            }
+            acc
+        };
+        let whole = absorb_all(&mut full_src);
+
+        let k = 3;
+        let shards: Vec<TiledAccumulator> = (0..k)
+            .map(|i| {
+                let inner = MemBlockSource::new(&x, &labels, 4);
+                let mut src = StridedBlockSource::new(inner, i, k).unwrap();
+                absorb_all(&mut src)
+            })
+            .collect();
+        let agg = |order: &[usize]| {
+            let mut it = order.iter();
+            let mut acc = absorb_all(&mut {
+                let inner = MemBlockSource::new(&x, &labels, 4);
+                StridedBlockSource::new(inner, *it.next().unwrap(), k).unwrap()
+            });
+            for &i in it {
+                acc.merge(&shards[i]).unwrap();
+            }
+            acc.into_aggregates(3).unwrap()
+        };
+        let fwd = agg(&[0, 1, 2]);
+        let rev = agg(&[2, 1, 0]);
+        let single = whole.into_aggregates(3).unwrap();
+        // merged ≈ single-pass (f64 addition order differs ⇒ ≤1e-10, not bits)
+        assert!(fwd.gram.sub(&single.gram).max_abs() < 1e-10);
+        assert!(fwd.class_sums.sub(&single.class_sums).max_abs() < 1e-10);
+        assert_eq!(fwd.counts, single.counts);
+        assert_eq!(fwd.stats.rows, single.stats.rows);
+        // pairwise merge commutes bitwise: shard0+shard1 == shard1+shard0
+        let mut ab = absorb_all(&mut StridedBlockSource::new(
+            MemBlockSource::new(&x, &labels, 4), 0, k).unwrap());
+        ab.merge(&shards[1]).unwrap();
+        let mut ba = absorb_all(&mut StridedBlockSource::new(
+            MemBlockSource::new(&x, &labels, 4), 1, k).unwrap());
+        ba.merge(&shards[0]).unwrap();
+        let (a, b) = (ab.into_aggregates(3).unwrap(), ba.into_aggregates(3).unwrap());
+        assert!(a.gram.sub(&b.gram).max_abs() == 0.0, "f64 + must commute bitwise");
+        assert!(a.class_sums.sub(&b.class_sums).max_abs() == 0.0);
+        assert_eq!(a.counts, b.counts);
+        // reversed merge order still lands within f.p. reassociation noise
+        assert!(rev.gram.sub(&single.gram).max_abs() < 1e-10);
+        assert_eq!(rev.counts, single.counts);
+    }
+
+    #[test]
+    fn merge_rejects_dim_mismatch_with_a_typed_error() {
+        let mut a = TiledAccumulator::new(3);
+        let b = TiledAccumulator::new(4);
+        match a.merge(&b) {
+            Err(MergeError::DimMismatch { left: 3, right: 4 }) => {}
+            other => panic!("expected DimMismatch, got {other:?}"),
+        }
+    }
+
+    /// k = 1: tearing the accumulator down and resurrecting it through
+    /// `from_aggregates` must reproduce the direct streaming fit bitwise.
+    #[test]
+    fn from_aggregates_round_trips_the_streaming_fit() {
+        let (x, labels) = toy(18, 2, 11);
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.4 }, 24);
+        let mut src = MemBlockSource::new(&x, &labels, 6);
+        let direct = cfg.prepare_stream(&mut src).unwrap();
+        let w_direct = direct.solve_w_multiclass().unwrap();
+
+        let mut acc = TiledAccumulator::new(direct.map.dim());
+        acc.stats.n_features = x.cols();
+        src.reset().unwrap();
+        while let Some(block) = src.next_block().unwrap() {
+            let phi = direct.map.transform(&block.x);
+            acc.absorb(&phi, &block.labels).unwrap();
+        }
+        let agg = acc.into_aggregates(2).unwrap();
+        let rebuilt =
+            PreparedStream::from_aggregates(direct.map.clone(), agg, cfg.eps, cfg.block).unwrap();
+        let w = rebuilt.solve_w_multiclass().unwrap();
+        assert!(w.sub(&w_direct).max_abs() == 0.0, "k=1 round trip must be bit-for-bit");
+        assert!(rebuilt.gram().sub(direct.gram()).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn from_aggregates_rejects_uncovered_classes() {
+        let (x, labels) = toy(12, 2, 12);
+        let cfg = AkdaApprox::rff(Kernel::Rbf { rho: 0.4 }, 8);
+        let mut src = MemBlockSource::new(&x, &labels, 4);
+        let map: Arc<dyn FeatureMap> = Arc::from(cfg.build_map_stream(&mut src).unwrap());
+        let mut acc = TiledAccumulator::new(map.dim());
+        src.reset().unwrap();
+        while let Some(block) = src.next_block().unwrap() {
+            let phi = map.transform(&block.x);
+            acc.absorb(&phi, &block.labels).unwrap();
+        }
+        // declare 3 classes but the stream only populated 2
+        let agg = acc.into_aggregates(3).unwrap();
+        assert!(PreparedStream::from_aggregates(map, agg, cfg.eps, cfg.block).is_err());
     }
 
     #[test]

@@ -338,6 +338,120 @@ impl LabeledReservoir {
     }
 }
 
+impl LabeledReservoir {
+    /// Deterministic weighted union of two reservoirs: a bounded sample of
+    /// the two histories *combined*, built without revisiting either
+    /// stream. Each stored row of `self` stands for `seen/len` history
+    /// rows, so the merge repeatedly draws the next row from `self` with
+    /// probability proportional to its remaining represented mass
+    /// (`seen_a·len_b·(len_a−taken_a)` against the mirror-image weight for
+    /// `other` — both integers, no floating-point in the draw). The result
+    /// is deterministic in `(self, other, cap, seed)`; the shard-merge
+    /// path exploits that by folding shards in a canonical order so any
+    /// merge tree produces bit-identical output.
+    pub fn merge(&self, other: &LabeledReservoir, cap: usize, seed: u64) -> Result<LabeledReservoir> {
+        anyhow::ensure!(cap >= 1, "reservoir cap must be >= 1");
+        if let (Some(a), Some(b)) = (self.rows.first(), other.rows.first()) {
+            anyhow::ensure!(
+                a.len() == b.len(),
+                "reservoir merge width mismatch: {} vs {} features",
+                a.len(),
+                b.len()
+            );
+        }
+        let (la, lb) = (self.rows.len(), other.rows.len());
+        let take = cap.min(la + lb);
+        let mut rng = Rng::new(seed);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(take);
+        let mut labels: Vec<usize> = Vec::with_capacity(take);
+        while rows.len() < take {
+            let wa = if ia < la { self.seen * lb.max(1) * (la - ia) } else { 0 };
+            let wb = if ib < lb { other.seen * la.max(1) * (lb - ib) } else { 0 };
+            let from_a = match (wa, wb) {
+                (0, 0) => break,
+                (_, 0) => true,
+                (0, _) => false,
+                _ => rng.below(wa + wb) < wa,
+            };
+            if from_a {
+                rows.push(self.rows[ia].clone());
+                labels.push(self.labels[ia]);
+                ia += 1;
+            } else {
+                rows.push(other.rows[ib].clone());
+                labels.push(other.labels[ib]);
+                ib += 1;
+            }
+        }
+        let seen = self.seen + other.seen;
+        // same clamp rule as `from_parts`: once rows have been discarded,
+        // the effective cap is the stored row count
+        let cap = if seen > rows.len() { cap.min(rows.len().max(1)) } else { cap };
+        Ok(LabeledReservoir { cap, rows, labels, seen, rng })
+    }
+}
+
+/// Restriction of a [`BlockSource`] to one stride class: yields exactly
+/// the rows whose global (0-based) row index `g` satisfies
+/// `g % count == index`, in the original row order. This is the shard-`i`
+/// view of a stream for `akda train --shard i/k` — the `k` stride classes
+/// partition the stream, so the union of the `k` shard accumulators over
+/// a [`StridedBlockSource`] equals one accumulator over the whole stream.
+pub struct StridedBlockSource<S: BlockSource> {
+    inner: S,
+    index: usize,
+    count: usize,
+    /// Global row index of the next row the inner source will yield.
+    next_row: usize,
+}
+
+impl<S: BlockSource> StridedBlockSource<S> {
+    pub fn new(inner: S, index: usize, count: usize) -> Result<Self> {
+        anyhow::ensure!(count >= 1, "shard count must be >= 1");
+        anyhow::ensure!(
+            index < count,
+            "shard index {index} out of range for {count} shards"
+        );
+        Ok(StridedBlockSource { inner, index, count, next_row: 0 })
+    }
+
+    /// The wrapped source, e.g. to rewind it for a separate full-stream
+    /// pass (landmark fitting sees the whole stream; only the
+    /// accumulation is sharded).
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+}
+
+impl<S: BlockSource> BlockSource for StridedBlockSource<S> {
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.next_row = 0;
+        self.inner.reset()
+    }
+
+    fn next_block(&mut self) -> Result<Option<LabeledBlock>> {
+        loop {
+            let Some(block) = self.inner.next_block()? else { return Ok(None) };
+            let base = self.next_row;
+            self.next_row += block.x.rows();
+            let keep: Vec<usize> = (0..block.x.rows())
+                .filter(|r| (base + r) % self.count == self.index)
+                .collect();
+            if keep.is_empty() {
+                continue; // tile held no shard-`index` rows; try the next
+            }
+            let x = block.x.select_rows(&keep);
+            let labels = keep.iter().map(|&r| block.labels[r]).collect();
+            return Ok(Some(LabeledBlock { x, labels }));
+        }
+    }
+}
+
 /// Labeled mirror of [`reservoir_sample`]: one pass over the stream into a
 /// fresh [`LabeledReservoir`], returning the sampled rows, their labels,
 /// and the total row count seen.
@@ -523,6 +637,87 @@ mod tests {
         // bad persisted state is rejected
         assert!(LabeledReservoir::from_parts(&snap_x, &snap_l[..3], 24, 6, 1).is_err());
         assert!(LabeledReservoir::from_parts(&snap_x, &snap_l, 2, 6, 1).is_err());
+    }
+
+    #[test]
+    fn strided_sources_partition_the_stream_in_order() {
+        let (x, labels) = toy(29, 3, 14);
+        for count in [1usize, 2, 3, 7] {
+            let mut covered: Vec<usize> = Vec::new();
+            for index in 0..count {
+                let inner = MemBlockSource::new(&x, &labels, 4);
+                let mut src = StridedBlockSource::new(inner, index, count).unwrap();
+                let (sx, sl, _) = drain(&mut src);
+                // shard `index` holds exactly the rows g ≡ index (mod count)
+                let want: Vec<usize> = (0..x.rows()).filter(|g| g % count == index).collect();
+                assert_eq!(sl.len(), want.len(), "count={count} index={index}");
+                for (r, &g) in want.iter().enumerate() {
+                    assert_eq!(sl[r], labels[g]);
+                    assert!(sx.row(r).iter().zip(x.row(g)).all(|(p, q)| p == q));
+                    covered.push(g);
+                }
+            }
+            // the k stride classes partition the stream exactly
+            covered.sort_unstable();
+            covered.dedup();
+            assert_eq!(covered.len(), x.rows(), "count={count}: not a partition");
+        }
+        // k=1 is the identity view
+        let mut ident = StridedBlockSource::new(MemBlockSource::new(&x, &labels, 5), 0, 1).unwrap();
+        let (ix, il, _) = drain(&mut ident);
+        assert!(ix.sub(&x).max_abs() == 0.0);
+        assert_eq!(il, labels);
+        // bad shard specs are rejected
+        assert!(StridedBlockSource::new(MemBlockSource::new(&x, &labels, 5), 2, 2).is_err());
+        assert!(StridedBlockSource::new(MemBlockSource::new(&x, &labels, 5), 0, 0).is_err());
+    }
+
+    #[test]
+    fn reservoir_merge_is_bounded_deterministic_and_from_the_streams() {
+        let (xa, la) = toy(40, 3, 15);
+        let (xb, lb) = toy(25, 3, 16);
+        let mut ra = LabeledReservoir::new(10, 1);
+        let mut sa = MemBlockSource::new(&xa, &la, 7);
+        sa.reset().unwrap();
+        while let Some(b) = sa.next_block().unwrap() {
+            ra.absorb(&b);
+        }
+        let mut rb = LabeledReservoir::new(10, 2);
+        let mut sb = MemBlockSource::new(&xb, &lb, 7);
+        sb.reset().unwrap();
+        while let Some(b) = sb.next_block().unwrap() {
+            rb.absorb(&b);
+        }
+        let merged = ra.merge(&rb, 12, 5).unwrap();
+        assert_eq!(merged.seen(), 65);
+        assert_eq!(merged.len(), 12);
+        let again = ra.merge(&rb, 12, 5).unwrap();
+        let (mx, ml) = merged.snapshot().unwrap();
+        let (ax, al2) = again.snapshot().unwrap();
+        assert!(mx.sub(&ax).max_abs() == 0.0, "same inputs+seed, same merge");
+        assert_eq!(ml, al2);
+        // every merged (row, label) pair came from one of the two streams
+        for r in 0..mx.rows() {
+            let in_a = (0..xa.rows()).any(|i| {
+                la[i] == ml[r] && xa.row(i).iter().zip(mx.row(r)).all(|(p, q)| p == q)
+            });
+            let in_b = (0..xb.rows()).any(|i| {
+                lb[i] == ml[r] && xb.row(i).iter().zip(mx.row(r)).all(|(p, q)| p == q)
+            });
+            assert!(in_a || in_b, "merged row {r} from neither stream");
+        }
+        // a merge that fits both reservoirs keeps everything
+        let all = ra.merge(&rb, 64, 9).unwrap();
+        assert_eq!(all.len(), 20);
+        // width mismatch is rejected
+        let (xw, lw) = (Mat::from_fn(4, 5, |i, j| (i + j) as f64), vec![0, 1, 0, 1]);
+        let mut rw = LabeledReservoir::new(4, 3);
+        let mut sw = MemBlockSource::new(&xw, &lw, 2);
+        sw.reset().unwrap();
+        while let Some(b) = sw.next_block().unwrap() {
+            rw.absorb(&b);
+        }
+        assert!(ra.merge(&rw, 8, 1).is_err());
     }
 
     #[test]

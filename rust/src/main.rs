@@ -7,6 +7,12 @@
 //!   toy                           Sec. 6.2 toy example (Figs. 2–3 data)
 //!   train --dataset NAME          fit a detector bank, evaluate it, and
 //!                                 publish it to the model registry
+//!   train --shard I/K --out FILE  distributed training, map side: accumulate
+//!                                 one stride shard of the stream into a
+//!                                 partial .akda artifact (L11)
+//!   merge SHARD... --publish NAME distributed training, reduce side: merge
+//!                                 shard accumulators (any order, bit-for-bit
+//!                                 identical), factorize once, publish
 //!   models                        list / inspect published models
 //!   serve --model NAME[@V]        load a published model and serve scores
 //!                                 (zero training work on this path)
@@ -162,6 +168,10 @@ fn main() -> Result<()> {
     if cmd == "trace" {
         return cmd_trace(&argv[1..]);
     }
+    // `merge` takes positional SHARD.akda paths before its flags
+    if cmd == "merge" {
+        return cmd_merge(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "datasets" => cmd_datasets(),
@@ -208,6 +218,22 @@ fn print_help() {
                                             akda / akda-nystrom / akda-rff models embed\n\
                                             resume state so `akda update` can grow them\n\
                                             (--no-resume skips it, shrinking the artifact)\n\
+           train --shard I/K --out FILE [--landmarks-from SHARD.akda] [...]\n\
+                                            distributed training, map side: accumulate\n\
+                                            shard I of a K-way stride partition of the\n\
+                                            stream into a partial .akda artifact (no\n\
+                                            model is published; requires --stream and a\n\
+                                            streaming method); every shard fits the same\n\
+                                            landmark basis from the full stream, or\n\
+                                            reuses a sibling shard's via --landmarks-from\n\
+           merge SHARD.akda... --publish NAME [--models-dir DIR]\n\
+                 [--reservoir CAP] [--backend KIND]\n\
+                                            distributed training, reduce side: check the\n\
+                                            shards' compatibility (m/C/eps/landmark\n\
+                                            fingerprint), merge their accumulators —\n\
+                                            any merge order is bit-for-bit identical —\n\
+                                            factorize once, evaluate, and publish the\n\
+                                            model exactly as `akda train` would\n\
            update NAME[@V] --data new.csv [--models-dir DIR]\n\
                   [--refresh-landmarks] [--reservoir CAP] [--backend KIND]\n\
                                             Sec. 7 recursive learning: decode the published\n\
@@ -694,6 +720,9 @@ fn drive_demo(
 fn cmd_train(args: &Args) -> Result<()> {
     use akda::model::{ModelManifest, ModelRegistry};
 
+    if let Some(spec) = args.get("shard") {
+        return cmd_train_shard(args, spec);
+    }
     let ts = parse_train_spec(args)?;
     eprintln!(
         "training detector bank on {} [{}] (C={}) with {} (backend {})",
@@ -754,6 +783,316 @@ fn cmd_train(args: &Args) -> Result<()> {
     let entry = registry.publish(name, &artifact, &manifest)?;
     println!(
         "published {} -> {:?} (serve it with: akda serve --model {})",
+        entry.spec(),
+        entry.dir,
+        entry.spec()
+    );
+    Ok(())
+}
+
+/// `--shard I/K` → zero-based stride index + shard count.
+fn parse_shard_spec(s: &str) -> Result<(usize, usize)> {
+    let (i, k) = s
+        .split_once('/')
+        .with_context(|| format!("--shard takes I/K (e.g. 0/3), got {s:?}"))?;
+    let index: usize = i.trim().parse().context("--shard index must be an integer")?;
+    let count: usize = k.trim().parse().context("--shard count must be an integer")?;
+    anyhow::ensure!(count >= 1, "--shard count must be >= 1");
+    anyhow::ensure!(index < count, "--shard index {index} out of range for count {count}");
+    Ok((index, count))
+}
+
+/// `akda train --shard I/K --out FILE` — distributed training, map side
+/// (L11): fit the shared landmark basis, stream shard I of the K-way
+/// stride partition through a `TiledAccumulator`, and persist the partial
+/// state as a shard artifact. No model is published — `akda merge` folds
+/// the full shard set into one model and publishes that.
+fn cmd_train_shard(args: &Args, spec: &str) -> Result<()> {
+    use akda::da::akda_stream::TiledAccumulator;
+    use akda::data::stream::{
+        reservoir_sample_labeled, BlockSource, MemBlockSource, StridedBlockSource,
+    };
+    use akda::model::codec::ApproxResume;
+    use akda::model::shard::basis_fingerprint;
+    use akda::model::update::{DEFAULT_RESERVOIR_CAP, DEFAULT_UPDATE_SEED};
+    use akda::model::ShardPiece;
+    use akda::util::rng::shard_seed;
+
+    let (index, count) = parse_shard_spec(spec)?;
+    let ts = parse_train_spec(args)?;
+    let Some(block_rows) = ts.hp.stream_block else {
+        bail!("--shard is the distributed streaming trainer: add --stream [--block-size B]")
+    };
+    if !matches!(ts.id, MethodId::AkdaNystrom | MethodId::AkdaRff) {
+        bail!("--shard applies to --method akda-nystrom|akda-rff only");
+    }
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{}-shard-{index}of{count}.akda", ts.dataset)));
+    let split = &ts.split;
+    let ap = akda::coordinator::protocol::approx_config(ts.id, ts.hp, 1e-3);
+    let t0 = std::time::Instant::now();
+    // every shard must project into the SAME feature space: either reuse a
+    // sibling shard's landmark basis, or fit it from the full stream — the
+    // fit is deterministic per seed, so shards that each see the whole
+    // stream derive the identical basis independently
+    let map: Arc<dyn akda::approx::FeatureMap> = match args.get("landmarks-from") {
+        Some(path) => {
+            let art = akda::model::ModelArtifact::load(std::path::Path::new(path))?;
+            akda::model::decode_shard(&art)
+                .with_context(|| format!("--landmarks-from {path}"))?
+                .map
+        }
+        None => {
+            let mut src = MemBlockSource::new(&split.x_train, &split.y_train, block_rows);
+            Arc::from(ap.build_map_stream(&mut src)?)
+        }
+    };
+    // accumulate ONLY this shard's stride of the stream
+    let mut src = StridedBlockSource::new(
+        MemBlockSource::new(&split.x_train, &split.y_train, block_rows),
+        index,
+        count,
+    )?;
+    let mut acc = TiledAccumulator::new(map.dim());
+    src.reset()?;
+    while let Some(block) = src.next_block()? {
+        let phi = map.transform(&block.x);
+        acc.absorb(&phi, &block.labels)?;
+    }
+    // pad the class axis to the dataset's declared C: a stride shard may
+    // never see a rare class; only the MERGED state must cover them all
+    let agg = acc.into_aggregates(split.n_classes)?;
+    let rows = agg.stats.rows;
+    // per-shard reservoir on a derived RNG stream (identically-seeded
+    // shards would sample correlated reservoirs); k = 1 keeps the base
+    // seed, so the single-shard merge is bit-for-bit `akda train`
+    let (reservoir, reservoir_labels, seen) = reservoir_sample_labeled(
+        &mut src,
+        DEFAULT_RESERVOIR_CAP,
+        shard_seed(DEFAULT_UPDATE_SEED, index, count),
+    )?;
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("dataset".to_string(), ts.dataset.clone());
+    meta.insert("cond".to_string(), args.get("cond").unwrap_or("100").to_string());
+    meta.insert("method".to_string(), ts.id.name().to_string());
+    meta.insert("landmarks".to_string(), ts.hp.m.to_string());
+    let piece = ShardPiece {
+        index,
+        count,
+        basis: basis_fingerprint(map.as_ref())?,
+        block_rows,
+        map,
+        resume: ApproxResume {
+            gram: agg.gram,
+            class_sums: agg.class_sums,
+            counts: agg.counts,
+            reservoir,
+            reservoir_labels,
+            seen,
+            eps: ap.eps,
+        },
+        meta,
+    };
+    akda::model::encode_shard(&piece)?.save(&out)?;
+    println!(
+        "shard {index}/{count}: accumulated {rows} of {} rows into {:?} in {:.2}s \
+         (merge the full set with: akda merge SHARD... --publish NAME)",
+        split.x_train.rows(),
+        out,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `akda merge SHARD.akda... --publish NAME` — distributed training,
+/// reduce side (L11): decode the shard artifacts in parallel on the work
+/// pool, fold them pairwise (every merge tree yields the bit-identical
+/// state), factorize the merged accumulator once, rebuild the OvR bank,
+/// evaluate, and publish — the same artifact shape `akda train` emits,
+/// resume state included.
+fn cmd_merge(rest: &[String]) -> Result<()> {
+    use akda::coordinator::DetectorBank;
+    use akda::da::Projection;
+    use akda::model::codec::ApproxResume;
+    use akda::model::update::{train_svm_bank, DEFAULT_RESERVOIR_CAP};
+    use akda::model::{ModelArtifact, ModelManifest, ModelRegistry, ResumeState, ShardSet};
+
+    let paths: Vec<String> =
+        rest.iter().take_while(|s| !s.starts_with("--")).cloned().collect();
+    let args = Args::parse(&rest[paths.len()..])?;
+    if paths.is_empty() {
+        bail!(
+            "usage: akda merge SHARD.akda... --publish NAME [--models-dir DIR] \
+             [--reservoir CAP] [--backend KIND]"
+        );
+    }
+    let name = args.get("publish").context("merge needs --publish NAME")?.to_string();
+    let backend = parse_backend_flag(&args)?;
+    let reservoir_cap = match args.get("reservoir") {
+        Some(s) => {
+            let cap: usize = s.parse().context("--reservoir must be a positive integer")?;
+            anyhow::ensure!(cap >= 1, "--reservoir must be >= 1");
+            cap
+        }
+        None => DEFAULT_RESERVOIR_CAP,
+    };
+    akda::obs::flight::reset();
+    let t0 = std::time::Instant::now();
+
+    // map side of the reduce: load + decode every shard concurrently
+    let pool = WorkPool::new(
+        akda::util::threads::available().clamp(1, 8).min(paths.len().max(1)),
+    );
+    let shared: Arc<Vec<PathBuf>> = Arc::new(paths.iter().map(PathBuf::from).collect());
+    let decoded = {
+        let shared = Arc::clone(&shared);
+        pool.map(shared.len(), move |i| -> Result<akda::model::ShardPiece> {
+            let art = ModelArtifact::load(&shared[i])?;
+            akda::model::decode_shard(&art)
+        })
+    };
+    let mut sets: Vec<ShardSet> = Vec::with_capacity(decoded.len());
+    for (path, piece) in paths.iter().zip(decoded) {
+        let piece = piece.with_context(|| format!("shard {path}"))?;
+        let mut set = ShardSet::new();
+        set.insert(piece).with_context(|| format!("shard {path}"))?;
+        sets.push(set);
+    }
+
+    // reduce side: pairwise rounds on the pool — the set union is
+    // order-free, and finalize's canonical ascending-stride fold makes
+    // every tree shape bit-identical
+    while sets.len() > 1 {
+        let pairs: Vec<(ShardSet, Option<ShardSet>)> = {
+            let mut it = sets.into_iter();
+            let mut pairs = Vec::new();
+            while let Some(a) = it.next() {
+                pairs.push((a, it.next()));
+            }
+            pairs
+        };
+        let slots: Vec<std::sync::Mutex<Option<Result<ShardSet>>>> =
+            pairs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = pairs
+            .into_iter()
+            .zip(slots.iter())
+            .map(|((mut a, b), slot)| {
+                let job = move || {
+                    let merged = match b {
+                        Some(b) => a.merge(b).map(|()| a).map_err(anyhow::Error::from),
+                        None => Ok(a),
+                    };
+                    *slot.lock().unwrap() = Some(merged);
+                };
+                Box::new(job) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        sets = Vec::with_capacity(slots.len());
+        for slot in slots {
+            sets.push(slot.into_inner().unwrap().expect("merge job always reports")?);
+        }
+    }
+    let set = sets.pop().expect("at least one shard");
+    let n_pieces = set.len();
+    let merged = set.finalize(reservoir_cap)?;
+
+    // rebuild the evaluation context the shards were trained from
+    let dataset = merged
+        .meta
+        .get("dataset")
+        .context("shard meta lacks the dataset name")?
+        .clone();
+    let cond = parse_condition(merged.meta.get("cond").map(String::as_str).unwrap_or("100"))?;
+    let method = merged
+        .meta
+        .get("method")
+        .map(String::as_str)
+        .unwrap_or("akda-nystrom")
+        .to_string();
+    let landmarks: usize =
+        merged.meta.get("landmarks").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let dspec = akda::data::by_name(&dataset)
+        .with_context(|| format!("shard meta dataset {dataset:?}"))?;
+    let split = dspec.split(cond);
+
+    // factorize the merged accumulator ONCE, exactly as the unsharded
+    // streaming train would have
+    let count = merged.count;
+    let block_rows = merged.block_rows;
+    let eps = merged.eps;
+    let (reservoir, reservoir_labels) = merged.reservoir.snapshot()?;
+    let seen = merged.reservoir.seen();
+    let prep = akda::da::akda_stream::PreparedStream::from_aggregates(
+        Arc::clone(&merged.map),
+        merged.aggregates,
+        eps,
+        akda::linalg::chol::DEFAULT_BLOCK,
+    )?;
+    anyhow::ensure!(
+        prep.n_classes() == split.n_classes,
+        "merged state covers {} classes, dataset {dataset:?} has {}",
+        prep.n_classes(),
+        split.n_classes
+    );
+    let w = prep.solve_w_multiclass()?;
+    let proj = akda::da::akda_stream::BlockedProjection {
+        map: Arc::clone(&prep.map),
+        w,
+        block_rows,
+    };
+    // same post-projection path as `akda train`: identical inputs ⇒ the
+    // published bank (and its scores) match the unsharded train exactly
+    let z = proj.project(&split.x_train);
+    let svms = train_svm_bank(&z, &split.y_train, split.n_classes);
+    let bank = Arc::new(DetectorBank { projection: Box::new(proj), svms });
+    let (accuracy, map_score) = eval_bank(&bank, &split);
+    let train_s = t0.elapsed().as_secs_f64();
+    println!(
+        "merge-eval: accuracy {:.2}%  MAP {:.2}%  ({n_pieces} shards, merge+fit {:.2}s)",
+        100.0 * accuracy,
+        100.0 * map_score,
+        train_s
+    );
+
+    let mut artifact = akda::model::encode_bank(&bank, &method)?;
+    akda::model::codec::encode_resume(
+        &mut artifact,
+        &ResumeState::Approx(ApproxResume {
+            gram: prep.gram().clone(),
+            class_sums: prep.class_sums().clone(),
+            counts: prep.counts().to_vec(),
+            reservoir,
+            reservoir_labels,
+            seen,
+            eps,
+        }),
+    )?;
+    akda::obs::flight::record("shards", count as f64);
+    let manifest = ModelManifest {
+        method,
+        dataset: dataset.clone(),
+        condition: cond.name().to_string(),
+        rho: 0.05,
+        c: 1.0,
+        h: 2,
+        m: landmarks,
+        stream_block: Some(block_rows),
+        n_classes: split.n_classes,
+        input_dim: split.x_train.cols(),
+        train_s,
+        map: map_score,
+        accuracy,
+        backend: backend.name().to_string(),
+        health: akda::obs::flight::snapshot(),
+        ..Default::default()
+    };
+    let registry = ModelRegistry::open(models_dir(&args));
+    let entry = registry.publish(&name, &artifact, &manifest)?;
+    println!(
+        "published {} from {n_pieces} shards -> {:?} (serve it with: akda serve --model {})",
         entry.spec(),
         entry.dir,
         entry.spec()

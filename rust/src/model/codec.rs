@@ -118,7 +118,7 @@ fn decode_kernel(art: &ModelArtifact, prefix: &str) -> Result<Kernel> {
 // Feature map <-> sections
 // ---------------------------------------------------------------------------
 
-fn encode_map(art: &mut ModelArtifact, map: &dyn FeatureMap) -> Result<()> {
+pub(crate) fn encode_map(art: &mut ModelArtifact, map: &dyn FeatureMap) -> Result<()> {
     if let Some(ny) = map.as_any().downcast_ref::<NystromMap>() {
         art.set_meta("approx.map", "nystrom");
         encode_kernel(art, "map.kernel", ny.kernel);
@@ -134,7 +134,7 @@ fn encode_map(art: &mut ModelArtifact, map: &dyn FeatureMap) -> Result<()> {
     Ok(())
 }
 
-fn decode_map(art: &ModelArtifact) -> Result<Arc<dyn FeatureMap>> {
+pub(crate) fn decode_map(art: &ModelArtifact) -> Result<Arc<dyn FeatureMap>> {
     Ok(match art.meta_str("approx.map")? {
         "nystrom" => {
             let kernel = decode_kernel(art, "map.kernel")?;

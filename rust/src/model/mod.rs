@@ -26,6 +26,12 @@
 //!   published models into a running `ScoringService` through its
 //!   [`coordinator::BankHandle`](crate::coordinator::BankHandle).
 //!
+//! * [`shard`] — distributed training by accumulator merge (L11):
+//!   partial `.akda` shard artifacts (map + resume sections, fingerprinted
+//!   landmark basis, no bank) and the [`shard::ShardSet`] merge algebra —
+//!   set union with typed compatibility errors, plus a canonical
+//!   ascending-stride fold so any merge tree is bit-identical. Feeds
+//!   `akda train --shard i/k` → `akda merge`.
 //! * [`update`] — the continual-learning engine (L5): `akda update`
 //!   decodes a published artifact, grows it with new observations — a
 //!   bordered-Cholesky extension for exact models
@@ -54,6 +60,7 @@
 pub mod artifact;
 pub mod codec;
 pub mod registry;
+pub mod shard;
 pub mod update;
 
 pub use artifact::ModelArtifact;
@@ -61,6 +68,7 @@ pub use codec::{decode_bank, encode_bank, ResumeState};
 pub use registry::{
     HotReloader, ModelDiff, ModelManifest, ModelRegistry, ModelVersion, ServeMarker,
 };
+pub use shard::{decode_shard, encode_shard, MergedTrain, ShardPiece, ShardSet};
 pub use update::{
     apply_update, update_registry_model, PublishedUpdate, UpdateOptions, UpdateReport,
 };

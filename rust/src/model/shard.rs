@@ -1,0 +1,513 @@
+//! Shard artifacts and the merge algebra (L11): distributed training by
+//! accumulator merge.
+//!
+//! The streaming training state of the approximate AKDA path is a pure
+//! sum — the pre-ridge m×m Gram G = ΦᵀΦ, the m×C class sums S = ΦᵀR, and
+//! the per-class counts all add elementwise — so `k` workers can each
+//! accumulate a disjoint stride of the stream and their states merge into
+//! exactly what one pass over the whole stream would have produced. This
+//! module is the persistence + algebra half of that story:
+//!
+//! * [`ShardPiece`] — one worker's output: the shared feature map, its
+//!   partial [`ApproxResume`] aggregates (class axis padded to the
+//!   dataset's declared C, so shards that missed a rare class still line
+//!   up), its stride identity `index/count`, and the landmark-basis
+//!   fingerprint.
+//! * [`encode_shard`]/[`decode_shard`] — the partial-artifact grammar:
+//!   an `.akda` container holding map + resume sections plus `shard.*`
+//!   meta, but *no* projection/bank (a shard is not servable).
+//! * [`ShardSet`] — the merge algebra. A set is a map keyed by stride
+//!   index; [`ShardSet::merge`] is set union with compatibility checks
+//!   (m / C / ε / basis / k → typed [`MergeError`]s, never panics), which
+//!   makes merging **associative and commutative by construction**.
+//!   [`ShardSet::finalize`] then folds the aggregates in ascending stride
+//!   order — one canonical reduction — so *any* merge tree over the same
+//!   shards produces bit-identical output (f64 `+` commutes bitwise but
+//!   does not associate; the canonical fold sidesteps that entirely).
+//!
+//! A single-shard set finalizes to its shard's aggregates untouched, and
+//! `shard_seed(base, 0, 1) == base`, so `k = 1` sharded training is
+//! bit-for-bit the unsharded `akda train`. `tests/shard.rs` pins all of
+//! these claims.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::artifact::{fnv1a64, ModelArtifact};
+use super::codec::{self, ApproxResume, ResumeState};
+use crate::approx::FeatureMap;
+use crate::da::akda_stream::{MergeError, StreamAggregates, StreamStats};
+use crate::data::stream::LabeledReservoir;
+use crate::util::rng::shard_seed;
+
+/// Meta key for a shard artifact's stride index `i`.
+pub const SHARD_INDEX_KEY: &str = "shard.index";
+/// Meta key for the total shard count `k` of the train.
+pub const SHARD_COUNT_KEY: &str = "shard.count";
+/// Meta key for the hex landmark-basis fingerprint.
+pub const SHARD_BASIS_KEY: &str = "shard.basis";
+/// Meta key for the tile height the shard accumulated with.
+pub const SHARD_BLOCK_KEY: &str = "shard.block";
+/// Prefix under which train-spec passthrough meta is stored.
+pub const SHARD_META_PREFIX: &str = "shard.meta.";
+
+/// Fixed base seed for the reservoir-union draws during finalize. The
+/// fold order is canonical (ascending stride index), so this only has to
+/// be deterministic, not configurable.
+const MERGE_RESERVOIR_SEED: u64 = 0x9E37_79B9;
+
+/// Fingerprint of a feature map's exact persisted state: FNV-1a 64 over
+/// the map's artifact meta and per-section digests (which themselves hash
+/// the exact on-disk tensor bytes). Two maps fingerprint equal iff they
+/// would serialize identically — the property shard merging needs, since
+/// Grams accumulated in different feature bases are not summable.
+pub fn basis_fingerprint(map: &dyn FeatureMap) -> Result<u64> {
+    let mut art = ModelArtifact::new();
+    codec::encode_map(&mut art, map)?;
+    let mut bytes = Vec::new();
+    for (k, v) in &art.meta {
+        bytes.extend_from_slice(k.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(v.as_bytes());
+        bytes.push(0);
+    }
+    for (name, rows, cols, sum) in art.section_digests() {
+        bytes.extend_from_slice(name.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&(rows as u64).to_le_bytes());
+        bytes.extend_from_slice(&(cols as u64).to_le_bytes());
+        bytes.extend_from_slice(&sum.to_le_bytes());
+    }
+    Ok(fnv1a64(&bytes))
+}
+
+/// One shard's training output: stride identity, the shared feature map
+/// with its fingerprint, and the partial aggregates.
+pub struct ShardPiece {
+    /// Stride index `i` — this shard accumulated rows `g ≡ i (mod count)`.
+    pub index: usize,
+    /// Total shard count `k` of the train.
+    pub count: usize,
+    /// [`basis_fingerprint`] of `map`.
+    pub basis: u64,
+    /// Tile height the shard streamed with (the merged model serves with
+    /// the same `BlockedProjection` tiling).
+    pub block_rows: usize,
+    /// The shared feature map every shard of the train must agree on.
+    pub map: Arc<dyn FeatureMap>,
+    /// Partial aggregates: pre-ridge Gram, class sums padded to the
+    /// declared C, per-class counts (zeros allowed — only the *merged*
+    /// state must cover every class), this shard's labeled reservoir.
+    pub resume: ApproxResume,
+    /// Train-spec passthrough (dataset, method, …) the merge CLI uses to
+    /// rebuild the evaluation context. Free-form string pairs.
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ShardPiece {
+    fn dim(&self) -> usize {
+        self.resume.gram.rows()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.resume.class_sums.cols()
+    }
+}
+
+/// Serialize a shard into a partial `.akda` artifact: map sections +
+/// resume sections + `shard.*` meta. No projection, no SVM bank — the
+/// artifact is merge input, not a servable model.
+pub fn encode_shard(piece: &ShardPiece) -> Result<ModelArtifact> {
+    ensure!(
+        piece.index < piece.count,
+        "shard index {} out of range for {} shards",
+        piece.index,
+        piece.count
+    );
+    let mut art = ModelArtifact::new();
+    art.set_meta(SHARD_INDEX_KEY, piece.index.to_string());
+    art.set_meta(SHARD_COUNT_KEY, piece.count.to_string());
+    art.set_meta(SHARD_BASIS_KEY, format!("{:016x}", piece.basis));
+    art.set_meta(SHARD_BLOCK_KEY, piece.block_rows.to_string());
+    for (k, v) in &piece.meta {
+        art.set_meta(&format!("{SHARD_META_PREFIX}{k}"), v.clone());
+    }
+    codec::encode_map(&mut art, piece.map.as_ref())?;
+    codec::encode_resume(&mut art, &ResumeState::Approx(piece.resume.clone()))?;
+    Ok(art)
+}
+
+/// `true` when the artifact carries shard sections (and is therefore not
+/// directly servable).
+pub fn is_shard(art: &ModelArtifact) -> bool {
+    art.meta.contains_key(SHARD_INDEX_KEY)
+}
+
+/// Deserialize a shard artifact. The stored basis fingerprint is
+/// re-derived from the map sections actually present and must match —
+/// a shard whose map was tampered with (or spliced from another train)
+/// fails here instead of producing a silently wrong merge.
+pub fn decode_shard(art: &ModelArtifact) -> Result<ShardPiece> {
+    ensure!(is_shard(art), "artifact carries no shard sections (not `train --shard` output?)");
+    let index = art.meta_usize(SHARD_INDEX_KEY)?;
+    let count = art.meta_usize(SHARD_COUNT_KEY)?;
+    ensure!(count >= 1 && index < count, "shard {index}/{count} is malformed");
+    let block_rows = art.meta_usize(SHARD_BLOCK_KEY)?.max(1);
+    let stored = u64::from_str_radix(art.meta_str(SHARD_BASIS_KEY)?, 16)
+        .context("shard.basis is not a hex fingerprint")?;
+    let map = codec::decode_map(art)?;
+    let actual = basis_fingerprint(map.as_ref())?;
+    ensure!(
+        stored == actual,
+        "shard basis fingerprint {stored:016x} does not match its own map sections \
+         ({actual:016x}) — corrupt or spliced shard artifact"
+    );
+    let resume = match codec::decode_resume(art)? {
+        Some(ResumeState::Approx(r)) => r,
+        Some(ResumeState::Exact(_)) => bail!("shard artifacts carry approx resume state only"),
+        None => bail!("shard artifact has no resume sections"),
+    };
+    let mut meta = BTreeMap::new();
+    for (k, v) in &art.meta {
+        if let Some(stripped) = k.strip_prefix(SHARD_META_PREFIX) {
+            meta.insert(stripped.to_string(), v.clone());
+        }
+    }
+    Ok(ShardPiece { index, count, basis: actual, block_rows, map, resume, meta })
+}
+
+/// The finalized (merged) training state: everything `akda merge` needs
+/// to factorize, fit the bank, and publish.
+pub struct MergedTrain {
+    pub map: Arc<dyn FeatureMap>,
+    /// Summed pre-ridge Gram / class sums / counts, folded in canonical
+    /// (ascending stride index) order.
+    pub aggregates: StreamAggregates,
+    /// Union reservoir over the shards' labeled reservoirs.
+    pub reservoir: LabeledReservoir,
+    pub eps: f64,
+    pub block_rows: usize,
+    /// Shard count the state was merged from (`health.shards`).
+    pub count: usize,
+    /// Train-spec passthrough from shard 0.
+    pub meta: BTreeMap<String, String>,
+}
+
+/// A set of compatible shards of one train, keyed by stride index.
+///
+/// Merging two sets is *map union* — checked for compatibility but
+/// order-free — so any parenthesization and any argument order over the
+/// same shards yields the same set, and the canonical fold in
+/// [`ShardSet::finalize`] then makes the numeric output bit-identical
+/// too.
+#[derive(Default)]
+pub struct ShardSet {
+    shards: BTreeMap<usize, ShardPiece>,
+}
+
+impl ShardSet {
+    pub fn new() -> ShardSet {
+        ShardSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// The declared shard count `k`, once at least one shard is present.
+    pub fn declared_count(&self) -> Option<usize> {
+        self.shards.values().next().map(|p| p.count)
+    }
+
+    /// Admit one shard, checking it against the shards already present.
+    /// Every violation is a typed [`MergeError`]; nothing panics.
+    pub fn insert(&mut self, piece: ShardPiece) -> std::result::Result<(), MergeError> {
+        if piece.count == 0 || piece.index >= piece.count {
+            return Err(MergeError::IndexOutOfRange { index: piece.index, count: piece.count });
+        }
+        if let Some(anchor) = self.shards.values().next() {
+            if anchor.count != piece.count {
+                return Err(MergeError::ShardCountMismatch {
+                    left: anchor.count,
+                    right: piece.count,
+                });
+            }
+            if anchor.dim() != piece.dim() {
+                return Err(MergeError::DimMismatch { left: anchor.dim(), right: piece.dim() });
+            }
+            if anchor.n_classes() != piece.n_classes() {
+                return Err(MergeError::ClassMismatch {
+                    left: anchor.n_classes(),
+                    right: piece.n_classes(),
+                });
+            }
+            if anchor.resume.eps.to_bits() != piece.resume.eps.to_bits() {
+                return Err(MergeError::EpsMismatch {
+                    left: anchor.resume.eps,
+                    right: piece.resume.eps,
+                });
+            }
+            if anchor.basis != piece.basis {
+                return Err(MergeError::BasisMismatch { left: anchor.basis, right: piece.basis });
+            }
+        }
+        if self.shards.contains_key(&piece.index) {
+            return Err(MergeError::DuplicateShard { index: piece.index });
+        }
+        crate::obs::counter("akda_shard_pieces_total").inc();
+        self.shards.insert(piece.index, piece);
+        Ok(())
+    }
+
+    /// Union with another set (pairwise-merge step of a parallel
+    /// reduction tree). Associative and commutative: the result holds
+    /// exactly the shards of both sides, whatever the call tree looked
+    /// like.
+    pub fn merge(&mut self, other: ShardSet) -> std::result::Result<(), MergeError> {
+        for (_, piece) in other.shards {
+            self.insert(piece)?;
+        }
+        crate::obs::counter("akda_shard_merges_total").inc();
+        Ok(())
+    }
+
+    /// Fold the complete set into merged training state, in ascending
+    /// stride-index order — the canonical reduction that makes every
+    /// merge tree bit-identical. Requires all `k` shards; a single-shard
+    /// set passes its aggregates through untouched (the `k = 1 ≡
+    /// unsharded` guarantee).
+    ///
+    /// `reservoir_cap` bounds the union reservoir (the merged model's
+    /// resume/SVM sample), matching the unsharded train's cap.
+    pub fn finalize(self, reservoir_cap: usize) -> Result<MergedTrain> {
+        let count = match self.declared_count() {
+            Some(c) => c,
+            None => return Err(MergeError::Empty.into()),
+        };
+        if self.shards.len() != count {
+            return Err(MergeError::Incomplete { have: self.shards.len(), want: count }.into());
+        }
+        let mut it = self.shards.into_values();
+        let first = it.next().expect("non-empty by the count check");
+        let (map, block_rows, eps, meta) =
+            (first.map, first.block_rows, first.resume.eps, first.meta);
+        let m = first.resume.gram.rows();
+        let c = first.resume.class_sums.cols();
+        let mut gram = first.resume.gram;
+        let mut class_sums = first.resume.class_sums;
+        let mut counts = first.resume.counts;
+        let mut reservoir = LabeledReservoir::from_parts(
+            &first.resume.reservoir,
+            &first.resume.reservoir_labels,
+            first.resume.seen,
+            first.resume.reservoir.rows().max(1),
+            shard_seed(MERGE_RESERVOIR_SEED, 0, count),
+        )?;
+        let mut rows_total = 0usize;
+        for (step, piece) in it.enumerate() {
+            gram.add_assign(&piece.resume.gram);
+            class_sums.add_assign(&piece.resume.class_sums);
+            for (a, b) in counts.iter_mut().zip(&piece.resume.counts) {
+                *a += b;
+            }
+            let other = LabeledReservoir::from_parts(
+                &piece.resume.reservoir,
+                &piece.resume.reservoir_labels,
+                piece.resume.seen,
+                piece.resume.reservoir.rows().max(1),
+                shard_seed(MERGE_RESERVOIR_SEED, step + 1, count),
+            )?;
+            reservoir = reservoir.merge(
+                &other,
+                reservoir_cap,
+                shard_seed(MERGE_RESERVOIR_SEED ^ 0x5851_F42D, step + 1, count),
+            )?;
+        }
+        for &n in &counts {
+            rows_total += n;
+        }
+        let stats = StreamStats {
+            rows: rows_total,
+            m,
+            n_classes: c,
+            n_features: if reservoir.is_empty() {
+                0
+            } else {
+                reservoir.snapshot().map(|(x, _)| x.cols()).unwrap_or(0)
+            },
+            ..StreamStats::default()
+        };
+        crate::obs::gauge("akda_shard_finalized_rows").set_max(rows_total as f64);
+        Ok(MergedTrain {
+            map,
+            aggregates: StreamAggregates { gram, class_sums, counts, stats },
+            reservoir,
+            eps,
+            block_rows,
+            count,
+            meta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::RffMap;
+    use crate::kernels::Kernel;
+    use crate::linalg::Mat;
+
+    fn toy_map(seed: u64) -> Arc<dyn FeatureMap> {
+        Arc::new(RffMap::fit(3, Kernel::Rbf { rho: 0.5 }, 8, seed).unwrap())
+    }
+
+    fn toy_piece(map: &Arc<dyn FeatureMap>, index: usize, count: usize) -> ShardPiece {
+        let m = map.dim();
+        let resume = ApproxResume {
+            gram: Mat::from_fn(m, m, |r, c| (r * m + c + index) as f64 * 0.25),
+            class_sums: Mat::from_fn(m, 2, |r, c| (r + c + index) as f64 * 0.5),
+            counts: vec![3 + index, 4],
+            reservoir: Mat::from_fn(4, 3, |r, c| (index * 12 + r * 3 + c) as f64),
+            reservoir_labels: vec![0, 1, 0, 1],
+            seen: 7 + index,
+            eps: 1e-3,
+        };
+        ShardPiece {
+            index,
+            count,
+            basis: basis_fingerprint(map.as_ref()).unwrap(),
+            block_rows: 256,
+            map: map.clone(),
+            resume,
+            meta: BTreeMap::from([("dataset".to_string(), "toy".to_string())]),
+        }
+    }
+
+    #[test]
+    fn shard_artifacts_round_trip() {
+        let map = toy_map(1);
+        let piece = toy_piece(&map, 1, 3);
+        let art = encode_shard(&piece).unwrap();
+        assert!(is_shard(&art));
+        let art = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let back = decode_shard(&art).unwrap();
+        assert_eq!((back.index, back.count, back.block_rows), (1, 3, 256));
+        assert_eq!(back.basis, piece.basis);
+        assert_eq!(back.resume.gram, piece.resume.gram);
+        assert_eq!(back.resume.class_sums, piece.resume.class_sums);
+        assert_eq!(back.resume.counts, piece.resume.counts);
+        assert_eq!(back.resume.reservoir, piece.resume.reservoir);
+        assert_eq!(back.resume.seen, piece.resume.seen);
+        assert_eq!(back.meta.get("dataset").map(String::as_str), Some("toy"));
+    }
+
+    #[test]
+    fn tampered_basis_is_rejected_at_decode() {
+        let map = toy_map(2);
+        let piece = toy_piece(&map, 0, 2);
+        let mut art = encode_shard(&piece).unwrap();
+        art.set_meta(SHARD_BASIS_KEY, format!("{:016x}", piece.basis ^ 1));
+        assert!(decode_shard(&art).is_err());
+    }
+
+    #[test]
+    fn incompatible_shards_fail_with_typed_errors() {
+        let map = toy_map(3);
+        let mut set = ShardSet::new();
+        set.insert(toy_piece(&map, 0, 2)).unwrap();
+        // duplicate index
+        match set.insert(toy_piece(&map, 0, 2)) {
+            Err(MergeError::DuplicateShard { index: 0 }) => {}
+            other => panic!("want DuplicateShard, got {other:?}"),
+        }
+        // k mismatch
+        match set.insert(toy_piece(&map, 1, 3)) {
+            Err(MergeError::ShardCountMismatch { left: 2, right: 3 }) => {}
+            other => panic!("want ShardCountMismatch, got {other:?}"),
+        }
+        // eps mismatch
+        let mut off_eps = toy_piece(&map, 1, 2);
+        off_eps.resume.eps = 2e-3;
+        match set.insert(off_eps) {
+            Err(MergeError::EpsMismatch { .. }) => {}
+            other => panic!("want EpsMismatch, got {other:?}"),
+        }
+        // basis mismatch (a different map)
+        let other_map = toy_map(99);
+        match set.insert(toy_piece(&other_map, 1, 2)) {
+            Err(MergeError::BasisMismatch { .. }) => {}
+            other => panic!("want BasisMismatch, got {other:?}"),
+        }
+        // finalize of an incomplete set
+        match set.finalize(64).unwrap_err().downcast::<MergeError>() {
+            Ok(MergeError::Incomplete { have: 1, want: 2 }) => {}
+            other => panic!("want Incomplete, got {other:?}"),
+        }
+        // empty set
+        match ShardSet::new().finalize(64).unwrap_err().downcast::<MergeError>() {
+            Ok(MergeError::Empty) => {}
+            other => panic!("want Empty, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn finalize_is_merge_tree_invariant_bit_for_bit() {
+        let map = toy_map(4);
+        let k = 4;
+        let pieces = || (0..k).map(|i| toy_piece(&map, i, k));
+        // left fold: ((0 ∪ 1) ∪ 2) ∪ 3
+        let mut left = ShardSet::new();
+        for p in pieces() {
+            left.insert(p).unwrap();
+        }
+        // balanced tree in scrambled order: (3 ∪ 1) ∪ (2 ∪ 0)
+        let all: Vec<ShardPiece> = pieces().collect();
+        let mut t1 = ShardSet::new();
+        let mut t2 = ShardSet::new();
+        let mut rest = ShardSet::new();
+        for (slot, p) in all.into_iter().enumerate() {
+            match slot {
+                3 | 1 => t1.insert(p).unwrap(),
+                _ => t2.insert(p).unwrap(),
+            }
+        }
+        rest.merge(t1).unwrap();
+        rest.merge(t2).unwrap();
+        let a = left.finalize(6).unwrap();
+        let b = rest.finalize(6).unwrap();
+        assert!(a.aggregates.gram.sub(&b.aggregates.gram).max_abs() == 0.0);
+        assert!(a.aggregates.class_sums.sub(&b.aggregates.class_sums).max_abs() == 0.0);
+        assert_eq!(a.aggregates.counts, b.aggregates.counts);
+        let (ax, al) = a.reservoir.snapshot().unwrap();
+        let (bx, bl) = b.reservoir.snapshot().unwrap();
+        assert!(ax.sub(&bx).max_abs() == 0.0, "reservoir union must be tree-invariant");
+        assert_eq!(al, bl);
+        assert_eq!(a.reservoir.seen(), b.reservoir.seen());
+    }
+
+    #[test]
+    fn single_shard_finalize_is_the_identity() {
+        let map = toy_map(5);
+        let piece = toy_piece(&map, 0, 1);
+        let (g, s, c) =
+            (piece.resume.gram.clone(), piece.resume.class_sums.clone(), piece.resume.counts.clone());
+        let (rx, rl, seen) =
+            (piece.resume.reservoir.clone(), piece.resume.reservoir_labels.clone(), piece.resume.seen);
+        let mut set = ShardSet::new();
+        set.insert(piece).unwrap();
+        let merged = set.finalize(512).unwrap();
+        assert!(merged.aggregates.gram.sub(&g).max_abs() == 0.0);
+        assert!(merged.aggregates.class_sums.sub(&s).max_abs() == 0.0);
+        assert_eq!(merged.aggregates.counts, c);
+        let (mx, ml) = merged.reservoir.snapshot().unwrap();
+        assert!(mx.sub(&rx).max_abs() == 0.0, "k=1 must not touch the reservoir");
+        assert_eq!(ml, rl);
+        assert_eq!(merged.reservoir.seen(), seen);
+    }
+}

@@ -53,6 +53,7 @@ use crate::data::stream::{
 };
 use crate::linalg::{accumulate_tn, chol, Mat};
 use crate::svm::{LinearSvm, LinearSvmConfig};
+use crate::util::rng::derive_seed;
 
 /// Default labeled-reservoir budget persisted with approximate models —
 /// bounds the resume sections to cap×F floats regardless of how much data
@@ -61,6 +62,15 @@ pub const DEFAULT_RESERVOIR_CAP: usize = 512;
 
 /// Default seed for reservoir continuation / refresh sampling.
 pub const DEFAULT_UPDATE_SEED: u64 = 29;
+
+/// Stream tag for the landmark-refresh sample of the NEW data — a named
+/// sub-stream of [`UpdateOptions::seed`] derived through the splitmix64
+/// finalizer (`util::rng::derive_seed`), so it is decorrelated from the
+/// history-reservoir stream that uses `seed` directly. The old
+/// `seed ^ 0x9E37` derivation only flipped low bits: two structured base
+/// seeds could land on overlapping RNG streams, the exact failure mode
+/// the sharded-training seeds (`util::rng::shard_seed`) must avoid.
+pub const REFRESH_SAMPLE_STREAM: u64 = 1;
 
 /// Knobs for [`apply_update`].
 #[derive(Debug, Clone, Copy)]
@@ -438,7 +448,8 @@ fn update_approx(
             // from the current landmarks.
             let cap = (4 * ny.landmarks.rows()).max(256);
             let mut src = MemBlockSource::new(x_new, y_new, DEFAULT_BLOCK_ROWS);
-            let new_sample = reservoir_sample(&mut src, cap, opts.seed ^ 0x9E37)?;
+            let new_sample =
+                reservoir_sample(&mut src, cap, derive_seed(opts.seed, REFRESH_SAMPLE_STREAM))?;
             let (hist_x, hist_y) = reservoir.snapshot()?;
             let pool = vstack(&hist_x, &new_sample);
             let centroids = kmeans_warm(&pool, &ny.landmarks, opts.kmeans_iters).centroids;

@@ -348,3 +348,103 @@ fn daemon_publishes_and_the_fleet_hot_swaps() {
     drop(svc);
     let _ = std::fs::remove_dir_all(&root);
 }
+
+/// Acceptance (L11 serving proof): multiple serving "processes" — separate
+/// `FleetService`s, each with its own registry handle, as `N × akda serve
+/// --fleet` would be — share ONE registry under continuous traffic while a
+/// third actor publishes new versions and prunes old ones. Every watching
+/// reader hot-swaps every publish, a pinned reader's version is shielded
+/// from prune by its serve marker (no reader ever serves a deleted
+/// version), and no request fails mid-swap or mid-prune.
+#[test]
+fn fleet_processes_sharing_a_registry_survive_publish_and_prune() {
+    let root = tmpdir("multireader");
+    let registry = ModelRegistry::open(&root);
+    let (x, _, art) = trained_artifact(6, 3, 21);
+    registry.publish("m", &art, &manifest(6, 3)).unwrap();
+
+    let watching = || FleetOptions {
+        watch: Some(Duration::from_millis(10)),
+        ..Default::default()
+    };
+    let fleet_a = FleetService::start(&ModelRegistry::open(&root), watching()).unwrap();
+    let fleet_b = FleetService::start(&ModelRegistry::open(&root), watching()).unwrap();
+    // a third reader with no watcher: pinned to v1 for the whole test
+    let pinned = FleetService::start(
+        &ModelRegistry::open(&root),
+        FleetOptions { watch: None, ..Default::default() },
+    )
+    .unwrap();
+
+    let stop = AtomicBool::new(false);
+    let answered = [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)];
+    std::thread::scope(|s| {
+        // continuous traffic through every reader for the whole window
+        for (i, svc) in [&fleet_a, &fleet_b, &pinned].into_iter().enumerate() {
+            let client = svc.client();
+            let (stop, answered, x) = (&stop, &answered[i], &x);
+            s.spawn(move || {
+                let mut r = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let scores = client
+                        .score("m", x.row(r % x.rows()).to_vec())
+                        .expect("readers must keep answering through publish+prune");
+                    assert_eq!(scores.len(), 3);
+                    answered.fetch_add(1, Ordering::Relaxed);
+                    r += 1;
+                }
+            });
+        }
+
+        // the "trainer": two republishes, each picked up by BOTH watchers
+        let wait_both = |v: u32| {
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            while (fleet_a.served_version("m") != Some(v)
+                || fleet_b.served_version("m") != Some(v))
+                && std::time::Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        registry.publish("m", &art, &manifest(6, 3)).unwrap();
+        wait_both(2);
+        registry.publish("m", &art, &manifest(6, 3)).unwrap();
+        wait_both(3);
+
+        // GC mid-traffic: v1 is still served by the pinned reader, so its
+        // marker shields it; v2 is served by nobody and is deleted. The
+        // watcher re-points a reader's serve marker just AFTER the swap
+        // becomes visible, so wait for the lease files too, not only the
+        // served versions, before pruning
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while registry.served_versions("m").unwrap().contains(&2)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let deleted = registry.prune("m", 1, None).unwrap();
+        assert_eq!(deleted, vec![2], "only the unserved version may go");
+        assert_eq!(registry.versions("m").unwrap(), vec![1, 3]);
+        // the pinned reader keeps serving its protected v1 after the GC
+        let scores = pinned.client().score("m", x.row(0).to_vec()).unwrap();
+        assert_eq!(scores.len(), 3);
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    assert_eq!(fleet_a.served_version("m"), Some(3), "reader A never caught up");
+    assert_eq!(fleet_b.served_version("m"), Some(3), "reader B never caught up");
+    assert_eq!(pinned.served_version("m"), Some(1), "no watcher: stays pinned");
+    assert!(fleet_a.swaps() >= 2 && fleet_b.swaps() >= 2);
+    for count in &answered {
+        assert!(count.load(Ordering::Relaxed) > 0, "every reader carried traffic");
+    }
+    let marked = registry.served_versions("m").unwrap();
+    assert!(marked.contains(&1) && marked.contains(&3), "markers: {marked:?}");
+    // releasing the pinned reader releases v1 for the next GC pass
+    drop(pinned);
+    assert_eq!(registry.prune("m", 1, None).unwrap(), vec![1]);
+    assert_eq!(registry.versions("m").unwrap(), vec![3]);
+    drop(fleet_a);
+    drop(fleet_b);
+    let _ = std::fs::remove_dir_all(&root);
+}

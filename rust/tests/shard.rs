@@ -1,0 +1,412 @@
+//! Integration: sharded distributed training via accumulator merge (L11).
+//!
+//! Pins the PR's acceptance guarantees, end to end through the partial
+//! `.akda` artifact codec (every shard below is serialized to bytes and
+//! decoded back before it is merged — exactly what `akda train --shard` /
+//! `akda merge` do across processes):
+//!
+//! 1. **Merge algebra** — merging shard artifacts is commutative and
+//!    parenthesization-invariant *bit for bit*: every insertion order and
+//!    every merge-tree shape over the same k shards produces the
+//!    bit-identical merged Gram, class sums, counts, union reservoir, and
+//!    published projection scores.
+//! 2. **k = 1 identity** — a single-shard "distributed" train merges to
+//!    bit-for-bit the unsharded streaming train, resume reservoir
+//!    included.
+//! 3. **Shard grid** — for k ∈ {1, 2, 3, 7}, the merged model's scores
+//!    match the unsharded streaming fit and the dense in-memory fit to
+//!    ≤ 1e-10.
+//! 4. **Typed rejection** — mismatched landmark bases, ε, class axes,
+//!    shard counts, duplicate or missing shards all fail with typed
+//!    [`MergeError`]s (and tampered artifacts fail at decode), never
+//!    panics, never a silently wrong merge.
+//! 5. **Seed hygiene** — shards of one train draw their reservoirs from
+//!    decorrelated RNG streams (the `seed ^ 0x9E37`-style correlation
+//!    this PR removed stays removed).
+
+use std::sync::Arc;
+
+use akda::approx::FeatureMap;
+use akda::da::akda_approx::AkdaApprox;
+use akda::da::akda_stream::{
+    BlockedProjection, MergeError, PreparedStream, TiledAccumulator,
+};
+use akda::da::Projection;
+use akda::data::stream::{
+    reservoir_sample_labeled, BlockSource, MemBlockSource, StridedBlockSource,
+};
+use akda::data::synthetic::{gaussian_classes, GaussianSpec};
+use akda::kernels::Kernel;
+use akda::linalg::Mat;
+use akda::model::codec::ApproxResume;
+use akda::model::shard::{basis_fingerprint, SHARD_BASIS_KEY};
+use akda::model::update::{DEFAULT_RESERVOIR_CAP, DEFAULT_UPDATE_SEED, REFRESH_SAMPLE_STREAM};
+use akda::model::{decode_shard, encode_shard, ModelArtifact, ShardPiece, ShardSet};
+use akda::util::rng::{derive_seed, shard_seed};
+
+const BLOCK_ROWS: usize = 64;
+const LANDMARKS: usize = 16;
+const N_CLASSES: usize = 3;
+
+fn toy_data(seed: u64) -> (Mat, Vec<usize>) {
+    gaussian_classes(&GaussianSpec {
+        n_classes: N_CLASSES,
+        n_per_class: vec![40; N_CLASSES],
+        dim: 5,
+        class_sep: 2.0,
+        noise: 0.8,
+        modes_per_class: 1,
+        seed,
+    })
+}
+
+fn approx() -> AkdaApprox {
+    AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, LANDMARKS)
+}
+
+/// The map every shard of one train shares, fitted from the full stream —
+/// deterministic per seed, so independent workers derive it identically.
+fn shared_map(ap: &AkdaApprox, x: &Mat, y: &[usize]) -> Arc<dyn FeatureMap> {
+    let mut src = MemBlockSource::new(x, y, BLOCK_ROWS);
+    Arc::from(ap.build_map_stream(&mut src).unwrap())
+}
+
+/// One worker's shard train: accumulate stride `index` of the stream,
+/// then round-trip the piece through the partial-artifact codec bytes.
+fn shard_piece(
+    ap: &AkdaApprox,
+    map: &Arc<dyn FeatureMap>,
+    x: &Mat,
+    y: &[usize],
+    index: usize,
+    count: usize,
+) -> ShardPiece {
+    let mut src =
+        StridedBlockSource::new(MemBlockSource::new(x, y, BLOCK_ROWS), index, count).unwrap();
+    let mut acc = TiledAccumulator::new(map.dim());
+    src.reset().unwrap();
+    while let Some(block) = src.next_block().unwrap() {
+        let phi = map.transform(&block.x);
+        acc.absorb(&phi, &block.labels).unwrap();
+    }
+    let agg = acc.into_aggregates(N_CLASSES).unwrap();
+    let (reservoir, reservoir_labels, seen) = reservoir_sample_labeled(
+        &mut src,
+        DEFAULT_RESERVOIR_CAP,
+        shard_seed(DEFAULT_UPDATE_SEED, index, count),
+    )
+    .unwrap();
+    let piece = ShardPiece {
+        index,
+        count,
+        basis: basis_fingerprint(map.as_ref()).unwrap(),
+        block_rows: BLOCK_ROWS,
+        map: Arc::clone(map),
+        resume: ApproxResume {
+            gram: agg.gram,
+            class_sums: agg.class_sums,
+            counts: agg.counts,
+            reservoir,
+            reservoir_labels,
+            seen,
+            eps: ap.eps,
+        },
+        meta: Default::default(),
+    };
+    // through the wire: serialize, checksum-verify, decode — merge input
+    // is always a decoded artifact, never an in-process shortcut
+    let bytes = encode_shard(&piece).unwrap().to_bytes();
+    decode_shard(&ModelArtifact::from_bytes(&bytes).unwrap()).unwrap()
+}
+
+/// Finalize a shard set and publish its projection scores on `x_test`.
+fn merged_scores(set: ShardSet, x_test: &Mat) -> (Mat, Mat, Vec<usize>, Mat) {
+    let merged = set.finalize(DEFAULT_RESERVOIR_CAP).unwrap();
+    let (res_x, _) = merged.reservoir.snapshot().unwrap();
+    let gram = merged.aggregates.gram.clone();
+    let counts = merged.aggregates.counts.clone();
+    let prep = PreparedStream::from_aggregates(
+        Arc::clone(&merged.map),
+        merged.aggregates,
+        merged.eps,
+        akda::linalg::chol::DEFAULT_BLOCK,
+    )
+    .unwrap();
+    let w = prep.solve_w_multiclass().unwrap();
+    let proj = BlockedProjection {
+        map: Arc::clone(&prep.map),
+        w,
+        block_rows: BLOCK_ROWS,
+    };
+    (proj.project(x_test), gram, counts, res_x)
+}
+
+fn assert_bit_identical(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    assert!(
+        a.sub(b).max_abs() == 0.0,
+        "{what} must be bit-for-bit identical (max |Δ| = {:e})",
+        a.sub(b).max_abs()
+    );
+}
+
+/// Acceptance 1: every insertion order and merge-tree shape over the same
+/// shard artifacts publishes the bit-identical model.
+#[test]
+fn merge_is_commutative_and_tree_invariant_bit_for_bit() {
+    let (x, y) = toy_data(11);
+    let (xt, _) = toy_data(12);
+    let ap = approx();
+    let map = shared_map(&ap, &x, &y);
+    let k = 3;
+    let pieces =
+        |order: &[usize]| -> Vec<ShardPiece> {
+            order.iter().map(|&i| shard_piece(&ap, &map, &x, &y, i, k)).collect()
+        };
+
+    // left-to-right insertion, ascending
+    let mut forward = ShardSet::new();
+    for p in pieces(&[0, 1, 2]) {
+        forward.insert(p).unwrap();
+    }
+    // reversed insertion order — merge(A,B) == merge(B,A)
+    let mut reversed = ShardSet::new();
+    for p in pieces(&[2, 1, 0]) {
+        reversed.insert(p).unwrap();
+    }
+    // pairwise reduction, scrambled: (2 ∪ 0) ∪ (1)
+    let mut tree = ShardSet::new();
+    let mut left = ShardSet::new();
+    for p in pieces(&[2, 0]) {
+        left.insert(p).unwrap();
+    }
+    let mut right = ShardSet::new();
+    right.insert(pieces(&[1]).pop().unwrap()).unwrap();
+    tree.merge(left).unwrap();
+    tree.merge(right).unwrap();
+
+    let (za, ga, ca, ra) = merged_scores(forward, &xt);
+    let (zb, gb, cb, rb) = merged_scores(reversed, &xt);
+    let (zc, gc, cc, rc) = merged_scores(tree, &xt);
+    assert_bit_identical(&ga, &gb, "merged Gram (insertion order)");
+    assert_bit_identical(&ga, &gc, "merged Gram (tree shape)");
+    assert_eq!(ca, cb);
+    assert_eq!(ca, cc);
+    assert_bit_identical(&ra, &rb, "union reservoir (insertion order)");
+    assert_bit_identical(&ra, &rc, "union reservoir (tree shape)");
+    assert_bit_identical(&za, &zb, "published scores (insertion order)");
+    assert_bit_identical(&za, &zc, "published scores (tree shape)");
+}
+
+/// Acceptance 2: k = 1 sharded training merges to bit-for-bit the
+/// unsharded streaming train — scores AND resume reservoir.
+#[test]
+fn single_shard_train_is_bitwise_the_unsharded_train() {
+    let (x, y) = toy_data(21);
+    let (xt, _) = toy_data(22);
+    let ap = approx();
+
+    // unsharded reference: the exact `akda train --stream` path
+    let mut src = MemBlockSource::new(&x, &y, BLOCK_ROWS);
+    let prep = ap.prepare_stream(&mut src).unwrap();
+    let w = prep.solve_w_multiclass().unwrap();
+    let z_ref = BlockedProjection {
+        map: Arc::clone(&prep.map),
+        w,
+        block_rows: BLOCK_ROWS,
+    }
+    .project(&xt);
+    let mut res_src = MemBlockSource::new(&x, &y, BLOCK_ROWS);
+    let (res_ref, labels_ref, seen_ref) =
+        reservoir_sample_labeled(&mut res_src, DEFAULT_RESERVOIR_CAP, DEFAULT_UPDATE_SEED)
+            .unwrap();
+
+    // the k = 1 "distributed" train
+    let map = shared_map(&ap, &x, &y);
+    let piece = shard_piece(&ap, &map, &x, &y, 0, 1);
+    assert_eq!(piece.resume.seen, seen_ref);
+    let mut set = ShardSet::new();
+    set.insert(piece).unwrap();
+    let merged = set.finalize(DEFAULT_RESERVOIR_CAP).unwrap();
+    let (res_x, res_l) = merged.reservoir.snapshot().unwrap();
+    assert_bit_identical(&res_x, &res_ref, "k=1 resume reservoir");
+    assert_eq!(res_l, labels_ref);
+    let prep1 = PreparedStream::from_aggregates(
+        Arc::clone(&merged.map),
+        merged.aggregates,
+        merged.eps,
+        akda::linalg::chol::DEFAULT_BLOCK,
+    )
+    .unwrap();
+    let w1 = prep1.solve_w_multiclass().unwrap();
+    let z1 = BlockedProjection {
+        map: Arc::clone(&prep1.map),
+        w: w1,
+        block_rows: BLOCK_ROWS,
+    }
+    .project(&xt);
+    assert_bit_identical(&z1, &z_ref, "k=1 published scores");
+}
+
+/// Acceptance 3: the shard grid k ∈ {1, 2, 3, 7} reproduces both the
+/// unsharded streaming fit and the dense in-memory fit to ≤ 1e-10.
+#[test]
+fn shard_grid_matches_streaming_and_dense_fits() {
+    let (x, y) = toy_data(31);
+    let (xt, _) = toy_data(32);
+    let ap = approx();
+
+    let mut src = MemBlockSource::new(&x, &y, BLOCK_ROWS);
+    let prep = ap.prepare_stream(&mut src).unwrap();
+    let w = prep.solve_w_multiclass().unwrap();
+    let z_stream = BlockedProjection {
+        map: Arc::clone(&prep.map),
+        w,
+        block_rows: BLOCK_ROWS,
+    }
+    .project(&xt);
+    // dense in-memory fit: same approximation, no streaming at all
+    let z_dense = ap
+        .prepare(&x)
+        .unwrap()
+        .fit(&y, N_CLASSES)
+        .unwrap()
+        .project(&xt);
+    let scale = 1.0 + z_stream.max_abs();
+
+    let map = shared_map(&ap, &x, &y);
+    for k in [1usize, 2, 3, 7] {
+        let mut set = ShardSet::new();
+        for i in 0..k {
+            set.insert(shard_piece(&ap, &map, &x, &y, i, k)).unwrap();
+        }
+        let (z, _, counts, _) = merged_scores(set, &xt);
+        assert_eq!(counts.iter().sum::<usize>(), x.rows(), "k={k}: row conservation");
+        let vs_stream = z.sub(&z_stream).max_abs();
+        let vs_dense = z.sub(&z_dense).max_abs();
+        assert!(
+            vs_stream <= 1e-10 * scale,
+            "k={k}: merged scores drift {vs_stream:e} from the streaming fit"
+        );
+        assert!(
+            vs_dense <= 1e-10 * scale,
+            "k={k}: merged scores drift {vs_dense:e} from the dense fit"
+        );
+    }
+}
+
+/// Acceptance 4: incompatible or damaged shards are rejected with typed
+/// errors — at decode for tampering, at insert for algebra violations.
+#[test]
+fn incompatible_and_tampered_shards_are_rejected() {
+    let (x, y) = toy_data(41);
+    let ap = approx();
+    let map = shared_map(&ap, &x, &y);
+    let mut set = ShardSet::new();
+    set.insert(shard_piece(&ap, &map, &x, &y, 0, 2)).unwrap();
+
+    // duplicate stride index
+    match set.insert(shard_piece(&ap, &map, &x, &y, 0, 2)) {
+        Err(MergeError::DuplicateShard { index: 0 }) => {}
+        other => panic!("want DuplicateShard, got {other:?}"),
+    }
+    // shard of a different k
+    match set.insert(shard_piece(&ap, &map, &x, &y, 1, 3)) {
+        Err(MergeError::ShardCountMismatch { left: 2, right: 3 }) => {}
+        other => panic!("want ShardCountMismatch, got {other:?}"),
+    }
+    // different landmark budget → different feature dimension
+    let mut fat = AkdaApprox::nystrom(Kernel::Rbf { rho: 0.5 }, 2 * LANDMARKS);
+    fat.eps = ap.eps;
+    let fat_map = shared_map(&fat, &x, &y);
+    match set.insert(shard_piece(&fat, &fat_map, &x, &y, 1, 2)) {
+        Err(MergeError::DimMismatch { .. }) => {}
+        other => panic!("want DimMismatch, got {other:?}"),
+    }
+    // same dimensions, different landmark basis (another train's map)
+    let mut other_ap = approx();
+    other_ap.seed = ap.seed.wrapping_add(1);
+    let other_map = shared_map(&other_ap, &x, &y);
+    match set.insert(shard_piece(&other_ap, &other_map, &x, &y, 1, 2)) {
+        Err(MergeError::BasisMismatch { .. }) => {}
+        other => panic!("want BasisMismatch, got {other:?}"),
+    }
+    // different ridge ε
+    let mut off = shard_piece(&ap, &map, &x, &y, 1, 2);
+    off.resume.eps = ap.eps * 2.0;
+    match set.insert(off) {
+        Err(MergeError::EpsMismatch { .. }) => {}
+        other => panic!("want EpsMismatch, got {other:?}"),
+    }
+    // different class axis (padded to a different declared C)
+    let mut narrow = shard_piece(&ap, &map, &x, &y, 1, 2);
+    narrow.resume.class_sums =
+        Mat::from_fn(narrow.resume.gram.rows(), N_CLASSES + 1, |_, _| 0.0);
+    match set.insert(narrow) {
+        Err(MergeError::ClassMismatch { .. }) => {}
+        other => panic!("want ClassMismatch, got {other:?}"),
+    }
+    // incomplete set cannot finalize
+    match set.finalize(DEFAULT_RESERVOIR_CAP).unwrap_err().downcast::<MergeError>() {
+        Ok(MergeError::Incomplete { have: 1, want: 2 }) => {}
+        other => panic!("want Incomplete, got {other:?}"),
+    }
+    // a tampered artifact (spliced basis meta) dies at decode, not merge
+    let good = shard_piece(&ap, &map, &x, &y, 1, 2);
+    let mut art = encode_shard(&good).unwrap();
+    art.set_meta(SHARD_BASIS_KEY, format!("{:016x}", good.basis ^ 0xdead));
+    let err = decode_shard(&art).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "decode error names the check: {err}");
+}
+
+/// Acceptance 5 (seed-derivation regression): shards of one base seed
+/// sample decorrelated reservoirs — no two shards of any k, nor the same
+/// index across different k, share a reservoir.
+#[test]
+fn shard_reservoirs_are_decorrelated_across_shards() {
+    let (x, y) = toy_data(51);
+    let ap = approx();
+    let map = shared_map(&ap, &x, &y);
+    let k = 3;
+    let pieces: Vec<ShardPiece> =
+        (0..k).map(|i| shard_piece(&ap, &map, &x, &y, i, k)).collect();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let (ra, rb) = (&pieces[a].resume.reservoir, &pieces[b].resume.reservoir);
+            let differs = ra.shape() != rb.shape() || ra.sub(rb).max_abs() > 0.0;
+            assert!(differs, "shards {a} and {b} sampled an identical reservoir");
+        }
+    }
+    // the derived seeds themselves never collide across shard layouts
+    let mut seeds: Vec<u64> = vec![shard_seed(DEFAULT_UPDATE_SEED, 0, 1)];
+    for count in [2usize, 3, 7] {
+        for index in 0..count {
+            seeds.push(shard_seed(DEFAULT_UPDATE_SEED, index, count));
+        }
+    }
+    let n = seeds.len();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), n, "shard seeds must be unique per (index, count)");
+
+    // and decorrelated where it matters: sampling the SAME stream with a
+    // small cap, different derived seeds must make different draws (the
+    // old `seed ^ 0x9E37` derivation could collapse to correlated
+    // streams; `derive_seed` runs the tag through a splitmix finalizer)
+    let sample = |seed: u64| -> Mat {
+        let mut src = MemBlockSource::new(&x, &y, BLOCK_ROWS);
+        reservoir_sample_labeled(&mut src, 16, seed).unwrap().0
+    };
+    let base = sample(DEFAULT_UPDATE_SEED);
+    let refresh = sample(derive_seed(DEFAULT_UPDATE_SEED, REFRESH_SAMPLE_STREAM));
+    assert!(
+        base.sub(&refresh).max_abs() > 0.0,
+        "the refresh sample stream must not replay the base stream"
+    );
+    let s0 = sample(shard_seed(DEFAULT_UPDATE_SEED, 0, 3));
+    let s1 = sample(shard_seed(DEFAULT_UPDATE_SEED, 1, 3));
+    let s2 = sample(shard_seed(DEFAULT_UPDATE_SEED, 2, 3));
+    assert!(s0.sub(&s1).max_abs() > 0.0, "shards 0/1 drew identical samples");
+    assert!(s0.sub(&s2).max_abs() > 0.0, "shards 0/2 drew identical samples");
+    assert!(s1.sub(&s2).max_abs() > 0.0, "shards 1/2 drew identical samples");
+}
